@@ -1,0 +1,81 @@
+//! Design-space exploration: the ablations DESIGN.md §5 calls out.
+//!
+//! 1. Accumulation mode (binary vs paper's MUX tree): command cost vs
+//!    stochastic MAC error — the repo's central accuracy/cost trade.
+//! 2. Concurrency scaling (banks x partitions): where bank-level
+//!    parallelism stops paying.
+//! 3. Conv amortization sensitivity: strict per-product accounting vs the
+//!    paper-implied row-parallel flow.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use odin::ann::topology::{cnn1, vgg1};
+use odin::mapper::{map_topology, ExecConfig};
+use odin::pim::AccumulateMode;
+use odin::stochastic::encode::rails;
+use odin::stochastic::mac::{mac_binary, mac_mux};
+use odin::util::rng::Rng;
+use odin::util::{fmt_ns, fmt_pj};
+
+fn main() {
+    println!("== ablation 1: accumulation mode ==");
+    println!("{:<8} {:<6} {:>14} {:>14} {:>14}", "mode", "net", "latency", "energy", "commands");
+    for mode in [AccumulateMode::Binary, AccumulateMode::Mux] {
+        for topo in [cnn1(), vgg1()] {
+            let cfg = ExecConfig { mode, ..ExecConfig::paper() };
+            let cost = map_topology(&topo, &cfg);
+            println!(
+                "{:<8} {:<6} {:>14} {:>14} {:>14}",
+                format!("{mode:?}"),
+                topo.name,
+                fmt_ns(cost.latency_ns(&cfg)),
+                fmt_pj(cost.energy_pj()),
+                cost.total_ledger().total_commands()
+            );
+        }
+    }
+
+    println!("\n   MAC error vs exact (one 784-input FC layer, 16 trials):");
+    let mut rng = Rng::new(17);
+    let n = 784;
+    let (mut eb, mut em, mut scale) = (0.0, 0.0, 0.0);
+    for _ in 0..16 {
+        let a: Vec<u8> = (0..n).map(|_| rng.u8() / 2).collect();
+        let wq: Vec<i16> = (0..n).map(|_| rng.range_i32(-200, 200) as i16).collect();
+        let (wp, wn) = rails(&wq);
+        let exact: f64 = a.iter().zip(&wq).map(|(&x, &w)| x as f64 * w as f64).sum();
+        eb += (mac_binary(&a, &wp, &wn) as f64 * 256.0 - exact).abs();
+        em += (mac_mux(&a, &wp, &wn) as f64 * 65536.0 - exact).abs();
+        scale += exact.abs();
+    }
+    println!("   binary: {:.2}% relative   mux: {:.2}% relative", 100.0 * eb / scale, 100.0 * em / scale);
+
+    println!("\n== ablation 2: concurrency scaling (CNN1 latency) ==");
+    for banks in [1usize, 8, 32, 128] {
+        for parts in [1usize, 15] {
+            let cfg = ExecConfig {
+                parallel_banks: banks,
+                partition_parallelism: parts,
+                ..ExecConfig::paper()
+            };
+            let cost = map_topology(&cnn1(), &cfg);
+            println!(
+                "   banks {banks:>4} x partitions {parts:>2} -> {:>12}",
+                fmt_ns(cost.latency_ns(&cfg))
+            );
+        }
+    }
+
+    println!("\n== ablation 3: conv amortization (VGG1) ==");
+    for amort in [1u64, 32, 256] {
+        let cfg = ExecConfig { conv_amortization: amort, ..ExecConfig::paper() };
+        let cost = map_topology(&vgg1(), &cfg);
+        println!(
+            "   amortization {amort:>4} -> latency {:>12}  energy {:>12}",
+            fmt_ns(cost.latency_ns(&cfg)),
+            fmt_pj(cost.energy_pj())
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): serve the whole synth-MNIST
+//! test split through the dynamic-batching coordinator, measuring
+//! accuracy, wall-clock latency/throughput, and the simulated in-PCRAM
+//! cost per request — all three layers composing: Pallas-authored HLO,
+//! Rust-encoded weight streams, PJRT execution, PCRAM ledger.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mnist_serving
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+use odin::coordinator::{BatchPolicy, Engine, MetricsHub, Server};
+use odin::dataset::TestSet;
+use odin::runtime::{Manifest, Runtime};
+
+const CLIENT_THREADS: usize = 8;
+
+fn main() -> Result<()> {
+    let arch = std::env::args().nth(1).unwrap_or_else(|| "cnn1".into());
+    let metrics = MetricsHub::new();
+    let arch_f = arch.clone();
+    let (server, client) = Server::spawn(
+        move || {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load("artifacts")?;
+            Engine::new(&rt, &manifest, "artifacts", &arch_f, "fast")
+        },
+        BatchPolicy::default(),
+        metrics.clone(),
+    )?;
+
+    let test = Arc::new(TestSet::load("artifacts")?);
+    let n = test.len();
+    println!("serving {n} requests for {arch}/fast from {CLIENT_THREADS} client threads ...");
+
+    let correct = Arc::new(AtomicUsize::new(0));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..CLIENT_THREADS {
+        let client = client.clone();
+        let test = Arc::clone(&test);
+        let correct = Arc::clone(&correct);
+        handles.push(std::thread::spawn(move || {
+            for i in (t..test.len()).step_by(CLIENT_THREADS) {
+                let s = &test.samples[i];
+                if let Ok(resp) = client.infer_blocking(s.image.clone()) {
+                    if resp.prediction.argmax == s.label {
+                        correct.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(client); // release the request channel so the batcher loop exits
+    server.shutdown();
+
+    let acc = 100.0 * correct.load(Ordering::Relaxed) as f64 / n as f64;
+    println!("\naccuracy: {acc:.2}%  ({} / {} correct)", correct.load(Ordering::Relaxed), n);
+    println!("wall time: {wall:.2} s  ({:.0} inf/s end-to-end)", n as f64 / wall);
+    metrics.report().print(&arch);
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Regenerate every table and figure of the paper in one run (the
+//! analytic parts; accuracy columns come from `odin table2` / the
+//! mnist_serving example, which need the PJRT path).
+//!
+//! ```bash
+//! cargo run --release --example paper_tables
+//! ```
+
+use odin::harness::{fig6, headline, table1, table2, table3};
+use odin::mapper::ExecConfig;
+use odin::pim::AccumulateMode;
+
+fn main() {
+    println!("=== ODIN paper reproduction: all tables & figures ===\n");
+    table1(true);
+    // Table 2 counts under both accumulation modes
+    for mode in [AccumulateMode::Binary, AccumulateMode::Mux] {
+        let cfg = ExecConfig { mode, ..ExecConfig::paper() };
+        table2(&cfg, &[], true);
+    }
+    table3(true);
+    fig6(&ExecConfig::paper(), true);
+    println!("=== headline claims (paper-calibrated profile) ===");
+    headline(&ExecConfig::paper(), true);
+    println!("=== same grid under the datasheet profile (see EXPERIMENTS.md) ===");
+    headline(&ExecConfig::default(), true);
+}

@@ -1,0 +1,39 @@
+//! Quickstart: load an AOT-compiled stochastic CNN, run one inference,
+//! and inspect the simulated in-PCRAM cost.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use odin::coordinator::Engine;
+use odin::dataset::TestSet;
+use odin::runtime::{Manifest, Runtime};
+use odin::util::{fmt_ns, fmt_pj};
+
+fn main() -> Result<()> {
+    // 1. PJRT CPU client + artifact registry
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = Manifest::load("artifacts")?;
+
+    // 2. Compile the optimized stochastic CNN1 variants and bind weights
+    //    (weight streams are encoded in Rust — see coordinator::weights)
+    let engine = Engine::new(&rt, &manifest, "artifacts", "cnn1", "fast")?;
+    println!("compiled batch variants: {:?}", engine.batch_sizes());
+
+    // 3. One real test image through the stochastic pipeline
+    let test = TestSet::load("artifacts")?;
+    let sample = &test.samples[0];
+    let (preds, exec) = engine.infer(&[&sample.image])?;
+    println!(
+        "label {} -> predicted {} (logits[pred] = {:.2})",
+        sample.label, preds[0].argmax, preds[0].logits[preds[0].argmax as usize]
+    );
+    println!("wall-clock exec: {}", fmt_ns(exec.exec_ns as f64));
+
+    // 4. What the same inference costs inside ODIN's PCRAM banks
+    let (sim_ns, sim_pj) = engine.sim_cost_per_inference();
+    println!("simulated ODIN cost: {} / {}", fmt_ns(sim_ns), fmt_pj(sim_pj));
+    Ok(())
+}

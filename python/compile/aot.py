@@ -1,0 +1,154 @@
+"""AOT lowering: JAX/Pallas compute graphs -> HLO text artifacts.
+
+Python's last act: every forward variant is traced once, lowered to
+StableHLO, converted to an XlaComputation, and dumped as **HLO text** into
+``artifacts/``.  The Rust runtime (rust/src/runtime/) loads the text with
+``HloModuleProto::from_text_file``, compiles it on the PJRT CPU client, and
+executes it with request data — Python never runs on the request path.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Artifacts (per arch x mode x batch, see ``manifest.json``):
+  {arch}_fast_b{B}.hlo.txt   optimized stochastic path (table gather)
+  {arch}_sc_b{B}.hlo.txt     faithful bit-parallel Pallas emulation
+  {arch}_float_b{B}.hlo.txt  f32 reference network
+  sc_tile.hlo.txt            bare faithful MAC tile (kernel microbench)
+  sc_tile_fast.hlo.txt       bare optimized MAC tile
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import sc_mac as K
+from .kernels.sc_common import LANES
+
+FAST_BATCHES = (1, 8, 32)
+SC_BATCHES = (1,)
+FLOAT_BATCHES = (1, 32)
+
+# Generic MAC tile dimensions (kernel microbenchmark artifact).
+TILE_B, TILE_M, TILE_N = K.TB, K.TM, 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default ELIDES big literals as "{...}",
+    # which xla_extension 0.5.1's text parser silently turns into garbage
+    # buffers — the LUT tables must be printed in full.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec_list(args) -> list[dict]:
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args]
+
+
+def lower_model(arch: str, mode: str, batch: int, scales: dict) -> tuple[str, list[dict]]:
+    if mode == "float":
+        fwd = M.make_float_fwd(arch)
+        args = M.float_weight_arg_shapes(arch, batch)
+    else:
+        fwd = M.make_sc_fwd(arch, scales, fast=(mode == "fast"))
+        args = M.sc_weight_arg_shapes(arch, fast=(mode == "fast"), batch=batch)
+    lowered = jax.jit(fwd).lower(*args)
+    return to_hlo_text(lowered), _spec_list(args)
+
+
+def lower_tile(fast: bool) -> tuple[str, list[dict]]:
+    if fast:
+        args = (
+            jax.ShapeDtypeStruct((TILE_B, TILE_N), jnp.uint8),
+            jax.ShapeDtypeStruct((TILE_M, TILE_N), jnp.uint8),
+            jax.ShapeDtypeStruct((TILE_M, TILE_N), jnp.uint8),
+        )
+        fn = lambda a, wp, wn: (K.sc_mac_fast(a, wp, wn),)
+    else:
+        args = (
+            jax.ShapeDtypeStruct((TILE_B, TILE_N), jnp.uint8),
+            jax.ShapeDtypeStruct((TILE_M, TILE_N, LANES), jnp.uint32),
+            jax.ShapeDtypeStruct((TILE_M, TILE_N, LANES), jnp.uint32),
+        )
+        fn = lambda a, wp, wn: (K.sc_mac(a, wp, wn),)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), _spec_list(args)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: dict[str, dict] = {}
+
+    def emit(name: str, text: str, meta: dict) -> None:
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = meta
+        print(f"  {name}.hlo.txt  ({len(text) // 1024} KiB)")
+
+    for arch in ("cnn1", "cnn2"):
+        with open(os.path.join(args.out, "weights", f"{arch}.json")) as f:
+            scales = json.load(f)["scales"]
+        for mode, batches in (("fast", FAST_BATCHES), ("sc", SC_BATCHES),
+                              ("float", FLOAT_BATCHES)):
+            for b in batches:
+                text, specs = lower_model(arch, mode, b, scales)
+                emit(f"{arch}_{mode}_b{b}", text,
+                     {"kind": "model", "arch": arch, "mode": mode,
+                      "batch": b, "args": specs})
+
+    for fast in (False, True):
+        name = "sc_tile_fast" if fast else "sc_tile"
+        text, specs = lower_tile(fast)
+        emit(name, text, {"kind": "tile", "mode": "fast" if fast else "sc",
+                          "args": specs})
+
+    write_golden(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest)} artifacts + manifest.json")
+
+
+def write_golden(outdir: str) -> None:
+    """Cross-language golden vectors: the Rust stochastic/ module must
+    reproduce these bit-for-bit (rust/src/stochastic/golden.rs)."""
+    import numpy as np
+    from .kernels import ref as REF
+    from .kernels.sc_common import T_WGT, wgt_thresholds
+    from .tensorfile import write_tensors
+
+    rng = np.random.default_rng(2024)
+    a = rng.integers(0, 256, (8, 100), dtype=np.uint8)
+    wq = rng.integers(-255, 256, (32, 100)).astype(np.int16)
+    wp = np.clip(wq, 0, 255).astype(np.uint8)
+    wn = np.clip(-wq, 0, 255).astype(np.uint8)
+    write_tensors(os.path.join(outdir, "golden.bin"), {
+        "a": a, "wq": wq,
+        "raw": REF.sc_mac_ref(a, wp, wn),
+        "wp_streams": REF.encode_weights(wp),
+        "t_wgt": T_WGT.astype(np.uint8),
+        "t_wgt_d3": wgt_thresholds(3).astype(np.uint8),
+        "cnt16": REF.cnt16_table_np(),
+    })
+    print("  golden.bin (cross-language vectors)")
+
+
+if __name__ == "__main__":
+    main()

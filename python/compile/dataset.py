@@ -1,0 +1,78 @@
+"""Synth-MNIST: a procedurally generated 28x28 10-class digit dataset.
+
+The paper trains CNN1/CNN2 on MNIST.  MNIST itself is not available in this
+offline environment (repro band 0), so we substitute a deterministic
+procedural dataset that exercises the same code path: 28x28 grayscale digit
+images with geometric jitter and additive noise, 10 classes.  See DESIGN.md
+§2 for the substitution rationale — every read/write/energy count in the
+evaluation is a pure function of topology, so only the accuracy column of
+Table 2 depends on the data, and there the *claim structure* (stochastic
+8-bit inference tracks float accuracy closely) is what we reproduce.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 7x5 digit glyphs (classic bitmap font), one string row per pixel row.
+_GLYPHS = {
+    0: ["#####", "#...#", "#...#", "#...#", "#...#", "#...#", "#####"],
+    1: ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", ".###."],
+    2: ["#####", "....#", "....#", "#####", "#....", "#....", "#####"],
+    3: ["#####", "....#", "....#", "#####", "....#", "....#", "#####"],
+    4: ["#...#", "#...#", "#...#", "#####", "....#", "....#", "....#"],
+    5: ["#####", "#....", "#....", "#####", "....#", "....#", "#####"],
+    6: ["#####", "#....", "#....", "#####", "#...#", "#...#", "#####"],
+    7: ["#####", "....#", "...#.", "..#..", ".#...", ".#...", ".#..."],
+    8: ["#####", "#...#", "#...#", "#####", "#...#", "#...#", "#####"],
+    9: ["#####", "#...#", "#...#", "#####", "....#", "....#", "#####"],
+}
+
+
+def _glyph_array(d: int) -> np.ndarray:
+    return np.array([[c == "#" for c in row] for row in _GLYPHS[d]], dtype=np.float32)
+
+
+def make_dataset(n: int, seed: int):
+    """Generate (images u8 (n, 28, 28), labels u8 (n,)).
+
+    Each sample: glyph upscaled 3x (21x15), random placement (the glyph
+    always fits), per-sample intensity in [160, 255], Gaussian pixel noise
+    sigma 18, occasional single-pixel dropout.  Deterministic given seed.
+    ``train.py`` exports the test split to ``artifacts/data/`` so the Rust
+    examples evaluate on the *identical* samples.
+    """
+    rng = np.random.default_rng(seed)
+    imgs = np.zeros((n, 28, 28), dtype=np.float32)
+    labels = rng.integers(0, 10, n).astype(np.uint8)
+    glyphs = {d: np.kron(_glyph_array(d), np.ones((3, 3), np.float32)) for d in range(10)}
+    gh, gw = 21, 15
+    for i in range(n):
+        g = glyphs[int(labels[i])].copy()
+        # stroke erosion: knock out a few glyph pixels entirely
+        for _ in range(rng.integers(2, 9)):
+            g[rng.integers(0, gh), rng.integers(0, gw)] = 0.0
+        oy = rng.integers(0, 28 - gh + 1)
+        ox = rng.integers(0, 28 - gw + 1)
+        inten = rng.uniform(90, 255)
+        imgs[i, oy:oy + gh, ox:ox + gw] = g * inten
+        # distractor strokes: short random bright segments
+        for _ in range(rng.integers(1, 4)):
+            y0, x0 = rng.integers(0, 28, 2)
+            dy, dx = rng.integers(-1, 2, 2)
+            for t in range(rng.integers(3, 8)):
+                yy, xx = y0 + dy * t, x0 + dx * t
+                if 0 <= yy < 28 and 0 <= xx < 28:
+                    imgs[i, yy, xx] = rng.uniform(80, 220)
+        imgs[i] += rng.normal(0, 35, (28, 28))
+        # random pixel dropout, emulating sensor defects
+        for _ in range(rng.integers(0, 6)):
+            imgs[i, rng.integers(0, 28), rng.integers(0, 28)] = 0.0
+    return np.clip(imgs, 0, 255).astype(np.uint8), labels
+
+
+def train_test_split(n_train: int = 8192, n_test: int = 2048, seed: int = 7):
+    """The canonical splits used by train.py, tests, and the Rust examples."""
+    xtr, ytr = make_dataset(n_train, seed)
+    xte, yte = make_dataset(n_test, seed + 1)
+    return (xtr, ytr), (xte, yte)

@@ -1,0 +1,205 @@
+"""Pure-numpy correctness oracles for the stochastic MAC kernels.
+
+For each accumulation mode (binary = default, mux = paper-faithful ablation)
+three independent references must agree:
+
+1. ``sc_mac_ref`` / ``sc_mac_mux_ref``  — full bitwise emulation (encode /
+   AND / accumulate / popcount) in plain numpy.  Must be **bit-exact**
+   against the Pallas kernels.
+2. ``sc_mac_table`` / ``sc_mac_mux_diagonal``  — algebraic closed forms.
+   Bit-exactness against (1) *is* the proof that the optimized serve path
+   (``sc_mac.sc_mac_fast``) computes the same thing as the hardware
+   emulation.
+3. ``float_mac``  — the real-valued MAC the stochastic pipeline
+   approximates; used for statistical-accuracy tests (SC error bounds),
+   not exact equality.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .sc_common import (
+    LANES,
+    N_ROT,
+    ROT_STRIDE,
+    STREAM_BITS,
+    T_ACT,
+    T_WGT,
+    encode_np,
+    mux_select_masks,
+    pack_bits_u32,
+    rot_amount,
+    wgt_thresholds,
+)
+
+_S_MASKS = mux_select_masks()  # (8, LANES) uint32
+
+
+def popcount_u32(v: np.ndarray) -> np.ndarray:
+    """SWAR popcount, identical structure to the kernel's."""
+    v = v.astype(np.uint32)
+    v = v - ((v >> 1) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
+    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
+    return (v * np.uint32(0x01010101)) >> 24
+
+
+# ---------------------------------------------------------------------------
+# Binary accumulation mode
+# ---------------------------------------------------------------------------
+
+def encode_weights(w_q: np.ndarray) -> np.ndarray:
+    """Encode u8 weight values (M, N) into packed, per-operand-rotated
+    streams (M, N, LANES) uint32 — the load-time step the Rust coordinator
+    performs (B_TO_S for weights + rotated row write)."""
+    m, n = w_q.shape
+    bits = (T_WGT[None, None, :] < w_q[..., None]).astype(np.uint8)  # (M, N, 256)
+    for j in range(n):
+        r = rot_amount(j)
+        if r:
+            # rotated stream: bit i = (T_WGT[(i + r) % 256] < w)
+            bits[:, j] = np.roll(bits[:, j], -r, axis=-1)
+    return pack_bits_u32(bits)
+
+
+def sc_mac_ref(a_vals: np.ndarray, wpos_q: np.ndarray, wneg_q: np.ndarray) -> np.ndarray:
+    """Full bitwise oracle, binary mode.  a_vals (B, N) u8; w*_q (M, N) u8.
+
+    Returns (B, M) int32 raw popcount difference.
+    """
+    B, N = a_vals.shape
+    M = wpos_q.shape[0]
+    a_str = encode_np(a_vals.reshape(-1), T_ACT).reshape(B, N, LANES)
+    wpos = encode_weights(wpos_q)
+    wneg = encode_weights(wneg_q)
+    out = np.zeros((B, M), dtype=np.int64)
+    for b in range(B):
+        p_pos = a_str[b, None] & wpos  # (M, N, LANES)
+        p_neg = a_str[b, None] & wneg
+        pc_pos = popcount_u32(p_pos).astype(np.int64).sum(axis=(-1, -2))
+        pc_neg = popcount_u32(p_neg).astype(np.int64).sum(axis=(-1, -2))
+        out[b] = pc_pos - pc_neg
+    return out.astype(np.int32)
+
+
+def cnt16_table_np() -> np.ndarray:
+    """(N_ROT, 256, 256) i32: CNT[r, a, w] = popcount(enc(a) & rot_r(enc(w)))."""
+    ii = np.arange(STREAM_BITS)
+    abit = (ii[None, :] < ii[:, None]).astype(np.int32)  # (a, i)
+    out = np.zeros((N_ROT, 256, 256), np.int32)
+    for r in range(N_ROT):
+        tw = T_WGT[(ii + ROT_STRIDE * r) % STREAM_BITS]
+        wbit = (tw[None, :] < ii[:, None]).astype(np.int32)  # (w, i)
+        out[r] = abit @ wbit.T
+    return out
+
+
+_CNT16 = None
+
+
+def sc_mac_table(a_vals: np.ndarray, wpos_q: np.ndarray, wneg_q: np.ndarray) -> np.ndarray:
+    """Closed-form oracle, binary mode: per-product popcount table gather."""
+    global _CNT16
+    if _CNT16 is None:
+        _CNT16 = cnt16_table_np()
+    B, N = a_vals.shape
+    r = (np.arange(N) % N_ROT)
+    a = a_vals.astype(np.int64)
+    cp = _CNT16[r[None, None, :], a[:, None, :], wpos_q.astype(np.int64)[None, :, :]]
+    cn = _CNT16[r[None, None, :], a[:, None, :], wneg_q.astype(np.int64)[None, :, :]]
+    return (cp.astype(np.int64) - cn).sum(-1).astype(np.int32)
+
+
+def float_mac(a_vals: np.ndarray, wpos_q: np.ndarray, wneg_q: np.ndarray) -> np.ndarray:
+    """Expected value of the binary-mode raw output: sum_j a_j * w_j / 256."""
+    a = a_vals.astype(np.float64)
+    w = wpos_q.astype(np.float64) - wneg_q.astype(np.float64)
+    return a @ w.T / 256.0
+
+
+# ---------------------------------------------------------------------------
+# MUX-tree accumulation mode (ablation)
+# ---------------------------------------------------------------------------
+
+def encode_weights_mux(w_q: np.ndarray, depth: int) -> np.ndarray:
+    """Encode u8 weight values (M, C, NL) into packed streams
+    (M, C, NL, LANES) uint32 against the depth-specific LUT."""
+    t = wgt_thresholds(depth)
+    return encode_np(w_q.reshape(-1), t).reshape(*w_q.shape, LANES)
+
+
+def mux_tree_np(products: np.ndarray, depth: int) -> np.ndarray:
+    """Depth-D MUX tree over axis -2 (NL streams), packed uint32."""
+    acc = products
+    for k in range(depth):
+        s = _S_MASKS[k].astype(np.uint32)
+        ns = s ^ np.uint32(0xFFFFFFFF)
+        acc = (s & acc[..., 1::2, :]) | (ns & acc[..., 0::2, :])
+    return acc[..., 0, :]
+
+
+def sc_mac_mux_ref(a_chunks: np.ndarray, wpos_q: np.ndarray, wneg_q: np.ndarray) -> np.ndarray:
+    """Full bitwise oracle, mux mode.  a_chunks (B, C, NL) u8; w (M, C, NL) u8."""
+    B, C, NL = a_chunks.shape
+    M = wpos_q.shape[0]
+    depth = int(math.log2(NL))
+    a_str = encode_np(a_chunks.reshape(-1), T_ACT).reshape(B, C, NL, LANES)
+    wpos = encode_weights_mux(wpos_q, depth)
+    wneg = encode_weights_mux(wneg_q, depth)
+    out = np.zeros((B, M), dtype=np.int64)
+    for b in range(B):
+        p_pos = a_str[b, None] & wpos  # (M, C, NL, LANES)
+        p_neg = a_str[b, None] & wneg
+        r_pos = mux_tree_np(p_pos, depth)  # (M, C, LANES)
+        r_neg = mux_tree_np(p_neg, depth)
+        pc_pos = popcount_u32(r_pos).astype(np.int64).sum(axis=(-1, -2))
+        pc_neg = popcount_u32(r_neg).astype(np.int64).sum(axis=(-1, -2))
+        out[b] = pc_pos - pc_neg
+    return out.astype(np.int32)
+
+
+def sc_mac_mux_diagonal(a_chunks: np.ndarray, wpos_q: np.ndarray, wneg_q: np.ndarray) -> np.ndarray:
+    """Closed-form oracle, mux mode:
+    raw[b,m] = sum_{c,i} [i < a[c, i mod NL]] & [T_WGT_D[i] < w[m, c, i mod NL]].
+    """
+    B, C, NL = a_chunks.shape
+    depth = int(math.log2(NL))
+    r = STREAM_BITS // NL
+    t_wgt = wgt_thresholds(depth)
+    a_pos = np.tile(a_chunks, (1, 1, r))  # (B, C, 256)
+    wp_pos = np.tile(wpos_q, (1, 1, r))
+    wn_pos = np.tile(wneg_q, (1, 1, r))
+    a_bit = (T_ACT[None, None, :] < a_pos).astype(np.int32)
+    w_diff = ((t_wgt[None, None, :] < wp_pos).astype(np.int32)
+              - (t_wgt[None, None, :] < wn_pos).astype(np.int32))
+    return (a_bit.reshape(B, -1) @ w_diff.reshape(wpos_q.shape[0], -1).T).astype(np.int32)
+
+
+def float_mac_mux(a_chunks: np.ndarray, wpos_q: np.ndarray, wneg_q: np.ndarray) -> np.ndarray:
+    """E[raw] in mux mode: R * sum_j a_j * w_j / 65536, R = 256/NL."""
+    NL = a_chunks.shape[-1]
+    r = STREAM_BITS // NL
+    a = a_chunks.astype(np.float64)
+    w = wpos_q.astype(np.float64) - wneg_q.astype(np.float64)
+    return np.einsum("bcj,mcj->bm", a, w) * r / 65536.0
+
+
+def mux_chunk_layout(n: int) -> tuple[int, int, int]:
+    """Chunking rule for an n-input layer in mux mode: (C, NL, depth)."""
+    if n <= STREAM_BITS:
+        d = max(1, int(np.ceil(np.log2(n)))) if n > 1 else 1
+        return 1, 1 << d, d
+    return -(-n // STREAM_BITS), STREAM_BITS, 8
+
+
+def mux_chunk_pad(values: np.ndarray) -> np.ndarray:
+    """Pad the last axis per :func:`mux_chunk_layout`, reshape (..., C, NL)."""
+    n = values.shape[-1]
+    c, nl, _ = mux_chunk_layout(n)
+    pad = c * nl - n
+    if pad:
+        values = np.pad(values, [(0, 0)] * (values.ndim - 1) + [(0, pad)])
+    return values.reshape(*values.shape[:-1], c, nl)

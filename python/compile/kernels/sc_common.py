@@ -1,0 +1,137 @@
+"""Shared stochastic-number (SN) constants and helpers.
+
+ODIN encodes every 8-bit operand as a 256-bit stochastic stream stored in a
+PCRAM row block (the paper's Compute Partition).  We use deterministic
+low-discrepancy threshold sequences instead of LFSR noise so that the Pallas
+kernel, the pure-numpy oracle (ref.py), and the Rust functional simulator
+(rust/src/stochastic/) are *bit-exact* against each other:
+
+    stream(v)[i] = 1  iff  T[i] < v
+
+with ``T`` a permutation of 0..255.  Because T is a permutation,
+``popcount(stream(v)) == v`` exactly (unbiased encoding) — the property every
+cross-layer test leans on.
+
+Threshold design.  Activations use the identity permutation T_ACT[i] = i;
+weights use the bit-reversal permutation T_WGT[i] = bitrev8(i).  The pair
+(i, bitrev8(i)) is the 256-point 2D Hammersley set, so a full-stream AND
+popcount estimates a*w/256 with low-discrepancy error (|err| <= ~3 counts).
+(A naive "same sequence XOR constant" choice anti-correlates the two
+streams — e.g. thresholds t < 128 and t^0x80 < 128 are mutually exclusive —
+and destroys MAC accuracy; tests pin this property.)
+
+Accumulation modes (the repo's central accuracy/cost ablation, DESIGN.md §4):
+
+* ``binary`` (default) — every product stream is popcounted (``S_TO_B``)
+  and the N popcounts are summed by the binary adder in the pop-counter
+  block.  To decorrelate the deterministic quadrature bias across operands,
+  operand j's weight stream is stored rotated by ROT_STRIDE*(j mod N_ROT)
+  bit positions (rotation preserves popcount; in hardware the write of the
+  LUT row simply starts at a per-row column offset).  ~1-4% relative MAC
+  error; costs one S_TO_B per 32 products.
+
+* ``mux`` (paper-faithful) — a depth-D MUX tree reduces NL = 2**D product
+  streams to one stream which is popcounted once per chunk.  Bit i of the
+  reduced stream samples product ``i mod NL`` at position i.  Cheapest in
+  S_TO_B traffic, but the 1/NL result scaling makes wide layers drown in
+  sampling noise — exactly the trade-off the ablation benches quantify.
+
+In hardware terms these tables are the contents written into the paper's
+256x256 SRAM conversion LUT; they are programmed once at model-load time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Stream geometry: 256 bits = one PCRAM line = 8 * 32-bit lanes.
+STREAM_BITS = 256
+LANES = STREAM_BITS // 32  # 8 packed uint32 words per stream
+MAX_DEPTH = 8
+
+# Binary-mode rotation schedule: operand j's weight stream is rotated left by
+# ROT_STRIDE * (j mod N_ROT) bit positions.  ROT_STRIDE is a multiple of 32
+# would allow word-granular rotation; 16 gives finer decorrelation and still
+# only costs a half-word shift in the PISO path.
+N_ROT = 16
+ROT_STRIDE = 16
+
+
+def rot_amount(j: int) -> int:
+    """Bit rotation applied to operand j's weight stream (binary mode)."""
+    return ROT_STRIDE * (j % N_ROT)
+
+
+def bitrev8(i: int) -> int:
+    """Reverse the 8 bits of ``i`` (van der Corput radix-2 index)."""
+    i &= 0xFF
+    i = ((i & 0x0F) << 4) | ((i & 0xF0) >> 4)
+    i = ((i & 0x33) << 2) | ((i & 0xCC) >> 2)
+    i = ((i & 0x55) << 1) | ((i & 0xAA) >> 1)
+    return i
+
+
+def depth_for(n: int) -> int:
+    """MUX-tree depth for an n-operand chunk: smallest D with 2**D >= n,
+    capped at 8 (chunks never hold more than 256 operands)."""
+    assert 1 <= n <= STREAM_BITS, n
+    return max(1, int(np.ceil(np.log2(n)))) if n > 1 else 1
+
+
+def act_thresholds() -> np.ndarray:
+    """T_ACT: identity permutation (the activation-side SRAM LUT)."""
+    return np.arange(STREAM_BITS, dtype=np.uint8)
+
+
+def wgt_thresholds(depth: int) -> np.ndarray:
+    """T_WGT for a layer whose MUX tree has the given depth (1..8)."""
+    assert 1 <= depth <= MAX_DEPTH, depth
+    nl = 1 << depth
+    i = np.arange(STREAM_BITS, dtype=np.uint32)
+    swapped = (i >> depth) | ((i & (nl - 1)) << (8 - depth))
+    return np.array([bitrev8(int(x)) for x in swapped], dtype=np.uint8)
+
+
+# Identity LUT, used everywhere for activations.
+T_ACT = act_thresholds()
+
+# Bit-reversal LUT, used for weights in binary mode (and by depth-8 chunks
+# in mux mode; wgt_thresholds(8) == bitrev8).
+T_WGT = np.array([bitrev8(i) for i in range(STREAM_BITS)], dtype=np.uint8)
+
+
+def pack_bits_u32(bits: np.ndarray) -> np.ndarray:
+    """Pack a (..., 256) uint8/bool bit array into (..., 8) uint32.
+
+    Bit ``i`` of the stream lands in word ``i // 32`` at position ``i % 32``
+    (LSB-first), matching the Rust packing in stochastic/stream.rs.
+    """
+    bits = np.asarray(bits, dtype=np.uint32).reshape(*bits.shape[:-1], LANES, 32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=np.uint32)
+
+
+def unpack_bits_u32(words: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_bits_u32`: (..., 8) uint32 -> (..., 256) uint8."""
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (words[..., None] >> shifts) & 1
+    return bits.reshape(*words.shape[:-1], STREAM_BITS).astype(np.uint8)
+
+
+def encode_np(values: np.ndarray, thresholds: np.ndarray) -> np.ndarray:
+    """Reference numpy encoder: (...,) u8 values -> (..., 8) u32 streams."""
+    bits = (thresholds[None, :] < np.asarray(values, dtype=np.uint8).reshape(-1, 1))
+    packed = pack_bits_u32(bits.astype(np.uint8))
+    return packed.reshape(*np.shape(values), LANES)
+
+
+def mux_select_masks() -> np.ndarray:
+    """Packed select streams for MUX-tree levels 0..7.
+
+    Level-k select is ``s_k[i] = (i >> k) & 1`` over bit index i in 0..255;
+    each has popcount exactly 128 (the paper's s = 0.5).  A depth-D tree
+    uses levels 0..D-1.  Returned shape (8, LANES) uint32.
+    """
+    i = np.arange(STREAM_BITS, dtype=np.uint32)
+    masks = np.stack([((i >> k) & 1).astype(np.uint8) for k in range(8)])
+    return pack_bits_u32(masks)

@@ -1,0 +1,313 @@
+"""L1 Pallas kernels: ODIN's bit-parallel stochastic MAC.
+
+This is the compute hot-spot of the paper mapped to the Pallas programming
+model.  One 256-bit PCRAM line (= one stochastic stream) is 8 uint32 lanes;
+the kernels perform, per (activation-tile, neuron-tile) grid cell, exactly
+the bit-parallel operations ODIN's modified PCRAM bank performs:
+
+  1. ``B_TO_S``   — encode u8 operand values into 256-bit streams by
+                    comparing against the SRAM-LUT threshold permutation;
+  2. ``ANN_MUL``  — bit-parallel AND between activation and weight streams
+                    (PINATUBO simultaneous-row-activation read);
+  3. ``ANN_ACC``  — accumulation, in one of two modes (sc_common.py):
+                    ``binary`` (default): popcount every product stream and
+                    sum in the pop-counter's binary adder;
+                    ``mux`` (paper-faithful ablation): a depth-D MUX tree,
+                    each MUX decomposed into (s AND a) OR (s' AND b), the
+                    paper's Fig. 2(b)/5(c) with s = 0.5;
+  4. ``S_TO_B``   — SWAR popcount (the PISO + level-counter block).
+
+Weights arrive *pre-encoded* as packed streams (the Rust coordinator encodes
+them once at model-load time with the bit-identical routine in
+``rust/src/stochastic/``); activations are encoded in-kernel because they
+change per request — mirroring the hardware, where weight streams persist in
+the Compute Partition while activations are converted per inference.
+
+Signed weights use dual-rail (w = w_pos - w_neg, both unipolar); the binary
+subtraction happens after popcount, in the binary domain, like the paper's
+post-``S_TO_B`` binary logic.
+
+Grid/tiling: TM = 32 output neurons per block — the paper's ``S_TO_B``
+granularity ("results of at least 32 neurons"); TB = 8 activation rows.
+
+Kernels must run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); they lower to plain vectorized HLO which XLA CPU compiles.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .sc_common import (
+    LANES,
+    N_ROT,
+    ROT_STRIDE,
+    STREAM_BITS,
+    T_WGT,
+    mux_select_masks,
+    wgt_thresholds,
+)
+
+# Tile sizes. TM matches the paper's 32-neuron S_TO_B batch; TB covers either
+# a request micro-batch or an im2col patch tile.
+TB = 8
+TM = 32
+
+_S_MASKS = mux_select_masks()  # (8, LANES) uint32, level-k MUX selects
+
+
+def _popcount_u32(v: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount of a uint32 array (models the PISO + level counter)."""
+    c1 = jnp.uint32(0x55555555)
+    c2 = jnp.uint32(0x33333333)
+    c4 = jnp.uint32(0x0F0F0F0F)
+    m = jnp.uint32(0x01010101)
+    v = v - ((v >> jnp.uint32(1)) & c1)
+    v = (v & c2) + ((v >> jnp.uint32(2)) & c2)
+    v = (v + (v >> jnp.uint32(4))) & c4
+    return (v * m) >> jnp.uint32(24)
+
+
+def _encode_act_streams(vals_u8: jnp.ndarray) -> jnp.ndarray:
+    """B_TO_S for activations: (...,) u8 -> (..., LANES) packed uint32.
+
+    T_ACT is the identity permutation, so stream bit i = (i < v): the
+    comparison against a broadcast iota *is* the SRAM LUT row readout.
+    popcount(stream(v)) == v exactly.
+    """
+    iota = jax.lax.broadcasted_iota(jnp.uint8, (STREAM_BITS,), 0)
+    bits = (iota < vals_u8[..., None]).astype(jnp.uint32)  # (..., 256)
+    bits = bits.reshape(*vals_u8.shape, LANES, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (LANES, 32), 1)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Binary accumulation mode (default serve path)
+# ---------------------------------------------------------------------------
+
+def _sc_mac_kernel(a_ref, wpos_ref, wneg_ref, out_ref):
+    """One grid cell, binary mode: TB rows x TM neurons x N operands.
+
+    a_ref:    (TB, N) u8            activation values (zero padded)
+    wpos_ref: (TM, N, LANES) u32    positive-rail weight streams, pre-rotated
+    wneg_ref: (TM, N, LANES) u32    negative-rail weight streams, pre-rotated
+    out_ref:  (TB, TM) i32          raw popcount difference (pos - neg)
+    """
+    a = a_ref[...]
+    wpos = wpos_ref[...]
+    wneg = wneg_ref[...]
+
+    # B_TO_S for activations (weights are pre-encoded).
+    a_str = _encode_act_streams(a)  # (TB, N, LANES)
+
+    # ANN_MUL: bit-parallel AND, broadcast over (TB, TM).
+    a_b = a_str[:, None]  # (TB, 1, N, LANES)
+    p_pos = a_b & wpos[None]  # (TB, TM, N, LANES)
+    p_neg = a_b & wneg[None]
+
+    # S_TO_B per product + binary accumulate (pop counter's adder).
+    pc_pos = _popcount_u32(p_pos).astype(jnp.int32).sum(axis=(-1, -2))
+    pc_neg = _popcount_u32(p_neg).astype(jnp.int32).sum(axis=(-1, -2))
+    out_ref[...] = pc_pos - pc_neg
+
+
+def sc_mac(a_vals: jnp.ndarray, wpos: jnp.ndarray, wneg: jnp.ndarray) -> jnp.ndarray:
+    """Bit-parallel stochastic MAC, binary accumulation (faithful emulation).
+
+    a_vals:   (B, N) uint8 — activation values
+    wpos/wneg: (M, N, LANES) uint32 — weight streams encoded against T_WGT
+              and rotated by rot_amount(j) (see ref.encode_weights)
+    returns:  (B, M) int32 — raw popcount difference; E[raw] = sum(a*w)/256,
+              so the caller rescales by 256 * s_a * s_w (see model.py)
+
+    B must be a multiple of TB and M a multiple of TM (model.py pads).
+    """
+    B, N = a_vals.shape
+    M = wpos.shape[0]
+    assert B % TB == 0 and M % TM == 0, (B, M)
+
+    grid = (B // TB, M // TM)
+    return pl.pallas_call(
+        _sc_mac_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TB, N), lambda i, j: (i, 0)),
+            pl.BlockSpec((TM, N, LANES), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((TM, N, LANES), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TB, TM), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.int32),
+        interpret=True,
+    )(a_vals, wpos, wneg)
+
+
+def cnt16_table() -> jnp.ndarray:
+    """(N_ROT, 256, 256) i32 table: CNT[r, a, w] = popcount(enc_a(a) &
+    rot_{ROT_STRIDE*r}(enc_w(w))) — built from iotas so it lives as cheap
+    ops, not a 4 MB constant, inside the lowered HLO."""
+    ii = np.arange(STREAM_BITS)
+    abit = jnp.asarray((ii[None, :] < ii[:, None]).astype(np.float32))  # (a, i)
+    tables = []
+    for r in range(N_ROT):
+        tw = T_WGT[(ii + ROT_STRIDE * r) % STREAM_BITS]
+        wbit = jnp.asarray((tw[None, :] < ii[:, None]).astype(np.float32))  # (w, i)
+        tables.append(jax.lax.dot_general(abit, wbit, (((1,), (1,)), ((), ()))))
+    return jnp.stack(tables).astype(jnp.int32)  # (16, 256, 256)
+
+
+def sc_mac_fast(a_vals: jnp.ndarray, wpos_q: jnp.ndarray, wneg_q: jnp.ndarray) -> jnp.ndarray:
+    """Algebraically-reduced stochastic MAC (the optimized serve path).
+
+    The popcount of a product stream is a dot product of indicator
+    vectors, so the whole MAC collapses to one dense contraction:
+
+        raw[b, m] = sum_{j, i} [i < a[b, j]] * ([TW[j, i] < wpos[m, j]]
+                                              - [TW[j, i] < wneg[m, j]])
+
+    with TW[j, i] = T_WGT[(i + rot(j)) mod 256] the per-operand rotated
+    weight LUT.  *Bit-identical* to ``sc_mac`` (proved by
+    python/tests/test_kernel.py and the Rust cross-check) while never
+    materializing a stream.  Counts stay below 2^24 so the f32 matmul is
+    exact.  (An equivalent CNT16 table-gather form exists —
+    ``cnt16_table`` — but xla_extension 0.5.1, the Rust runtime's XLA,
+    miscompiles large gathers; the dot_general form lowers to plain
+    matmuls that execute correctly everywhere.)
+
+    Takes u8 weight *values* (M, N), not packed streams.  Row-chunks the
+    activation side through ``lax.map`` so conv-sized batches stay within
+    memory.
+    """
+    B, N = a_vals.shape
+    M = wpos_q.shape[0]
+    ii = np.arange(STREAM_BITS)
+    tw = np.stack([T_WGT[(ii + (ROT_STRIDE * (j % N_ROT))) % STREAM_BITS] for j in range(N)])
+    tw = jnp.asarray(tw, dtype=jnp.uint8)  # (N, 256)
+    iota = jnp.arange(STREAM_BITS, dtype=jnp.uint8)
+
+    w_diff = (
+        (tw[None] < wpos_q[:, :, None]).astype(jnp.float32)
+        - (tw[None] < wneg_q[:, :, None]).astype(jnp.float32)
+    ).reshape(M, N * STREAM_BITS)
+
+    def block(a_blk):
+        a_bit = (iota[None, None, :] < a_blk[:, :, None]).astype(jnp.float32)
+        a_bit = a_bit.reshape(a_blk.shape[0], N * STREAM_BITS)
+        return jax.lax.dot_general(a_bit, w_diff, (((1,), (1,)), ((), ())))
+
+    chunk = 2048
+    if B <= chunk:
+        raw = block(a_vals)
+    else:
+        nb = -(-B // chunk)
+        a_p = jnp.pad(a_vals, ((0, nb * chunk - B), (0, 0)))
+        raw = jax.lax.map(block, a_p.reshape(nb, chunk, N)).reshape(nb * chunk, M)[:B]
+    return raw.astype(jnp.int32)
+
+
+
+# ---------------------------------------------------------------------------
+# MUX-tree accumulation mode (paper-faithful ablation)
+# ---------------------------------------------------------------------------
+
+def _mux_tree(products: jnp.ndarray, s_masks: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """ANN_ACC, mux mode: reduce NL = 2**depth product streams -> 1 stream.
+
+    ``products``: (..., NL, LANES) uint32.  Level k select mask
+    s_k[i] = (i >> k) & 1, so the surviving bit i samples product stream
+    ``i mod NL`` at position ``i``.  Each MUX is (s AND right) OR
+    (NOT s AND left) — two ANDs and an OR, the paper's Fig. 5(c).
+    """
+    acc = products
+    for k in range(depth):
+        s = s_masks[k]  # (LANES,)
+        ns = s ^ jnp.uint32(0xFFFFFFFF)
+        left = acc[..., 0::2, :]
+        right = acc[..., 1::2, :]
+        acc = (s & right) | (ns & left)
+    return acc[..., 0, :]  # (..., LANES)
+
+
+def _make_mux_kernel(depth: int):
+    def kernel(a_ref, wpos_ref, wneg_ref, s_masks_ref, out_ref):
+        """One grid cell, mux mode: C chunks of NL = 2**depth operands.
+
+        a_ref:    (TB, C, NL) u8           activation values (zero padded)
+        wpos_ref: (TM, C, NL, LANES) u32   positive-rail weight streams
+        wneg_ref: (TM, C, NL, LANES) u32   negative-rail weight streams
+        s_masks_ref: (8, LANES) u32        packed MUX selects per level
+        out_ref:  (TB, TM) i32             raw popcount diff (pos - neg)
+        """
+        a = a_ref[...]
+        wpos = wpos_ref[...]
+        wneg = wneg_ref[...]
+        s_masks = s_masks_ref[...]
+
+        a_str = _encode_act_streams(a)  # (TB, C, NL, LANES)
+        a_b = a_str[:, None]  # (TB, 1, C, NL, LANES)
+        p_pos = a_b & wpos[None]  # (TB, TM, C, NL, LANES)
+        p_neg = a_b & wneg[None]
+
+        r_pos = _mux_tree(p_pos, s_masks, depth)  # (TB, TM, C, LANES)
+        r_neg = _mux_tree(p_neg, s_masks, depth)
+
+        pc_pos = _popcount_u32(r_pos).astype(jnp.int32).sum(axis=(-1, -2))
+        pc_neg = _popcount_u32(r_neg).astype(jnp.int32).sum(axis=(-1, -2))
+        out_ref[...] = pc_pos - pc_neg
+
+    return kernel
+
+
+def sc_mac_mux(a_chunks: jnp.ndarray, wpos: jnp.ndarray, wneg: jnp.ndarray) -> jnp.ndarray:
+    """Paper-faithful MUX-tree MAC over chunked operands.
+
+    a_chunks: (B, C, NL) uint8, NL = 2**depth; wpos/wneg: (M, C, NL, LANES)
+    uint32 encoded against ``wgt_thresholds(depth)``.  Returns (B, M) i32;
+    E[raw] = R * sum(a*w)/65536 with R = 256/NL.
+    """
+    B, C, NL = a_chunks.shape
+    M = wpos.shape[0]
+    depth = int(math.log2(NL))
+    assert 1 << depth == NL, NL
+    assert B % TB == 0 and M % TM == 0, (B, M)
+
+    grid = (B // TB, M // TM)
+    s_masks = jnp.asarray(_S_MASKS, dtype=jnp.uint32)
+    return pl.pallas_call(
+        _make_mux_kernel(depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TB, C, NL), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((TM, C, NL, LANES), lambda i, j: (j, 0, 0, 0)),
+            pl.BlockSpec((TM, C, NL, LANES), lambda i, j: (j, 0, 0, 0)),
+            pl.BlockSpec((8, LANES), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TB, TM), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.int32),
+        interpret=True,
+    )(a_chunks, wpos, wneg, s_masks)
+
+
+def sc_mac_mux_fast(a_chunks: jnp.ndarray, wpos_q: jnp.ndarray, wneg_q: jnp.ndarray) -> jnp.ndarray:
+    """Closed form of the MUX-tree path (bit-identical to ``sc_mac_mux``):
+    raw[b,m] = sum_{c,i} [i < a[c, i mod NL]] & [T_WGT_D[i] < w[m, c, i mod NL]].
+    """
+    B, C, NL = a_chunks.shape
+    M = wpos_q.shape[0]
+    depth = int(math.log2(NL))
+    r = STREAM_BITS // NL
+    t_act = jnp.arange(STREAM_BITS, dtype=jnp.uint8)
+    t_wgt = jnp.asarray(wgt_thresholds(depth), dtype=jnp.uint8)
+    a_pos = jnp.tile(a_chunks, (1, 1, r))  # (B, C, 256)
+    wp_pos = jnp.tile(wpos_q, (1, 1, r))  # (M, C, 256)
+    wn_pos = jnp.tile(wneg_q, (1, 1, r))
+    a_bit = (t_act < a_pos).astype(jnp.float32)
+    w_diff = (t_wgt < wp_pos).astype(jnp.float32) - (t_wgt < wn_pos).astype(jnp.float32)
+    raw = jax.lax.dot_general(
+        a_bit.reshape(B, -1), w_diff.reshape(M, -1), (((1,), (1,)), ((), ())))
+    return raw.astype(jnp.int32)

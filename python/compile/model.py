@@ -1,0 +1,249 @@
+"""L2: quantized ANN forward passes built on the L1 stochastic-MAC kernel.
+
+This is the compute graph ODIN executes: per layer —
+
+  binary u8 activations --B_TO_S--> SN streams --ANN_MUL/ANN_ACC--> SN MAC
+  --S_TO_B(popcount)--> binary --rescale + bias + ReLU (CMOS block)-->
+  requantized u8 activations --> next layer
+
+Max pooling runs in the binary domain on u8 values (the paper's 4:1 pooling
+logic block).  Everything here is traced once by ``aot.py`` and lowered to
+HLO text; at serve time the Rust coordinator feeds images + weight tensors
+as PJRT literals.
+
+Three forward variants per network:
+  * ``sc``    — faithful bit-parallel emulation (Pallas kernel ``sc_mac``);
+  * ``fast``  — algebraically-reduced stochastic path (bit-identical
+                outputs, one dot_general per layer) — the optimized artifact;
+  * ``float`` — f32 reference network (baseline + accuracy-delta oracle).
+
+Architectures (see DESIGN.md §8 for the MLBench string interpretation):
+  CNN1: conv5x5(4 maps, same) - pool2 - fc 784-70 - fc 70-10   (MNIST-like)
+  CNN2: conv7x7(10 maps, valid) - pool2 - fc 1210-120 - fc 120-10
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import sc_mac as K
+from .kernels.sc_common import LANES, STREAM_BITS
+
+# ---------------------------------------------------------------------------
+# Architecture registry
+# ---------------------------------------------------------------------------
+
+ARCHS = {
+    # conv: kernel size, output maps, padding; fc: list of (in, out)
+    "cnn1": dict(in_hw=28, k=5, maps=4, pad="same", pool=2,
+                 fc=[(784, 70), (70, 10)]),
+    "cnn2": dict(in_hw=28, k=7, maps=10, pad="valid", pool=2,
+                 fc=[(1210, 120), (120, 10)]),
+}
+
+
+def conv_out_hw(arch: dict) -> int:
+    """Spatial size after the conv layer (before pooling)."""
+    return arch["in_hw"] if arch["pad"] == "same" else arch["in_hw"] - arch["k"] + 1
+
+
+
+
+
+# ---------------------------------------------------------------------------
+# Shared graph pieces
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def im2col(img: jnp.ndarray, k: int, pad: str) -> jnp.ndarray:
+    """(B, H, W) -> (B, P, k*k) patch matrix, static shapes only."""
+    b, h, w = img.shape
+    if pad == "same":
+        p = k // 2
+        img = jnp.pad(img, ((0, 0), (p, p), (p, p)))
+        oh, ow = h, w
+    else:
+        oh, ow = h - k + 1, w - k + 1
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(img[:, dy:dy + oh, dx:dx + ow])
+    patches = jnp.stack(cols, axis=-1)  # (B, oh, ow, k*k)
+    return patches.reshape(b, oh * ow, k * k)
+
+
+def _sc_matmul(a_u8: jnp.ndarray, w_args: tuple, n: int, m: int, fast: bool) -> jnp.ndarray:
+    """Stochastic MAC of (R, n) u8 activations against m neurons.
+
+    ``w_args`` is (wpos_packed, wneg_packed) u32 (m, n, LANES) for the
+    faithful path, or (wpos_q, wneg_q) u8 (m, n) for the fast path.
+    Returns raw popcount differences (R, m) i32.  The fast path needs no
+    padding (pure gather); the faithful Pallas path pads rows to TB and
+    neurons to TM in-graph — zero padding is exact (encode(0) = all-zeros).
+    """
+    wa, wb = w_args
+    if fast:
+        return K.sc_mac_fast(a_u8, wa, wb)
+    r = a_u8.shape[0]
+    rp = _round_up(r, K.TB)
+    mp = _round_up(m, K.TM)
+    if rp != r:
+        a_u8 = jnp.pad(a_u8, ((0, rp - r), (0, 0)))
+    if mp != m:
+        wa = jnp.pad(wa, ((0, mp - m), (0, 0), (0, 0)))
+        wb = jnp.pad(wb, ((0, mp - m), (0, 0), (0, 0)))
+    raw = K.sc_mac(a_u8, wa, wb)
+    return raw[:r, :m]
+
+
+def _rescale(raw: jnp.ndarray, bias: jnp.ndarray, n: int, s_a: float, s_w: float,
+             s_out) -> jnp.ndarray:
+    """Binary-domain epilogue: rescale raw popcounts to f32, add bias, ReLU +
+    requantize to u8 if ``s_out`` is given (hidden layer), else return f32
+    logits (output layer).  E[raw] = sum(a*w) / 256 (binary accumulation),
+    so the rescale factor is 256 * s_a * s_w."""
+    y = raw.astype(jnp.float32) * jnp.float32(256.0 * s_a * s_w) + bias
+    if s_out is None:
+        return y
+    y = jnp.maximum(y, 0.0)  # 8-bit ReLU block
+    return jnp.clip(jnp.round(y / jnp.float32(s_out)), 0, 255).astype(jnp.uint8)
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, W, F) -> (B, H/2, W/2, F) 4:1 max pooling (binary domain)."""
+    b, h, w, f = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, f)
+    return x.max(axis=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# Stochastic forward (faithful and fast share structure)
+# ---------------------------------------------------------------------------
+
+def make_sc_fwd(arch_name: str, scales: dict, fast: bool):
+    """Build fwd(img_u8, conv_wp, conv_wn, conv_b, fc1_wp, fc1_wn, fc1_b,
+    fc2_wp, fc2_wn, fc2_b) -> logits f32 (batch, 10).
+
+    ``scales``: {"s_in", "conv": {"s_w","s_out"}, "fc1": {...}, "fc2": {"s_w"}}.
+    Weight tensors are runtime args so the Rust coordinator owns them.
+    """
+    arch = ARCHS[arch_name]
+    k, maps, pool = arch["k"], arch["maps"], arch["pool"]
+    n_conv = k * k
+    ohw = conv_out_hw(arch)
+    phw = ohw // pool
+    (n1, m1), (n2, m2) = arch["fc"]
+    assert phw * phw * maps == n1, (arch_name, phw, maps, n1)
+
+    s_in = scales["s_in"]
+    sc_, s1, s2 = scales["conv"], scales["fc1"], scales["fc2"]
+
+    def fwd_core(img, conv_wp, conv_wn, conv_b, fc1_wp, fc1_wn, fc1_b,
+                 fc2_wp, fc2_wn, fc2_b):
+        b = img.shape[0]
+        # conv layer as im2col + stochastic MAC
+        patches = im2col(img, k, arch["pad"])  # (B, P, k*k) u8
+        rows = patches.reshape(b * patches.shape[1], n_conv)
+        raw = _sc_matmul(rows, (conv_wp, conv_wn), n_conv, maps, fast)
+        act = _rescale(raw, conv_b, n_conv, s_in, sc_["s_w"], sc_["s_out"])
+        act = act.reshape(b, ohw, ohw, maps)
+        act = maxpool2(act)  # (B, phw, phw, maps) u8
+        flat = act.reshape(b, n1)
+        # fc1
+        raw = _sc_matmul(flat, (fc1_wp, fc1_wn), n1, m1, fast)
+        h = _rescale(raw, fc1_b, n1, sc_["s_out"], s1["s_w"], s1["s_out"])
+        # fc2 (logits, stay f32)
+        raw = _sc_matmul(h, (fc2_wp, fc2_wn), n2, m2, fast)
+        return (_rescale(raw, fc2_b, n2, s1["s_out"], s2["s_w"], None),)
+
+    return fwd_core
+
+
+def sc_weight_arg_shapes(arch_name: str, fast: bool, batch: int):
+    """ShapeDtypeStructs for jax.jit(...).lower — must match what the Rust
+    runtime feeds (see rust/src/coordinator/weights.rs)."""
+    arch = ARCHS[arch_name]
+    k, maps = arch["k"], arch["maps"]
+    (n1, m1), (n2, m2) = arch["fc"]
+    u8, u32, f32 = jnp.uint8, jnp.uint32, jnp.float32
+
+    def w(m, n):
+        if fast:
+            return jax.ShapeDtypeStruct((m, n), u8)
+        return jax.ShapeDtypeStruct((m, n, LANES), u32)
+
+    img = jax.ShapeDtypeStruct((batch, arch["in_hw"], arch["in_hw"]), u8)
+    f = jax.ShapeDtypeStruct
+    return (
+        img,
+        w(maps, k * k), w(maps, k * k), f((maps,), f32),
+        w(m1, n1), w(m1, n1), f((m1,), f32),
+        w(m2, n2), w(m2, n2), f((m2,), f32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Float reference network (same topology, f32)
+# ---------------------------------------------------------------------------
+
+def make_float_fwd(arch_name: str):
+    """fwd(img f32 (B,H,W) in [0,1], conv_w (k*k, maps), conv_b, fc1_w (n1,m1),
+    fc1_b, fc2_w (n2,m2), fc2_b) -> logits (B, 10)."""
+    arch = ARCHS[arch_name]
+    k, maps = arch["k"], arch["maps"]
+    ohw = conv_out_hw(arch)
+    (n1, m1), (n2, m2) = arch["fc"]
+
+    def fwd(img, conv_w, conv_b, fc1_w, fc1_b, fc2_w, fc2_b):
+        b = img.shape[0]
+        patches = im2col(img, k, arch["pad"])  # (B, P, k*k) f32
+        y = patches.reshape(-1, k * k) @ conv_w + conv_b
+        y = jnp.maximum(y, 0.0).reshape(b, ohw, ohw, maps)
+        y = maxpool2(y).reshape(b, n1)
+        h = jnp.maximum(y @ fc1_w + fc1_b, 0.0)
+        return (h @ fc2_w + fc2_b,)
+
+    return fwd
+
+
+def float_weight_arg_shapes(arch_name: str, batch: int):
+    arch = ARCHS[arch_name]
+    k, maps = arch["k"], arch["maps"]
+    (n1, m1), (n2, m2) = arch["fc"]
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((batch, arch["in_hw"], arch["in_hw"]), f32),
+        s((k * k, maps), f32), s((maps,), f32),
+        s((n1, m1), f32), s((m1,), f32),
+        s((n2, m2), f32), s((m2,), f32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (used by train.py and tests)
+# ---------------------------------------------------------------------------
+
+def quantize_weights(w: np.ndarray):
+    """f32 weights -> (q i16, s_w) with q = round(w / s_w) in [-255, 255]."""
+    s_w = float(np.abs(w).max()) / 255.0
+    if s_w == 0.0:
+        s_w = 1.0 / 255.0
+    q = np.clip(np.round(w / s_w), -255, 255).astype(np.int16)
+    return q, s_w
+
+
+def rails(q: np.ndarray):
+    """Signed q -> unipolar dual-rail (wpos, wneg) u8."""
+    return (np.clip(q, 0, 255).astype(np.uint8),
+            np.clip(-q, 0, 255).astype(np.uint8))
+
+
+def weight_values(w_rail: np.ndarray) -> np.ndarray:
+    """(n, m) u8 rail -> (m, n) u8 layout the kernels expect."""
+    return np.ascontiguousarray(w_rail.T)

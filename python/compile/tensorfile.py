@@ -1,0 +1,53 @@
+"""Tiny TLV tensor container shared between the Python compile path and the
+Rust runtime (rust/src/runtime/tensorfile.rs parses the same format).
+
+Layout (all little-endian):
+  u32 magic 0x4F44_494E ("ODIN")
+  u32 version (1)
+  u32 tensor count
+  per tensor:
+    u32 name length, name bytes (utf-8)
+    u32 dtype  (0 = u8, 1 = i16, 2 = f32, 3 = u32, 4 = i32)
+    u32 ndim, u32 dims[ndim]
+    raw data bytes (C order, little-endian)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x4F44494E
+_DTYPES = {0: np.uint8, 1: np.int16, 2: np.float32, 3: np.uint32, 4: np.int32}
+_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def write_tensors(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC, 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", code, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        magic, version, count = struct.unpack("<III", f.read(12))
+        assert magic == MAGIC and version == 1, (magic, version)
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<II", f.read(8))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dt = np.dtype(_DTYPES[code])
+            n = int(np.prod(dims)) if ndim else 1
+            out[name] = np.frombuffer(f.read(n * dt.itemsize), dtype=dt).reshape(dims)
+    return out

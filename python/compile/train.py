@@ -1,0 +1,177 @@
+"""Build-time training of the CNN1/CNN2 benchmark topologies on synth-MNIST.
+
+Runs once as part of ``make artifacts`` (cached on the weight files).  Plain
+JAX with a hand-rolled Adam — no optax dependency.  Produces, per arch:
+
+  artifacts/weights/<arch>.bin   — float weights, quantized rails, scales
+                                   (tensorfile TLV, parsed by Rust)
+  artifacts/weights/<arch>.json  — human-readable meta (scales, accuracy)
+  artifacts/data/test.bin        — the shared 2048-sample test split
+
+Quantization follows model.py: symmetric per-tensor weight scales
+(q in [-255, 255], dual-rail u8), activation scales from a 1024-sample
+max calibration pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .dataset import train_test_split
+from .tensorfile import write_tensors
+
+STEPS = 700
+BATCH = 128
+LR = 1e-3
+
+
+def init_params(arch_name: str, seed: int = 0) -> dict:
+    arch = M.ARCHS[arch_name]
+    k, maps = arch["k"], arch["maps"]
+    (n1, m1), (n2, m2) = arch["fc"]
+    rng = np.random.default_rng(seed)
+
+    def glorot(nin, nout):
+        lim = np.sqrt(6.0 / (nin + nout))
+        return rng.uniform(-lim, lim, (nin, nout)).astype(np.float32)
+
+    return {
+        "conv_w": glorot(k * k, maps), "conv_b": np.zeros(maps, np.float32),
+        "fc1_w": glorot(n1, m1), "fc1_b": np.zeros(m1, np.float32),
+        "fc2_w": glorot(n2, m2), "fc2_b": np.zeros(m2, np.float32),
+    }
+
+
+def _loss_fn(fwd, params, x, y):
+    (logits,) = fwd(x, params["conv_w"], params["conv_b"], params["fc1_w"],
+                    params["fc1_b"], params["fc2_w"], params["fc2_b"])
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logz, y[:, None], axis=1).mean()
+
+
+def train(arch_name: str, data, seed: int = 0, steps: int = STEPS):
+    """Returns (params, float test accuracy)."""
+    (xtr, ytr), (xte, yte) = data
+    fwd = M.make_float_fwd(arch_name)
+    params = {k: jnp.asarray(v) for k, v in init_params(arch_name, seed).items()}
+    mom = {k: jnp.zeros_like(v) for k, v in params.items()}
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+
+    @jax.jit
+    def step(params, mom, vel, x, y, t):
+        loss, grads = jax.value_and_grad(lambda p: _loss_fn(fwd, p, x, y))(params)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            new_m[k] = b1 * mom[k] + (1 - b1) * grads[k]
+            new_v[k] = b2 * vel[k] + (1 - b2) * grads[k] ** 2
+            mhat = new_m[k] / (1 - b1 ** t)
+            vhat = new_v[k] / (1 - b2 ** t)
+            new_p[k] = params[k] - LR * mhat / (jnp.sqrt(vhat) + eps)
+        return new_p, new_m, new_v, loss
+
+    rng = np.random.default_rng(seed + 100)
+    xtr_f = xtr.astype(np.float32) / 255.0
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, len(xtr), BATCH)
+        params, mom, vel, loss = step(
+            params, mom, vel, jnp.asarray(xtr_f[idx]), jnp.asarray(ytr[idx]), t)
+        if t % 100 == 0:
+            print(f"  [{arch_name}] step {t:4d} loss {float(loss):.4f}")
+
+    acc = evaluate_float(arch_name, params, xte, yte)
+    return {k: np.asarray(v) for k, v in params.items()}, acc
+
+
+def evaluate_float(arch_name: str, params, xte, yte, batch: int = 256) -> float:
+    fwd = jax.jit(M.make_float_fwd(arch_name))
+    correct = 0
+    for i in range(0, len(xte), batch):
+        x = jnp.asarray(xte[i:i + batch].astype(np.float32) / 255.0)
+        (logits,) = fwd(x, params["conv_w"], params["conv_b"], params["fc1_w"],
+                        params["fc1_b"], params["fc2_w"], params["fc2_b"])
+        correct += int((np.argmax(np.asarray(logits), 1) == yte[i:i + batch]).sum())
+    return correct / len(xte)
+
+
+def calibrate(arch_name: str, params, xcal: np.ndarray) -> dict:
+    """Max-calibration of the two requantized activation tensors."""
+    arch = M.ARCHS[arch_name]
+    k, maps = arch["k"], arch["maps"]
+    ohw = M.conv_out_hw(arch)
+    (n1, m1), _ = arch["fc"]
+
+    x = jnp.asarray(xcal.astype(np.float32) / 255.0)
+    patches = M.im2col(x, k, arch["pad"])
+    y = jnp.maximum(patches.reshape(-1, k * k) @ params["conv_w"] + params["conv_b"], 0.0)
+    conv_max = float(y.max())
+    y = M.maxpool2(y.reshape(len(xcal), ohw, ohw, maps)).reshape(len(xcal), n1)
+    h = jnp.maximum(y @ params["fc1_w"] + params["fc1_b"], 0.0)
+    fc1_max = float(h.max())
+    return {"conv_out_max": conv_max, "fc1_out_max": fc1_max}
+
+
+def quantize(arch_name: str, params, calib: dict) -> tuple[dict, dict]:
+    """Returns (q tensors, scales dict) per model.py's scheme."""
+    conv_q, s_w_conv = M.quantize_weights(params["conv_w"])
+    fc1_q, s_w_fc1 = M.quantize_weights(params["fc1_w"])
+    fc2_q, s_w_fc2 = M.quantize_weights(params["fc2_w"])
+    scales = {
+        "s_in": 1.0 / 255.0,
+        "conv": {"s_w": s_w_conv, "s_out": calib["conv_out_max"] / 255.0},
+        "fc1": {"s_w": s_w_fc1, "s_out": calib["fc1_out_max"] / 255.0},
+        "fc2": {"s_w": s_w_fc2},
+    }
+    q = {"conv_q": conv_q, "fc1_q": fc1_q, "fc2_q": fc2_q}
+    return q, scales
+
+
+def export(arch_name: str, params, q, scales, acc_float: float, outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    flat_scales = np.array([
+        scales["s_in"], scales["conv"]["s_w"], scales["conv"]["s_out"],
+        scales["fc1"]["s_w"], scales["fc1"]["s_out"], scales["fc2"]["s_w"],
+    ], dtype=np.float32)
+    tensors = {
+        "scales": flat_scales,
+        "conv_b": params["conv_b"], "fc1_b": params["fc1_b"], "fc2_b": params["fc2_b"],
+        "conv_w": params["conv_w"], "fc1_w": params["fc1_w"], "fc2_w": params["fc2_w"],
+        **q,
+    }
+    write_tensors(os.path.join(outdir, f"{arch_name}.bin"), tensors)
+    with open(os.path.join(outdir, f"{arch_name}.json"), "w") as f:
+        json.dump({"arch": arch_name, "scales": scales,
+                   "float_test_acc": acc_float}, f, indent=2)
+    print(f"  [{arch_name}] float test acc {acc_float:.4f} -> {outdir}/{arch_name}.bin")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=STEPS)
+    args = ap.parse_args()
+
+    data = train_test_split()
+    (xtr, ytr), (xte, yte) = data
+
+    os.makedirs(os.path.join(args.out, "data"), exist_ok=True)
+    write_tensors(os.path.join(args.out, "data", "test.bin"),
+                  {"images": xte, "labels": yte})
+
+    for arch in ("cnn1", "cnn2"):
+        print(f"training {arch} ...")
+        params, acc = train(arch, data, steps=args.steps)
+        calib = calibrate(arch, params, xtr[:1024])
+        q, scales = quantize(arch, params, calib)
+        export(arch, params, q, scales, acc, os.path.join(args.out, "weights"))
+
+
+if __name__ == "__main__":
+    main()

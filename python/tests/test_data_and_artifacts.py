@@ -1,0 +1,120 @@
+"""Dataset determinism, tensorfile container, and artifact manifest checks."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile.dataset import make_dataset, train_test_split
+from compile.tensorfile import read_tensors, write_tensors
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first")
+
+
+class TestDataset:
+    def test_deterministic(self):
+        a, la = make_dataset(64, seed=42)
+        b, lb = make_dataset(64, seed=42)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+
+    def test_seed_changes_data(self):
+        a, _ = make_dataset(64, seed=1)
+        b, _ = make_dataset(64, seed=2)
+        assert not np.array_equal(a, b)
+
+    def test_shapes_and_ranges(self):
+        x, y = make_dataset(100, seed=0)
+        assert x.shape == (100, 28, 28) and x.dtype == np.uint8
+        assert y.shape == (100,) and set(np.unique(y)) <= set(range(10))
+
+    def test_all_classes_present(self):
+        _, y = make_dataset(500, seed=0)
+        assert len(np.unique(y)) == 10
+
+    def test_images_nontrivial(self):
+        x, _ = make_dataset(32, seed=0)
+        assert (x.reshape(32, -1).max(axis=1) > 100).all()
+        assert x.mean() < 128  # mostly background
+
+
+class TestTensorfile:
+    def test_roundtrip_all_dtypes(self):
+        rng = np.random.default_rng(0)
+        tensors = {
+            "u8": rng.integers(0, 256, (3, 4), dtype=np.uint8),
+            "i16": rng.integers(-1000, 1000, (5,), dtype=np.int16),
+            "f32": rng.normal(size=(2, 3, 4)).astype(np.float32),
+            "u32": rng.integers(0, 2**32, (7,), dtype=np.uint32),
+            "i32": rng.integers(-2**31, 2**31, (2, 2), dtype=np.int32),
+        }
+        with tempfile.NamedTemporaryFile(suffix=".bin") as f:
+            write_tensors(f.name, tensors)
+            back = read_tensors(f.name)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+            assert back[k].dtype == tensors[k].dtype
+
+    def test_scalar_and_empty_shapes(self):
+        with tempfile.NamedTemporaryFile(suffix=".bin") as f:
+            write_tensors(f.name, {"x": np.zeros((0, 4), np.float32)})
+            back = read_tensors(f.name)
+        assert back["x"].shape == (0, 4)
+
+
+@needs_artifacts
+class TestArtifacts:
+    def test_manifest_covers_files(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            manifest = json.load(f)
+        for name in manifest:
+            assert os.path.exists(os.path.join(ART, f"{name}.hlo.txt")), name
+
+    def test_expected_artifact_set(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            manifest = json.load(f)
+        for arch in ("cnn1", "cnn2"):
+            for b in (1, 8, 32):
+                assert f"{arch}_fast_b{b}" in manifest
+            assert f"{arch}_sc_b1" in manifest
+            assert f"{arch}_float_b1" in manifest
+        assert "sc_tile" in manifest and "sc_tile_fast" in manifest
+
+    def test_arg_specs_consistent_with_model(self):
+        from compile import model as M
+        with open(os.path.join(ART, "manifest.json")) as f:
+            manifest = json.load(f)
+        spec = manifest["cnn1_fast_b8"]
+        shapes = M.sc_weight_arg_shapes("cnn1", fast=True, batch=8)
+        assert len(spec["args"]) == len(shapes)
+        for got, want in zip(spec["args"], shapes):
+            assert tuple(got["shape"]) == want.shape
+
+    def test_hlo_text_is_parseable_entry(self):
+        """Cheap sanity: the artifact is HLO text with an ENTRY computation."""
+        for name in ("cnn1_fast_b1", "sc_tile_fast"):
+            with open(os.path.join(ART, f"{name}.hlo.txt")) as f:
+                text = f.read()
+            assert "ENTRY" in text and "ROOT" in text
+
+    def test_weights_bin_has_required_tensors(self):
+        for arch in ("cnn1", "cnn2"):
+            t = read_tensors(os.path.join(ART, "weights", f"{arch}.bin"))
+            for name in ("scales", "conv_q", "fc1_q", "fc2_q",
+                         "conv_b", "fc1_b", "fc2_b",
+                         "conv_w", "fc1_w", "fc2_w"):
+                assert name in t, (arch, name)
+            assert t["scales"].shape == (6,)
+
+    def test_test_split_matches_dataset_generator(self):
+        data = read_tensors(os.path.join(ART, "data", "test.bin"))
+        (_, _), (xte, yte) = train_test_split()
+        np.testing.assert_array_equal(data["images"], xte)
+        np.testing.assert_array_equal(data["labels"], yte)

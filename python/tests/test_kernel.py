@@ -1,0 +1,239 @@
+"""L1 correctness: Pallas kernels vs pure-numpy oracles.
+
+The cross-implementation equalities here are the spine of the whole repo:
+  Pallas kernel == bitwise numpy oracle == closed-form table/diagonal
+for both accumulation modes, over hypothesis-driven shape/value sweeps.
+The same vectors are pinned by the Rust side (stochastic/ tests) through
+golden files, so all three languages agree bit-for-bit.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as REF
+from compile.kernels import sc_mac as K
+from compile.kernels import sc_common as C
+
+
+def rails_from_signed(wq):
+    return (np.clip(wq, 0, 255).astype(np.uint8),
+            np.clip(-wq, 0, 255).astype(np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# Encoding properties
+# ---------------------------------------------------------------------------
+
+class TestEncoding:
+    def test_act_thresholds_is_identity_permutation(self):
+        t = C.act_thresholds()
+        assert sorted(t.tolist()) == list(range(256))
+        assert (t == np.arange(256)).all()
+
+    def test_wgt_thresholds_are_permutations_for_all_depths(self):
+        for d in range(1, 9):
+            t = C.wgt_thresholds(d)
+            assert sorted(t.tolist()) == list(range(256)), f"depth {d}"
+
+    def test_bitrev8_involution(self):
+        for i in range(256):
+            assert C.bitrev8(C.bitrev8(i)) == i
+
+    @given(st.integers(0, 255))
+    def test_encode_popcount_exact(self, v):
+        """popcount(stream(v)) == v for every value and every LUT."""
+        for t in (C.T_ACT, C.T_WGT, C.wgt_thresholds(3)):
+            packed = C.encode_np(np.array([v], np.uint8), t)
+            bits = C.unpack_bits_u32(packed)
+            assert bits.sum() == v
+
+    def test_pack_unpack_roundtrip(self):
+        rng = np.random.default_rng(0)
+        bits = rng.integers(0, 2, (5, 256)).astype(np.uint8)
+        assert (C.unpack_bits_u32(C.pack_bits_u32(bits)) == bits).all()
+
+    def test_mux_select_masks_popcount_half(self):
+        """Every select stream encodes s = 0.5 exactly (popcount 128)."""
+        masks = C.mux_select_masks()
+        for k in range(8):
+            assert C.unpack_bits_u32(masks[k]).sum() == 128
+
+    def test_rotation_preserves_popcount(self):
+        """Stream rotation (binary mode) never changes the encoded value."""
+        w = np.full((1, C.N_ROT), 173, np.uint8)
+        packed = REF.encode_weights(w)
+        pcs = REF.popcount_u32(packed).sum(axis=-1)
+        assert (pcs == 173).all()
+
+    def test_xor_scramble_anticorrelation_pitfall(self):
+        """Documents why T_WGT != T_ACT ^ const: the XOR-scrambled pair is
+        catastrophically anti-correlated (the bug this design fixes)."""
+        t_bad = C.T_ACT ^ 0x80
+        # a = w = 128: true product 64, xor-scrambled estimate is 0
+        cnt = int(((C.T_ACT < 128) & (t_bad < 128)).sum())
+        assert cnt == 0
+        # Hammersley pair is close to 64
+        cnt_good = int(((C.T_ACT < 128) & (C.T_WGT < 128)).sum())
+        assert abs(cnt_good - 64) <= 3
+
+
+# ---------------------------------------------------------------------------
+# Binary accumulation mode (default)
+# ---------------------------------------------------------------------------
+
+class TestBinaryMode:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 3).map(lambda x: 8 * x),
+        m=st.integers(1, 2).map(lambda x: 32 * x),
+        n=st.integers(1, 300),
+        seed=st.integers(0, 2**31),
+    )
+    def test_three_way_bit_exact(self, b, m, n, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, 256, (b, n), dtype=np.uint8)
+        wq = rng.integers(-255, 256, (m, n))
+        wp, wn = rails_from_signed(wq)
+        r_ref = REF.sc_mac_ref(a, wp, wn)
+        r_tab = REF.sc_mac_table(a, wp, wn)
+        np.testing.assert_array_equal(r_ref, r_tab)
+        r_k = np.asarray(K.sc_mac(
+            jnp.asarray(a),
+            jnp.asarray(REF.encode_weights(wp)),
+            jnp.asarray(REF.encode_weights(wn))))
+        np.testing.assert_array_equal(r_k, r_ref)
+        r_f = np.asarray(K.sc_mac_fast(jnp.asarray(a), jnp.asarray(wp), jnp.asarray(wn)))
+        np.testing.assert_array_equal(r_f, r_ref)
+
+    def test_zero_inputs_give_zero(self):
+        a = np.zeros((8, 64), np.uint8)
+        w = np.zeros((32, 64), np.uint8)
+        assert (REF.sc_mac_ref(a, w, w) == 0).all()
+        r = np.asarray(K.sc_mac_fast(jnp.asarray(a), jnp.asarray(w), jnp.asarray(w)))
+        assert (r == 0).all()
+
+    def test_max_inputs_give_exact_count(self):
+        """a = w = 255 -> every product popcount is cnt(255,255) = 254
+        (exactly 255*255/256 rounded by the Hammersley set)."""
+        n = 16
+        a = np.full((8, n), 255, np.uint8)
+        wp = np.full((32, n), 255, np.uint8)
+        wn = np.zeros((32, n), np.uint8)
+        raw = REF.sc_mac_ref(a, wp, wn)
+        expect = REF.float_mac(a, wp, wn)
+        assert np.abs(raw - expect).max() <= 3 * n
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31))
+    def test_sc_error_bound(self, seed):
+        """|raw - E[raw]| stays within the low-discrepancy bound ~3/operand."""
+        rng = np.random.default_rng(seed)
+        n = 200
+        a = rng.integers(0, 256, (8, n), dtype=np.uint8)
+        wq = rng.integers(-255, 256, (32, n))
+        wp, wn = rails_from_signed(wq)
+        raw = REF.sc_mac_table(a, wp, wn)
+        expect = REF.float_mac(a, wp, wn)
+        assert np.abs(raw - expect).max() <= 3.0 * n
+
+    def test_dual_rail_antisymmetry(self):
+        """Swapping the rails negates the output exactly."""
+        rng = np.random.default_rng(1)
+        a = rng.integers(0, 256, (8, 50), dtype=np.uint8)
+        wq = rng.integers(-255, 256, (32, 50))
+        wp, wn = rails_from_signed(wq)
+        np.testing.assert_array_equal(
+            REF.sc_mac_table(a, wp, wn), -REF.sc_mac_table(a, wn, wp))
+
+    def test_cnt16_table_matches_jax(self):
+        t_np = REF.cnt16_table_np()
+        t_jx = np.asarray(K.cnt16_table())
+        np.testing.assert_array_equal(t_np, t_jx)
+
+    def test_cnt_table_monotone(self):
+        """CNT[r, a, w] is nondecreasing in both a and w (step functions)."""
+        t = REF.cnt16_table_np()
+        assert (np.diff(t, axis=1) >= 0).all()
+        assert (np.diff(t, axis=2) >= 0).all()
+        assert (t[:, 0, :] == 0).all() and (t[:, :, 0] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# MUX-tree accumulation mode (paper-faithful ablation)
+# ---------------------------------------------------------------------------
+
+class TestMuxMode:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        depth=st.integers(1, 8),
+        c=st.integers(1, 3),
+        seed=st.integers(0, 2**31),
+    )
+    def test_three_way_bit_exact(self, depth, c, seed):
+        nl = 1 << depth
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, 256, (8, c, nl), dtype=np.uint8)
+        wq = rng.integers(-255, 256, (32, c, nl))
+        wp, wn = rails_from_signed(wq)
+        r_ref = REF.sc_mac_mux_ref(a, wp, wn)
+        r_diag = REF.sc_mac_mux_diagonal(a, wp, wn)
+        np.testing.assert_array_equal(r_ref, r_diag)
+        r_k = np.asarray(K.sc_mac_mux(
+            jnp.asarray(a),
+            jnp.asarray(REF.encode_weights_mux(wp, depth)),
+            jnp.asarray(REF.encode_weights_mux(wn, depth))))
+        np.testing.assert_array_equal(r_k, r_ref)
+        r_f = np.asarray(K.sc_mac_mux_fast(jnp.asarray(a), jnp.asarray(wp), jnp.asarray(wn)))
+        np.testing.assert_array_equal(r_f, r_ref)
+
+    def test_mux_output_bounded_by_stream(self):
+        """A depth-D chunk's contribution can never exceed 256 per rail —
+        the 1/NL scaling that motivates the binary-mode ablation."""
+        a = np.full((8, 1, 256), 255, np.uint8)
+        wp = np.full((32, 1, 256), 255, np.uint8)
+        wn = np.zeros_like(wp)
+        raw = REF.sc_mac_mux_ref(a, wp, wn)
+        assert raw.max() <= 256
+
+    def test_mux_chunk_layout(self):
+        assert REF.mux_chunk_layout(25) == (1, 32, 5)
+        assert REF.mux_chunk_layout(256) == (1, 256, 8)
+        assert REF.mux_chunk_layout(257) == (2, 256, 8)
+        assert REF.mux_chunk_layout(784) == (4, 256, 8)
+
+    def test_mux_noise_exceeds_binary_noise_on_wide_layers(self):
+        """The quantified reason binary mode is the default: on a 784-input
+        layer the mux path's absolute error dwarfs the binary path's."""
+        rng = np.random.default_rng(7)
+        n = 784
+        a = rng.integers(0, 150, (8, n), dtype=np.uint8)
+        wq = rng.integers(-200, 201, (32, n))
+        wp, wn = rails_from_signed(wq)
+        err_bin = np.abs(REF.sc_mac_table(a, wp, wn) * 256.0
+                         - a.astype(np.int64) @ (wq.T)).mean()
+        a_c = REF.mux_chunk_pad(a)
+        wp_c = REF.mux_chunk_pad(wp)
+        wn_c = REF.mux_chunk_pad(wn)
+        err_mux = np.abs(REF.sc_mac_mux_diagonal(a_c, wp_c, wn_c) * 65536.0
+                         - a.astype(np.int64) @ (wq.T)).mean()
+        assert err_mux > 4 * err_bin
+
+
+# ---------------------------------------------------------------------------
+# SWAR popcount
+# ---------------------------------------------------------------------------
+
+class TestPopcount:
+    @given(st.integers(0, 2**32 - 1))
+    def test_popcount_u32(self, v):
+        got = int(REF.popcount_u32(np.array([v], np.uint32))[0])
+        assert got == bin(v).count("1")
+
+    def test_popcount_vector(self):
+        rng = np.random.default_rng(3)
+        v = rng.integers(0, 2**32, 1000, dtype=np.uint32)
+        got = REF.popcount_u32(v)
+        want = np.array([bin(int(x)).count("1") for x in v])
+        np.testing.assert_array_equal(got, want)

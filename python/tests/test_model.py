@@ -1,0 +1,189 @@
+"""L2 correctness: quantized forward graphs, conv/pool plumbing, and the
+faithful-vs-fast model-level equivalence."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.tensorfile import read_tensors
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _weights(arch):
+    t = read_tensors(os.path.join(ART, "weights", f"{arch}.bin"))
+    with open(os.path.join(ART, "weights", f"{arch}.json")) as f:
+        meta = json.load(f)
+    return t, meta["scales"]
+
+
+def _sc_args(t, fast):
+    from compile.kernels import ref as REF
+    out = []
+    for name in ("conv_q", "fc1_q", "fc2_q"):
+        wp, wn = M.rails(t[name])
+        wp_v, wn_v = M.weight_values(wp), M.weight_values(wn)
+        if fast:
+            out += [jnp.asarray(wp_v), jnp.asarray(wn_v)]
+        else:
+            out += [jnp.asarray(REF.encode_weights(wp_v)),
+                    jnp.asarray(REF.encode_weights(wn_v))]
+        out.append(jnp.asarray(t[name.replace("_q", "_b")]))
+    return out
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "weights", "cnn1.bin")),
+    reason="run `make artifacts` first")
+
+
+class TestIm2col:
+    def test_same_padding_shape(self):
+        img = jnp.zeros((2, 28, 28), jnp.float32)
+        p = M.im2col(img, 5, "same")
+        assert p.shape == (2, 784, 25)
+
+    def test_valid_shape(self):
+        img = jnp.zeros((2, 28, 28), jnp.float32)
+        p = M.im2col(img, 7, "valid")
+        assert p.shape == (2, 484, 49)
+
+    def test_matches_direct_convolution(self):
+        rng = np.random.default_rng(0)
+        img = rng.normal(size=(1, 10, 10)).astype(np.float32)
+        ker = rng.normal(size=(3, 3)).astype(np.float32)
+        p = np.asarray(M.im2col(jnp.asarray(img), 3, "valid"))  # (1, 64, 9)
+        got = (p.reshape(-1, 9) @ ker.reshape(9, 1)).reshape(8, 8)
+        want = np.zeros((8, 8), np.float32)
+        for y in range(8):
+            for x in range(8):
+                want[y, x] = (img[0, y:y + 3, x:x + 3] * ker).sum()
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_patch_ordering_row_major(self):
+        img = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4)
+        p = np.asarray(M.im2col(img, 2, "valid"))
+        # first patch = rows [[0,1],[4,5]] flattened dy-major
+        np.testing.assert_array_equal(p[0, 0], [0, 1, 4, 5])
+
+
+class TestMaxpool:
+    def test_basic(self):
+        x = jnp.asarray(np.arange(16, dtype=np.uint8).reshape(1, 4, 4, 1))
+        y = np.asarray(M.maxpool2(x))
+        np.testing.assert_array_equal(y[0, :, :, 0], [[5, 7], [13, 15]])
+
+    def test_channels_independent(self):
+        rng = np.random.default_rng(0)
+        x = rng.integers(0, 256, (2, 8, 8, 3), dtype=np.uint8)
+        y = np.asarray(M.maxpool2(jnp.asarray(x)))
+        for c in range(3):
+            yc = np.asarray(M.maxpool2(jnp.asarray(x[..., c:c + 1])))
+            np.testing.assert_array_equal(y[..., c], yc[..., 0])
+
+
+class TestQuantization:
+    def test_quantize_roundtrip_error(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(scale=0.1, size=(50, 20)).astype(np.float32)
+        q, s = M.quantize_weights(w)
+        assert np.abs(q * s - w).max() <= s / 2 + 1e-7
+
+    def test_rails_reconstruct(self):
+        q = np.array([[-255, -1, 0, 1, 255]], np.int16)
+        wp, wn = M.rails(q)
+        np.testing.assert_array_equal(wp.astype(np.int32) - wn.astype(np.int32), q)
+
+    def test_zero_weights(self):
+        q, s = M.quantize_weights(np.zeros((4, 4), np.float32))
+        assert (q == 0).all() and s > 0
+
+
+@needs_artifacts
+class TestForwardGraphs:
+    @pytest.mark.parametrize("arch", ["cnn1", "cnn2"])
+    def test_fast_shapes(self, arch):
+        t, scales = _weights(arch)
+        fwd = jax.jit(M.make_sc_fwd(arch, scales, fast=True))
+        img = jnp.zeros((4, 28, 28), jnp.uint8)
+        (logits,) = fwd(img, *_sc_args(t, fast=True))
+        assert logits.shape == (4, 10)
+
+    @pytest.mark.parametrize("arch", ["cnn1"])
+    def test_faithful_equals_fast_model_level(self, arch):
+        """The full faithful Pallas forward and the optimized gather forward
+        produce *identical* logits — the model-level equivalence proof."""
+        t, scales = _weights(arch)
+        rng = np.random.default_rng(5)
+        img = jnp.asarray(rng.integers(0, 256, (1, 28, 28), dtype=np.uint8))
+        (fast,) = jax.jit(M.make_sc_fwd(arch, scales, fast=True))(
+            img, *_sc_args(t, fast=True))
+        (slow,) = M.make_sc_fwd(arch, scales, fast=False)(
+            img, *_sc_args(t, fast=False))
+        # Raw popcounts are bit-identical (test_kernel.py); the final f32
+        # rescale may associate differently under jit, hence the epsilon.
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(slow),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("arch", ["cnn1", "cnn2"])
+    def test_float_reference_accuracy(self, arch):
+        """Float network reproduces the recorded training accuracy on a
+        slice of the canonical test split."""
+        t, scales = _weights(arch)
+        data = read_tensors(os.path.join(ART, "data", "test.bin"))
+        x, y = data["images"][:256], data["labels"][:256]
+        fwd = jax.jit(M.make_float_fwd(arch))
+        (logits,) = fwd(jnp.asarray(x.astype(np.float32) / 255.0),
+                        jnp.asarray(t["conv_w"]), jnp.asarray(t["conv_b"]),
+                        jnp.asarray(t["fc1_w"]), jnp.asarray(t["fc1_b"]),
+                        jnp.asarray(t["fc2_w"]), jnp.asarray(t["fc2_b"]))
+        acc = (np.argmax(np.asarray(logits), 1) == y).mean()
+        assert acc > 0.9
+
+    @pytest.mark.parametrize("arch", ["cnn1", "cnn2"])
+    def test_stochastic_accuracy_tracks_float(self, arch):
+        """Table 2's claim: 8-bit stochastic inference stays within a few
+        points of float accuracy."""
+        t, scales = _weights(arch)
+        data = read_tensors(os.path.join(ART, "data", "test.bin"))
+        x, y = data["images"][:256], data["labels"][:256]
+        fwd = jax.jit(M.make_sc_fwd(arch, scales, fast=True))
+        args = _sc_args(t, fast=True)
+        correct = 0
+        for i in range(0, len(x), 32):
+            (logits,) = fwd(jnp.asarray(x[i:i + 32]), *args)
+            correct += int((np.argmax(np.asarray(logits), 1) == y[i:i + 32]).sum())
+        acc = correct / len(x)
+        assert acc > 0.9
+
+    def test_batch_one_matches_batch_many(self):
+        t, scales = _weights("cnn1")
+        rng = np.random.default_rng(9)
+        imgs = rng.integers(0, 256, (4, 28, 28), dtype=np.uint8)
+        args = _sc_args(t, fast=True)
+        fwd = jax.jit(M.make_sc_fwd("cnn1", scales, fast=True))
+        (batch,) = fwd(jnp.asarray(imgs), *args)
+        for i in range(4):
+            (one,) = fwd(jnp.asarray(imgs[i:i + 1]), *args)
+            np.testing.assert_array_equal(np.asarray(one)[0], np.asarray(batch)[i])
+
+
+@needs_artifacts
+class TestArgShapes:
+    @pytest.mark.parametrize("arch", ["cnn1", "cnn2"])
+    @pytest.mark.parametrize("fast", [True, False])
+    def test_sc_weight_arg_shapes_match_weights(self, arch, fast):
+        t, _ = _weights(arch)
+        shapes = M.sc_weight_arg_shapes(arch, fast=fast, batch=2)
+        assert shapes[0].shape == (2, 28, 28)
+        conv_wp = shapes[1]
+        k, maps = M.ARCHS[arch]["k"], M.ARCHS[arch]["maps"]
+        if fast:
+            assert conv_wp.shape == (maps, k * k)
+        else:
+            assert conv_wp.shape == (maps, k * k, 8)

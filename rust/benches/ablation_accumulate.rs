@@ -1,0 +1,38 @@
+//! Bench: accumulation-mode ablation — binary (fused MUL+POP) vs the
+//! paper's MUX tree, in modeled cost and in software-execution speed of
+//! the bit-true arithmetic.
+
+use odin::ann::topology::{cnn1, vgg1};
+use odin::mapper::{map_topology, ExecConfig};
+use odin::pim::AccumulateMode;
+use odin::stochastic::encode::rails;
+use odin::stochastic::luts::cnt16;
+use odin::stochastic::mac::{mac_binary, mac_binary_table, mac_mux};
+use odin::util::bench::{black_box, Bench};
+use odin::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("ablation_modeled_cost");
+    for mode in [AccumulateMode::Binary, AccumulateMode::Mux] {
+        for topo in [cnn1(), vgg1()] {
+            let cfg = ExecConfig { mode, ..ExecConfig::paper() };
+            let cost = map_topology(&topo, &cfg);
+            b.record(&format!("{:?}_{}_latency_ns", mode, topo.name), cost.latency_ns(&cfg));
+            b.record(&format!("{:?}_{}_energy_pj", mode, topo.name), cost.energy_pj());
+        }
+    }
+    b.finish();
+
+    let mut rng = Rng::new(3);
+    let n = 784;
+    let acts: Vec<u8> = (0..n).map(|_| rng.u8()).collect();
+    let wq: Vec<i16> = (0..n).map(|_| rng.range_i32(-255, 255) as i16).collect();
+    let (wp, wn) = rails(&wq);
+    let table = cnt16();
+
+    let mut b = Bench::new("ablation_software_mac_784");
+    b.run("binary_bitwise", || black_box(mac_binary(&acts, &wp, &wn)));
+    b.run("binary_table", || black_box(mac_binary_table(&table, &acts, &wp, &wn)));
+    b.run("mux_tree", || black_box(mac_mux(&acts, &wp, &wn)));
+    b.finish();
+}

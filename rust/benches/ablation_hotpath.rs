@@ -1,0 +1,69 @@
+//! Bench: L3 hot-path microbenchmarks — the pieces on the serving path
+//! (weight encode, stream ops, ledger folds) plus, when artifacts exist,
+//! the real PJRT inference path at each batch size.  This is the bench
+//! EXPERIMENTS.md §Perf tracks.
+
+use std::path::Path;
+
+use odin::ann::topology::cnn1;
+use odin::coordinator::{Engine, ModelWeights};
+use odin::dataset::TestSet;
+use odin::mapper::{map_topology, ExecConfig};
+use odin::runtime::{Manifest, Runtime};
+use odin::stochastic::{encode_rotated_weight, luts::cnt16, mac::mac_binary_table, Stream256};
+use odin::util::bench::{black_box, Bench};
+use odin::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(9);
+
+    let mut b = Bench::new("stream_ops");
+    let x = Stream256::from_fn(|i| i % 3 == 0);
+    let y = Stream256::from_fn(|i| i % 5 != 0);
+    b.run("and_popcount", || black_box(x.and(&y).popcount()));
+    b.run("mux", || black_box(x.mux(&y, &Stream256::ONES)));
+    b.run("rotate_left_16", || black_box(x.rotate_left(16)));
+    b.run("encode_rotated_weight", || black_box(encode_rotated_weight(137, 5)));
+    b.finish();
+
+    let mut b = Bench::new("weight_store");
+    b.run("cnt16_build", || black_box(cnt16()[0][128][128]));
+    if Path::new("artifacts/weights/cnn1.bin").exists() {
+        b.run("load_cnn1_weights", || {
+            black_box(ModelWeights::load("artifacts", "cnn1").unwrap().scales[0])
+        });
+        let w = ModelWeights::load("artifacts", "cnn1").unwrap();
+        b.run("encode_cnn1_streams", || black_box(w.sc_args(false).len()));
+    }
+    b.finish();
+
+    let mut b = Bench::new("mapper_ledger");
+    let cfg = ExecConfig::paper();
+    let topo = cnn1();
+    b.run("map_cnn1", || black_box(map_topology(&topo, &cfg)).energy_pj());
+    b.finish();
+
+    let table = cnt16();
+    let acts: Vec<u8> = (0..784).map(|_| rng.u8()).collect();
+    let wq: Vec<i16> = (0..784).map(|_| rng.range_i32(-255, 255) as i16).collect();
+    let (wp, wn) = odin::stochastic::rails(&wq);
+    let mut b = Bench::new("software_mac");
+    b.run("table_mac_784", || black_box(mac_binary_table(&table, &acts, &wp, &wn)));
+    b.finish();
+
+    if Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::cpu().unwrap();
+        let manifest = Manifest::load("artifacts").unwrap();
+        let engine = Engine::new(&rt, &manifest, "artifacts", "cnn1", "fast").unwrap();
+        let test = TestSet::load("artifacts").unwrap();
+        let mut b = Bench::new("pjrt_inference_cnn1_fast");
+        for batch in engine.batch_sizes() {
+            let imgs: Vec<&[u8]> =
+                test.samples[..batch].iter().map(|s| s.image.as_slice()).collect();
+            b.run(&format!("batch_{batch}"), || {
+                black_box(engine.infer(&imgs).unwrap().1.exec_ns)
+            });
+        }
+        b.finish();
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig. 6(b) — energy grid for all five systems x four topologies,
+//! under both parameter profiles (paper-calibrated and datasheet), making
+//! the calibration sensitivity explicit.
+
+use odin::harness::fig6;
+use odin::mapper::ExecConfig;
+use odin::util::bench::Bench;
+
+fn main() {
+    for (label, cfg) in [("paper_profile", ExecConfig::paper()),
+                         ("datasheet_profile", ExecConfig::default())] {
+        let data = fig6(&cfg, false);
+        let mut b = Bench::new(&format!("fig6b_energy_pj_{label}"));
+        for c in &data.cells {
+            b.record(&format!("{}/{}", c.system, c.topology), c.energy_pj);
+        }
+        b.finish();
+
+        let mut b = Bench::new(&format!("fig6b_ratio_vs_odin_{label}"));
+        for c in &data.cells {
+            if c.system != "ODIN" {
+                b.record(&format!("{}/{}", c.system, c.topology), c.energy_vs_odin);
+            }
+        }
+        b.finish();
+    }
+}

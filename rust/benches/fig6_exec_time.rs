@@ -1,0 +1,22 @@
+//! Bench: Fig. 6(a) — execution-time grid for all five systems x four
+//! topologies (modeled ns, printed as ratios vs ODIN like the paper),
+//! plus the wall-clock cost of evaluating the whole grid.
+
+use odin::harness::fig6;
+use odin::mapper::ExecConfig;
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let cfg = ExecConfig::paper();
+    let data = fig6(&cfg, true);
+
+    let mut b = Bench::new("fig6a_modeled_latency_ns");
+    for c in &data.cells {
+        b.record(&format!("{}/{}", c.system, c.topology), c.latency_ns);
+    }
+    b.finish();
+
+    let mut b = Bench::new("fig6_grid_eval");
+    b.run("full_grid", || black_box(fig6(&cfg, false)).cells.len());
+    b.finish();
+}

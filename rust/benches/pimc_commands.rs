@@ -1,0 +1,58 @@
+//! Bench: Table 1 — the five PIMC command flows, both as modeled
+//! latencies (the paper's numbers) and as functional-execution throughput
+//! on the bit-true bank model.
+
+use odin::pcram::{PcramParams, RowAddr};
+use odin::pim::{controller::line_from_bytes, PimController, PimcCommand};
+use odin::stochastic::luts;
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let p = PcramParams::default();
+
+    let mut b = Bench::new("table1_modeled_latency");
+    for cmd in PimcCommand::ALL {
+        b.record(cmd.name(), cmd.latency_ns(&p));
+    }
+    b.finish();
+
+    let mut b = Bench::new("functional_command_flows");
+    let t_act = luts::act_thresholds();
+
+    b.run("B_TO_S_32_operands", || {
+        let mut c = PimController::new(p);
+        let src = RowAddr::new(0, 0, 0);
+        let vals: Vec<u8> = (0..32).map(|i| (i * 8) as u8).collect();
+        c.bank.write_line(src, line_from_bytes(&vals));
+        c.b_to_s(src, |k| RowAddr::new(15, 0, k as u8), &t_act, None);
+        black_box(c.ledger.reads)
+    });
+
+    b.run("ANN_MUL_row_pair", || {
+        let mut c = PimController::new(p);
+        let (a, w, d) = (RowAddr::new(15, 0, 0), RowAddr::new(15, 0, 1), RowAddr::new(15, 1, 0));
+        c.ann_mul(a, w, d);
+        black_box(c.bank.peek(d))
+    });
+
+    b.run("S_TO_B_32_rows", || {
+        let mut c = PimController::new(p);
+        black_box(c.s_to_b(|k| RowAddr::new(15, 0, k as u8), RowAddr::new(14, 0, 0), true))
+    });
+
+    b.run("ANN_POOL_4to1", || {
+        let mut c = PimController::new(p);
+        let srcs: Vec<RowAddr> = (0..4).map(|i| RowAddr::new(0, i, 0)).collect();
+        c.ann_pool(&srcs, RowAddr::new(0, 9, 0));
+        black_box(c.ledger.writes)
+    });
+
+    b.run("functional_mac_70_inputs", || {
+        let mut c = PimController::new(p);
+        let acts = [100u8; 70];
+        let wpos = [50u8; 70];
+        let wneg = [20u8; 70];
+        black_box(c.mac_binary_functional(&acts, &wpos, &wneg))
+    });
+    b.finish();
+}

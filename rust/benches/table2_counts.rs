@@ -1,0 +1,25 @@
+//! Bench: Table 2 — per-topology mapping throughput (how fast the
+//! transaction-level mapper derives a full VGG command ledger) plus the
+//! derived counts themselves.
+
+use odin::ann::topology::{cnn1, cnn2, vgg1, vgg2};
+use odin::mapper::{map_topology, ExecConfig};
+use odin::util::bench::{black_box, Bench};
+
+fn main() {
+    let cfg = ExecConfig::paper();
+
+    let mut b = Bench::new("table2_mapper_throughput");
+    for topo in [vgg1(), vgg2(), cnn1(), cnn2()] {
+        b.run(&format!("map_{}", topo.name), || black_box(map_topology(&topo, &cfg)).energy_pj());
+    }
+    b.finish();
+
+    let mut b = Bench::new("table2_derived_counts");
+    for topo in [vgg1(), vgg2(), cnn1(), cnn2()] {
+        let cost = map_topology(&topo, &cfg);
+        b.record(&format!("{}_reads", topo.name), cost.total_ledger().reads as f64);
+        b.record(&format!("{}_writes", topo.name), cost.total_ledger().writes as f64);
+    }
+    b.finish();
+}

@@ -1,0 +1,7 @@
+//! ANN topology descriptions and workload algebra: the four MLBench
+//! benchmark networks of Table 4, with per-layer shape/MAC/weight counts
+//! the mapper and baselines both consume.
+
+pub mod topology;
+
+pub use topology::{Layer, Topology, ALL_TOPOLOGIES};

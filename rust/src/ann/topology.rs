@@ -1,0 +1,267 @@
+//! The paper's benchmark topologies (Table 4), interpreted per DESIGN.md §8.
+
+/// One network layer.  Spatial dims are tracked explicitly so conv/pool
+/// output sizes (and therefore FC fan-ins) are derived, not asserted.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Layer {
+    /// k x k convolution, `in_ch` -> `maps`, over `in_hw`^2 input.
+    Conv { k: usize, in_ch: usize, maps: usize, in_hw: usize, same_pad: bool },
+    /// `filter`:1 max pooling (2x2 => 4:1) over `in_hw`^2 x `ch`.
+    Pool { window: usize, in_hw: usize, ch: usize },
+    /// Fully connected n -> m.
+    Fc { n: usize, m: usize },
+}
+
+impl Layer {
+    /// Output spatial size (conv/pool) — 0 for FC.
+    pub fn out_hw(&self) -> usize {
+        match self {
+            Layer::Conv { k, in_hw, same_pad, .. } => {
+                if *same_pad { *in_hw } else { in_hw - k + 1 }
+            }
+            Layer::Pool { window, in_hw, .. } => in_hw / window,
+            Layer::Fc { .. } => 0,
+        }
+    }
+
+    /// Output element count.
+    pub fn outputs(&self) -> usize {
+        match self {
+            Layer::Conv { maps, .. } => self.out_hw() * self.out_hw() * maps,
+            Layer::Pool { ch, .. } => self.out_hw() * self.out_hw() * ch,
+            Layer::Fc { m, .. } => *m,
+        }
+    }
+
+    /// Per-neuron fan-in (MAC operands).
+    pub fn fan_in(&self) -> usize {
+        match self {
+            Layer::Conv { k, in_ch, .. } => k * k * in_ch,
+            Layer::Pool { .. } => 0,
+            Layer::Fc { n, .. } => *n,
+        }
+    }
+
+    /// Neuron instances (conv positions x maps; FC neurons).
+    pub fn neuron_instances(&self) -> usize {
+        match self {
+            Layer::Conv { maps, .. } => self.out_hw() * self.out_hw() * maps,
+            Layer::Pool { .. } => 0,
+            Layer::Fc { m, .. } => *m,
+        }
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        (self.neuron_instances() * self.fan_in()) as u64
+    }
+
+    /// Unique weights.
+    pub fn weights(&self) -> u64 {
+        match self {
+            Layer::Conv { k, in_ch, maps, .. } => (k * k * in_ch * maps) as u64,
+            Layer::Pool { .. } => 0,
+            Layer::Fc { n, m } => (n * m) as u64,
+        }
+    }
+
+    /// Input activation values consumed.
+    pub fn input_values(&self) -> usize {
+        match self {
+            Layer::Conv { in_hw, in_ch, .. } => in_hw * in_hw * in_ch,
+            Layer::Pool { in_hw, ch, .. } => in_hw * in_hw * ch,
+            Layer::Fc { n, .. } => *n,
+        }
+    }
+
+    pub fn is_fc(&self) -> bool {
+        matches!(self, Layer::Fc { .. })
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, Layer::Conv { .. })
+    }
+}
+
+/// A named benchmark topology.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: &'static str,
+    pub dataset: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+impl Topology {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+
+    pub fn weights_by(&self, pred: impl Fn(&Layer) -> bool) -> u64 {
+        self.layers.iter().filter(|l| pred(l)).map(|l| l.weights()).sum()
+    }
+
+    /// Dual-rail 8-bit storage footprint in Gbit for a layer class — the
+    /// decoded semantics of Table 2's "Memory (Gb)" column.
+    pub fn dual_rail_gbit(&self, pred: impl Fn(&Layer) -> bool) -> f64 {
+        self.weights_by(pred) as f64 * 2.0 * 8.0 / 1e9
+    }
+}
+
+/// CNN1: conv5x5-pool-784-70-10 (MNIST).  4 same-padded maps so that
+/// pool(28x28x4) = 14x14x4 = 784, matching the MLBench FC string.
+pub fn cnn1() -> Topology {
+    Topology {
+        name: "CNN1",
+        dataset: "MNIST",
+        layers: vec![
+            Layer::Conv { k: 5, in_ch: 1, maps: 4, in_hw: 28, same_pad: true },
+            Layer::Pool { window: 2, in_hw: 28, ch: 4 },
+            Layer::Fc { n: 784, m: 70 },
+            Layer::Fc { n: 70, m: 10 },
+        ],
+    }
+}
+
+/// CNN2: conv7x10-pool-1210-120-10 (MNIST).  Valid 7x7, 10 maps:
+/// pool(22x22x10) = 11x11x10 = 1210.
+pub fn cnn2() -> Topology {
+    Topology {
+        name: "CNN2",
+        dataset: "MNIST",
+        layers: vec![
+            Layer::Conv { k: 7, in_ch: 1, maps: 10, in_hw: 28, same_pad: false },
+            Layer::Pool { window: 2, in_hw: 22, ch: 10 },
+            Layer::Fc { n: 1210, m: 120 },
+            Layer::Fc { n: 120, m: 10 },
+        ],
+    }
+}
+
+fn conv_block(layers: &mut Vec<Layer>, hw: usize, specs: &[(usize, usize, usize)]) -> usize {
+    // specs: (k, in_ch, maps); all same-padded (VGG style); returns hw/2
+    for &(k, in_ch, maps) in specs {
+        layers.push(Layer::Conv { k, in_ch, maps, in_hw: hw, same_pad: true });
+    }
+    let last_maps = specs.last().unwrap().2;
+    layers.push(Layer::Pool { window: 2, in_hw: hw, ch: last_maps });
+    hw / 2
+}
+
+/// VGG1 = VGG-16 on 224x224x3 ImageNet (paper Table 4 string).
+pub fn vgg1() -> Topology {
+    let mut l = Vec::new();
+    let mut hw = 224;
+    hw = conv_block(&mut l, hw, &[(3, 3, 64), (3, 64, 64)]);
+    hw = conv_block(&mut l, hw, &[(3, 64, 128), (3, 128, 128)]);
+    hw = conv_block(&mut l, hw, &[(3, 128, 256), (3, 256, 256), (3, 256, 256)]);
+    hw = conv_block(&mut l, hw, &[(3, 256, 512), (3, 512, 512), (3, 512, 512)]);
+    hw = conv_block(&mut l, hw, &[(3, 512, 512), (3, 512, 512), (3, 512, 512)]);
+    assert_eq!(hw * hw * 512, 25088);
+    l.push(Layer::Fc { n: 25088, m: 4096 });
+    l.push(Layer::Fc { n: 4096, m: 4096 });
+    l.push(Layer::Fc { n: 4096, m: 1000 });
+    Topology { name: "VGG1", dataset: "ImageNet", layers: l }
+}
+
+/// VGG2: the paper's VGG-16C-like variant with trailing 1x1x512 convs in
+/// blocks 3-5 (Table 4 string, verbatim).
+pub fn vgg2() -> Topology {
+    let mut l = Vec::new();
+    let mut hw = 224;
+    hw = conv_block(&mut l, hw, &[(3, 3, 64), (3, 64, 64)]);
+    hw = conv_block(&mut l, hw, &[(3, 64, 128), (3, 128, 128)]);
+    hw = conv_block(&mut l, hw, &[(3, 128, 256), (3, 256, 256), (3, 256, 256), (1, 256, 512)]);
+    hw = conv_block(&mut l, hw, &[(3, 512, 512), (3, 512, 512), (3, 512, 512), (1, 512, 512)]);
+    hw = conv_block(&mut l, hw, &[(3, 512, 512), (3, 512, 512), (3, 512, 512), (1, 512, 512)]);
+    assert_eq!(hw * hw * 512, 25088);
+    l.push(Layer::Fc { n: 25088, m: 4096 });
+    l.push(Layer::Fc { n: 4096, m: 4096 });
+    l.push(Layer::Fc { n: 4096, m: 1000 });
+    Topology { name: "VGG2", dataset: "ImageNet", layers: l }
+}
+
+/// All four benchmarks in paper order.
+pub static ALL_TOPOLOGIES: &[fn() -> Topology] = &[vgg1, vgg2, cnn1, cnn2];
+
+pub fn by_name(name: &str) -> Option<Topology> {
+    match name.to_ascii_lowercase().as_str() {
+        "cnn1" => Some(cnn1()),
+        "cnn2" => Some(cnn2()),
+        "vgg1" => Some(vgg1()),
+        "vgg2" => Some(vgg2()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cnn1_fc_chain_is_784_70_10() {
+        let t = cnn1();
+        let pool = &t.layers[1];
+        assert_eq!(pool.outputs(), 784);
+        assert_eq!(t.layers[2], Layer::Fc { n: 784, m: 70 });
+    }
+
+    #[test]
+    fn cnn2_fc_chain_is_1210_120_10() {
+        let t = cnn2();
+        assert_eq!(t.layers[1].outputs(), 1210);
+        assert_eq!(t.layers[2], Layer::Fc { n: 1210, m: 120 });
+    }
+
+    #[test]
+    fn vgg1_is_vgg16() {
+        let t = vgg1();
+        assert_eq!(t.layers.iter().filter(|l| l.is_conv()).count(), 13);
+        // canonical VGG-16 conv MACs ~ 15.3G, FC weights ~ 123.6M
+        let conv_macs: u64 = t.layers.iter().filter(|l| l.is_conv()).map(|l| l.macs()).sum();
+        assert!((15.0e9..16.0e9).contains(&(conv_macs as f64)), "{conv_macs}");
+        assert_eq!(t.weights_by(|l| l.is_fc()), 123_633_664);
+    }
+
+    #[test]
+    fn table2_memory_column_reproduced() {
+        // Paper Table 2 "Memory (Gb)" = dual-rail 8-bit FC weights.
+        assert!((vgg1().dual_rail_gbit(|l| l.is_fc()) - 1.93).abs() < 0.08);
+        assert!((vgg2().dual_rail_gbit(|l| l.is_fc()) - 1.96).abs() < 0.08);
+        assert!((cnn1().dual_rail_gbit(|l| l.is_fc()) - 0.00095).abs() < 0.0002);
+        assert!((cnn2().dual_rail_gbit(|l| l.is_fc()) - 0.00098).abs() < 0.0026);
+    }
+
+    #[test]
+    fn vgg2_has_1x1_convs() {
+        let t = vgg2();
+        assert!(t.layers.iter().any(|l| matches!(l, Layer::Conv { k: 1, .. })));
+        assert_eq!(t.layers.iter().filter(|l| l.is_conv()).count(), 16);
+    }
+
+    #[test]
+    fn pool_layers_consume_conv_outputs() {
+        for topo in [cnn1(), cnn2(), vgg1(), vgg2()] {
+            let mut prev_out: Option<usize> = None;
+            for l in &topo.layers {
+                if let Layer::Pool { .. } = l {
+                    assert_eq!(Some(l.input_values()), prev_out, "{}", topo.name);
+                }
+                if !l.is_fc() {
+                    prev_out = Some(l.outputs());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["cnn1", "CNN2", "vgg1", "VGG2"] {
+            assert!(by_name(n).is_some());
+        }
+        assert!(by_name("alexnet").is_none());
+    }
+}

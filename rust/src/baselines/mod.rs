@@ -1,0 +1,22 @@
+//! Comparison systems for Fig. 6: CPU-only baselines (gem5+McPAT in the
+//! paper; analytical roofline models here) and the two ISAAC crossbar
+//! variants (PIMSim in the paper; the ISAAC paper's published
+//! microarchitecture parameters here).  See EXPERIMENTS.md §Calibration
+//! for how parameter choices map onto the paper's reported ratio bands.
+
+pub mod cpu;
+pub mod isaac;
+
+pub use cpu::CpuModel;
+pub use isaac::IsaacModel;
+
+use crate::ann::Topology;
+
+/// Common interface: per-inference execution time and energy.
+pub trait SystemModel {
+    fn name(&self) -> String;
+    /// Per-inference latency (ns).
+    fn latency_ns(&self, topo: &Topology) -> f64;
+    /// Per-inference energy (pJ).
+    fn energy_pj(&self, topo: &Topology) -> f64;
+}

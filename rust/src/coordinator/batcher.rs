@@ -1,0 +1,198 @@
+//! Dynamic batcher: the serving-loop heart of the L3 coordinator.
+//!
+//! Requests arrive from any number of producer threads over an MPSC
+//! channel; a single engine thread drains the queue, forms the largest
+//! batch the compiled variants allow (bounded by a linger window so a lone
+//! request is never stuck), executes, and answers each request over its
+//! own response channel.  std threads + channels — tokio is unavailable
+//! offline, and a single-owner engine thread also sidesteps PJRT
+//! executable aliasing.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::engine::{Engine, Prediction};
+use super::metrics::MetricsHub;
+
+/// One in-flight request.
+struct Request {
+    image: Vec<u8>,
+    enqueued: Instant,
+    respond: Sender<Result<Response, String>>,
+}
+
+/// Per-request response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub prediction: Prediction,
+    /// Time spent queued before the batch formed.
+    pub queue_ns: u64,
+    /// PJRT execution time of the whole batch.
+    pub exec_ns: u64,
+    /// Batch this request rode in.
+    pub batch: usize,
+    /// Simulated in-PCRAM latency/energy attributed to this request.
+    pub sim_ns: f64,
+    pub sim_pj: f64,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max requests per batch (clamped to the engine's max variant).
+    pub max_batch: usize,
+    /// How long the first request may linger while the batch fills.
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, linger: Duration::from_micros(300) }
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+}
+
+impl Client {
+    /// Submit one image; returns a receiver for the response.
+    pub fn submit(&self, image: Vec<u8>) -> Receiver<Result<Response, String>> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request { image, enqueued: Instant::now(), respond: tx };
+        // If the server is gone the receiver will see a disconnect.
+        let _ = self.tx.send(req);
+        rx
+    }
+
+    /// Submit and wait (convenience for examples/tests).
+    pub fn infer_blocking(&self, image: Vec<u8>) -> Result<Response> {
+        self.submit(image)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server stopped"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+/// The running batcher.
+pub struct Server {
+    handle: Option<JoinHandle<()>>,
+    tx: Option<Sender<Request>>,
+}
+
+impl Server {
+    /// Spawn the engine thread.  PJRT handles are not `Send`, so the
+    /// engine is *constructed on* the batcher thread from a Send factory
+    /// and lives there for its whole life; construction errors are
+    /// reported back synchronously.
+    pub fn spawn<F>(factory: F, policy: BatchPolicy, metrics: MetricsHub) -> Result<(Server, Client)>
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("odin-batcher".into())
+            .spawn(move || {
+                let engine = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                Self::run(engine, policy, metrics, rx)
+            })
+            .expect("spawning batcher thread");
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => {
+                let _ = handle.join();
+                anyhow::bail!("engine construction failed: {msg}");
+            }
+            Err(_) => anyhow::bail!("batcher thread died during construction"),
+        }
+        Ok((Server { handle: Some(handle), tx: Some(tx.clone()) }, Client { tx }))
+    }
+
+    fn run(engine: Engine, policy: BatchPolicy, metrics: MetricsHub, rx: Receiver<Request>) {
+        let max_batch = policy.max_batch.min(engine.max_batch()).max(1);
+        loop {
+            // block for the first request
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return, // all clients gone
+            };
+            let deadline = Instant::now() + policy.linger;
+            let mut batch = vec![first];
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            Self::execute(&engine, &metrics, batch);
+        }
+    }
+
+    fn execute(engine: &Engine, metrics: &MetricsHub, batch: Vec<Request>) {
+        let images: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        match engine.infer(&images) {
+            Ok((preds, exec)) => {
+                let per_req_sim_ns = exec.sim_ns / batch.len() as f64;
+                let per_req_sim_pj = exec.sim_pj / batch.len() as f64;
+                for (req, pred) in batch.into_iter().zip(preds) {
+                    let queue_ns = req.enqueued.elapsed().as_nanos() as u64 - exec.exec_ns.min(
+                        req.enqueued.elapsed().as_nanos() as u64,
+                    );
+                    let resp = Response {
+                        prediction: pred,
+                        queue_ns,
+                        exec_ns: exec.exec_ns,
+                        batch: exec.batch,
+                        sim_ns: per_req_sim_ns,
+                        sim_pj: per_req_sim_pj,
+                    };
+                    metrics.record(&resp);
+                    let _ = req.respond.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                let msg = format!("inference failed: {e:#}");
+                for req in batch {
+                    let _ = req.respond.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+
+    /// Stop accepting requests and join the engine thread.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

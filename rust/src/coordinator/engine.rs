@@ -1,0 +1,165 @@
+//! Model engine: one arch+mode bound to its compiled batch variants and
+//! weight tensors, plus the per-inference PCRAM cost attached from the
+//! transaction-level mapper (so every served request reports both wall
+//! clock *and* simulated in-PCRAM latency/energy).
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ann::topology;
+use crate::mapper::{map_topology, ExecConfig};
+use crate::runtime::{Executable, Manifest, Runtime, StaticBuffer, TensorArg};
+
+use super::weights::ModelWeights;
+
+/// Compiled batch variant.
+struct Variant {
+    batch: usize,
+    exe: Executable,
+}
+
+/// Inference output for one image.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub logits: [f32; 10],
+    pub argmax: u8,
+}
+
+/// Engine statistics for one executed batch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchExec {
+    pub batch: usize,
+    pub padded_batch: usize,
+    pub exec_ns: u64,
+    /// Simulated ODIN in-PCRAM latency for the batch (ns).
+    pub sim_ns: f64,
+    /// Simulated ODIN energy for the batch (pJ).
+    pub sim_pj: f64,
+}
+
+pub struct Engine {
+    pub arch: String,
+    pub mode: String,
+    variants: Vec<Variant>,
+    /// Weight (+ CNT16) tensors uploaded to device once at load time —
+    /// the serving hot path only uploads the image per call.
+    static_bufs: Vec<StaticBuffer>,
+    float_input: bool,
+    /// Per-inference simulated cost (one image).
+    sim_ns_per_inf: f64,
+    sim_pj_per_inf: f64,
+}
+
+impl Engine {
+    /// Compile all batch variants of `arch` in `mode` ("fast", "sc",
+    /// "float") and bind the weight tensors.
+    pub fn new(rt: &Runtime, manifest: &Manifest, artifacts_dir: &str, arch: &str,
+               mode: &str) -> Result<Self> {
+        let specs = manifest.model_variants(arch, mode);
+        if specs.is_empty() {
+            bail!("no artifacts for {arch}/{mode} — run `make artifacts`");
+        }
+        let mut variants = Vec::new();
+        for spec in &specs {
+            let exe = rt.load_hlo_text(&spec.path)?;
+            variants.push(Variant { batch: spec.batch.context("model without batch")?, exe });
+        }
+        let weights = ModelWeights::load(artifacts_dir, arch)?;
+        let weight_args = match mode {
+            "fast" => weights.sc_args(true),
+            "sc" => weights.sc_args(false),
+            "float" => weights.float_args(),
+            other => bail!("unknown mode {other}"),
+        };
+        let static_bufs: Vec<StaticBuffer> =
+            weight_args.iter().map(|a| rt.upload(a)).collect::<Result<_>>()?;
+        let topo = topology::by_name(arch).with_context(|| format!("topology {arch}"))?;
+        let cfg = ExecConfig::paper();
+        let cost = map_topology(&topo, &cfg);
+        Ok(Engine {
+            arch: arch.to_string(),
+            mode: mode.to_string(),
+            variants,
+            static_bufs,
+            float_input: mode == "float",
+            sim_ns_per_inf: cost.latency_ns(&cfg),
+            sim_pj_per_inf: cost.energy_pj(),
+        })
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.variants.iter().map(|v| v.batch).collect()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.variants.iter().map(|v| v.batch).max().unwrap_or(1)
+    }
+
+    /// Smallest compiled variant that fits `k` images.
+    fn pick_variant(&self, k: usize) -> &Variant {
+        self.variants
+            .iter()
+            .filter(|v| v.batch >= k)
+            .min_by_key(|v| v.batch)
+            .unwrap_or_else(|| self.variants.last().unwrap())
+    }
+
+    /// Run a batch of 784-byte images; returns per-image predictions and
+    /// the execution record.
+    pub fn infer(&self, images: &[&[u8]]) -> Result<(Vec<Prediction>, BatchExec)> {
+        let k = images.len();
+        if k == 0 {
+            bail!("empty batch");
+        }
+        let var = self.pick_variant(k);
+        if k > var.batch {
+            bail!("batch {k} exceeds max compiled batch {}", var.batch);
+        }
+        // assemble padded image tensor
+        let mut data = vec![0u8; var.batch * 784];
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != 784 {
+                bail!("image {i} has {} bytes", img.len());
+            }
+            data[i * 784..(i + 1) * 784].copy_from_slice(img);
+        }
+        let img_arg = if self.float_input {
+            TensorArg::F32 {
+                dims: vec![var.batch, 28, 28],
+                data: data.iter().map(|&p| p as f32 / 255.0).collect(),
+            }
+        } else {
+            TensorArg::U8 { dims: vec![var.batch, 28, 28], data }
+        };
+        let t0 = Instant::now();
+        let out = var.exe.execute_f32_cached(&img_arg, &self.static_bufs)?;
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+
+        let preds = (0..k)
+            .map(|i| {
+                let mut logits = [0f32; 10];
+                logits.copy_from_slice(&out[i * 10..(i + 1) * 10]);
+                let argmax = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as u8)
+                    .unwrap();
+                Prediction { logits, argmax }
+            })
+            .collect();
+        let exec = BatchExec {
+            batch: k,
+            padded_batch: var.batch,
+            exec_ns,
+            sim_ns: self.sim_ns_per_inf * k as f64,
+            sim_pj: self.sim_pj_per_inf * k as f64,
+        };
+        Ok((preds, exec))
+    }
+
+    pub fn sim_cost_per_inference(&self) -> (f64, f64) {
+        (self.sim_ns_per_inf, self.sim_pj_per_inf)
+    }
+}

@@ -1,0 +1,126 @@
+//! Serving metrics: shared, thread-safe aggregation of request outcomes.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+use super::batcher::Response;
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    batches_seen: Summary,
+    queue_us: Summary,
+    exec_us: Summary,
+    sim_us: Summary,
+    sim_pj: f64,
+    started: Option<Instant>,
+}
+
+/// Cloneable handle to the shared metrics state.
+#[derive(Clone, Default)]
+pub struct MetricsHub(Arc<Mutex<Inner>>);
+
+/// Snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsReport {
+    pub requests: u64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    pub queue_us_p50: f64,
+    pub queue_us_p99: f64,
+    pub exec_us_p50: f64,
+    pub exec_us_p99: f64,
+    pub sim_us_mean: f64,
+    pub sim_mj_total: f64,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, resp: &Response) {
+        let mut g = self.0.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+        g.requests += 1;
+        g.batches_seen.push(resp.batch as f64);
+        g.queue_us.push(resp.queue_ns as f64 / 1e3);
+        g.exec_us.push(resp.exec_ns as f64 / 1e3);
+        g.sim_us.push(resp.sim_ns / 1e3);
+        g.sim_pj += resp.sim_pj;
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let mut g = self.0.lock().unwrap();
+        let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let requests = g.requests;
+        let mean_batch = g.batches_seen.mean();
+        let sim_us_mean = g.sim_us.mean();
+        let sim_mj_total = g.sim_pj / 1e9;
+        MetricsReport {
+            requests,
+            throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+            mean_batch,
+            queue_us_p50: g.queue_us.percentile(50.0),
+            queue_us_p99: g.queue_us.percentile(99.0),
+            exec_us_p50: g.exec_us.percentile(50.0),
+            exec_us_p99: g.exec_us.percentile(99.0),
+            sim_us_mean,
+            sim_mj_total,
+        }
+    }
+}
+
+impl MetricsReport {
+    pub fn print(&self, label: &str) {
+        println!("-- metrics: {label} --");
+        println!("requests            {}", self.requests);
+        println!("throughput          {:.1} req/s", self.throughput_rps);
+        println!("mean batch          {:.2}", self.mean_batch);
+        println!("queue p50/p99       {:.1} / {:.1} us", self.queue_us_p50, self.queue_us_p99);
+        println!("exec  p50/p99       {:.1} / {:.1} us", self.exec_us_p50, self.exec_us_p99);
+        println!("sim ODIN latency    {:.2} us/inf", self.sim_us_mean);
+        println!("sim ODIN energy     {:.4} mJ total", self.sim_mj_total);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Prediction;
+
+    fn resp(batch: usize, exec_ns: u64) -> Response {
+        Response {
+            prediction: Prediction { logits: [0.0; 10], argmax: 0 },
+            queue_ns: 1000,
+            exec_ns,
+            batch,
+            sim_ns: 5000.0,
+            sim_pj: 2.0e6,
+        }
+    }
+
+    #[test]
+    fn aggregates_requests() {
+        let m = MetricsHub::new();
+        for _ in 0..10 {
+            m.record(&resp(4, 2_000_000));
+        }
+        let r = m.report();
+        assert_eq!(r.requests, 10);
+        assert!((r.mean_batch - 4.0).abs() < 1e-9);
+        assert!((r.exec_us_p50 - 2000.0).abs() < 1e-6);
+        assert!((r.sim_mj_total - 10.0 * 2.0e6 / 1e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_zeroed() {
+        let r = MetricsHub::new().report();
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.throughput_rps, 0.0);
+    }
+}

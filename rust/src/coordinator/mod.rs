@@ -1,0 +1,22 @@
+//! L3 coordinator: weight store, model engine (PJRT), dynamic batcher, and
+//! serving metrics.  The inference server composes as
+//!
+//! ```text
+//! clients --submit--> [mpsc queue] --drain--> Engine (PJRT exec)
+//!                         |                      |
+//!                    BatchPolicy        mapper's per-inference
+//!                  (max batch, linger)  PCRAM ledger attached
+//! ```
+//!
+//! Python never appears: artifacts were lowered once at build time, and
+//! the weights the graphs consume are encoded by `stochastic::` in Rust.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod weights;
+
+pub use batcher::{BatchPolicy, Client, Response, Server};
+pub use engine::{Engine, Prediction};
+pub use metrics::{MetricsHub, MetricsReport};
+pub use weights::ModelWeights;

@@ -1,0 +1,173 @@
+//! Model weight store: loads the trained/quantized tensors Python exported
+//! and materializes the exact argument tensors each artifact mode expects.
+//!
+//! For the faithful (`sc`) artifacts this is where the coordinator performs
+//! the hardware's model-load step: dual-rail split + B_TO_S encoding with
+//! the per-operand rotation — via `stochastic::encode_rotated_weight`,
+//! which is bit-identical to the Python `ref.encode_weights` (golden
+//! tests).  The AOT graphs therefore consume streams produced by *Rust*.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::{TensorArg, TensorFile};
+use crate::stochastic::{encode_rotated_weight, LANES};
+
+/// One layer's quantized weights in (n, m) layout plus bias.
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    pub n: usize,
+    pub m: usize,
+    pub q: Vec<i16>, // (n, m) row-major, q in [-255, 255]
+    pub bias: Vec<f32>,
+}
+
+impl QuantLayer {
+    /// Dual-rail u8 values in the kernels' (m, n) layout.
+    pub fn rails_mn(&self) -> (Vec<u8>, Vec<u8>) {
+        let mut pos = vec![0u8; self.m * self.n];
+        let mut neg = vec![0u8; self.m * self.n];
+        for j in 0..self.n {
+            for i in 0..self.m {
+                let q = self.q[j * self.m + i];
+                pos[i * self.n + j] = q.clamp(0, 255) as u8;
+                neg[i * self.n + j] = (-q).clamp(0, 255) as u8;
+            }
+        }
+        (pos, neg)
+    }
+
+    /// Fast-mode args: (m, n) u8 value tensors.
+    pub fn fast_args(&self) -> (TensorArg, TensorArg) {
+        let (pos, neg) = self.rails_mn();
+        let dims = vec![self.m, self.n];
+        (
+            TensorArg::U8 { dims: dims.clone(), data: pos },
+            TensorArg::U8 { dims, data: neg },
+        )
+    }
+
+    /// Faithful-mode args: (m, n, LANES) u32 pre-encoded rotated streams.
+    pub fn stream_args(&self) -> (TensorArg, TensorArg) {
+        let (pos, neg) = self.rails_mn();
+        let dims = vec![self.m, self.n, LANES];
+        let encode_all = |vals: &[u8]| -> Vec<u32> {
+            let mut out = Vec::with_capacity(vals.len() * LANES);
+            for i in 0..self.m {
+                for j in 0..self.n {
+                    out.extend_from_slice(encode_rotated_weight(vals[i * self.n + j], j).lanes());
+                }
+            }
+            out
+        };
+        (
+            TensorArg::U32 { dims: dims.clone(), data: encode_all(&pos) },
+            TensorArg::U32 { dims, data: encode_all(&neg) },
+        )
+    }
+
+    pub fn bias_arg(&self) -> TensorArg {
+        TensorArg::F32 { dims: vec![self.m], data: self.bias.clone() }
+    }
+}
+
+/// Full model: conv + fc1 + fc2 (the benchmark CNN shape), float copies,
+/// and the quantization scales.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub arch: String,
+    pub conv: QuantLayer,
+    pub fc1: QuantLayer,
+    pub fc2: QuantLayer,
+    pub conv_w: Vec<f32>,
+    pub fc1_w: Vec<f32>,
+    pub fc2_w: Vec<f32>,
+    pub scales: [f32; 6], // s_in, conv s_w, conv s_out, fc1 s_w, fc1 s_out, fc2 s_w
+}
+
+impl ModelWeights {
+    pub fn load(artifacts_dir: impl AsRef<Path>, arch: &str) -> Result<Self> {
+        let tf = TensorFile::load(artifacts_dir.as_ref().join(format!("weights/{arch}.bin")))?;
+        let layer = |qname: &str, bname: &str| -> Result<QuantLayer> {
+            let q = tf.get(qname)?;
+            ensure!(q.dims.len() == 2, "{qname} dims {:?}", q.dims);
+            let b = tf.get(bname)?;
+            Ok(QuantLayer {
+                n: q.dims[0],
+                m: q.dims[1],
+                q: q.as_i16()?.to_vec(),
+                bias: b.as_f32()?.to_vec(),
+            })
+        };
+        let scales_t = tf.get("scales")?.as_f32()?.to_vec();
+        ensure!(scales_t.len() == 6, "scales len {}", scales_t.len());
+        Ok(ModelWeights {
+            arch: arch.to_string(),
+            conv: layer("conv_q", "conv_b")?,
+            fc1: layer("fc1_q", "fc1_b")?,
+            fc2: layer("fc2_q", "fc2_b")?,
+            conv_w: tf.get("conv_w")?.as_f32()?.to_vec(),
+            fc1_w: tf.get("fc1_w")?.as_f32()?.to_vec(),
+            fc2_w: tf.get("fc2_w")?.as_f32()?.to_vec(),
+            scales: scales_t.try_into().unwrap(),
+        })
+    }
+
+    /// The 9 weight arguments (after the image) for a stochastic artifact.
+    pub fn sc_args(&self, fast: bool) -> Vec<TensorArg> {
+        let mut out = Vec::with_capacity(9);
+        for layer in [&self.conv, &self.fc1, &self.fc2] {
+            let (p, n) = if fast { layer.fast_args() } else { layer.stream_args() };
+            out.push(p);
+            out.push(n);
+            out.push(layer.bias_arg());
+        }
+        out
+    }
+
+    /// The 6 weight arguments for a float artifact.
+    pub fn float_args(&self) -> Vec<TensorArg> {
+        vec![
+            TensorArg::F32 { dims: vec![self.conv.n, self.conv.m], data: self.conv_w.clone() },
+            self.conv.bias_arg(),
+            TensorArg::F32 { dims: vec![self.fc1.n, self.fc1.m], data: self.fc1_w.clone() },
+            self.fc1.bias_arg(),
+            TensorArg::F32 { dims: vec![self.fc2.n, self.fc2.m], data: self.fc2_w.clone() },
+            self.fc2.bias_arg(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rails_layout_transposes() {
+        let l = QuantLayer { n: 2, m: 3, q: vec![1, -2, 3, 4, 5, -6], bias: vec![0.0; 3] };
+        let (p, n) = l.rails_mn();
+        // q[(j=0, i=1)] = -2 -> pos[(i=1, j=0)] = 0, neg = 2
+        assert_eq!(p[1 * 2 + 0], 0);
+        assert_eq!(n[1 * 2 + 0], 2);
+        // q[(j=1, i=0)] = 4
+        assert_eq!(p[0 * 2 + 1], 4);
+    }
+
+    #[test]
+    fn loads_real_weights_if_present() {
+        if !Path::new("artifacts/weights/cnn1.bin").exists() {
+            return;
+        }
+        let w = ModelWeights::load("artifacts", "cnn1").unwrap();
+        assert_eq!((w.conv.n, w.conv.m), (25, 4));
+        assert_eq!((w.fc1.n, w.fc1.m), (784, 70));
+        assert_eq!((w.fc2.n, w.fc2.m), (70, 10));
+        assert!(w.scales.iter().all(|&s| s > 0.0));
+        let args = w.sc_args(true);
+        assert_eq!(args.len(), 9);
+        assert_eq!(args[0].dims(), &[4, 25]);
+        let stream_args = w.sc_args(false);
+        assert_eq!(stream_args[0].dims(), &[4, 25, 8]);
+    }
+}

@@ -1,0 +1,65 @@
+//! The canonical synth-MNIST test split (exported by python train.py to
+//! `artifacts/data/test.bin`), so Rust evaluates on the *identical* samples
+//! the Python side trained/calibrated against.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::TensorFile;
+
+/// 28x28 u8 image + label.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub image: Vec<u8>, // 784, row-major
+    pub label: u8,
+}
+
+/// The loaded test split.
+pub struct TestSet {
+    pub samples: Vec<Sample>,
+}
+
+impl TestSet {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let tf = TensorFile::load(artifacts_dir.as_ref().join("data/test.bin"))?;
+        let images = tf.get("images")?;
+        let labels = tf.get("labels")?;
+        ensure!(images.dims.len() == 3 && images.dims[1] == 28 && images.dims[2] == 28,
+            "bad image dims {:?}", images.dims);
+        let n = images.dims[0];
+        ensure!(labels.dims == vec![n], "label count mismatch");
+        let px = images.as_u8()?;
+        let lb = labels.as_u8()?;
+        let samples = (0..n)
+            .map(|i| Sample { image: px[i * 784..(i + 1) * 784].to_vec(), label: lb[i] })
+            .collect();
+        Ok(TestSet { samples })
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_canonical_split_if_present() {
+        if !Path::new("artifacts/data/test.bin").exists() {
+            return;
+        }
+        let ts = TestSet::load("artifacts").unwrap();
+        assert_eq!(ts.len(), 2048);
+        assert!(ts.samples.iter().all(|s| s.label < 10));
+        assert!(ts.samples.iter().all(|s| s.image.len() == 784));
+        // images are nontrivial
+        assert!(ts.samples[0].image.iter().any(|&p| p > 100));
+    }
+}

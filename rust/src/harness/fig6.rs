@@ -1,0 +1,179 @@
+//! Fig. 6: execution time (a) and energy (b) for ODIN vs the four
+//! comparison systems across the four topologies, normalized to ODIN
+//! (log-scale in the paper; we print the raw ratios).  Plus the paper's
+//! headline-claim checker.
+
+use crate::ann::topology::{cnn1, cnn2, vgg1, vgg2, Topology};
+use crate::baselines::{CpuModel, IsaacModel, SystemModel};
+use crate::mapper::{map_topology, ExecConfig};
+
+/// One (system, topology) cell.
+#[derive(Clone, Debug)]
+pub struct Fig6Cell {
+    pub system: String,
+    pub topology: &'static str,
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+    /// Ratios vs ODIN (>1 means ODIN wins).
+    pub time_vs_odin: f64,
+    pub energy_vs_odin: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Fig6Data {
+    pub cells: Vec<Fig6Cell>,
+}
+
+impl Fig6Data {
+    pub fn cell(&self, system: &str, topo: &str) -> &Fig6Cell {
+        self.cells
+            .iter()
+            .find(|c| c.system == system && c.topology == topo)
+            .unwrap_or_else(|| panic!("no cell {system}/{topo}"))
+    }
+
+    /// Ratio range of a system vs ODIN over a set of topologies.
+    pub fn ratio_range(&self, system: &str, topos: &[&str], energy: bool) -> (f64, f64) {
+        let vals: Vec<f64> = topos
+            .iter()
+            .map(|t| {
+                let c = self.cell(system, t);
+                if energy { c.energy_vs_odin } else { c.time_vs_odin }
+            })
+            .collect();
+        (
+            vals.iter().copied().fold(f64::INFINITY, f64::min),
+            vals.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        )
+    }
+}
+
+/// Compute the full Fig. 6 grid.
+pub fn fig6(cfg: &ExecConfig, print: bool) -> Fig6Data {
+    let topos: Vec<Topology> = vec![vgg1(), vgg2(), cnn1(), cnn2()];
+    let systems: Vec<Box<dyn SystemModel>> = vec![
+        Box::new(CpuModel::fp32()),
+        Box::new(CpuModel::int8()),
+        Box::new(IsaacModel::new(false)),
+        Box::new(IsaacModel::new(true)),
+    ];
+
+    let mut data = Fig6Data::default();
+    for topo in &topos {
+        let odin = map_topology(topo, cfg);
+        let odin_ns = odin.latency_ns(cfg);
+        let odin_pj = odin.energy_pj();
+        data.cells.push(Fig6Cell {
+            system: "ODIN".into(),
+            topology: topo.name,
+            latency_ns: odin_ns,
+            energy_pj: odin_pj,
+            time_vs_odin: 1.0,
+            energy_vs_odin: 1.0,
+        });
+        for sys in &systems {
+            let ns = sys.latency_ns(topo);
+            let pj = sys.energy_pj(topo);
+            data.cells.push(Fig6Cell {
+                system: sys.name(),
+                topology: topo.name,
+                latency_ns: ns,
+                energy_pj: pj,
+                time_vs_odin: ns / odin_ns,
+                energy_vs_odin: pj / odin_pj,
+            });
+        }
+    }
+
+    if print {
+        for (title, energy) in [("Fig 6(a): execution time, normalized to ODIN", false),
+                                ("Fig 6(b): energy, normalized to ODIN", true)] {
+            println!("{title}");
+            print!("{:<22}", "system \\ topology");
+            for t in &topos {
+                print!("{:>12}", t.name);
+            }
+            println!();
+            for sys in ["ODIN", "32-bit CPU", "8-bit CPU", "ISAAC (unpipelined)", "ISAAC (pipelined)"] {
+                print!("{sys:<22}");
+                for t in &topos {
+                    let c = data.cell(sys, t.name);
+                    let v = if energy { c.energy_vs_odin } else { c.time_vs_odin };
+                    print!("{v:>12.2}");
+                }
+                println!();
+            }
+            println!();
+        }
+    }
+    data
+}
+
+/// Headline-claim summary: ODIN vs the ISAAC variants and CPU baselines.
+/// Paper: >= 5.8x faster / >= 23.2x more energy-efficient (worst case,
+/// VGG), up to 90.8x / 1554x (best case, CNN) vs ISAAC.
+pub fn headline(cfg: &ExecConfig, print: bool) -> Vec<(String, f64, f64, f64, f64)> {
+    let data = fig6(cfg, false);
+    let vgg = ["VGG1", "VGG2"];
+    let cnn = ["CNN1", "CNN2"];
+    let mut out = Vec::new();
+    for sys in ["ISAAC (unpipelined)", "ISAAC (pipelined)", "32-bit CPU", "8-bit CPU"] {
+        let (tmin_v, tmax_v) = data.ratio_range(sys, &vgg, false);
+        let (tmin_c, tmax_c) = data.ratio_range(sys, &cnn, false);
+        let (emin_v, emax_v) = data.ratio_range(sys, &vgg, true);
+        let (emin_c, emax_c) = data.ratio_range(sys, &cnn, true);
+        if print {
+            println!("vs {sys}:");
+            println!("  speedup   VGG {tmin_v:.1}x..{tmax_v:.1}x   CNN {tmin_c:.1}x..{tmax_c:.1}x");
+            println!("  energy    VGG {emin_v:.1}x..{emax_v:.1}x   CNN {emin_c:.1}x..{emax_c:.1}x");
+        }
+        out.push((sys.to_string(), tmin_v.min(tmin_c), tmax_v.max(tmax_c),
+                  emin_v.min(emin_c), emax_v.max(emax_c)));
+    }
+    if print {
+        println!("\npaper bands: ISAAC speedup 5.8x (VGG) .. 90.8x (CNN); energy 23.2x (CNN) .. 1554x (VGG/CNN)");
+        println!("             CPU   speedup up to 438x (VGG) / 569x (CNN); energy up to 1530x / 30.6x\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn odin_wins_everywhere_under_paper_profile() {
+        let cfg = ExecConfig::paper();
+        let data = fig6(&cfg, false);
+        for c in &data.cells {
+            if c.system != "ODIN" {
+                assert!(c.time_vs_odin > 1.0, "{} {} time {}", c.system, c.topology, c.time_vs_odin);
+                assert!(c.energy_vs_odin > 1.0, "{} {} energy {}", c.system, c.topology, c.energy_vs_odin);
+            }
+        }
+    }
+
+    #[test]
+    fn isaac_margin_larger_on_cnn_than_vgg() {
+        // The paper's central shape: under-utilization makes the CNN
+        // margins dwarf the VGG margins vs ISAAC (energy).
+        let cfg = ExecConfig::paper();
+        let data = fig6(&cfg, false);
+        for sys in ["ISAAC (unpipelined)", "ISAAC (pipelined)"] {
+            let (_, e_cnn) = data.ratio_range(sys, &["CNN1", "CNN2"], true);
+            let (e_vgg, _) = data.ratio_range(sys, &["VGG1", "VGG2"], true);
+            assert!(e_cnn > 5.0 * e_vgg, "{sys}: cnn {e_cnn} vs vgg {e_vgg}");
+        }
+    }
+
+    #[test]
+    fn normalization_is_consistent() {
+        let cfg = ExecConfig::default();
+        let data = fig6(&cfg, false);
+        for c in &data.cells {
+            let odin = data.cell("ODIN", c.topology);
+            let want = c.latency_ns / odin.latency_ns;
+            assert!((c.time_vs_odin - want).abs() < 1e-9);
+        }
+    }
+}

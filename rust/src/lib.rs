@@ -1,0 +1,34 @@
+//! # ODIN — bit-parallel stochastic arithmetic PIM accelerator in PCRAM
+//!
+//! Full-system reproduction of *ODIN: A Bit-Parallel Stochastic Arithmetic
+//! Based Accelerator for In-Situ Neural Network Processing in Phase Change
+//! RAM* (Mysore Shivanandamurthy, Thakkar, Salehi, 2021).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) emulate the
+//!   bit-parallel stochastic MAC the modified PCRAM banks perform.
+//! * **L2** — JAX forward graphs (`python/compile/model.py`) chain those
+//!   kernels into the benchmark CNNs, AOT-lowered to HLO text once.
+//! * **L3** — this crate: loads the HLO artifacts via PJRT
+//!   ([`runtime`]), owns the serving loop ([`coordinator`]), and carries
+//!   the paper's evaluation substrate — a transaction-level PCRAM
+//!   simulator ([`pcram`]), the five PIMC commands ([`pim`]), the
+//!   ANN-to-command mapper ([`mapper`]), and the CPU/ISAAC baselines
+//!   ([`baselines`]).  Python never runs on the request path.
+//!
+//! [`harness`] regenerates every table and figure of the paper's
+//! evaluation section; `cargo run --release -- --help` lists the entry
+//! points, and `examples/` holds runnable end-to-end drivers.
+
+pub mod util;
+pub mod stochastic;
+pub mod pcram;
+pub mod pim;
+pub mod ann;
+pub mod mapper;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod harness;
+pub mod dataset;

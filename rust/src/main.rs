@@ -1,0 +1,290 @@
+//! ODIN CLI — the leader entrypoint.
+//!
+//! Subcommands regenerate the paper's evaluation artifacts and run the
+//! serving stack:
+//!
+//! ```text
+//! odin table1|table2|table3      reproduce the paper's tables
+//! odin fig6                      reproduce Fig. 6(a)+(b) (normalized)
+//! odin headline                  check the paper's headline ratio claims
+//! odin eval  [--arch cnn1] [--mode fast] [--limit N]
+//!                                accuracy of an AOT artifact on the test set
+//! odin serve [--arch cnn1] [--requests N] [--concurrency K]
+//!                                dynamic-batching serving demo + metrics
+//! odin ablation                  binary vs mux accumulation cost/error
+//! odin selftest                  cross-language golden checks + PJRT smoke
+//! ```
+//!
+//! (clap is unavailable offline; flags are parsed by hand.)
+
+use anyhow::{bail, Context, Result};
+
+use odin::ann::topology;
+use odin::coordinator::{BatchPolicy, Engine, MetricsHub, Server};
+use odin::dataset::TestSet;
+use odin::harness::{fig6, headline, table1, table2, table3};
+use odin::mapper::{map_topology, ExecConfig};
+use odin::pim::AccumulateMode;
+use odin::runtime::{Manifest, Runtime, TensorFile};
+use odin::util::{fmt_ns, fmt_pj};
+
+fn flag(args: &[String], name: &str, default: &str) -> String {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let artifacts = flag(&args, "--artifacts", "artifacts");
+
+    match cmd {
+        "table1" => {
+            table1(true);
+        }
+        "table2" => {
+            let mode = parse_mode(&flag(&args, "--mode-acc", "binary"))?;
+            let cfg = ExecConfig { mode, ..Default::default() };
+            let acc = measured_accuracy(&artifacts).unwrap_or_default();
+            table2(&cfg, &acc, true);
+        }
+        "table3" => {
+            table3(true);
+        }
+        "fig6" => {
+            let cfg = ExecConfig::paper();
+            fig6(&cfg, true);
+        }
+        "headline" => {
+            headline(&ExecConfig::paper(), true);
+        }
+        "eval" => {
+            let arch = flag(&args, "--arch", "cnn1");
+            let mode = flag(&args, "--mode", "fast");
+            let limit: usize = flag(&args, "--limit", "512").parse()?;
+            cmd_eval(&artifacts, &arch, &mode, limit)?;
+        }
+        "serve" => {
+            let arch = flag(&args, "--arch", "cnn1");
+            let requests: usize = flag(&args, "--requests", "256").parse()?;
+            let concurrency: usize = flag(&args, "--concurrency", "4").parse()?;
+            cmd_serve(&artifacts, &arch, requests, concurrency)?;
+        }
+        "ablation" => {
+            cmd_ablation();
+        }
+        "selftest" => {
+            cmd_selftest(&artifacts)?;
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+        }
+        other => bail!("unknown command {other}; see `odin help`"),
+    }
+    Ok(())
+}
+
+const HELP: &str = "odin — PCRAM PIM accelerator reproduction
+commands: table1 table2 table3 fig6 headline eval serve ablation selftest
+common flags: --artifacts DIR; eval/serve: --arch cnn1|cnn2 --mode fast|sc|float";
+
+fn parse_mode(s: &str) -> Result<AccumulateMode> {
+    match s {
+        "binary" => Ok(AccumulateMode::Binary),
+        "mux" => Ok(AccumulateMode::Mux),
+        other => bail!("unknown accumulate mode {other}"),
+    }
+}
+
+/// Evaluate an artifact's accuracy on the canonical test split.
+fn cmd_eval(artifacts: &str, arch: &str, mode: &str, limit: usize) -> Result<f64> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(artifacts)?;
+    let engine = Engine::new(&rt, &manifest, artifacts, arch, mode)?;
+    let test = TestSet::load(artifacts)?;
+    let n = test.len().min(limit);
+    let max_b = engine.max_batch();
+
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    for chunk in test.samples[..n].chunks(max_b) {
+        let imgs: Vec<&[u8]> = chunk.iter().map(|s| s.image.as_slice()).collect();
+        let (preds, _) = engine.infer(&imgs)?;
+        correct += preds
+            .iter()
+            .zip(chunk)
+            .filter(|(p, s)| p.argmax == s.label)
+            .count();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let acc = 100.0 * correct as f64 / n as f64;
+    let (sim_ns, sim_pj) = engine.sim_cost_per_inference();
+    println!("{arch}/{mode}: accuracy {acc:.2}% on {n} samples ({:.0} inf/s wall)", n as f64 / dt);
+    println!("  simulated ODIN cost/inference: {} / {}", fmt_ns(sim_ns), fmt_pj(sim_pj));
+    Ok(acc)
+}
+
+/// Measured accuracies for the Table 2 accuracy column (CNN1/2 only —
+/// VGGs are analytic-only, see DESIGN.md).
+fn measured_accuracy(artifacts: &str) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for arch in ["cnn1", "cnn2"] {
+        out.push((arch.to_string(), cmd_eval(artifacts, arch, "fast", 512)?));
+    }
+    Ok(out)
+}
+
+/// Serving demo: spawn the batcher, hammer it from client threads.
+fn cmd_serve(artifacts: &str, arch: &str, requests: usize, concurrency: usize) -> Result<()> {
+    let metrics = MetricsHub::new();
+    let (artifacts_o, arch_o) = (artifacts.to_string(), arch.to_string());
+    let (server, client) = Server::spawn(
+        move || {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(&artifacts_o)?;
+            Engine::new(&rt, &manifest, &artifacts_o, &arch_o, "fast")
+        },
+        BatchPolicy::default(),
+        metrics.clone(),
+    )?;
+    println!("serving {arch}/fast with dynamic batching");
+
+    let test = TestSet::load(artifacts)?;
+    let mut handles = Vec::new();
+    let per_thread = requests / concurrency;
+    for t in 0..concurrency {
+        let client = client.clone();
+        let images: Vec<Vec<u8>> = test
+            .samples
+            .iter()
+            .cycle()
+            .skip(t * per_thread)
+            .take(per_thread)
+            .map(|s| s.image.clone())
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            for img in images {
+                if client.infer_blocking(img).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    drop(client); // release the request channel so the batcher loop exits
+    server.shutdown();
+    println!("completed {ok}/{requests} requests");
+    metrics.report().print(arch);
+    Ok(())
+}
+
+/// Binary vs mux accumulation: command cost + stochastic MAC error.
+fn cmd_ablation() {
+    use odin::stochastic::encode::rails;
+    use odin::stochastic::mac::{mac_binary, mac_mux};
+    use odin::util::rng::Rng;
+
+    println!("ablation: accumulation mode (cost model + MAC error)");
+    for mode in [AccumulateMode::Binary, AccumulateMode::Mux] {
+        let cfg = ExecConfig { mode, ..Default::default() };
+        for topo in [topology::cnn1(), topology::vgg1()] {
+            let cost = map_topology(&topo, &cfg);
+            println!(
+                "  {:?} {:<5} latency {:>12}  energy {:>12}  cmds {}",
+                mode,
+                topo.name,
+                fmt_ns(cost.latency_ns(&cfg)),
+                fmt_pj(cost.energy_pj()),
+                cost.total_ledger().total_commands(),
+            );
+        }
+    }
+    println!("\nMAC relative error vs exact (784-input layer, 8 trials):");
+    let mut rng = Rng::new(11);
+    let n = 784;
+    let (mut err_b, mut err_m, mut scale) = (0.0f64, 0.0f64, 0.0f64);
+    for _ in 0..8 {
+        let a: Vec<u8> = (0..n).map(|_| rng.u8() / 2).collect();
+        let wq: Vec<i16> = (0..n).map(|_| rng.range_i32(-200, 200) as i16).collect();
+        let (wp, wn) = rails(&wq);
+        let exact: f64 = a.iter().zip(&wq).map(|(&x, &w)| x as f64 * w as f64).sum();
+        err_b += (mac_binary(&a, &wp, &wn) as f64 * 256.0 - exact).abs();
+        err_m += (mac_mux(&a, &wp, &wn) as f64 * 65536.0 - exact).abs();
+        scale += exact.abs();
+    }
+    println!("  binary: {:.2}%   mux: {:.2}%", 100.0 * err_b / scale, 100.0 * err_m / scale);
+}
+
+/// Cross-language golden vectors + PJRT smoke test.
+fn cmd_selftest(artifacts: &str) -> Result<()> {
+    use odin::stochastic::{encode_rotated_weight, luts};
+
+    // golden vectors
+    let golden = TensorFile::load(format!("{artifacts}/golden.bin"))
+        .context("golden.bin (run `make artifacts`)")?;
+    let t_wgt = golden.get("t_wgt")?.as_u8()?;
+    assert_eq!(t_wgt, &luts::wgt_thresholds(8)[..], "T_WGT mismatch");
+    let t3 = golden.get("t_wgt_d3")?.as_u8()?;
+    assert_eq!(t3, &luts::wgt_thresholds(3)[..], "depth-3 LUT mismatch");
+
+    let a = golden.get("a")?;
+    let wq = golden.get("wq")?;
+    let raw = golden.get("raw")?.as_i32()?;
+    let (b, n) = (a.dims[0], a.dims[1]);
+    let m = wq.dims[0];
+    let av = a.as_u8()?;
+    let qv = wq.as_i16()?;
+    for bi in 0..b {
+        for mi in 0..m {
+            let acts = &av[bi * n..(bi + 1) * n];
+            let q = &qv[mi * n..(mi + 1) * n];
+            let (wp, wn) = odin::stochastic::rails(q);
+            let got = odin::stochastic::mac::mac_binary(acts, &wp, &wn);
+            assert_eq!(got, raw[bi * m + mi], "raw mismatch at ({bi},{mi})");
+        }
+    }
+    println!("golden MAC vectors: {}x{} OK (bit-exact vs python)", b, m);
+
+    let wp_streams = golden.get("wp_streams")?.as_u32()?;
+    for mi in 0..m.min(4) {
+        for j in 0..n {
+            let q = qv[mi * n + j].clamp(0, 255) as u8;
+            let got = encode_rotated_weight(q, j);
+            let base = (mi * n + j) * 8;
+            assert_eq!(got.lanes()[..], wp_streams[base..base + 8], "stream ({mi},{j})");
+        }
+    }
+    println!("golden weight streams: OK (bit-exact vs python)");
+
+    // PJRT smoke: run the MAC tile artifact and compare to the Rust model
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(artifacts)?;
+    let tile = rt.load_hlo_text(&manifest.get("sc_tile_fast")?.path)?;
+    let mut rng = odin::util::rng::Rng::new(3);
+    let acts: Vec<u8> = (0..8 * 256).map(|_| rng.u8()).collect();
+    let wq: Vec<i16> = (0..32 * 256).map(|_| rng.range_i32(-255, 255) as i16).collect();
+    let (wp, wn) = odin::stochastic::rails(&wq);
+    let out = tile.execute_i32(&[
+        odin::runtime::TensorArg::U8 { dims: vec![8, 256], data: acts.clone() },
+        odin::runtime::TensorArg::U8 { dims: vec![32, 256], data: wp.clone() },
+        odin::runtime::TensorArg::U8 { dims: vec![32, 256], data: wn.clone() },
+    ])?;
+    for bi in 0..8 {
+        for mi in 0..32 {
+            let want = odin::stochastic::mac::mac_binary(
+                &acts[bi * 256..(bi + 1) * 256],
+                &wp[mi * 256..(mi + 1) * 256],
+                &wn[mi * 256..(mi + 1) * 256],
+            );
+            assert_eq!(out[bi * 32 + mi], want, "tile ({bi},{mi})");
+        }
+    }
+    println!("PJRT tile execution: 8x32 MACs bit-exact vs rust model");
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! Functional PCRAM bank model.
+//!
+//! Stores real 256-bit lines and implements the PINATUBO-style in-situ
+//! primitives the ODIN commands are built from: single-line read/write and
+//! simultaneous two-row activation performing bit-parallel AND or OR in the
+//! sense amplifiers.  Every access is metered (count, latency, energy) so
+//! functional execution and transaction accounting can never drift apart.
+
+use std::collections::HashMap;
+
+use super::params::PcramParams;
+use crate::stochastic::Stream256;
+
+/// A line address inside one bank: (partition, wordline-row, line-in-row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RowAddr {
+    pub partition: u16,
+    pub row: u16,
+    pub line: u8,
+}
+
+impl RowAddr {
+    pub fn new(partition: u16, row: u16, line: u8) -> Self {
+        RowAddr { partition, row, line }
+    }
+}
+
+/// Access meter shared by all bank operations.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccessMeter {
+    pub reads: u64,
+    pub writes: u64,
+    pub ns: f64,
+    pub pj: f64,
+}
+
+impl AccessMeter {
+    pub fn add(&mut self, other: &AccessMeter) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.ns += other.ns;
+        self.pj += other.pj;
+    }
+}
+
+/// Functional bank: sparse line store + meter.
+pub struct Bank {
+    params: PcramParams,
+    lines: HashMap<RowAddr, Stream256>,
+    pub meter: AccessMeter,
+}
+
+impl Bank {
+    pub fn new(params: PcramParams) -> Self {
+        Bank { params, lines: HashMap::new(), meter: AccessMeter::default() }
+    }
+
+    fn meter_read(&mut self, n: u64) {
+        self.meter.reads += n;
+        self.meter.ns += self.params.latency_ns(n, 0);
+        self.meter.pj += self.params.energy_pj(n, 0);
+    }
+
+    fn meter_write(&mut self, n: u64) {
+        self.meter.writes += n;
+        self.meter.ns += self.params.latency_ns(0, n);
+        self.meter.pj += self.params.energy_pj(0, n);
+    }
+
+    /// Plain line write (W/D drivers program 256 cells in parallel).
+    pub fn write_line(&mut self, addr: RowAddr, data: Stream256) {
+        self.lines.insert(addr, data);
+        self.meter_write(1);
+    }
+
+    /// Plain line read (S/A sense 256 cells in parallel).  Unwritten lines
+    /// read as all-zeros (RESET state).
+    pub fn read_line(&mut self, addr: RowAddr) -> Stream256 {
+        self.meter_read(1);
+        self.lines.get(&addr).copied().unwrap_or(Stream256::ZERO)
+    }
+
+    /// PINATUBO: activate two rows simultaneously, sense with the AND
+    /// reference voltage — one read access yields the bitwise AND.
+    pub fn read_and(&mut self, a: RowAddr, b: RowAddr) -> Stream256 {
+        self.meter_read(1);
+        let la = self.lines.get(&a).copied().unwrap_or(Stream256::ZERO);
+        let lb = self.lines.get(&b).copied().unwrap_or(Stream256::ZERO);
+        la.and(&lb)
+    }
+
+    /// PINATUBO: same with the OR reference voltage.
+    pub fn read_or(&mut self, a: RowAddr, b: RowAddr) -> Stream256 {
+        self.meter_read(1);
+        let la = self.lines.get(&a).copied().unwrap_or(Stream256::ZERO);
+        let lb = self.lines.get(&b).copied().unwrap_or(Stream256::ZERO);
+        la.or(&lb)
+    }
+
+    /// Peek without metering (test/debug introspection only).
+    pub fn peek(&self, addr: RowAddr) -> Stream256 {
+        self.lines.get(&addr).copied().unwrap_or(Stream256::ZERO)
+    }
+
+    pub fn lines_stored(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn reset_meter(&mut self) {
+        self.meter = AccessMeter::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(f: impl FnMut(usize) -> bool) -> Stream256 {
+        Stream256::from_fn(f)
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut b = Bank::new(PcramParams::default());
+        let a = RowAddr::new(0, 1, 2);
+        let data = s(|i| i % 3 == 0);
+        b.write_line(a, data);
+        assert_eq!(b.read_line(a), data);
+        assert_eq!(b.meter.reads, 1);
+        assert_eq!(b.meter.writes, 1);
+    }
+
+    #[test]
+    fn unwritten_reads_zero() {
+        let mut b = Bank::new(PcramParams::default());
+        assert_eq!(b.read_line(RowAddr::new(3, 3, 3)), Stream256::ZERO);
+    }
+
+    #[test]
+    fn pinatubo_and_or_single_access() {
+        let mut b = Bank::new(PcramParams::default());
+        let (r0, r1) = (RowAddr::new(15, 0, 0), RowAddr::new(15, 1, 0));
+        let x = s(|i| i < 128);
+        let y = s(|i| i % 2 == 0);
+        b.write_line(r0, x);
+        b.write_line(r1, y);
+        b.reset_meter();
+        assert_eq!(b.read_and(r0, r1), x.and(&y));
+        assert_eq!(b.read_or(r0, r1), x.or(&y));
+        assert_eq!(b.meter.reads, 2);
+        assert_eq!(b.meter.writes, 0);
+    }
+
+    #[test]
+    fn meter_matches_params() {
+        let p = PcramParams::default();
+        let mut b = Bank::new(p);
+        let a = RowAddr::new(0, 0, 0);
+        b.write_line(a, Stream256::ONES);
+        b.read_line(a);
+        assert_eq!(b.meter.ns, p.t_read_ns + p.t_write_ns);
+        assert_eq!(b.meter.pj, p.e_read_pj + p.e_write_pj);
+    }
+}

@@ -1,0 +1,106 @@
+//! PCRAM organization (paper §III-B): 16 GB example memory = 2 channels x
+//! 8 ranks x 16 banks; a bank has 16 partitions of 4096 wordlines x 8192
+//! bitlines; peripherals read/program 256 cells in parallel (line size).
+
+/// Hierarchical geometry of the ODIN accelerator channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Geometry {
+    pub channels: usize,
+    pub ranks_per_channel: usize,
+    pub banks_per_rank: usize,
+    pub partitions_per_bank: usize,
+    pub wordlines_per_partition: usize,
+    pub bitline_bits: usize,
+    pub line_bits: usize,
+}
+
+impl Default for Geometry {
+    fn default() -> Self {
+        Geometry {
+            channels: 2,
+            ranks_per_channel: 8,
+            banks_per_rank: 16,
+            partitions_per_bank: 16,
+            wordlines_per_partition: 4096,
+            bitline_bits: 8192,
+            line_bits: 256,
+        }
+    }
+}
+
+impl Geometry {
+    /// 256-bit lines per 8192-bit physical row.
+    pub fn lines_per_row(&self) -> usize {
+        self.bitline_bits / self.line_bits
+    }
+
+    /// 8-bit operands per line (the B_TO_S input granularity).
+    pub fn operands_per_line(&self) -> usize {
+        self.line_bits / 8
+    }
+
+    pub fn banks_total(&self) -> usize {
+        self.channels * self.ranks_per_channel * self.banks_per_rank
+    }
+
+    /// Bits in one partition.
+    pub fn partition_bits(&self) -> u64 {
+        (self.wordlines_per_partition * self.bitline_bits) as u64
+    }
+
+    /// Bank capacity in bits.
+    pub fn bank_bits(&self) -> u64 {
+        self.partition_bits() * self.partitions_per_bank as u64
+    }
+
+    /// Total capacity in bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.bank_bits() / 8 * self.banks_total() as u64
+    }
+
+    /// Usable capacity once each bank dedicates one Compute Partition.
+    pub fn usable_bytes_with_compute_partition(&self) -> u64 {
+        self.bank_bits() / 8 * (self.partitions_per_bank - 1) as u64
+            / self.partitions_per_bank as u64
+            * self.banks_total() as u64
+            * self.partitions_per_bank as u64
+            / self.partitions_per_bank as u64
+    }
+
+    /// Stochastic streams (256-bit rows-worth) a Compute Partition holds.
+    pub fn streams_per_compute_partition(&self) -> u64 {
+        self.partition_bits() / self.line_bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_is_16_gb() {
+        let g = Geometry::default();
+        assert_eq!(g.total_bytes(), 16 << 30);
+    }
+
+    #[test]
+    fn line_granularity() {
+        let g = Geometry::default();
+        assert_eq!(g.lines_per_row(), 32);
+        assert_eq!(g.operands_per_line(), 32);
+    }
+
+    #[test]
+    fn bank_counts() {
+        let g = Geometry::default();
+        assert_eq!(g.banks_total(), 256);
+        assert_eq!(g.bank_bits(), 16 * 4096 * 8192);
+    }
+
+    #[test]
+    fn compute_partition_stream_capacity() {
+        let g = Geometry::default();
+        // 4096 wordlines * 32 lines per row = 131072 streams
+        assert_eq!(g.streams_per_compute_partition(), 131072);
+    }
+}

@@ -1,0 +1,17 @@
+//! Transaction-level PCRAM simulator — the substrate the paper evaluates
+//! ODIN on (its "in-house transaction-level simulator", §VI-A).
+//!
+//! [`params`] carries the device timing/energy model (with the derivation
+//! of tREAD/tWRITE from the paper's own Table 1), [`geometry`] the
+//! channel/rank/bank/partition hierarchy of §III-B, and [`bank`] a
+//! *functional* bank model that stores real 256-bit lines and performs
+//! PINATUBO simultaneous-row-activation AND/OR — so PIMC command flows can
+//! be executed on actual bits, not just counted.
+
+pub mod bank;
+pub mod geometry;
+pub mod params;
+
+pub use bank::{Bank, RowAddr};
+pub use geometry::Geometry;
+pub use params::PcramParams;

@@ -1,0 +1,104 @@
+//! PCRAM device timing and energy parameters.
+//!
+//! ## Timing derivation (from the paper itself)
+//!
+//! Table 1 gives total latencies for command flows with known read/write
+//! counts, which over-determines a linear system in (tREAD, tWRITE):
+//!
+//! ```text
+//!   B_TO_S:   33 R + 32 W = 3504 ns
+//!   S_TO_B:   32 R + 32 W = 3456 ns      (difference: 1 R = 48 ns)
+//!   ANN_MUL:   1 R +  1 W =  108 ns      (48 + 60 = 108 ✓)
+//!   ANN_POOL: 32 R + 32 W = 3456 ns      (32*48 + 32*60 = 3456 ✓)
+//! ```
+//!
+//! All four rows are consistent with **tREAD = 48 ns, tWRITE = 60 ns** per
+//! 256-bit line access — these are therefore exact, not estimates.
+//!
+//! ## Energy derivation
+//!
+//! The paper cites the 90 nm 512 Mb diode-switch PRAM datasheet (Lee et al.,
+//! JSSC 2008) scaled to 14 nm via the nanowire scaling analysis (Liu, EDL
+//! 2011).  From the datasheet: read ~8 pJ/bit and RESET-dominated write
+//! ~55 pJ/bit at 90 nm; phase-change programming energy scales roughly with
+//! the cell cross-section, giving ~x0.2 at 14 nm.  We adopt
+//! **1.6 pJ/bit read, 11 pJ/bit write**, i.e. ~410 pJ / ~2816 pJ per
+//! 256-bit line.  Absolute energies only shift Fig. 6 uniformly; every
+//! cross-system *ratio* the paper reports is preserved by construction
+//! (see EXPERIMENTS.md §Calibration).
+
+/// Per-line (256-bit) PCRAM access parameters, 14 nm-scaled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PcramParams {
+    /// Read latency per 256-bit line (ns).
+    pub t_read_ns: f64,
+    /// Write latency per 256-bit line (ns).
+    pub t_write_ns: f64,
+    /// Read energy per 256-bit line (pJ).
+    pub e_read_pj: f64,
+    /// Write energy per 256-bit line (pJ).
+    pub e_write_pj: f64,
+}
+
+impl Default for PcramParams {
+    fn default() -> Self {
+        PcramParams {
+            t_read_ns: 48.0,
+            t_write_ns: 60.0,
+            e_read_pj: 1.6 * 256.0,
+            e_write_pj: 11.0 * 256.0,
+        }
+    }
+}
+
+impl PcramParams {
+    /// The paper-calibrated profile (see EXPERIMENTS.md §Calibration).
+    ///
+    /// The paper reports only *normalized* Fig. 6 ratios and never
+    /// discloses its pJ/access constants; its claimed energy wins are
+    /// unreachable under datasheet-realistic PCRAM write energies (our
+    /// default).  This profile back-solves the per-line energies the
+    /// paper's ratios imply — aggressive partial-line programming at
+    /// ~0.008/0.016 pJ/bit — and is used to regenerate Fig. 6's shape.
+    /// Timing is identical in both profiles (it is pinned by Table 1).
+    pub fn paper_calibrated() -> Self {
+        PcramParams { e_read_pj: 2.0, e_write_pj: 4.0, ..Default::default() }
+    }
+
+    /// Latency of a flow with the given access counts (ns).
+    pub fn latency_ns(&self, reads: u64, writes: u64) -> f64 {
+        reads as f64 * self.t_read_ns + writes as f64 * self.t_write_ns
+    }
+
+    /// Array energy of a flow with the given access counts (pJ).
+    pub fn energy_pj(&self, reads: u64, writes: u64) -> f64 {
+        reads as f64 * self.e_read_pj + writes as f64 * self.e_write_pj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_latencies_reproduce_exactly() {
+        let p = PcramParams::default();
+        assert_eq!(p.latency_ns(33, 32), 3504.0); // B_TO_S
+        assert_eq!(p.latency_ns(32, 32), 3456.0); // S_TO_B / ANN_POOL
+        assert_eq!(p.latency_ns(1, 1), 108.0); // ANN_MUL / ANN_ACC
+    }
+
+    #[test]
+    fn energy_is_linear() {
+        let p = PcramParams::default();
+        assert_eq!(p.energy_pj(2, 0), 2.0 * p.e_read_pj);
+        assert_eq!(p.energy_pj(0, 3), 3.0 * p.e_write_pj);
+    }
+
+    #[test]
+    fn write_costlier_than_read() {
+        let p = PcramParams::default();
+        assert!(p.t_write_ns > p.t_read_ns);
+        assert!(p.e_write_pj > p.e_read_pj);
+    }
+}

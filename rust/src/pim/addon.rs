@@ -1,0 +1,79 @@
+//! Add-on CMOS logic blocks — the paper's Table 3, scaled for 14 nm.
+//!
+//! These are the only non-PCRAM hardware ODIN adds per bank: the SRAM
+//! conversion LUT, mux/demux steering, the pop counter path, and the
+//! ReLU / max-pooling blocks.  Values are consumed as constants by the
+//! per-command energy/delay composition in [`super::commands`], exactly as
+//! the paper consumes its CACTI / custom-logic numbers.
+
+/// One row of Table 3.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AddonComponent {
+    pub name: &'static str,
+    pub energy_pj: f64,
+    pub delay_ns: f64,
+    pub area_mm2: f64,
+}
+
+/// Table 3 verbatim (14 nm CMOS).
+pub const ADDON_TABLE: &[AddonComponent] = &[
+    AddonComponent { name: "SRAM-LUT", energy_pj: 0.297, delay_ns: 0.316, area_mm2: 0.402 },
+    AddonComponent { name: "16:8 Mux", energy_pj: 4.662, delay_ns: 0.007, area_mm2: 0.159 },
+    AddonComponent { name: "256:8 Mux", energy_pj: 4.72, delay_ns: 0.0077, area_mm2: 0.639 },
+    AddonComponent { name: "256:32 Mux", energy_pj: 18.6, delay_ns: 0.0303, area_mm2: 0.688 },
+    AddonComponent { name: "8:32 Demux", energy_pj: 18.64, delay_ns: 0.0305, area_mm2: 0.158 },
+    AddonComponent { name: "8:256 Demux", energy_pj: 149.19, delay_ns: 0.242, area_mm2: 0.493 },
+    AddonComponent { name: "256:1024 Demux", energy_pj: 902.8, delay_ns: 1.465, area_mm2: 1.266 },
+    AddonComponent { name: "ReLU Logic", energy_pj: 185.0, delay_ns: 4.3, area_mm2: 0.02 },
+    AddonComponent { name: "Pooling Logic", energy_pj: 2140.0, delay_ns: 39.3, area_mm2: 3.06 },
+];
+
+/// Look a component up by name (panics on typos — compile-time-ish safety
+/// for the command composition code).
+pub fn component(name: &str) -> &'static AddonComponent {
+    ADDON_TABLE
+        .iter()
+        .find(|c| c.name == name)
+        .unwrap_or_else(|| panic!("unknown add-on component {name}"))
+}
+
+/// Total add-on area per bank (every block instantiated once).
+pub fn total_area_mm2() -> f64 {
+    ADDON_TABLE.iter().map(|c| c.area_mm2).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_nine_rows() {
+        assert_eq!(ADDON_TABLE.len(), 9);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(component("ReLU Logic").energy_pj, 185.0);
+        assert_eq!(component("SRAM-LUT").delay_ns, 0.316);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown add-on component")]
+    fn lookup_typo_panics() {
+        component("ReLU");
+    }
+
+    #[test]
+    fn area_total_matches_paper_sum() {
+        // sum of Table 3 area column
+        let want = 0.402 + 0.159 + 0.639 + 0.688 + 0.158 + 0.493 + 1.266 + 0.02 + 3.06;
+        assert!((total_area_mm2() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_values_positive() {
+        for c in ADDON_TABLE {
+            assert!(c.energy_pj > 0.0 && c.delay_ns > 0.0 && c.area_mm2 > 0.0);
+        }
+    }
+}

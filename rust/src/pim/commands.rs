@@ -1,0 +1,185 @@
+//! The five PIMC commands (paper §IV-C, Table 1) and their cost model.
+//!
+//! Each command is a fixed activity flow of basic PCRAM READ/WRITE
+//! operations (Fig. 5) plus add-on logic activity.  Latency follows
+//! directly from the access counts and the Table-1-derived line timings;
+//! energy composes the PCRAM array energy with the Table 3 add-on block
+//! energies actually exercised by the flow.
+
+use super::addon::component;
+use crate::pcram::PcramParams;
+
+/// How MAC accumulation is performed (DESIGN.md §4 — the central ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AccumulateMode {
+    /// Per-product popcount + binary adder (default: accurate, more
+    /// S_TO_B traffic).
+    Binary,
+    /// Paper-faithful MUX tree (cheap, noisy on wide layers).
+    Mux,
+}
+
+/// ODIN PIM-controller commands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PimcCommand {
+    /// Convert 32 8-bit binary operands into 32 stochastic rows.
+    BToS,
+    /// Bit-parallel AND of two stochastic rows (one product).
+    AnnMul,
+    /// One MUX accumulate step = 2 AND + 1 OR on stochastic rows.
+    AnnAcc,
+    /// Pop-count 32 stochastic rows, apply ReLU, write back binary.
+    SToB,
+    /// Pool `filter`:1 over 32 operand groups (4 or 9).
+    AnnPool { filter: u8 },
+    /// ODIN extension (binary accumulation mode): fused multiply +
+    /// pop-count.  The PISO pop counter taps the sense amplifiers during
+    /// the PINATUBO AND read, so the product stream is *never written
+    /// back* — 1 read, 0 writes.  This is the flow that makes binary
+    /// accumulation competitive; the ablation benches quantify it.
+    AnnMulPop,
+}
+
+impl PimcCommand {
+    pub const ALL: [PimcCommand; 5] = [
+        PimcCommand::BToS,
+        PimcCommand::AnnMul,
+        PimcCommand::AnnAcc,
+        PimcCommand::SToB,
+        PimcCommand::AnnPool { filter: 4 },
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PimcCommand::BToS => "B_TO_S",
+            PimcCommand::AnnMul => "ANN_MUL",
+            PimcCommand::AnnAcc => "ANN_ACC",
+            PimcCommand::SToB => "S_TO_B",
+            PimcCommand::AnnPool { .. } => "ANN_POOL",
+            PimcCommand::AnnMulPop => "ANN_MUL_POP",
+        }
+    }
+
+    /// PCRAM line reads in the activity flow (Table 1 #Reads).
+    pub fn reads(&self) -> u64 {
+        match self {
+            // 1 operand-line read + 32 LUT-indexed stream fetches
+            PimcCommand::BToS => 33,
+            PimcCommand::AnnMul => 1,
+            // Fig. 5(c): the two ANDs and the OR each use simultaneous
+            // two-row activation; Table 1 books the flow as 1R + 1W
+            // (the s/s' operands stay latched in the S/A).
+            PimcCommand::AnnAcc => 1,
+            PimcCommand::SToB => 32,
+            PimcCommand::AnnPool { filter } => 8 * (*filter as u64),
+            PimcCommand::AnnMulPop => 1,
+        }
+    }
+
+    /// PCRAM line writes in the activity flow (Table 1 #Writes).
+    pub fn writes(&self) -> u64 {
+        match self {
+            PimcCommand::BToS => 32,
+            PimcCommand::AnnMul => 1,
+            PimcCommand::AnnAcc => 1,
+            PimcCommand::SToB => 32,
+            PimcCommand::AnnPool { .. } => 32,
+            PimcCommand::AnnMulPop => 0,
+        }
+    }
+
+    /// Flow latency (ns) — Table 1's Latency column falls out exactly.
+    pub fn latency_ns(&self, p: &PcramParams) -> f64 {
+        p.latency_ns(self.reads(), self.writes()) + self.addon_delay_ns()
+    }
+
+    /// PCRAM-array-only latency (Table 1 reproduces this part).
+    pub fn array_latency_ns(&self, p: &PcramParams) -> f64 {
+        p.latency_ns(self.reads(), self.writes())
+    }
+
+    /// Add-on logic delay along the flow's critical path (ns).
+    pub fn addon_delay_ns(&self) -> f64 {
+        match self {
+            // LUT lookup + 8:256 demux steering, per operand, serialized
+            PimcCommand::BToS => {
+                32.0 * (component("SRAM-LUT").delay_ns + component("8:256 Demux").delay_ns)
+            }
+            PimcCommand::AnnMul | PimcCommand::AnnAcc => 0.0,
+            // counter increments hide under the 48 ns array read
+            PimcCommand::AnnMulPop => 0.0,
+            // PISO drain dominates the pop counter; the paper books it
+            // inside the 32 reads. ReLU + reassembly demux remain.
+            PimcCommand::SToB => {
+                32.0 * component("ReLU Logic").delay_ns + component("8:32 Demux").delay_ns
+            }
+            PimcCommand::AnnPool { .. } => component("Pooling Logic").delay_ns,
+        }
+    }
+
+    /// Add-on logic energy exercised by the flow (pJ).
+    pub fn addon_energy_pj(&self) -> f64 {
+        match self {
+            PimcCommand::BToS => {
+                32.0 * (component("SRAM-LUT").energy_pj + component("8:256 Demux").energy_pj)
+            }
+            PimcCommand::AnnMul | PimcCommand::AnnAcc => 0.0,
+            // mux steering into the PISO counter
+            PimcCommand::AnnMulPop => component("256:8 Mux").energy_pj,
+            PimcCommand::SToB => {
+                32.0 * (component("256:8 Mux").energy_pj + component("ReLU Logic").energy_pj)
+                    + component("8:32 Demux").energy_pj
+            }
+            PimcCommand::AnnPool { .. } => component("Pooling Logic").energy_pj,
+        }
+    }
+
+    /// Total flow energy (pJ): PCRAM array + add-on logic.
+    pub fn energy_pj(&self, p: &PcramParams) -> f64 {
+        p.energy_pj(self.reads(), self.writes()) + self.addon_energy_pj()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_exact() {
+        let p = PcramParams::default();
+        let rows = [
+            (PimcCommand::BToS, 33, 32, 3504.0),
+            (PimcCommand::SToB, 32, 32, 3456.0),
+            (PimcCommand::AnnPool { filter: 4 }, 32, 32, 3456.0),
+            (PimcCommand::AnnMul, 1, 1, 108.0),
+            (PimcCommand::AnnAcc, 1, 1, 108.0),
+        ];
+        for (cmd, r, w, lat) in rows {
+            assert_eq!(cmd.reads(), r, "{}", cmd.name());
+            assert_eq!(cmd.writes(), w, "{}", cmd.name());
+            assert_eq!(cmd.array_latency_ns(&p), lat, "{}", cmd.name());
+        }
+    }
+
+    #[test]
+    fn pool9_reads_scale_with_filter() {
+        assert_eq!(PimcCommand::AnnPool { filter: 9 }.reads(), 72);
+        assert_eq!(PimcCommand::AnnPool { filter: 9 }.writes(), 32);
+    }
+
+    #[test]
+    fn addon_energy_nonnegative_and_bounded() {
+        let p = PcramParams::default();
+        for cmd in PimcCommand::ALL {
+            assert!(cmd.addon_energy_pj() >= 0.0);
+            // add-on never dominates the array energy by more than ~10x
+            assert!(cmd.energy_pj(&p) < 100.0 * p.e_write_pj * 64.0);
+        }
+    }
+
+    #[test]
+    fn mul_acc_are_pure_array_ops() {
+        assert_eq!(PimcCommand::AnnMul.addon_energy_pj(), 0.0);
+        assert_eq!(PimcCommand::AnnAcc.addon_delay_ns(), 0.0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Functional PIM controller: executes the Fig. 5 activity flows on the
+//! PCRAM bank model, producing both *real bits* (via the bank's PINATUBO
+//! primitives) and *booked costs* (via the ledger, at Table 1 rates).
+//!
+//! The integration tests drive whole MAC layers through these flows and
+//! check the results against `stochastic::mac` — the proof that the
+//! command decomposition computes what the arithmetic says it should.
+
+use super::commands::PimcCommand;
+use super::ledger::Ledger;
+use crate::pcram::{Bank, PcramParams, RowAddr};
+use crate::stochastic::{encode, luts, rot_amount, Stream256, STREAM_BITS};
+
+/// Pack 32 bytes into one 256-bit line (byte k -> bits 8k..8k+8, LSB first).
+pub fn line_from_bytes(bytes: &[u8]) -> Stream256 {
+    assert!(bytes.len() <= 32);
+    Stream256::from_fn(|i| {
+        let (k, b) = (i / 8, i % 8);
+        k < bytes.len() && (bytes[k] >> b) & 1 == 1
+    })
+}
+
+/// Inverse of [`line_from_bytes`].
+pub fn bytes_from_line(line: &Stream256) -> [u8; 32] {
+    let mut out = [0u8; 32];
+    for (k, byte) in out.iter_mut().enumerate() {
+        for b in 0..8 {
+            if line.bit(k * 8 + b) {
+                *byte |= 1 << b;
+            }
+        }
+    }
+    out
+}
+
+/// Functional controller bound to one bank's Compute Partition.
+pub struct PimController {
+    pub bank: Bank,
+    pub ledger: Ledger,
+    params: PcramParams,
+}
+
+impl PimController {
+    pub fn new(params: PcramParams) -> Self {
+        PimController { bank: Bank::new(params), ledger: Ledger::new(), params }
+    }
+
+    /// B_TO_S: read one binary line (32 operands), convert each through the
+    /// LUT, write 32 stochastic rows into the Compute Partition.
+    /// `lut` selects the threshold table; `rot_base` applies the binary-mode
+    /// per-operand rotation (operand index = rot_base + k).
+    pub fn b_to_s(
+        &mut self,
+        src: RowAddr,
+        dst: impl Fn(usize) -> RowAddr,
+        lut: &[u8; STREAM_BITS],
+        rot_base: Option<usize>,
+    ) {
+        let operands = bytes_from_line(&self.bank.read_line(src));
+        for (k, &v) in operands.iter().enumerate() {
+            let mut s = encode(v, lut);
+            if let Some(base) = rot_base {
+                s = s.rotate_left(rot_amount(base + k));
+            }
+            self.bank.write_line(dst(k), s);
+        }
+        self.ledger.issue(PimcCommand::BToS, 1, &self.params);
+    }
+
+    /// ANN_MUL: simultaneous activation of the two rows with the AND
+    /// reference voltage; product row written back.
+    pub fn ann_mul(&mut self, a: RowAddr, w: RowAddr, dst: RowAddr) {
+        let product = self.bank.read_and(a, w);
+        self.bank.write_line(dst, product);
+        self.ledger.issue(PimcCommand::AnnMul, 1, &self.params);
+    }
+
+    /// ANN_ACC: one MUX accumulate step between the accumulator row and an
+    /// operand row, using the precomputed s/s' rows (Fig. 5(c)).
+    pub fn ann_acc(&mut self, acc: RowAddr, x: RowAddr, s: &Stream256, dst: RowAddr) {
+        let a = self.bank.read_line(acc);
+        let b = self.bank.read_line(x);
+        let muxed = a.mux(&b, s);
+        self.bank.write_line(dst, muxed);
+        // Table 1 books the flow as 1R + 1W (s/s' stay latched); we issued
+        // 2 functional reads — the ledger stays authoritative for costs.
+        self.ledger.issue(PimcCommand::AnnAcc, 1, &self.params);
+    }
+
+    /// S_TO_B: pop-count 32 stochastic rows (PISO + counter), optionally
+    /// clamp to 8 bits (the ReLU block's output range), assemble the 32
+    /// results into one binary line and write it back.
+    pub fn s_to_b(
+        &mut self,
+        rows: impl Fn(usize) -> RowAddr,
+        dst: RowAddr,
+        saturate: bool,
+    ) -> [u16; 32] {
+        let mut counts = [0u16; 32];
+        for (k, c) in counts.iter_mut().enumerate() {
+            *c = self.bank.read_line(rows(k)).popcount() as u16;
+        }
+        let bytes: Vec<u8> = counts
+            .iter()
+            .map(|&c| if saturate { c.min(255) as u8 } else { (c & 0xFF) as u8 })
+            .collect();
+        self.bank.write_line(dst, line_from_bytes(&bytes));
+        self.ledger.issue(PimcCommand::SToB, 1, &self.params);
+        counts
+    }
+
+    /// ANN_POOL: read `filter` binary lines (32 operands each, lane k of
+    /// every line belongs to pooling group k), apply byte-wise max, write
+    /// one pooled line.
+    pub fn ann_pool(&mut self, srcs: &[RowAddr], dst: RowAddr) {
+        let filter = srcs.len() as u8;
+        let mut maxes = [0u8; 32];
+        for &src in srcs {
+            let bytes = bytes_from_line(&self.bank.read_line(src));
+            for (m, &b) in maxes.iter_mut().zip(bytes.iter()) {
+                *m = (*m).max(b);
+            }
+        }
+        self.bank.write_line(dst, line_from_bytes(&maxes));
+        self.ledger.issue(PimcCommand::AnnPool { filter }, 1, &self.params);
+    }
+
+    /// Convenience: run a whole binary-mode MAC for `acts` against one
+    /// neuron's dual-rail weights, entirely through command flows.
+    /// Returns the raw popcount difference.  Rows are laid out in
+    /// partition 15 (the Compute Partition).
+    pub fn mac_binary_functional(&mut self, acts: &[u8], wpos: &[u8], wneg: &[u8]) -> i32 {
+        let n = acts.len();
+        // region stride padded to whole 32-operand lines so the act /
+        // wpos / wneg / product regions never overlap
+        let np = n.div_ceil(32) * 32;
+        let cp = 15u16;
+        let addr = |row: usize| RowAddr::new(cp, (row / 32) as u16, (row % 32) as u8);
+        let t_act = luts::act_thresholds();
+        let t_wgt = luts::wgt_thresholds(8);
+
+        // stage operand lines + convert (B_TO_S per 32 operands, 4 regions:
+        // acts at 0, wpos at np, wneg at 2*np; products at 3*np..)
+        let mut raw = 0i64;
+        for (rail, weights, sign) in [(1usize, wpos, 1i64), (2usize, wneg, -1i64)] {
+            for chunk in 0..n.div_ceil(32) {
+                let lo = chunk * 32;
+                let hi = (lo + 32).min(n);
+                // write the binary operand lines (input staging, metered as
+                // plain writes by the DMA path — not PIMC commands)
+                let src_a = RowAddr::new(14, chunk as u16, 0);
+                let src_w = RowAddr::new(14, chunk as u16, 1 + rail as u8);
+                self.bank.write_line(src_a, line_from_bytes(&acts[lo..hi]));
+                self.bank.write_line(src_w, line_from_bytes(&weights[lo..hi]));
+                self.b_to_s(src_a, |k| addr(lo + k), &t_act, None);
+                self.b_to_s(src_w, |k| addr(rail * np + lo + k), &t_wgt, Some(lo));
+            }
+            // products + popcounts
+            for chunk in 0..n.div_ceil(32) {
+                let lo = chunk * 32;
+                let hi = (lo + 32).min(n);
+                for j in lo..hi {
+                    self.ann_mul(addr(j), addr(rail * np + j), addr(3 * np + (j - lo)));
+                }
+                // zero stale product scratch before pop-counting a
+                // partial chunk (rows persist across chunks otherwise)
+                for k in (hi - lo)..32 {
+                    self.bank.write_line(addr(3 * np + k), Stream256::ZERO);
+                }
+                let counts = self.s_to_b(|k| addr(3 * np + k), RowAddr::new(14, 100, 0), false);
+                for k in 0..(hi - lo) {
+                    raw += sign * counts[k] as i64;
+                }
+            }
+        }
+        raw as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::encode::rails;
+    use crate::stochastic::mac::mac_binary;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::gen;
+
+    #[test]
+    fn byte_line_roundtrip() {
+        let bytes: Vec<u8> = (0..32).map(|i| (i * 37) as u8).collect();
+        let line = line_from_bytes(&bytes);
+        assert_eq!(bytes_from_line(&line).to_vec(), bytes);
+    }
+
+    #[test]
+    fn b_to_s_writes_exact_streams() {
+        let mut c = PimController::new(PcramParams::default());
+        let vals: Vec<u8> = (0..32).map(|i| (i * 8) as u8).collect();
+        let src = RowAddr::new(0, 0, 0);
+        c.bank.write_line(src, line_from_bytes(&vals));
+        let t = luts::act_thresholds();
+        c.b_to_s(src, |k| RowAddr::new(15, 0, k as u8), &t, None);
+        for (k, &v) in vals.iter().enumerate() {
+            let got = c.bank.peek(RowAddr::new(15, 0, k as u8));
+            assert_eq!(got.popcount(), v as u32);
+            assert_eq!(got, encode(v, &t));
+        }
+        assert_eq!(c.ledger.count("B_TO_S"), 1);
+    }
+
+    #[test]
+    fn ann_pool_takes_bytewise_max() {
+        let mut c = PimController::new(PcramParams::default());
+        let srcs: Vec<RowAddr> = (0..4).map(|i| RowAddr::new(0, i, 0)).collect();
+        for (i, &s) in srcs.iter().enumerate() {
+            let bytes: Vec<u8> = (0..32).map(|k| ((k + i * 7) % 256) as u8).collect();
+            c.bank.write_line(s, line_from_bytes(&bytes));
+        }
+        let dst = RowAddr::new(0, 9, 0);
+        c.ann_pool(&srcs, dst);
+        let got = bytes_from_line(&c.bank.peek(dst));
+        for k in 0..32 {
+            let want = (0..4).map(|i| ((k + i * 7) % 256) as u8).max().unwrap();
+            assert_eq!(got[k], want);
+        }
+        assert_eq!(c.ledger.count("ANN_POOL"), 1);
+    }
+
+    #[test]
+    fn functional_mac_matches_arithmetic_model() {
+        // The whole point: command flows on the bank == pure arithmetic.
+        let mut rng = Rng::new(42);
+        for n in [7usize, 32, 70] {
+            let acts = gen::u8_vec(&mut rng, n);
+            let wq = gen::i16_vec(&mut rng, n, -255, 255);
+            let (wp, wn) = rails(&wq);
+            let mut c = PimController::new(PcramParams::default());
+            let got = c.mac_binary_functional(&acts, &wp, &wn);
+            let want = mac_binary(&acts, &wp, &wn);
+            assert_eq!(got, want, "n={n}");
+            // command accounting sanity
+            assert_eq!(c.ledger.count("ANN_MUL") as usize, 2 * n);
+            assert_eq!(c.ledger.count("B_TO_S") as usize, 4 * n.div_ceil(32));
+        }
+    }
+}

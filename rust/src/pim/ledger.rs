@@ -1,0 +1,102 @@
+//! Command-level cost ledger: the transaction-level simulator's output.
+
+use std::collections::BTreeMap;
+
+use super::commands::PimcCommand;
+use crate::pcram::PcramParams;
+
+/// Accumulated command counts + derived reads/writes/latency/energy.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    counts: BTreeMap<&'static str, u64>,
+    pub reads: u64,
+    pub writes: u64,
+    pub ns: f64,
+    pub pj: f64,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Book `n` executions of `cmd` under the device parameters `p`.
+    pub fn issue(&mut self, cmd: PimcCommand, n: u64, p: &PcramParams) {
+        *self.counts.entry(cmd.name()).or_insert(0) += n;
+        self.reads += cmd.reads() * n;
+        self.writes += cmd.writes() * n;
+        self.ns += cmd.latency_ns(p) * n as f64;
+        self.pj += cmd.energy_pj(p) * n as f64;
+    }
+
+    pub fn count(&self, cmd_name: &str) -> u64 {
+        self.counts.get(cmd_name).copied().unwrap_or(0)
+    }
+
+    pub fn total_commands(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    pub fn merge(&mut self, other: &Ledger) {
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_insert(0) += v;
+        }
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.ns += other.ns;
+        self.pj += other.pj;
+    }
+
+    /// Scale every quantity (e.g. per-image -> per-batch).
+    pub fn scaled(&self, k: u64) -> Ledger {
+        let mut out = self.clone();
+        for v in out.counts.values_mut() {
+            *v *= k;
+        }
+        out.reads *= k;
+        out.writes *= k;
+        out.ns *= k as f64;
+        out.pj *= k as f64;
+        out
+    }
+
+    pub fn command_breakdown(&self) -> &BTreeMap<&'static str, u64> {
+        &self.counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issue_accumulates_table1_costs() {
+        let p = PcramParams::default();
+        let mut l = Ledger::new();
+        l.issue(PimcCommand::AnnMul, 10, &p);
+        assert_eq!(l.reads, 10);
+        assert_eq!(l.writes, 10);
+        assert_eq!(l.ns, 1080.0);
+        assert_eq!(l.count("ANN_MUL"), 10);
+    }
+
+    #[test]
+    fn merge_and_scale_are_linear() {
+        let p = PcramParams::default();
+        let mut a = Ledger::new();
+        a.issue(PimcCommand::BToS, 2, &p);
+        let mut b = Ledger::new();
+        b.issue(PimcCommand::BToS, 3, &p);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count("B_TO_S"), 5);
+        let s = a.scaled(5);
+        assert_eq!(s.reads, a.reads * 5);
+        assert!((s.ns - a.ns * 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_command_counts_zero() {
+        assert_eq!(Ledger::new().count("NOPE"), 0);
+    }
+}

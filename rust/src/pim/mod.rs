@@ -1,0 +1,13 @@
+//! ODIN's PIM layer: the add-on CMOS logic blocks (Table 3), the five new
+//! PIM-controller commands (Table 1), and a functional controller that
+//! executes their activity flows (Fig. 5) on the PCRAM bank model.
+
+pub mod addon;
+pub mod commands;
+pub mod controller;
+pub mod ledger;
+
+pub use addon::{AddonComponent, ADDON_TABLE};
+pub use commands::{AccumulateMode, PimcCommand};
+pub use controller::PimController;
+pub use ledger::Ledger;

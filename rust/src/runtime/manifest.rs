@@ -1,0 +1,120 @@
+//! `artifacts/manifest.json` — the artifact registry aot.py emits.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Declared argument spec of one artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub arch: Option<String>,
+    pub mode: Option<String>,
+    pub batch: Option<usize>,
+    pub args: Vec<ArgSpec>,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let json = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let obj = json.as_obj().context("manifest root must be an object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in obj {
+            let args = spec
+                .get("args")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|a| ArgSpec {
+                    shape: a
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    dtype: a.get("dtype").and_then(Json::as_str).unwrap_or("").to_string(),
+                })
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    kind: spec.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+                    arch: spec.get("arch").and_then(Json::as_str).map(String::from),
+                    mode: spec.get("mode").and_then(Json::as_str).map(String::from),
+                    batch: spec.get("batch").and_then(Json::as_usize),
+                    args,
+                    path: dir.join(format!("{name}.hlo.txt")),
+                },
+            );
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    /// Model artifacts for an arch+mode, sorted by batch size.
+    pub fn model_variants(&self, arch: &str, mode: &str) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self
+            .artifacts
+            .values()
+            .filter(|a| {
+                a.kind == "model"
+                    && a.arch.as_deref() == Some(arch)
+                    && a.mode.as_deref() == Some(mode)
+            })
+            .collect();
+        v.sort_by_key(|a| a.batch.unwrap_or(0));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        if !Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let spec = m.get("cnn1_fast_b8").unwrap();
+        assert_eq!(spec.batch, Some(8));
+        assert_eq!(spec.args[0].shape, vec![8, 28, 28]);
+        assert_eq!(spec.args[0].dtype, "uint8");
+        let variants = m.model_variants("cnn1", "fast");
+        assert_eq!(variants.len(), 3);
+        assert!(variants.windows(2).all(|w| w[0].batch <= w[1].batch));
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load("/nonexistent").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts Python produced and
+//! executes them on the CPU PJRT client — the request-path compute engine.
+//!
+//! [`tensorfile`] parses the TLV container shared with
+//! `python/compile/tensorfile.py` (weights, datasets, golden vectors);
+//! [`manifest`] reads `artifacts/manifest.json`; [`client`] wraps the
+//! `xla` crate (`PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! compile -> execute).
+
+pub mod client;
+pub mod manifest;
+pub mod tensorfile;
+
+pub use client::{Executable, Runtime, StaticBuffer, TensorArg};
+pub use manifest::{ArtifactSpec, Manifest};
+pub use tensorfile::{Tensor, TensorData, TensorFile};

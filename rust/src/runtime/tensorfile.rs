@@ -1,0 +1,243 @@
+//! TLV tensor container — Rust side of `python/compile/tensorfile.py`.
+//! Little-endian throughout; see the Python module for the layout.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: u32 = 0x4F44_494E; // "ODIN"
+
+/// Typed tensor payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    U8(Vec<u8>),
+    I16(Vec<i16>),
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::U8(v) => v.len(),
+            TensorData::I16(v) => v.len(),
+            TensorData::F32(v) => v.len(),
+            TensorData::U32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A named, shaped tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>()
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U8(v) => Ok(v),
+            other => bail!("expected u8 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn as_i16(&self) -> Result<&[i16]> {
+        match &self.data {
+            TensorData::I16(v) => Ok(v),
+            other => bail!("expected i16 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match &self.data {
+            TensorData::U32(v) => Ok(v),
+            other => bail!("expected u32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {other:?}"),
+        }
+    }
+}
+
+/// Parsed tensor file.
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+impl TensorFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&bytes).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let mut r = bytes;
+        let magic = read_u32(&mut r)?;
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let version = read_u32(&mut r)?;
+        if version != 1 {
+            bail!("unsupported version {version}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = read_u32(&mut r)? as usize;
+            let mut name = vec![0u8; nlen];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let dtype = read_u32(&mut r)?;
+            let ndim = read_u32(&mut r)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut r)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let data = match dtype {
+                0 => {
+                    let mut v = vec![0u8; n];
+                    r.read_exact(&mut v)?;
+                    TensorData::U8(v)
+                }
+                1 => {
+                    let mut raw = vec![0u8; n * 2];
+                    r.read_exact(&mut raw)?;
+                    TensorData::I16(
+                        raw.chunks_exact(2).map(|c| i16::from_le_bytes([c[0], c[1]])).collect(),
+                    )
+                }
+                2 => {
+                    let mut raw = vec![0u8; n * 4];
+                    r.read_exact(&mut raw)?;
+                    TensorData::F32(
+                        raw.chunks_exact(4)
+                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                3 => {
+                    let mut raw = vec![0u8; n * 4];
+                    r.read_exact(&mut raw)?;
+                    TensorData::U32(
+                        raw.chunks_exact(4)
+                            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                4 => {
+                    let mut raw = vec![0u8; n * 4];
+                    r.read_exact(&mut raw)?;
+                    TensorData::I32(
+                        raw.chunks_exact(4)
+                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                other => bail!("unknown dtype code {other}"),
+            };
+            tensors.insert(name, Tensor { dims, data });
+        }
+        Ok(TensorFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("tensor {name} missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emit(tensors: &[(&str, u32, &[u32], Vec<u8>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(MAGIC.to_le_bytes());
+        out.extend(1u32.to_le_bytes());
+        out.extend((tensors.len() as u32).to_le_bytes());
+        for (name, dtype, dims, data) in tensors {
+            out.extend((name.len() as u32).to_le_bytes());
+            out.extend(name.as_bytes());
+            out.extend(dtype.to_le_bytes());
+            out.extend((dims.len() as u32).to_le_bytes());
+            for d in *dims {
+                out.extend(d.to_le_bytes());
+            }
+            out.extend(data);
+        }
+        out
+    }
+
+    #[test]
+    fn parse_u8_and_f32() {
+        let f32_bytes: Vec<u8> =
+            [1.5f32, -2.0].iter().flat_map(|f| f.to_le_bytes()).collect();
+        let bytes = emit(&[
+            ("x", 0, &[2, 3], vec![1, 2, 3, 4, 5, 6]),
+            ("y", 2, &[2], f32_bytes),
+        ]);
+        let tf = TensorFile::parse(&bytes).unwrap();
+        assert_eq!(tf.get("x").unwrap().dims, vec![2, 3]);
+        assert_eq!(tf.get("x").unwrap().as_u8().unwrap(), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(tf.get("y").unwrap().as_f32().unwrap(), &[1.5, -2.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TensorFile::parse(&[0u8; 16]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let tf = TensorFile::parse(&emit(&[])).unwrap();
+        assert!(tf.get("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let tf = TensorFile::parse(&emit(&[("x", 0, &[1], vec![9])])).unwrap();
+        assert!(tf.get("x").unwrap().as_f32().is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let p = std::path::Path::new("artifacts/weights/cnn1.bin");
+        if p.exists() {
+            let tf = TensorFile::load(p).unwrap();
+            assert_eq!(tf.get("scales").unwrap().elements(), 6);
+            assert_eq!(tf.get("fc1_q").unwrap().dims, vec![784, 70]);
+        }
+    }
+}

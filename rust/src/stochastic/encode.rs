@@ -1,0 +1,85 @@
+//! B_TO_S: binary-to-stochastic conversion (the SRAM LUT + write path).
+
+use super::luts::{act_thresholds, rot_amount, wgt_thresholds};
+use super::stream::Stream256;
+use super::STREAM_BITS;
+
+/// Encode a u8 value against a threshold permutation:
+/// stream bit i = (t\[i] < v).  popcount(stream) == v exactly.
+pub fn encode(v: u8, thresholds: &[u8; STREAM_BITS]) -> Stream256 {
+    Stream256::from_fn(|i| thresholds[i] < v)
+}
+
+/// Encode an activation value (identity LUT).
+pub fn encode_act(v: u8) -> Stream256 {
+    // identity LUT: bit i = (i < v); build words directly
+    encode(v, &act_thresholds())
+}
+
+/// Encode weight operand `j`'s value for binary mode: bit-reversal LUT plus
+/// the per-operand decorrelation rotation.  This is the model-load-time
+/// step that produces exactly the packed streams the AOT graphs expect.
+pub fn encode_rotated_weight(v: u8, j: usize) -> Stream256 {
+    encode(v, &wgt_thresholds(8)).rotate_left(rot_amount(j))
+}
+
+/// Split signed 8-bit-scale weights into unipolar dual rails
+/// (w = pos - neg).
+pub fn rails(q: &[i16]) -> (Vec<u8>, Vec<u8>) {
+    let pos = q.iter().map(|&x| x.clamp(0, 255) as u8).collect();
+    let neg = q.iter().map(|&x| (-x).clamp(0, 255) as u8).collect();
+    (pos, neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::forall;
+
+    #[test]
+    fn popcount_equals_value_for_all_luts() {
+        let luts: Vec<[u8; STREAM_BITS]> =
+            (1..=8).map(wgt_thresholds).chain([act_thresholds()]).collect();
+        for v in 0..=255u8 {
+            for t in &luts {
+                assert_eq!(encode(v, t).popcount(), v as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn rotated_weight_keeps_popcount() {
+        forall(
+            64,
+            |r| (r.u8(), r.below(2048) as usize),
+            |&(v, j)| encode_rotated_weight(v, j).popcount() == v as u32,
+        );
+    }
+
+    #[test]
+    fn encode_act_monotone_nesting() {
+        // stream(v1) is a subset of stream(v2) when v1 <= v2 (same LUT)
+        for v in 0..255u8 {
+            let a = encode_act(v);
+            let b = encode_act(v + 1);
+            assert_eq!(a.and(&b), a);
+        }
+    }
+
+    #[test]
+    fn rails_reconstruct_signed() {
+        let q: Vec<i16> = vec![-255, -4, 0, 3, 255];
+        let (p, n) = rails(&q);
+        for i in 0..q.len() {
+            assert_eq!(p[i] as i32 - n[i] as i32, q[i] as i32);
+            assert!(p[i] == 0 || n[i] == 0);
+        }
+    }
+
+    #[test]
+    fn rotation_class_cycles_every_16() {
+        let v = 137u8;
+        assert_eq!(encode_rotated_weight(v, 3), encode_rotated_weight(v, 19));
+        assert_ne!(encode_rotated_weight(v, 3), encode_rotated_weight(v, 4));
+    }
+}

@@ -1,0 +1,140 @@
+//! Threshold LUTs and MUX select streams — the contents of ODIN's SRAM
+//! conversion lookup table, bit-identical to `sc_common.py`.
+
+use super::stream::Stream256;
+use super::{N_ROT, ROT_STRIDE, STREAM_BITS};
+
+/// Reverse the 8 bits of a byte (van der Corput radix-2 index).
+#[inline]
+pub fn bitrev8(mut i: u8) -> u8 {
+    i = (i << 4) | (i >> 4);
+    i = ((i & 0x33) << 2) | ((i & 0xCC) >> 2);
+    i = ((i & 0x55) << 1) | ((i & 0xAA) >> 1);
+    i
+}
+
+/// T_ACT: identity permutation (activation-side LUT).
+pub fn act_thresholds() -> [u8; STREAM_BITS] {
+    let mut t = [0u8; STREAM_BITS];
+    for (i, v) in t.iter_mut().enumerate() {
+        *v = i as u8;
+    }
+    t
+}
+
+/// T_WGT for a mux-mode layer of tree depth `depth` (1..=8).  Depth 8 is
+/// plain bit-reversal — the binary-mode weight LUT.
+pub fn wgt_thresholds(depth: u32) -> [u8; STREAM_BITS] {
+    assert!((1..=8).contains(&depth), "depth {depth}");
+    let nl = 1usize << depth;
+    let mut t = [0u8; STREAM_BITS];
+    for (i, v) in t.iter_mut().enumerate() {
+        let swapped = (i >> depth) | ((i & (nl - 1)) << (8 - depth));
+        *v = bitrev8(swapped as u8);
+    }
+    t
+}
+
+/// Rotation applied to operand j's weight stream (binary mode).
+#[inline]
+pub fn rot_amount(j: usize) -> usize {
+    ROT_STRIDE * (j % N_ROT)
+}
+
+/// Packed MUX select streams, level k: s_k[i] = (i >> k) & 1.
+pub fn mux_select_masks() -> [Stream256; 8] {
+    std::array::from_fn(|k| Stream256::from_fn(|i| (i >> k) & 1 == 1))
+}
+
+/// CNT16\[r]\[a]\[w] = popcount(enc_act(a) & rotate(enc_wgt(w), 16r)) — the
+/// closed-form product-popcount table behind the optimized serve path.
+/// Boxed: 16 * 256 * 256 * 4 B = 4 MiB.
+pub fn cnt16() -> Box<[[[i32; 256]; 256]; N_ROT]> {
+    let t_w = wgt_thresholds(8);
+    let mut out: Box<[[[i32; 256]; 256]; N_ROT]> =
+        vec![[[0i32; 256]; 256]; N_ROT].into_boxed_slice().try_into().unwrap();
+    for r in 0..N_ROT {
+        // per-position effective weight threshold after rotation
+        let mut tw_rot = [0u8; STREAM_BITS];
+        for (i, v) in tw_rot.iter_mut().enumerate() {
+            *v = t_w[(i + ROT_STRIDE * r) % STREAM_BITS];
+        }
+        for a in 0..256usize {
+            for (i, &tw) in tw_rot.iter().enumerate() {
+                if i < a {
+                    // activation bit set at position i (identity LUT)
+                    let row = &mut out[r][a];
+                    // increment all w where tw < w, i.e. w in (tw, 255]
+                    for (w, cell) in row.iter_mut().enumerate().skip(tw as usize + 1) {
+                        let _ = w;
+                        *cell += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitrev8_involution_and_values() {
+        for i in 0..=255u8 {
+            assert_eq!(bitrev8(bitrev8(i)), i);
+        }
+        assert_eq!(bitrev8(0b0000_0001), 0b1000_0000);
+        assert_eq!(bitrev8(0b1010_0000), 0b0000_0101);
+    }
+
+    #[test]
+    fn thresholds_are_permutations() {
+        for depth in 1..=8 {
+            let mut seen = [false; 256];
+            for &v in wgt_thresholds(depth).iter() {
+                assert!(!seen[v as usize], "dup at depth {depth}");
+                seen[v as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn depth8_is_bitrev() {
+        let t = wgt_thresholds(8);
+        for i in 0..STREAM_BITS {
+            assert_eq!(t[i], bitrev8(i as u8));
+        }
+    }
+
+    #[test]
+    fn select_masks_half_dense() {
+        for (k, m) in mux_select_masks().iter().enumerate() {
+            assert_eq!(m.popcount(), 128, "level {k}");
+        }
+    }
+
+    #[test]
+    fn cnt16_monotone_and_corner_values() {
+        let t = cnt16();
+        for r in 0..N_ROT {
+            assert_eq!(t[r][0].iter().sum::<i32>(), 0);
+            for a in 0..256 {
+                assert_eq!(t[r][a][0], 0);
+                for w in 1..256 {
+                    assert!(t[r][a][w] >= t[r][a][w - 1]);
+                }
+            }
+            // full-scale product: 255*255/256 = 254.00..
+            assert!((t[r][255][255] - 254).abs() <= 1, "r={r} got {}", t[r][255][255]);
+        }
+    }
+
+    #[test]
+    fn hammersley_pair_unbiased_at_midpoint() {
+        let t = cnt16();
+        // a = w = 128 -> expect ~64 (the XOR-scramble pitfall would give 0)
+        assert!((t[0][128][128] - 64).abs() <= 3);
+    }
+}

@@ -1,0 +1,202 @@
+//! Stochastic MAC reference implementations (both accumulation modes) plus
+//! the optimized table path — the same three-way agreement the Python side
+//! proves, used by the functional PCRAM simulator and the golden tests.
+
+use super::encode::{encode, encode_act, encode_rotated_weight};
+use super::luts::{mux_select_masks, wgt_thresholds};
+use super::stream::Stream256;
+use super::{N_ROT, STREAM_BITS};
+
+/// Binary-mode MAC over one activation row: raw = sum_j popcount(A_j & W_j)
+/// with rotated weight streams.  E\[raw] = sum(a*w)/256.
+pub fn mac_binary(acts: &[u8], wpos: &[u8], wneg: &[u8]) -> i32 {
+    assert_eq!(acts.len(), wpos.len());
+    assert_eq!(acts.len(), wneg.len());
+    let mut pos = 0i64;
+    let mut neg = 0i64;
+    for (j, &a) in acts.iter().enumerate() {
+        let astr = encode_act(a);
+        pos += astr.and(&encode_rotated_weight(wpos[j], j)).popcount() as i64;
+        neg += astr.and(&encode_rotated_weight(wneg[j], j)).popcount() as i64;
+    }
+    (pos - neg) as i32
+}
+
+/// Optimized binary-mode MAC via the CNT16 closed form; bit-identical to
+/// [`mac_binary`].  `table` comes from [`cnt16`] (build once, reuse).
+pub fn mac_binary_table(
+    table: &[[[i32; 256]; 256]; N_ROT],
+    acts: &[u8],
+    wpos: &[u8],
+    wneg: &[u8],
+) -> i32 {
+    let mut out = 0i64;
+    for (j, &a) in acts.iter().enumerate() {
+        let row = &table[j % N_ROT][a as usize];
+        out += (row[wpos[j] as usize] - row[wneg[j] as usize]) as i64;
+    }
+    out as i32
+}
+
+/// MUX-tree (paper-faithful) MAC over one chunk of NL = 2^depth operands.
+/// Returns the chunk's raw popcount difference; E = R * sum(a*w)/65536.
+pub fn mac_mux_chunk(acts: &[u8], wpos: &[u8], wneg: &[u8], depth: u32) -> i32 {
+    let nl = 1usize << depth;
+    assert_eq!(acts.len(), nl);
+    let t_w = wgt_thresholds(depth);
+    let selects = mux_select_masks();
+
+    let tree = |weights: &[u8]| -> u32 {
+        let mut streams: Vec<Stream256> = (0..nl)
+            .map(|j| encode_act(acts[j]).and(&encode(weights[j], &t_w)))
+            .collect();
+        for (k, s) in selects.iter().enumerate().take(depth as usize) {
+            let _ = k;
+            streams = streams
+                .chunks(2)
+                .map(|pair| pair[0].mux(&pair[1], s))
+                .collect();
+        }
+        streams[0].popcount()
+    };
+    tree(wpos) as i32 - tree(wneg) as i32
+}
+
+/// Full mux-mode MAC over an arbitrary-width layer using the Python-side
+/// chunking rule (mux_chunk_layout).
+pub fn mac_mux(acts: &[u8], wpos: &[u8], wneg: &[u8]) -> i32 {
+    let n = acts.len();
+    let (chunks, nl, depth) = mux_chunk_layout(n);
+    let mut raw = 0i32;
+    let mut a_pad = acts.to_vec();
+    let mut wp_pad = wpos.to_vec();
+    let mut wn_pad = wneg.to_vec();
+    a_pad.resize(chunks * nl, 0);
+    wp_pad.resize(chunks * nl, 0);
+    wn_pad.resize(chunks * nl, 0);
+    for c in 0..chunks {
+        let lo = c * nl;
+        raw += mac_mux_chunk(
+            &a_pad[lo..lo + nl],
+            &wp_pad[lo..lo + nl],
+            &wn_pad[lo..lo + nl],
+            depth,
+        );
+    }
+    raw
+}
+
+/// (chunks, NL, depth) for an n-input layer in mux mode — mirrors
+/// `ref.mux_chunk_layout`.
+pub fn mux_chunk_layout(n: usize) -> (usize, usize, u32) {
+    assert!(n >= 1);
+    if n <= STREAM_BITS {
+        let depth = (n.max(2) as f64).log2().ceil() as u32;
+        let depth = depth.max(1);
+        (1, 1 << depth, depth)
+    } else {
+        (n.div_ceil(STREAM_BITS), STREAM_BITS, 8)
+    }
+}
+
+/// Expected (real-valued) MAC the stochastic paths estimate, binary mode.
+pub fn expected_binary(acts: &[u8], wq: &[i16]) -> f64 {
+    acts.iter()
+        .zip(wq)
+        .map(|(&a, &w)| a as f64 * w as f64)
+        .sum::<f64>()
+        / 256.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::encode::rails;
+    use crate::stochastic::luts::cnt16;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{forall_ok, gen};
+
+    #[test]
+    fn binary_table_bit_exact() {
+        let table = cnt16();
+        forall_ok(
+            24,
+            |r| {
+                let n = gen::layer_width(r).min(300);
+                (gen::u8_vec(r, n), gen::i16_vec(r, n, -255, 255))
+            },
+            |(a, wq)| {
+                let (wp, wn) = rails(wq);
+                let slow = mac_binary(a, &wp, &wn);
+                let fast = mac_binary_table(&table, a, &wp, &wn);
+                if slow == fast {
+                    Ok(())
+                } else {
+                    Err(format!("slow {slow} != fast {fast}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn binary_error_bound_vs_expectation() {
+        let mut r = Rng::new(99);
+        for _ in 0..10 {
+            let n = 200;
+            let a = gen::u8_vec(&mut r, n);
+            let wq = gen::i16_vec(&mut r, n, -255, 255);
+            let (wp, wn) = rails(&wq);
+            let raw = mac_binary(&a, &wp, &wn) as f64;
+            let expect = expected_binary(&a, &wq);
+            assert!(
+                (raw - expect).abs() <= 3.0 * n as f64,
+                "err {} beyond bound",
+                (raw - expect).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn mux_chunk_layout_matches_python() {
+        assert_eq!(mux_chunk_layout(25), (1, 32, 5));
+        assert_eq!(mux_chunk_layout(1), (1, 2, 1));
+        assert_eq!(mux_chunk_layout(256), (1, 256, 8));
+        assert_eq!(mux_chunk_layout(257), (2, 256, 8));
+        assert_eq!(mux_chunk_layout(784), (4, 256, 8));
+        assert_eq!(mux_chunk_layout(1210), (5, 256, 8));
+    }
+
+    #[test]
+    fn mux_zero_weights_zero_output() {
+        let a = vec![200u8; 64];
+        let z = vec![0u8; 64];
+        assert_eq!(mac_mux(&a, &z, &z), 0);
+    }
+
+    #[test]
+    fn mux_antisymmetric_in_rails() {
+        let mut r = Rng::new(5);
+        let a = gen::u8_vec(&mut r, 70);
+        let wq = gen::i16_vec(&mut r, 70, -255, 255);
+        let (wp, wn) = rails(&wq);
+        assert_eq!(mac_mux(&a, &wp, &wn), -mac_mux(&a, &wn, &wp));
+    }
+
+    #[test]
+    fn binary_beats_mux_on_wide_layer() {
+        // The quantified motivation for binary mode (mirrors the Python test).
+        let mut r = Rng::new(7);
+        let n = 784;
+        let mut err_bin = 0.0;
+        let mut err_mux = 0.0;
+        for _ in 0..3 {
+            let a: Vec<u8> = (0..n).map(|_| (r.u8() as u32 * 150 / 255) as u8).collect();
+            let wq = gen::i16_vec(&mut r, n, -200, 200);
+            let (wp, wn) = rails(&wq);
+            let exact: f64 = a.iter().zip(&wq).map(|(&x, &w)| x as f64 * w as f64).sum();
+            err_bin += (mac_binary(&a, &wp, &wn) as f64 * 256.0 - exact).abs();
+            err_mux += (mac_mux(&a, &wp, &wn) as f64 * 65536.0 - exact).abs();
+        }
+        assert!(err_mux > 4.0 * err_bin, "mux {err_mux} vs bin {err_bin}");
+    }
+}

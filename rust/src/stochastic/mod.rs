@@ -1,0 +1,26 @@
+//! Bit-exact stochastic-number (SN) arithmetic — the Rust mirror of
+//! `python/compile/kernels/`.
+//!
+//! Every routine here matches the Pallas kernel and the numpy oracle
+//! bit-for-bit (pinned by `rust/tests/golden.rs` against
+//! `artifacts/golden.bin`).  The coordinator uses [`encode`] at model-load
+//! time to build the weight streams the AOT graphs consume, and the
+//! functional PCRAM simulator uses [`Stream256`] ops to execute PIMC
+//! command flows on real bits.
+
+pub mod encode;
+pub mod luts;
+pub mod mac;
+pub mod stream;
+
+pub use encode::{encode, encode_rotated_weight, rails};
+pub use luts::{act_thresholds, cnt16, mux_select_masks, rot_amount, wgt_thresholds};
+pub use stream::Stream256;
+
+/// Stream geometry: one 256-bit PCRAM line per stochastic operand.
+pub const STREAM_BITS: usize = 256;
+/// 8 packed u32 lanes per stream.
+pub const LANES: usize = 8;
+/// Rotation schedule (binary accumulation mode).
+pub const N_ROT: usize = 16;
+pub const ROT_STRIDE: usize = 16;

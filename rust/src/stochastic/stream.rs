@@ -1,0 +1,158 @@
+//! `Stream256`: one 256-bit stochastic stream = one PCRAM memory line.
+//!
+//! Packing matches `sc_common.pack_bits_u32`: bit `i` lives in word
+//! `i / 32` at position `i % 32` (LSB-first).  The bit-parallel ops are the
+//! PINATUBO sense-amplifier primitives (AND/OR via simultaneous row
+//! activation, NOT via inverted reference) plus the pop counter.
+
+use super::{LANES, STREAM_BITS};
+
+/// A 256-bit stream packed into 8 little-endian u32 lanes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Stream256(pub [u32; LANES]);
+
+impl Stream256 {
+    pub const ZERO: Stream256 = Stream256([0; LANES]);
+    pub const ONES: Stream256 = Stream256([u32::MAX; LANES]);
+
+    /// Build from a bit closure (bit i = f(i)).
+    pub fn from_fn(mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut w = [0u32; LANES];
+        for i in 0..STREAM_BITS {
+            if f(i) {
+                w[i / 32] |= 1 << (i % 32);
+            }
+        }
+        Stream256(w)
+    }
+
+    #[inline]
+    pub fn bit(&self, i: usize) -> bool {
+        debug_assert!(i < STREAM_BITS);
+        (self.0[i / 32] >> (i % 32)) & 1 == 1
+    }
+
+    /// PINATUBO bit-parallel AND (simultaneous row activation, high Vref).
+    #[inline]
+    pub fn and(&self, other: &Stream256) -> Stream256 {
+        let mut w = [0u32; LANES];
+        for k in 0..LANES {
+            w[k] = self.0[k] & other.0[k];
+        }
+        Stream256(w)
+    }
+
+    /// PINATUBO bit-parallel OR (simultaneous row activation, low Vref).
+    #[inline]
+    pub fn or(&self, other: &Stream256) -> Stream256 {
+        let mut w = [0u32; LANES];
+        for k in 0..LANES {
+            w[k] = self.0[k] | other.0[k];
+        }
+        Stream256(w)
+    }
+
+    /// Bit-parallel NOT (inverted sense).
+    #[inline]
+    pub fn not(&self) -> Stream256 {
+        let mut w = [0u32; LANES];
+        for k in 0..LANES {
+            w[k] = !self.0[k];
+        }
+        Stream256(w)
+    }
+
+    /// MUX = (s AND b) OR (NOT s AND a) — the paper's Fig. 2(b) with the
+    /// select stream s; selects `b` where s = 1, else `a`.
+    #[inline]
+    pub fn mux(&self, b: &Stream256, s: &Stream256) -> Stream256 {
+        let mut w = [0u32; LANES];
+        for k in 0..LANES {
+            w[k] = (s.0[k] & b.0[k]) | (!s.0[k] & self.0[k]);
+        }
+        Stream256(w)
+    }
+
+    /// Rotate left by `r` bit positions: out[i] = in[(i + r) mod 256].
+    /// (The per-row column offset used to decorrelate weight streams.)
+    pub fn rotate_left(&self, r: usize) -> Stream256 {
+        let r = r % STREAM_BITS;
+        if r == 0 {
+            return *self;
+        }
+        Stream256::from_fn(|i| self.bit((i + r) % STREAM_BITS))
+    }
+
+    /// S_TO_B: pop counter (PISO + 8-bit level counter in hardware;
+    /// native popcount here).
+    #[inline]
+    pub fn popcount(&self) -> u32 {
+        self.0.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Expose raw lanes (tensor interchange with the PJRT runtime).
+    pub fn lanes(&self) -> &[u32; LANES] {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_bit_roundtrip() {
+        let s = Stream256::from_fn(|i| i % 3 == 0);
+        for i in 0..STREAM_BITS {
+            assert_eq!(s.bit(i), i % 3 == 0);
+        }
+    }
+
+    #[test]
+    fn packing_is_lsb_first() {
+        let s = Stream256::from_fn(|i| i == 0);
+        assert_eq!(s.0[0], 1);
+        let s = Stream256::from_fn(|i| i == 33);
+        assert_eq!(s.0[1], 2);
+    }
+
+    #[test]
+    fn boolean_identities() {
+        let a = Stream256::from_fn(|i| i % 2 == 0);
+        let b = Stream256::from_fn(|i| i % 5 == 0);
+        assert_eq!(a.and(&b).or(&b), b.or(&a.and(&b)));
+        assert_eq!(a.not().not(), a);
+        assert_eq!(a.and(&Stream256::ONES), a);
+        assert_eq!(a.or(&Stream256::ZERO), a);
+        assert_eq!(a.and(&a.not()), Stream256::ZERO);
+    }
+
+    #[test]
+    fn mux_selects_per_bit() {
+        let a = Stream256::ZERO;
+        let b = Stream256::ONES;
+        let s = Stream256::from_fn(|i| i < 100);
+        let m = a.mux(&b, &s);
+        assert_eq!(m.popcount(), 100);
+        for i in 0..STREAM_BITS {
+            assert_eq!(m.bit(i), i < 100);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_popcount_and_inverts() {
+        let s = Stream256::from_fn(|i| (i * 7) % 13 < 4);
+        for r in [0, 1, 16, 100, 255] {
+            let rot = s.rotate_left(r);
+            assert_eq!(rot.popcount(), s.popcount());
+            assert_eq!(rot.rotate_left(STREAM_BITS - r), s);
+        }
+    }
+
+    #[test]
+    fn popcount_matches_naive() {
+        let s = Stream256::from_fn(|i| i % 7 == 2);
+        let naive = (0..STREAM_BITS).filter(|&i| s.bit(i)).count() as u32;
+        assert_eq!(s.popcount(), naive);
+    }
+}

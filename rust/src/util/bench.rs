@@ -1,0 +1,100 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```no_run
+//! use odin::util::bench::Bench;
+//! let mut b = Bench::new("my_group");
+//! b.run("case", || (0..100u64).sum::<u64>());
+//! b.finish();
+//! ```
+//! Auto-calibrates iteration counts to a target measurement window, warms
+//! up, reports mean +/- std and throughput, and uses a black_box to keep
+//! the optimizer honest.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+const WARMUP: Duration = Duration::from_millis(150);
+const TARGET: Duration = Duration::from_millis(700);
+const SAMPLES: usize = 12;
+
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+pub struct Bench {
+    group: String,
+    results: Vec<(String, f64, f64)>, // (name, mean ns, std ns)
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        println!("== bench group: {group} ==");
+        Bench { group: group.to_string(), results: Vec::new() }
+    }
+
+    /// Measure `f`, reporting nanoseconds per call.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> f64 {
+        // warm up and estimate cost
+        let start = Instant::now();
+        let mut iters_done = 0u64;
+        while start.elapsed() < WARMUP {
+            bb(f());
+            iters_done += 1;
+        }
+        let per_call = WARMUP.as_nanos() as f64 / iters_done.max(1) as f64;
+        let per_sample = ((TARGET.as_nanos() as f64 / SAMPLES as f64) / per_call)
+            .ceil()
+            .max(1.0) as u64;
+
+        let mut summary = Summary::new();
+        for _ in 0..SAMPLES {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                bb(f());
+            }
+            summary.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
+        }
+        let (mean, std) = (summary.mean(), summary.std());
+        println!(
+            "{:<40} {:>14}/iter  (+/- {:>10})  [{} x {} iters]",
+            format!("{}::{}", self.group, name),
+            crate::util::fmt_ns(mean),
+            crate::util::fmt_ns(std),
+            SAMPLES,
+            per_sample,
+        );
+        self.results.push((name.to_string(), mean, std));
+        mean
+    }
+
+    /// Record an externally measured value (for model-derived "latencies").
+    pub fn record(&mut self, name: &str, ns: f64) {
+        println!(
+            "{:<40} {:>14} (model)",
+            format!("{}::{}", self.group, name),
+            crate::util::fmt_ns(ns)
+        );
+        self.results.push((name.to_string(), ns, 0.0));
+    }
+
+    pub fn finish(self) -> Vec<(String, f64, f64)> {
+        println!();
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        // keep the windows tiny by measuring a cheap closure directly
+        let mut b = Bench::new("test");
+        let mean = b.run("noop_sum", || (0..100u64).sum::<u64>());
+        assert!(mean > 0.0);
+    }
+}

@@ -1,0 +1,57 @@
+//! Small self-contained substrates the offline environment forces us to
+//! own: a JSON parser (no serde), a micro-bench harness (no criterion), a
+//! property-testing kit (no proptest), and a deterministic RNG (no rand).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod testkit;
+
+/// Format a nanosecond quantity with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{:.0} ns", ns)
+    }
+}
+
+/// Format a picojoule quantity with an adaptive unit.
+pub fn fmt_pj(pj: f64) -> String {
+    if pj >= 1e12 {
+        format!("{:.3} J", pj / 1e12)
+    } else if pj >= 1e9 {
+        format!("{:.3} mJ", pj / 1e9)
+    } else if pj >= 1e6 {
+        format!("{:.3} uJ", pj / 1e6)
+    } else if pj >= 1e3 {
+        format!("{:.3} nJ", pj / 1e3)
+    } else {
+        format!("{:.0} pJ", pj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12 ns");
+        assert_eq!(fmt_ns(1500.0), "1.500 us");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn fmt_pj_units() {
+        assert_eq!(fmt_pj(500.0), "500 pJ");
+        assert_eq!(fmt_pj(2.5e3), "2.500 nJ");
+        assert_eq!(fmt_pj(1e7), "10.000 uJ");
+    }
+}

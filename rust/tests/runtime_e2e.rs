@@ -1,0 +1,221 @@
+//! Integration tests over the PJRT runtime + coordinator: artifacts are
+//! compiled and executed for real, outputs cross-checked against the Rust
+//! arithmetic model and the exported test labels.  Requires
+//! `make artifacts`; every test no-ops gracefully if they are missing.
+
+use std::path::Path;
+
+use odin::coordinator::{BatchPolicy, Engine, MetricsHub, ModelWeights, Server};
+use odin::dataset::TestSet;
+use odin::runtime::{Manifest, Runtime, TensorArg};
+use odin::stochastic::{mac, rails};
+use odin::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn tile_artifact_matches_rust_model_bit_exact() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let tile = rt.load_hlo_text(&manifest.get("sc_tile_fast").unwrap().path).unwrap();
+
+    let mut rng = Rng::new(42);
+    let acts: Vec<u8> = (0..8 * 256).map(|_| rng.u8()).collect();
+    let wq: Vec<i16> = (0..32 * 256).map(|_| rng.range_i32(-255, 255) as i16).collect();
+    let (wp, wn) = rails(&wq);
+    let out = tile
+        .execute_i32(&[
+            TensorArg::U8 { dims: vec![8, 256], data: acts.clone() },
+            TensorArg::U8 { dims: vec![32, 256], data: wp.clone() },
+            TensorArg::U8 { dims: vec![32, 256], data: wn.clone() },
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 8 * 32);
+    for bi in 0..8 {
+        for mi in 0..32 {
+            let want = mac::mac_binary(
+                &acts[bi * 256..(bi + 1) * 256],
+                &wp[mi * 256..(mi + 1) * 256],
+                &wn[mi * 256..(mi + 1) * 256],
+            );
+            assert_eq!(out[bi * 32 + mi], want, "({bi},{mi})");
+        }
+    }
+}
+
+#[test]
+fn faithful_tile_equals_fast_tile() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let fast = rt.load_hlo_text(&manifest.get("sc_tile_fast").unwrap().path).unwrap();
+    let slow = rt.load_hlo_text(&manifest.get("sc_tile").unwrap().path).unwrap();
+
+    let mut rng = Rng::new(7);
+    let acts: Vec<u8> = (0..8 * 256).map(|_| rng.u8()).collect();
+    let wq: Vec<i16> = (0..32 * 256).map(|_| rng.range_i32(-255, 255) as i16).collect();
+    let (wp, wn) = rails(&wq);
+
+    let out_fast = fast
+        .execute_i32(&[
+            TensorArg::U8 { dims: vec![8, 256], data: acts.clone() },
+            TensorArg::U8 { dims: vec![32, 256], data: wp.clone() },
+            TensorArg::U8 { dims: vec![32, 256], data: wn.clone() },
+        ])
+        .unwrap();
+
+    // the faithful tile wants pre-encoded packed streams (what the
+    // coordinator's weight store produces)
+    let encode = |vals: &[u8]| -> Vec<u32> {
+        let mut out = Vec::with_capacity(vals.len() * 8);
+        for mi in 0..32 {
+            for j in 0..256 {
+                out.extend_from_slice(
+                    odin::stochastic::encode_rotated_weight(vals[mi * 256 + j], j).lanes(),
+                );
+            }
+        }
+        out
+    };
+    let out_slow = slow
+        .execute_i32(&[
+            TensorArg::U8 { dims: vec![8, 256], data: acts },
+            TensorArg::U32 { dims: vec![32, 256, 8], data: encode(&wp) },
+            TensorArg::U32 { dims: vec![32, 256, 8], data: encode(&wn) },
+        ])
+        .unwrap();
+    assert_eq!(out_fast, out_slow, "fast and faithful artifacts diverge");
+}
+
+#[test]
+fn cnn1_fast_accuracy_beats_90_percent() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let engine = Engine::new(&rt, &manifest, "artifacts", "cnn1", "fast").unwrap();
+    let test = TestSet::load("artifacts").unwrap();
+    let n = 256.min(test.len());
+    let mut correct = 0;
+    for chunk in test.samples[..n].chunks(engine.max_batch()) {
+        let imgs: Vec<&[u8]> = chunk.iter().map(|s| s.image.as_slice()).collect();
+        let (preds, _) = engine.infer(&imgs).unwrap();
+        correct += preds.iter().zip(chunk).filter(|(p, s)| p.argmax == s.label).count();
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.9, "accuracy {acc}");
+}
+
+#[test]
+fn batch_padding_does_not_change_predictions() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let engine = Engine::new(&rt, &manifest, "artifacts", "cnn1", "fast").unwrap();
+    let test = TestSet::load("artifacts").unwrap();
+    let imgs: Vec<&[u8]> = test.samples[..5].iter().map(|s| s.image.as_slice()).collect();
+    // 5 rides in the batch-8 variant with 3 rows of padding
+    let (preds5, exec) = engine.infer(&imgs).unwrap();
+    assert_eq!(exec.padded_batch, 8);
+    for (i, img) in imgs.iter().enumerate() {
+        let (pred1, _) = engine.infer(&[img]).unwrap();
+        assert_eq!(pred1[0].argmax, preds5[i].argmax, "image {i}");
+        assert_eq!(pred1[0].logits, preds5[i].logits, "image {i} logits");
+    }
+}
+
+#[test]
+fn float_mode_agrees_with_stochastic_on_labels() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let fast = Engine::new(&rt, &manifest, "artifacts", "cnn1", "fast").unwrap();
+    let float = Engine::new(&rt, &manifest, "artifacts", "cnn1", "float").unwrap();
+    let test = TestSet::load("artifacts").unwrap();
+    let n = 64;
+    let mut agree = 0;
+    for s in &test.samples[..n] {
+        let (pf, _) = fast.infer(&[&s.image]).unwrap();
+        let (pg, _) = float.infer(&[&s.image]).unwrap();
+        if pf[0].argmax == pg[0].argmax {
+            agree += 1;
+        }
+    }
+    assert!(agree as f64 / n as f64 > 0.9, "only {agree}/{n} agree");
+}
+
+#[test]
+fn serving_stack_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let metrics = MetricsHub::new();
+    let (server, client) = Server::spawn(
+        || {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load("artifacts")?;
+            Engine::new(&rt, &manifest, "artifacts", "cnn1", "fast")
+        },
+        BatchPolicy::default(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let test = TestSet::load("artifacts").unwrap();
+    let mut correct = 0;
+    let n = 64;
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let client = client.clone();
+        let samples: Vec<_> = test.samples[t * n / 4..(t + 1) * n / 4].to_vec();
+        handles.push(std::thread::spawn(move || {
+            samples
+                .iter()
+                .filter(|s| {
+                    client
+                        .infer_blocking(s.image.clone())
+                        .map(|r| r.prediction.argmax == s.label)
+                        .unwrap_or(false)
+                })
+                .count()
+        }));
+    }
+    for h in handles {
+        correct += h.join().unwrap();
+    }
+    drop(client); // release the request channel so the batcher loop exits
+    server.shutdown();
+    assert!(correct as f64 / n as f64 > 0.85, "served accuracy {correct}/{n}");
+    let report = metrics.report();
+    assert_eq!(report.requests, n as u64);
+    assert!(report.sim_us_mean > 0.0);
+}
+
+#[test]
+fn weights_store_matches_manifest_shapes() {
+    if !have_artifacts() {
+        return;
+    }
+    let manifest = Manifest::load("artifacts").unwrap();
+    for arch in ["cnn1", "cnn2"] {
+        let w = ModelWeights::load("artifacts", arch).unwrap();
+        let spec = manifest.get(&format!("{arch}_fast_b1")).unwrap();
+        let args = w.sc_args(true);
+        // manifest args: img + 9 weight tensors
+        assert_eq!(spec.args.len(), 1 + args.len());
+        for (got, want) in args.iter().zip(&spec.args[1..]) {
+            assert_eq!(got.dims(), &want.shape[..], "{arch}");
+        }
+    }
+}
