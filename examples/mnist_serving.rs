@@ -1,20 +1,20 @@
-//! End-to-end driver (EXPERIMENTS.md §E2E): serve the whole synth-MNIST
-//! test split through the dynamic-batching coordinator, measuring
-//! accuracy, wall-clock latency/throughput, and the simulated in-PCRAM
-//! cost per request — all three layers composing: Pallas-authored HLO,
-//! Rust-encoded weight streams, PJRT execution, PCRAM ledger.
+//! End-to-end driver (EXPERIMENTS.md §E2E): serve the whole test split
+//! through the dynamic-batching coordinator, measuring accuracy,
+//! wall-clock latency/throughput, and the simulated in-PCRAM cost per
+//! request.  Runs hermetically on the SimBackend; with `make artifacts`
+//! the real weights and the real synth-MNIST split are served (accuracy
+//! is only meaningful then).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example mnist_serving
+//! cargo run --release --example mnist_serving
 //! ```
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
-use odin::coordinator::{BatchPolicy, Engine, MetricsHub, Server};
+use odin::coordinator::{BatchPolicy, Engine, MetricsHub, Server, SYNTHETIC_SEED};
 use odin::dataset::TestSet;
-use odin::runtime::{Manifest, Runtime};
 
 const CLIENT_THREADS: usize = 8;
 
@@ -23,18 +23,14 @@ fn main() -> Result<()> {
     let metrics = MetricsHub::new();
     let arch_f = arch.clone();
     let (server, client) = Server::spawn(
-        move || {
-            let rt = Runtime::cpu()?;
-            let manifest = Manifest::load("artifacts")?;
-            Engine::new(&rt, &manifest, "artifacts", &arch_f, "fast")
-        },
+        move || Engine::sim_auto("artifacts", &arch_f, "fast"),
         BatchPolicy::default(),
         metrics.clone(),
     )?;
 
-    let test = Arc::new(TestSet::load("artifacts")?);
+    let test = Arc::new(TestSet::load_or_synthetic("artifacts", 2048, SYNTHETIC_SEED)?);
     let n = test.len();
-    println!("serving {n} requests for {arch}/fast from {CLIENT_THREADS} client threads ...");
+    println!("serving {n} requests for {arch}/fast [sim] from {CLIENT_THREADS} client threads ...");
 
     let correct = Arc::new(AtomicUsize::new(0));
     let t0 = std::time::Instant::now();

@@ -1,29 +1,26 @@
-//! Quickstart: load an AOT-compiled stochastic CNN, run one inference,
-//! and inspect the simulated in-PCRAM cost.
+//! Quickstart: build the stochastic CNN on the pure-Rust SimBackend, run
+//! one inference, and inspect the simulated in-PCRAM cost.  Fully
+//! hermetic: real weights and the real test split are used when
+//! `artifacts/` exists (after `make artifacts`), deterministic synthetic
+//! stand-ins otherwise.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
-use odin::coordinator::Engine;
+use odin::coordinator::{Engine, SYNTHETIC_SEED};
 use odin::dataset::TestSet;
-use odin::runtime::{Manifest, Runtime};
 use odin::util::{fmt_ns, fmt_pj};
 
 fn main() -> Result<()> {
-    // 1. PJRT CPU client + artifact registry
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let manifest = Manifest::load("artifacts")?;
+    // 1. The optimized stochastic CNN1 on the sim backend (weight streams
+    //    and the CNT16 table are built in Rust — see runtime::sim)
+    let engine = Engine::sim_auto("artifacts", "cnn1", "fast")?;
+    println!("backend: sim; batch variants: {:?}", engine.batch_sizes());
 
-    // 2. Compile the optimized stochastic CNN1 variants and bind weights
-    //    (weight streams are encoded in Rust — see coordinator::weights)
-    let engine = Engine::new(&rt, &manifest, "artifacts", "cnn1", "fast")?;
-    println!("compiled batch variants: {:?}", engine.batch_sizes());
-
-    // 3. One real test image through the stochastic pipeline
-    let test = TestSet::load("artifacts")?;
+    // 2. One test image through the stochastic pipeline
+    let test = TestSet::load_or_synthetic("artifacts", 64, SYNTHETIC_SEED)?;
     let sample = &test.samples[0];
     let (preds, exec) = engine.infer(&[&sample.image])?;
     println!(
@@ -32,7 +29,7 @@ fn main() -> Result<()> {
     );
     println!("wall-clock exec: {}", fmt_ns(exec.exec_ns as f64));
 
-    // 4. What the same inference costs inside ODIN's PCRAM banks
+    // 3. What the same inference costs inside ODIN's PCRAM banks
     let (sim_ns, sim_pj) = engine.sim_cost_per_inference();
     println!("simulated ODIN cost: {} / {}", fmt_ns(sim_ns), fmt_pj(sim_pj));
     Ok(())

@@ -1,15 +1,15 @@
 //! Bench: L3 hot-path microbenchmarks — the pieces on the serving path
-//! (weight encode, stream ops, ledger folds) plus, when artifacts exist,
-//! the real PJRT inference path at each batch size.  This is the bench
-//! EXPERIMENTS.md §Perf tracks.
+//! (weight encode, stream ops, ledger folds) plus end-to-end inference:
+//! always on the hermetic SimBackend, and additionally on the real PJRT
+//! path when built with `--features pjrt` and artifacts exist.  This is
+//! the bench EXPERIMENTS.md §Perf tracks.
 
 use std::path::Path;
 
 use odin::ann::topology::cnn1;
-use odin::coordinator::{Engine, ModelWeights};
+use odin::coordinator::{Engine, ModelWeights, SYNTHETIC_SEED};
 use odin::dataset::TestSet;
 use odin::mapper::{map_topology, ExecConfig};
-use odin::runtime::{Manifest, Runtime};
 use odin::stochastic::{encode_rotated_weight, luts::cnt16, mac::mac_binary_table, Stream256};
 use odin::util::bench::{black_box, Bench};
 use odin::util::rng::Rng;
@@ -51,6 +51,23 @@ fn main() {
     b.run("table_mac_784", || black_box(mac_binary_table(&table, &acts, &wp, &wn)));
     b.finish();
 
+    // hermetic end-to-end inference on the sim backend
+    let engine = Engine::sim_auto("artifacts", "cnn1", "fast").unwrap();
+    let test = TestSet::load_or_synthetic("artifacts", 64, SYNTHETIC_SEED).unwrap();
+    let mut b = Bench::new("sim_inference_cnn1_fast");
+    for batch in engine.batch_sizes() {
+        let imgs: Vec<&[u8]> =
+            test.samples[..batch].iter().map(|s| s.image.as_slice()).collect();
+        b.run(&format!("batch_{batch}"), || black_box(engine.infer(&imgs).unwrap().1.exec_ns));
+    }
+    b.finish();
+
+    pjrt_inference();
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_inference() {
+    use odin::runtime::{Manifest, Runtime};
     if Path::new("artifacts/manifest.json").exists() {
         let rt = Runtime::cpu().unwrap();
         let manifest = Manifest::load("artifacts").unwrap();
@@ -67,3 +84,6 @@ fn main() {
         b.finish();
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_inference() {}

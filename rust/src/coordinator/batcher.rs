@@ -2,17 +2,24 @@
 //!
 //! Requests arrive from any number of producer threads over an MPSC
 //! channel; a single engine thread drains the queue, forms the largest
-//! batch the compiled variants allow (bounded by a linger window so a lone
-//! request is never stuck), executes, and answers each request over its
-//! own response channel.  std threads + channels — tokio is unavailable
-//! offline, and a single-owner engine thread also sidesteps PJRT
-//! executable aliasing.
+//! batch the backend's variants allow (bounded by a linger window so a
+//! lone request is never stuck), executes, and answers each request over
+//! its own response channel.  std threads + channels — tokio is
+//! unavailable offline, and a single-owner engine thread also sidesteps
+//! PJRT executable aliasing when that backend is enabled.
+//!
+//! Invariants (property-tested in `rust/tests/props.rs`): no request is
+//! ever dropped — every submit gets exactly one response or a disconnect;
+//! a formed batch never exceeds `min(policy.max_batch, engine max)`; a
+//! lone request waits at most the linger window before executing.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
+
+use crate::runtime::Executor;
 
 use super::engine::{Engine, Prediction};
 use super::metrics::MetricsHub;
@@ -30,7 +37,7 @@ pub struct Response {
     pub prediction: Prediction,
     /// Time spent queued before the batch formed.
     pub queue_ns: u64,
-    /// PJRT execution time of the whole batch.
+    /// Backend execution time of the whole batch (sim or PJRT).
     pub exec_ns: u64,
     /// Batch this request rode in.
     pub batch: usize,
@@ -86,13 +93,14 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the engine thread.  PJRT handles are not `Send`, so the
-    /// engine is *constructed on* the batcher thread from a Send factory
-    /// and lives there for its whole life; construction errors are
-    /// reported back synchronously.
-    pub fn spawn<F>(factory: F, policy: BatchPolicy, metrics: MetricsHub) -> Result<(Server, Client)>
+    /// Spawn the engine thread.  Backend handles (e.g. PJRT) need not be
+    /// `Send`, so the engine is *constructed on* the batcher thread from a
+    /// Send factory and lives there for its whole life; construction
+    /// errors are reported back synchronously.
+    pub fn spawn<F, E>(factory: F, policy: BatchPolicy, metrics: MetricsHub) -> Result<(Server, Client)>
     where
-        F: FnOnce() -> Result<Engine> + Send + 'static,
+        E: Executor + 'static,
+        F: FnOnce() -> Result<Engine<E>> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
@@ -123,7 +131,12 @@ impl Server {
         Ok((Server { handle: Some(handle), tx: Some(tx.clone()) }, Client { tx }))
     }
 
-    fn run(engine: Engine, policy: BatchPolicy, metrics: MetricsHub, rx: Receiver<Request>) {
+    fn run<E: Executor>(
+        engine: Engine<E>,
+        policy: BatchPolicy,
+        metrics: MetricsHub,
+        rx: Receiver<Request>,
+    ) {
         let max_batch = policy.max_batch.min(engine.max_batch()).max(1);
         loop {
             // block for the first request
@@ -148,7 +161,7 @@ impl Server {
         }
     }
 
-    fn execute(engine: &Engine, metrics: &MetricsHub, batch: Vec<Request>) {
+    fn execute<E: Executor>(engine: &Engine<E>, metrics: &MetricsHub, batch: Vec<Request>) {
         let images: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
         match engine.infer(&images) {
             Ok((preds, exec)) => {

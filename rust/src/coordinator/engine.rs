@@ -1,23 +1,27 @@
-//! Model engine: one arch+mode bound to its compiled batch variants and
-//! weight tensors, plus the per-inference PCRAM cost attached from the
+//! Model engine: one arch+mode bound to a compute backend
+//! ([`Executor`]) plus the per-inference PCRAM cost attached from the
 //! transaction-level mapper (so every served request reports both wall
 //! clock *and* simulated in-PCRAM latency/energy).
+//!
+//! The engine is generic over the backend: [`SimBackend`] (pure Rust,
+//! artifact-free — the hermetic default) or the PJRT executor
+//! (`--features pjrt`).  Oversized batches are split across backend
+//! executions rather than rejected, so `infer` accepts any non-empty
+//! batch.
 
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::ann::topology;
 use crate::mapper::{map_topology, ExecConfig};
-use crate::runtime::{Executable, Manifest, Runtime, StaticBuffer, TensorArg};
+use crate::runtime::sim::{SimBackend, SimMode};
+use crate::runtime::Executor;
 
 use super::weights::ModelWeights;
 
-/// Compiled batch variant.
-struct Variant {
-    batch: usize,
-    exe: Executable,
-}
+/// Default seed for synthetic (artifact-free) engines.
+pub const SYNTHETIC_SEED: u64 = 0x0D1A;
 
 /// Inference output for one image.
 #[derive(Clone, Debug)]
@@ -30,6 +34,8 @@ pub struct Prediction {
 #[derive(Clone, Copy, Debug)]
 pub struct BatchExec {
     pub batch: usize,
+    /// Total padded rows executed (sums across splits when the batch
+    /// exceeded the largest backend variant).
     pub padded_batch: usize,
     pub exec_ns: u64,
     /// Simulated ODIN in-PCRAM latency for the batch (ns).
@@ -38,106 +44,87 @@ pub struct BatchExec {
     pub sim_pj: f64,
 }
 
-pub struct Engine {
+pub struct Engine<E: Executor> {
     pub arch: String,
     pub mode: String,
-    variants: Vec<Variant>,
-    /// Weight (+ CNT16) tensors uploaded to device once at load time —
-    /// the serving hot path only uploads the image per call.
-    static_bufs: Vec<StaticBuffer>,
-    float_input: bool,
+    exec: E,
+    /// Supported batch sizes, ascending.
+    sizes: Vec<usize>,
     /// Per-inference simulated cost (one image).
     sim_ns_per_inf: f64,
     sim_pj_per_inf: f64,
 }
 
-impl Engine {
-    /// Compile all batch variants of `arch` in `mode` ("fast", "sc",
-    /// "float") and bind the weight tensors.
-    pub fn new(rt: &Runtime, manifest: &Manifest, artifacts_dir: &str, arch: &str,
-               mode: &str) -> Result<Self> {
-        let specs = manifest.model_variants(arch, mode);
-        if specs.is_empty() {
-            bail!("no artifacts for {arch}/{mode} — run `make artifacts`");
-        }
-        let mut variants = Vec::new();
-        for spec in &specs {
-            let exe = rt.load_hlo_text(&spec.path)?;
-            variants.push(Variant { batch: spec.batch.context("model without batch")?, exe });
-        }
-        let weights = ModelWeights::load(artifacts_dir, arch)?;
-        let weight_args = match mode {
-            "fast" => weights.sc_args(true),
-            "sc" => weights.sc_args(false),
-            "float" => weights.float_args(),
-            other => bail!("unknown mode {other}"),
-        };
-        let static_bufs: Vec<StaticBuffer> =
-            weight_args.iter().map(|a| rt.upload(a)).collect::<Result<_>>()?;
+impl<E: Executor> Engine<E> {
+    /// Wrap a backend and attach the mapper's per-inference PCRAM cost for
+    /// `arch`.
+    pub fn from_executor(arch: &str, mode: &str, exec: E) -> Result<Self> {
+        ensure!(exec.output_len() == 10, "engine serves 10-logit models, backend has {}",
+            exec.output_len());
+        let mut sizes = exec.batch_sizes().to_vec();
+        sizes.sort_unstable();
+        sizes.dedup();
+        ensure!(!sizes.is_empty() && sizes[0] > 0, "backend advertises no batch sizes");
         let topo = topology::by_name(arch).with_context(|| format!("topology {arch}"))?;
         let cfg = ExecConfig::paper();
         let cost = map_topology(&topo, &cfg);
         Ok(Engine {
             arch: arch.to_string(),
             mode: mode.to_string(),
-            variants,
-            static_bufs,
-            float_input: mode == "float",
+            exec,
+            sizes,
             sim_ns_per_inf: cost.latency_ns(&cfg),
             sim_pj_per_inf: cost.energy_pj(),
         })
     }
 
+    pub fn executor(&self) -> &E {
+        &self.exec
+    }
+
     pub fn batch_sizes(&self) -> Vec<usize> {
-        self.variants.iter().map(|v| v.batch).collect()
+        self.sizes.clone()
     }
 
     pub fn max_batch(&self) -> usize {
-        self.variants.iter().map(|v| v.batch).max().unwrap_or(1)
+        *self.sizes.last().unwrap()
     }
 
-    /// Smallest compiled variant that fits `k` images.
-    fn pick_variant(&self, k: usize) -> &Variant {
-        self.variants
-            .iter()
-            .filter(|v| v.batch >= k)
-            .min_by_key(|v| v.batch)
-            .unwrap_or_else(|| self.variants.last().unwrap())
+    /// Smallest supported batch size that fits `k`; `None` when `k`
+    /// exceeds the largest variant (the caller then splits — the old
+    /// fallback silently picked the last variant and bailed downstream).
+    fn pick_batch(&self, k: usize) -> Option<usize> {
+        self.sizes.iter().copied().find(|&b| b >= k)
     }
 
-    /// Run a batch of 784-byte images; returns per-image predictions and
-    /// the execution record.
+    /// Run a batch of images (784 bytes each); returns per-image
+    /// predictions and the execution record.  Batches larger than the
+    /// biggest backend variant are split into consecutive executions.
     pub fn infer(&self, images: &[&[u8]]) -> Result<(Vec<Prediction>, BatchExec)> {
         let k = images.len();
         if k == 0 {
             bail!("empty batch");
         }
-        let var = self.pick_variant(k);
-        if k > var.batch {
-            bail!("batch {k} exceeds max compiled batch {}", var.batch);
-        }
-        // assemble padded image tensor
-        let mut data = vec![0u8; var.batch * 784];
+        let il = self.exec.input_len();
         for (i, img) in images.iter().enumerate() {
-            if img.len() != 784 {
-                bail!("image {i} has {} bytes", img.len());
-            }
-            data[i * 784..(i + 1) * 784].copy_from_slice(img);
+            ensure!(img.len() == il, "image {i} has {} bytes, want {il}", img.len());
         }
-        let img_arg = if self.float_input {
-            TensorArg::F32 {
-                dims: vec![var.batch, 28, 28],
-                data: data.iter().map(|&p| p as f32 / 255.0).collect(),
+        let max_b = self.max_batch();
+        let mut preds = Vec::with_capacity(k);
+        let mut exec_ns = 0u64;
+        let mut padded_total = 0usize;
+        for chunk in images.chunks(max_b) {
+            let padded = self.pick_batch(chunk.len()).expect("chunk bounded by max batch");
+            let mut data = vec![0u8; padded * il];
+            for (i, img) in chunk.iter().enumerate() {
+                data[i * il..(i + 1) * il].copy_from_slice(img);
             }
-        } else {
-            TensorArg::U8 { dims: vec![var.batch, 28, 28], data }
-        };
-        let t0 = Instant::now();
-        let out = var.exe.execute_f32_cached(&img_arg, &self.static_bufs)?;
-        let exec_ns = t0.elapsed().as_nanos() as u64;
-
-        let preds = (0..k)
-            .map(|i| {
+            let t0 = Instant::now();
+            let out = self.exec.forward(padded, &data)?;
+            exec_ns += t0.elapsed().as_nanos() as u64;
+            ensure!(out.len() == padded * 10, "backend returned {} logits for batch {padded}",
+                out.len());
+            for i in 0..chunk.len() {
                 let mut logits = [0f32; 10];
                 logits.copy_from_slice(&out[i * 10..(i + 1) * 10]);
                 let argmax = logits
@@ -146,12 +133,13 @@ impl Engine {
                     .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                     .map(|(j, _)| j as u8)
                     .unwrap();
-                Prediction { logits, argmax }
-            })
-            .collect();
+                preds.push(Prediction { logits, argmax });
+            }
+            padded_total += padded;
+        }
         let exec = BatchExec {
             batch: k,
-            padded_batch: var.batch,
+            padded_batch: padded_total,
             exec_ns,
             sim_ns: self.sim_ns_per_inf * k as f64,
             sim_pj: self.sim_pj_per_inf * k as f64,
@@ -161,5 +149,98 @@ impl Engine {
 
     pub fn sim_cost_per_inference(&self) -> (f64, f64) {
         (self.sim_ns_per_inf, self.sim_pj_per_inf)
+    }
+}
+
+/// The hermetic engine type: pure-Rust backend, no artifacts required.
+pub type SimEngine = Engine<SimBackend>;
+
+impl Engine<SimBackend> {
+    /// Artifact-free engine with deterministic synthetic weights.
+    pub fn sim(arch: &str, mode: &str) -> Result<Self> {
+        Self::sim_seeded(arch, mode, SYNTHETIC_SEED)
+    }
+
+    pub fn sim_seeded(arch: &str, mode: &str, seed: u64) -> Result<Self> {
+        Self::sim_from_weights(&ModelWeights::synthetic(arch, seed)?, mode)
+    }
+
+    /// Sim engine over an explicit weight store (real artifact weights or
+    /// synthetic).
+    pub fn sim_from_weights(weights: &ModelWeights, mode: &str) -> Result<Self> {
+        let sim_mode = SimMode::parse(mode)?;
+        let backend = SimBackend::new(weights.sim_model()?, sim_mode);
+        Self::from_executor(&weights.arch, mode, backend)
+    }
+
+    /// Sim engine loading real weights when present, synthetic otherwise.
+    pub fn sim_auto(artifacts_dir: &str, arch: &str, mode: &str) -> Result<Self> {
+        let weights = ModelWeights::load_or_synthetic(artifacts_dir, arch, SYNTHETIC_SEED)?;
+        Self::sim_from_weights(&weights, mode)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Engine<crate::runtime::PjrtExecutor> {
+    /// Compile all batch variants of `arch` in `mode` ("fast", "sc",
+    /// "float") from the AOT artifacts and bind the weight tensors.
+    pub fn new(
+        rt: &crate::runtime::Runtime,
+        manifest: &crate::runtime::Manifest,
+        artifacts_dir: &str,
+        arch: &str,
+        mode: &str,
+    ) -> Result<Self> {
+        let weights = ModelWeights::load(artifacts_dir, arch)?;
+        let weight_args = match mode {
+            "fast" => weights.sc_args(true),
+            "sc" => weights.sc_args(false),
+            "float" => weights.float_args(),
+            other => bail!("unknown mode {other}"),
+        };
+        let exec = crate::runtime::PjrtExecutor::new(rt, manifest, arch, mode, &weight_args)?;
+        Self::from_executor(arch, mode, exec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_prefers_smallest_fit() {
+        let e = Engine::sim("cnn1", "float").unwrap();
+        // sim backend ladder is 1/8/32
+        assert_eq!(e.pick_batch(1), Some(1));
+        assert_eq!(e.pick_batch(2), Some(8));
+        assert_eq!(e.pick_batch(8), Some(8));
+        assert_eq!(e.pick_batch(9), Some(32));
+        assert_eq!(e.pick_batch(32), Some(32));
+        assert_eq!(e.pick_batch(33), None, "oversized batches are split, not mis-picked");
+    }
+
+    #[test]
+    fn oversized_batch_splits_and_matches_individual_inference() {
+        let e = Engine::sim("cnn1", "float").unwrap();
+        let mut rng = crate::util::rng::Rng::new(4);
+        let images: Vec<Vec<u8>> =
+            (0..35).map(|_| (0..784).map(|_| rng.u8()).collect()).collect();
+        let refs: Vec<&[u8]> = images.iter().map(|v| v.as_slice()).collect();
+        let (preds, exec) = e.infer(&refs).unwrap();
+        assert_eq!(preds.len(), 35);
+        assert_eq!(exec.batch, 35);
+        // 32 + 3 -> padded 32 + 8
+        assert_eq!(exec.padded_batch, 40);
+        for (i, img) in refs.iter().enumerate() {
+            let (one, _) = e.infer(&[img]).unwrap();
+            assert_eq!(one[0].logits, preds[i].logits, "image {i}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_an_error() {
+        let e = Engine::sim("cnn1", "float").unwrap();
+        assert!(e.infer(&[]).is_err());
+        assert!(e.infer(&[&[0u8; 3][..]]).is_err(), "wrong image size must error");
     }
 }

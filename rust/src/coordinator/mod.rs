@@ -1,15 +1,18 @@
-//! L3 coordinator: weight store, model engine (PJRT), dynamic batcher, and
-//! serving metrics.  The inference server composes as
+//! L3 coordinator: weight store, model engine (generic over the compute
+//! backend), dynamic batcher, and serving metrics.  The inference server
+//! composes as
 //!
 //! ```text
-//! clients --submit--> [mpsc queue] --drain--> Engine (PJRT exec)
+//! clients --submit--> [mpsc queue] --drain--> Engine<E: Executor>
 //!                         |                      |
 //!                    BatchPolicy        mapper's per-inference
 //!                  (max batch, linger)  PCRAM ledger attached
 //! ```
 //!
-//! Python never appears: artifacts were lowered once at build time, and
-//! the weights the graphs consume are encoded by `stochastic::` in Rust.
+//! `E` is the pure-Rust [`crate::runtime::SimBackend`] by default (no
+//! Python, no artifacts: weights come from the deterministic synthetic
+//! generator or from `artifacts/weights/` when present) or the PJRT
+//! executor under `--features pjrt`.
 
 pub mod batcher;
 pub mod engine;
@@ -17,6 +20,6 @@ pub mod metrics;
 pub mod weights;
 
 pub use batcher::{BatchPolicy, Client, Response, Server};
-pub use engine::{Engine, Prediction};
+pub use engine::{Engine, Prediction, SimEngine, SYNTHETIC_SEED};
 pub use metrics::{MetricsHub, MetricsReport};
 pub use weights::ModelWeights;

@@ -9,8 +9,10 @@
 
 use std::path::Path;
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
+use crate::ann::topology;
+use crate::runtime::sim::{DenseLayer, SimModel};
 use crate::runtime::{TensorArg, TensorFile};
 use crate::stochastic::{encode_rotated_weight, LANES};
 
@@ -24,18 +26,11 @@ pub struct QuantLayer {
 }
 
 impl QuantLayer {
-    /// Dual-rail u8 values in the kernels' (m, n) layout.
+    /// Dual-rail u8 values in the kernels' (m, n) layout.  Delegates to
+    /// the single implementation of the transposed dual-rail split so the
+    /// PJRT argument tensors and the sim backend can never desynchronize.
     pub fn rails_mn(&self) -> (Vec<u8>, Vec<u8>) {
-        let mut pos = vec![0u8; self.m * self.n];
-        let mut neg = vec![0u8; self.m * self.n];
-        for j in 0..self.n {
-            for i in 0..self.m {
-                let q = self.q[j * self.m + i];
-                pos[i * self.n + j] = q.clamp(0, 255) as u8;
-                neg[i * self.n + j] = (-q).clamp(0, 255) as u8;
-            }
-        }
-        (pos, neg)
+        DenseLayer::rails_from_q(self.n, self.m, &self.q)
     }
 
     /// Fast-mode args: (m, n) u8 value tensors.
@@ -126,6 +121,89 @@ impl ModelWeights {
         out
     }
 
+    /// Deterministic synthetic weights (seeded via `util::rng`) for
+    /// artifact-free operation: a calibrated [`SimModel`] is generated and
+    /// converted into the store's layout, so the PJRT argument builders
+    /// and the sim backend share one weight source.
+    pub fn synthetic(arch: &str, seed: u64) -> Result<Self> {
+        Self::from_sim(&SimModel::synthetic_by_name(arch, seed)?)
+    }
+
+    /// Real weights when `artifacts/weights/<arch>.bin` exists, synthetic
+    /// otherwise — the hermetic serving default.
+    pub fn load_or_synthetic(artifacts_dir: impl AsRef<Path>, arch: &str, seed: u64) -> Result<Self> {
+        let path = artifacts_dir.as_ref().join(format!("weights/{arch}.bin"));
+        if path.exists() {
+            Self::load(artifacts_dir, arch)
+        } else {
+            Self::synthetic(arch, seed)
+        }
+    }
+
+    /// Convert a [`SimModel`] (benchmark-CNN shaped: conv + fc1 + fc2)
+    /// into the store's layout.
+    pub fn from_sim(sim: &SimModel) -> Result<Self> {
+        let dense: Vec<&DenseLayer> = sim.dense.iter().flatten().collect();
+        ensure!(dense.len() == 3, "{}: serving store expects conv+fc1+fc2", sim.arch);
+        let (conv_d, fc1_d, fc2_d) = (dense[0], dense[1], dense[2]);
+        let layer = |d: &DenseLayer| QuantLayer {
+            n: d.n,
+            m: d.m,
+            q: d.q.clone(),
+            bias: d.bias.clone(),
+        };
+        let scales = [
+            sim.s_in,
+            conv_d.s_w,
+            conv_d.s_out.context("conv layer missing s_out")?,
+            fc1_d.s_w,
+            fc1_d.s_out.context("fc1 layer missing s_out")?,
+            fc2_d.s_w,
+        ];
+        Ok(ModelWeights {
+            arch: sim.arch.clone(),
+            conv: layer(conv_d),
+            fc1: layer(fc1_d),
+            fc2: layer(fc2_d),
+            conv_w: conv_d.w.clone(),
+            fc1_w: fc1_d.w.clone(),
+            fc2_w: fc2_d.w.clone(),
+            scales,
+        })
+    }
+
+    /// Materialize the executable [`SimModel`] for the sim backend.
+    pub fn sim_model(&self) -> Result<SimModel> {
+        let topo = topology::by_name(&self.arch)
+            .with_context(|| format!("unknown topology {}", self.arch))?;
+        ensure!(
+            topo.layers.len() == 4,
+            "{}: sim conversion expects the conv-pool-fc-fc benchmark shape",
+            self.arch
+        );
+        let mk = |ql: &QuantLayer, w: &[f32], s_w: f32, s_out: Option<f32>| -> DenseLayer {
+            let (wpos, wneg) = ql.rails_mn();
+            DenseLayer {
+                n: ql.n,
+                m: ql.m,
+                q: ql.q.clone(),
+                wpos,
+                wneg,
+                w: w.to_vec(),
+                bias: ql.bias.clone(),
+                s_w,
+                s_out,
+            }
+        };
+        let dense = vec![
+            Some(mk(&self.conv, &self.conv_w, self.scales[1], Some(self.scales[2]))),
+            None,
+            Some(mk(&self.fc1, &self.fc1_w, self.scales[3], Some(self.scales[4]))),
+            Some(mk(&self.fc2, &self.fc2_w, self.scales[5], None)),
+        ];
+        Ok(SimModel { arch: self.arch.clone(), topo, dense, s_in: self.scales[0] })
+    }
+
     /// The 6 weight arguments for a float artifact.
     pub fn float_args(&self) -> Vec<TensorArg> {
         vec![
@@ -152,6 +230,40 @@ mod tests {
         assert_eq!(n[1 * 2 + 0], 2);
         // q[(j=1, i=0)] = 4
         assert_eq!(p[0 * 2 + 1], 4);
+    }
+
+    #[test]
+    fn synthetic_weights_shaped_like_the_artifacts() {
+        let w = ModelWeights::synthetic("cnn1", 1).unwrap();
+        assert_eq!((w.conv.n, w.conv.m), (25, 4));
+        assert_eq!((w.fc1.n, w.fc1.m), (784, 70));
+        assert_eq!((w.fc2.n, w.fc2.m), (70, 10));
+        assert!(w.scales.iter().all(|&s| s > 0.0));
+        let args = w.sc_args(true);
+        assert_eq!(args.len(), 9);
+        assert_eq!(args[0].dims(), &[4, 25]);
+        assert_eq!(w.sc_args(false)[0].dims(), &[4, 25, 8]);
+        assert_eq!(w.float_args().len(), 6);
+    }
+
+    #[test]
+    fn synthetic_weights_deterministic_per_seed() {
+        let a = ModelWeights::synthetic("cnn2", 9).unwrap();
+        let b = ModelWeights::synthetic("cnn2", 9).unwrap();
+        assert_eq!(a.fc1.q, b.fc1.q);
+        assert_eq!(a.scales, b.scales);
+        let c = ModelWeights::synthetic("cnn2", 10).unwrap();
+        assert_ne!(a.fc1.q, c.fc1.q);
+    }
+
+    #[test]
+    fn sim_model_roundtrip_preserves_weights() {
+        let w = ModelWeights::synthetic("cnn1", 3).unwrap();
+        let sim = w.sim_model().unwrap();
+        let back = ModelWeights::from_sim(&sim).unwrap();
+        assert_eq!(w.conv.q, back.conv.q);
+        assert_eq!(w.fc2.bias, back.fc2.bias);
+        assert_eq!(w.scales, back.scales);
     }
 
     #[test]

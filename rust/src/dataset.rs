@@ -1,12 +1,14 @@
 //! The canonical synth-MNIST test split (exported by python train.py to
 //! `artifacts/data/test.bin`), so Rust evaluates on the *identical* samples
-//! the Python side trained/calibrated against.
+//! the Python side trained/calibrated against — plus a deterministic
+//! synthetic generator for hermetic (artifact-free) runs.
 
 use std::path::Path;
 
 use anyhow::{ensure, Result};
 
 use crate::runtime::TensorFile;
+use crate::util::rng::Rng;
 
 /// 28x28 u8 image + label.
 #[derive(Clone, Debug)]
@@ -37,6 +39,47 @@ impl TestSet {
         Ok(TestSet { samples })
     }
 
+    /// Deterministic synthetic split: label-dependent bright blob over
+    /// low-amplitude noise.  Not learnable-quality data — it exists so the
+    /// serving stack, batcher, and harness run without `make artifacts`;
+    /// accuracy numbers are only meaningful on the real split.
+    pub fn synthetic(n: usize, seed: u64) -> Self {
+        let samples = (0..n)
+            .map(|i| {
+                let label = (i % 10) as u8;
+                let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                let mut image = vec![0u8; 784];
+                for px in image.iter_mut() {
+                    *px = rng.u8() / 4; // dim background noise
+                }
+                // 8x8 bright patch whose position encodes the label
+                let (x0, y0) = ((label as usize % 5) * 4 + 2, (label as usize / 5) * 10 + 4);
+                for dy in 0..8 {
+                    for dx in 0..8 {
+                        image[(y0 + dy) * 28 + (x0 + dx)] = 200u8.saturating_add(rng.u8() / 8);
+                    }
+                }
+                Sample { image, label }
+            })
+            .collect();
+        TestSet { samples }
+    }
+
+    /// The real split when `artifacts/data/test.bin` exists (a corrupt
+    /// file is an error, not a silent synthetic fallback), synthetic when
+    /// it is absent.
+    pub fn load_or_synthetic(
+        artifacts_dir: impl AsRef<Path>,
+        n: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        if artifacts_dir.as_ref().join("data/test.bin").exists() {
+            Self::load(artifacts_dir)
+        } else {
+            Ok(Self::synthetic(n, seed))
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -49,6 +92,21 @@ impl TestSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn synthetic_split_is_deterministic_and_shaped() {
+        let a = TestSet::synthetic(40, 7);
+        let b = TestSet::synthetic(40, 7);
+        assert_eq!(a.len(), 40);
+        assert!(a.samples.iter().all(|s| s.label < 10 && s.image.len() == 784));
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x.image, y.image);
+            assert_eq!(x.label, y.label);
+        }
+        // images are nontrivial and differ across samples
+        assert!(a.samples[0].image.iter().any(|&p| p > 150));
+        assert_ne!(a.samples[0].image, a.samples[10].image);
+    }
 
     #[test]
     fn loads_canonical_split_if_present() {

@@ -6,20 +6,33 @@
 //!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack:
 //!
-//! * **L1** — Pallas kernels (`python/compile/kernels/`) emulate the
-//!   bit-parallel stochastic MAC the modified PCRAM banks perform.
-//! * **L2** — JAX forward graphs (`python/compile/model.py`) chain those
-//!   kernels into the benchmark CNNs, AOT-lowered to HLO text once.
-//! * **L3** — this crate: loads the HLO artifacts via PJRT
-//!   ([`runtime`]), owns the serving loop ([`coordinator`]), and carries
-//!   the paper's evaluation substrate — a transaction-level PCRAM
-//!   simulator ([`pcram`]), the five PIMC commands ([`pim`]), the
-//!   ANN-to-command mapper ([`mapper`]), and the CPU/ISAAC baselines
-//!   ([`baselines`]).  Python never runs on the request path.
+//! * **L1** — bit-exact stochastic-number arithmetic ([`stochastic`]),
+//!   mirrored by the Pallas kernels in `python/compile/kernels/` and
+//!   pinned bit-for-bit by golden tests.
+//! * **L2** — whole-model forward graphs.  Two interchangeable compute
+//!   backends implement the [`runtime::Executor`] trait:
+//!   - [`runtime::SimBackend`] (default, hermetic): the full ANN forward
+//!     pass executed natively in Rust through the L1 arithmetic —
+//!     "fast" (CNT16 table), "sc" (bitwise streams, bit-identical to
+//!     fast), "mux" (paper-faithful MUX-tree accumulation), and "float"
+//!     (f32 reference).  No Python, no artifacts: weights load from
+//!     `artifacts/weights/` when present or from the deterministic
+//!     synthetic generator otherwise.
+//!   - the PJRT executor (**feature `pjrt`**): JAX forward graphs
+//!     (`python/compile/model.py`) AOT-lowered to HLO text once by
+//!     `make artifacts` and executed via the `xla` crate.
+//! * **L3** — this crate's serving layer: the engine + dynamic batcher
+//!   ([`coordinator`], generic over the backend) and the paper's
+//!   evaluation substrate — a transaction-level PCRAM simulator
+//!   ([`pcram`]), the five PIMC commands with a functional controller
+//!   ([`pim`]), the ANN-to-command mapper ([`mapper`]), and the CPU/ISAAC
+//!   baselines ([`baselines`]).  Python never runs on the request path —
+//!   and with the default backend it never runs at all.
 //!
-//! [`harness`] regenerates every table and figure of the paper's
-//! evaluation section; `cargo run --release -- --help` lists the entry
-//! points, and `examples/` holds runnable end-to-end drivers.
+//! `cargo build --release && cargo test -q` is fully offline and
+//! artifact-free; [`harness`] regenerates every table and figure of the
+//! paper's evaluation section; `cargo run --release -- --help` lists the
+//! entry points, and `examples/` holds runnable end-to-end drivers.
 
 pub mod util;
 pub mod stochastic;

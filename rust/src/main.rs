@@ -7,25 +7,30 @@
 //! odin table1|table2|table3      reproduce the paper's tables
 //! odin fig6                      reproduce Fig. 6(a)+(b) (normalized)
 //! odin headline                  check the paper's headline ratio claims
-//! odin eval  [--arch cnn1] [--mode fast] [--limit N]
-//!                                accuracy of an AOT artifact on the test set
-//! odin serve [--arch cnn1] [--requests N] [--concurrency K]
+//! odin eval  [--arch cnn1] [--mode fast] [--limit N] [--backend sim|pjrt]
+//!                                accuracy of a model on the test set
+//! odin serve [--arch cnn1] [--requests N] [--concurrency K] [--backend ..]
 //!                                dynamic-batching serving demo + metrics
 //! odin ablation                  binary vs mux accumulation cost/error
-//! odin selftest                  cross-language golden checks + PJRT smoke
+//! odin selftest                  hermetic cross-checks (+ golden/PJRT
+//!                                when artifacts / the pjrt feature exist)
 //! ```
 //!
-//! (clap is unavailable offline; flags are parsed by hand.)
+//! The default backend is the pure-Rust SimBackend: no Python, no PJRT,
+//! no artifacts — real weights and the real test split are picked up from
+//! `artifacts/` when present, deterministic synthetic stand-ins
+//! otherwise.  `--backend pjrt` needs `--features pjrt` and
+//! `make artifacts`.  (clap is unavailable offline; flags are parsed by
+//! hand.)
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use odin::ann::topology;
-use odin::coordinator::{BatchPolicy, Engine, MetricsHub, Server};
+use odin::coordinator::{BatchPolicy, Engine, MetricsHub, ModelWeights, Server, SYNTHETIC_SEED};
 use odin::dataset::TestSet;
 use odin::harness::{fig6, headline, table1, table2, table3};
 use odin::mapper::{map_topology, ExecConfig};
 use odin::pim::AccumulateMode;
-use odin::runtime::{Manifest, Runtime, TensorFile};
 use odin::util::{fmt_ns, fmt_pj};
 
 fn flag(args: &[String], name: &str, default: &str) -> String {
@@ -40,6 +45,7 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let artifacts = flag(&args, "--artifacts", "artifacts");
+    let backend = flag(&args, "--backend", "sim");
 
     match cmd {
         "table1" => {
@@ -48,7 +54,7 @@ fn main() -> Result<()> {
         "table2" => {
             let mode = parse_mode(&flag(&args, "--mode-acc", "binary"))?;
             let cfg = ExecConfig { mode, ..Default::default() };
-            let acc = measured_accuracy(&artifacts).unwrap_or_default();
+            let acc = measured_accuracy(&artifacts, &backend).unwrap_or_default();
             table2(&cfg, &acc, true);
         }
         "table3" => {
@@ -65,13 +71,13 @@ fn main() -> Result<()> {
             let arch = flag(&args, "--arch", "cnn1");
             let mode = flag(&args, "--mode", "fast");
             let limit: usize = flag(&args, "--limit", "512").parse()?;
-            cmd_eval(&artifacts, &arch, &mode, limit)?;
+            cmd_eval(&artifacts, &backend, &arch, &mode, limit)?;
         }
         "serve" => {
             let arch = flag(&args, "--arch", "cnn1");
             let requests: usize = flag(&args, "--requests", "256").parse()?;
             let concurrency: usize = flag(&args, "--concurrency", "4").parse()?;
-            cmd_serve(&artifacts, &arch, requests, concurrency)?;
+            cmd_serve(&artifacts, &backend, &arch, requests, concurrency)?;
         }
         "ablation" => {
             cmd_ablation();
@@ -89,7 +95,10 @@ fn main() -> Result<()> {
 
 const HELP: &str = "odin — PCRAM PIM accelerator reproduction
 commands: table1 table2 table3 fig6 headline eval serve ablation selftest
-common flags: --artifacts DIR; eval/serve: --arch cnn1|cnn2 --mode fast|sc|float";
+common flags: --artifacts DIR --backend sim|pjrt
+eval/serve: --arch cnn1|cnn2 --mode fast|sc|mux|float
+(`sim` is hermetic: synthetic weights/data unless artifacts exist;
+ `pjrt` needs a build with --features pjrt and `make artifacts`)";
 
 fn parse_mode(s: &str) -> Result<AccumulateMode> {
     match s {
@@ -99,15 +108,48 @@ fn parse_mode(s: &str) -> Result<AccumulateMode> {
     }
 }
 
-/// Evaluate an artifact's accuracy on the canonical test split.
-fn cmd_eval(artifacts: &str, arch: &str, mode: &str, limit: usize) -> Result<f64> {
-    let rt = Runtime::cpu()?;
-    let manifest = Manifest::load(artifacts)?;
-    let engine = Engine::new(&rt, &manifest, artifacts, arch, mode)?;
-    let test = TestSet::load(artifacts)?;
+fn load_test_set(artifacts: &str) -> Result<TestSet> {
+    let real = std::path::Path::new(artifacts).join("data/test.bin").exists();
+    if !real {
+        println!("(no artifacts found: synthetic test split — accuracy is not meaningful)");
+    }
+    TestSet::load_or_synthetic(artifacts, 2048, SYNTHETIC_SEED)
+}
+
+/// Evaluate a model's accuracy on the canonical (or synthetic) test split.
+fn cmd_eval(artifacts: &str, backend: &str, arch: &str, mode: &str, limit: usize) -> Result<f64> {
+    match backend {
+        "sim" => {
+            let weights_real =
+                std::path::Path::new(artifacts).join(format!("weights/{arch}.bin")).exists();
+            if !weights_real {
+                println!(
+                    "(no trained weights for {arch}: synthetic weights — accuracy is not meaningful)"
+                );
+            }
+            let engine = Engine::sim_auto(artifacts, arch, mode)?;
+            eval_engine(&engine, load_test_set(artifacts)?, arch, mode, limit)
+        }
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            let rt = odin::runtime::Runtime::cpu()?;
+            let manifest = odin::runtime::Manifest::load(artifacts)?;
+            let engine = Engine::new(&rt, &manifest, artifacts, arch, mode)?;
+            eval_engine(&engine, TestSet::load(artifacts)?, arch, mode, limit)
+        }
+        other => bail!("unknown backend {other} (rebuild with --features pjrt for pjrt)"),
+    }
+}
+
+fn eval_engine<E: odin::runtime::Executor>(
+    engine: &Engine<E>,
+    test: TestSet,
+    arch: &str,
+    mode: &str,
+    limit: usize,
+) -> Result<f64> {
     let n = test.len().min(limit);
     let max_b = engine.max_batch();
-
     let mut correct = 0usize;
     let t0 = std::time::Instant::now();
     for chunk in test.samples[..n].chunks(max_b) {
@@ -122,39 +164,58 @@ fn cmd_eval(artifacts: &str, arch: &str, mode: &str, limit: usize) -> Result<f64
     let dt = t0.elapsed().as_secs_f64();
     let acc = 100.0 * correct as f64 / n as f64;
     let (sim_ns, sim_pj) = engine.sim_cost_per_inference();
-    println!("{arch}/{mode}: accuracy {acc:.2}% on {n} samples ({:.0} inf/s wall)", n as f64 / dt);
+    println!(
+        "{arch}/{mode} [{}]: accuracy {acc:.2}% on {n} samples ({:.0} inf/s wall)",
+        engine.executor().name(),
+        n as f64 / dt
+    );
     println!("  simulated ODIN cost/inference: {} / {}", fmt_ns(sim_ns), fmt_pj(sim_pj));
     Ok(acc)
 }
 
 /// Measured accuracies for the Table 2 accuracy column (CNN1/2 only —
 /// VGGs are analytic-only, see DESIGN.md).
-fn measured_accuracy(artifacts: &str) -> Result<Vec<(String, f64)>> {
+fn measured_accuracy(artifacts: &str, backend: &str) -> Result<Vec<(String, f64)>> {
     let mut out = Vec::new();
     for arch in ["cnn1", "cnn2"] {
-        out.push((arch.to_string(), cmd_eval(artifacts, arch, "fast", 512)?));
+        out.push((arch.to_string(), cmd_eval(artifacts, backend, arch, "fast", 512)?));
     }
     Ok(out)
 }
 
 /// Serving demo: spawn the batcher, hammer it from client threads.
-fn cmd_serve(artifacts: &str, arch: &str, requests: usize, concurrency: usize) -> Result<()> {
+fn cmd_serve(
+    artifacts: &str,
+    backend: &str,
+    arch: &str,
+    requests: usize,
+    concurrency: usize,
+) -> Result<()> {
     let metrics = MetricsHub::new();
     let (artifacts_o, arch_o) = (artifacts.to_string(), arch.to_string());
-    let (server, client) = Server::spawn(
-        move || {
-            let rt = Runtime::cpu()?;
-            let manifest = Manifest::load(&artifacts_o)?;
-            Engine::new(&rt, &manifest, &artifacts_o, &arch_o, "fast")
-        },
-        BatchPolicy::default(),
-        metrics.clone(),
-    )?;
-    println!("serving {arch}/fast with dynamic batching");
+    let (server, client) = match backend {
+        "sim" => Server::spawn(
+            move || Engine::sim_auto(&artifacts_o, &arch_o, "fast"),
+            BatchPolicy::default(),
+            metrics.clone(),
+        )?,
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Server::spawn(
+            move || {
+                let rt = odin::runtime::Runtime::cpu()?;
+                let manifest = odin::runtime::Manifest::load(&artifacts_o)?;
+                Engine::new(&rt, &manifest, &artifacts_o, &arch_o, "fast")
+            },
+            BatchPolicy::default(),
+            metrics.clone(),
+        )?,
+        other => bail!("unknown backend {other} (rebuild with --features pjrt for pjrt)"),
+    };
+    println!("serving {arch}/fast [{backend}] with dynamic batching");
 
-    let test = TestSet::load(artifacts)?;
+    let test = load_test_set(artifacts)?;
     let mut handles = Vec::new();
-    let per_thread = requests / concurrency;
+    let per_thread = requests / concurrency.max(1);
     for t in 0..concurrency {
         let client = client.clone();
         let images: Vec<Vec<u8>> = test
@@ -220,17 +281,62 @@ fn cmd_ablation() {
     println!("  binary: {:.2}%   mux: {:.2}%", 100.0 * err_b / scale, 100.0 * err_m / scale);
 }
 
-/// Cross-language golden vectors + PJRT smoke test.
+/// Hermetic self-checks, plus cross-language golden vectors and the PJRT
+/// smoke test when artifacts / the pjrt feature are available.
 fn cmd_selftest(artifacts: &str) -> Result<()> {
+    use odin::pim::PimController;
+    use odin::stochastic::mac::{mac_binary, mac_mux};
+    use odin::util::rng::Rng;
+
+    // 1. sim backend: table path == bitwise path, end to end
+    let weights = ModelWeights::synthetic("cnn1", SYNTHETIC_SEED)?;
+    let fast = Engine::sim_from_weights(&weights, "fast")?;
+    let sc = Engine::sim_from_weights(&weights, "sc")?;
+    let img = TestSet::synthetic(1, 1).samples[0].image.clone();
+    let (pf, _) = fast.infer(&[&img])?;
+    let (ps, _) = sc.infer(&[&img])?;
+    anyhow::ensure!(pf[0].logits == ps[0].logits, "fast/sc sim paths diverge");
+    println!("sim backend: CNT16 table path == bitwise stream path (bit-exact)");
+
+    // 2. functional PIM command flows == pure arithmetic
+    let mut rng = Rng::new(3);
+    let acts: Vec<u8> = (0..70).map(|_| rng.u8()).collect();
+    let wq: Vec<i16> = (0..70).map(|_| rng.range_i32(-255, 255) as i16).collect();
+    let (wp, wn) = odin::stochastic::rails(&wq);
+    let mut ctrl = PimController::new(odin::pcram::PcramParams::default());
+    anyhow::ensure!(
+        ctrl.mac_binary_functional(&acts, &wp, &wn) == mac_binary(&acts, &wp, &wn),
+        "binary command flows diverge from arithmetic"
+    );
+    anyhow::ensure!(
+        ctrl.mac_mux_functional(&acts, &wp, &wn) == mac_mux(&acts, &wp, &wn),
+        "mux command flows diverge from arithmetic"
+    );
+    println!("PIM controller: binary + mux command flows bit-exact vs arithmetic model");
+
+    // 3. cross-language golden vectors (needs `make artifacts`)
+    match odin::runtime::TensorFile::load(format!("{artifacts}/golden.bin")) {
+        Ok(golden) => selftest_golden(&golden)?,
+        Err(_) => println!("golden vectors: skipped (no artifacts — run `make artifacts`)"),
+    }
+
+    // 4. PJRT smoke test (needs --features pjrt + artifacts)
+    #[cfg(feature = "pjrt")]
+    selftest_pjrt(artifacts)?;
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT smoke: skipped (built without --features pjrt)");
+
+    println!("selftest OK");
+    Ok(())
+}
+
+fn selftest_golden(golden: &odin::runtime::TensorFile) -> Result<()> {
     use odin::stochastic::{encode_rotated_weight, luts};
 
-    // golden vectors
-    let golden = TensorFile::load(format!("{artifacts}/golden.bin"))
-        .context("golden.bin (run `make artifacts`)")?;
     let t_wgt = golden.get("t_wgt")?.as_u8()?;
-    assert_eq!(t_wgt, &luts::wgt_thresholds(8)[..], "T_WGT mismatch");
+    anyhow::ensure!(t_wgt == &luts::wgt_thresholds(8)[..], "T_WGT mismatch");
     let t3 = golden.get("t_wgt_d3")?.as_u8()?;
-    assert_eq!(t3, &luts::wgt_thresholds(3)[..], "depth-3 LUT mismatch");
+    anyhow::ensure!(t3 == &luts::wgt_thresholds(3)[..], "depth-3 LUT mismatch");
 
     let a = golden.get("a")?;
     let wq = golden.get("wq")?;
@@ -245,7 +351,7 @@ fn cmd_selftest(artifacts: &str) -> Result<()> {
             let q = &qv[mi * n..(mi + 1) * n];
             let (wp, wn) = odin::stochastic::rails(q);
             let got = odin::stochastic::mac::mac_binary(acts, &wp, &wn);
-            assert_eq!(got, raw[bi * m + mi], "raw mismatch at ({bi},{mi})");
+            anyhow::ensure!(got == raw[bi * m + mi], "raw mismatch at ({bi},{mi})");
         }
     }
     println!("golden MAC vectors: {}x{} OK (bit-exact vs python)", b, m);
@@ -256,12 +362,22 @@ fn cmd_selftest(artifacts: &str) -> Result<()> {
             let q = qv[mi * n + j].clamp(0, 255) as u8;
             let got = encode_rotated_weight(q, j);
             let base = (mi * n + j) * 8;
-            assert_eq!(got.lanes()[..], wp_streams[base..base + 8], "stream ({mi},{j})");
+            anyhow::ensure!(got.lanes()[..] == wp_streams[base..base + 8], "stream ({mi},{j})");
         }
     }
     println!("golden weight streams: OK (bit-exact vs python)");
+    Ok(())
+}
 
-    // PJRT smoke: run the MAC tile artifact and compare to the Rust model
+/// PJRT smoke: run the MAC tile artifact and compare to the Rust model.
+#[cfg(feature = "pjrt")]
+fn selftest_pjrt(artifacts: &str) -> Result<()> {
+    use odin::runtime::{Manifest, Runtime, TensorArg};
+
+    if !std::path::Path::new(artifacts).join("manifest.json").exists() {
+        println!("PJRT smoke: skipped (no artifacts — run `make artifacts`)");
+        return Ok(());
+    }
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(artifacts)?;
     let tile = rt.load_hlo_text(&manifest.get("sc_tile_fast")?.path)?;
@@ -270,9 +386,9 @@ fn cmd_selftest(artifacts: &str) -> Result<()> {
     let wq: Vec<i16> = (0..32 * 256).map(|_| rng.range_i32(-255, 255) as i16).collect();
     let (wp, wn) = odin::stochastic::rails(&wq);
     let out = tile.execute_i32(&[
-        odin::runtime::TensorArg::U8 { dims: vec![8, 256], data: acts.clone() },
-        odin::runtime::TensorArg::U8 { dims: vec![32, 256], data: wp.clone() },
-        odin::runtime::TensorArg::U8 { dims: vec![32, 256], data: wn.clone() },
+        TensorArg::U8 { dims: vec![8, 256], data: acts.clone() },
+        TensorArg::U8 { dims: vec![32, 256], data: wp.clone() },
+        TensorArg::U8 { dims: vec![32, 256], data: wn.clone() },
     ])?;
     for bi in 0..8 {
         for mi in 0..32 {
@@ -281,10 +397,9 @@ fn cmd_selftest(artifacts: &str) -> Result<()> {
                 &wp[mi * 256..(mi + 1) * 256],
                 &wn[mi * 256..(mi + 1) * 256],
             );
-            assert_eq!(out[bi * 32 + mi], want, "tile ({bi},{mi})");
+            anyhow::ensure!(out[bi * 32 + mi] == want, "tile ({bi},{mi})");
         }
     }
     println!("PJRT tile execution: 8x32 MACs bit-exact vs rust model");
-    println!("selftest OK");
     Ok(())
 }

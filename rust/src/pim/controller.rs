@@ -9,6 +9,7 @@
 use super::commands::PimcCommand;
 use super::ledger::Ledger;
 use crate::pcram::{Bank, PcramParams, RowAddr};
+use crate::stochastic::mac::mux_chunk_layout;
 use crate::stochastic::{encode, luts, rot_amount, Stream256, STREAM_BITS};
 
 /// Pack 32 bytes into one 256-bit line (byte k -> bits 8k..8k+8, LSB first).
@@ -175,6 +176,82 @@ impl PimController {
         }
         raw as i32
     }
+
+    /// Convenience: run a whole MUX-mode MAC (the paper-faithful
+    /// accumulation, Fig. 5(c) flows) for `acts` against one neuron's
+    /// dual-rail weights, entirely through command flows.  Bit-exact
+    /// against `stochastic::mac::mac_mux` (chunking rule included).
+    pub fn mac_mux_functional(&mut self, acts: &[u8], wpos: &[u8], wneg: &[u8]) -> i32 {
+        let n = acts.len();
+        assert_eq!(wpos.len(), n);
+        assert_eq!(wneg.len(), n);
+        let (chunks, nl, depth) = mux_chunk_layout(n);
+        // region stride padded to whole 32-operand lines: B_TO_S always
+        // writes 32 stream rows, which must stay inside their region
+        let np = nl.div_ceil(32) * 32;
+        let cp = 15u16;
+        let addr = |row: usize| RowAddr::new(cp, (row / 32) as u16, (row % 32) as u8);
+        let t_act = luts::act_thresholds();
+        let t_w = luts::wgt_thresholds(depth);
+        let selects = luts::mux_select_masks();
+
+        let mut a_pad = acts.to_vec();
+        let mut wp_pad = wpos.to_vec();
+        let mut wn_pad = wneg.to_vec();
+        a_pad.resize(chunks * nl, 0);
+        wp_pad.resize(chunks * nl, 0);
+        wn_pad.resize(chunks * nl, 0);
+
+        let mut raw = 0i64;
+        for c in 0..chunks {
+            let lo = c * nl;
+            // stage operand lines + convert (acts at region 0, wpos at np,
+            // wneg at 2*np; mux mode uses the depth LUT and no rotation)
+            for line in 0..nl.div_ceil(32) {
+                let l0 = lo + line * 32;
+                let l1 = (l0 + 32).min(lo + nl);
+                let srcs = [
+                    (RowAddr::new(14, line as u16, 0), &a_pad, 0usize, &t_act),
+                    (RowAddr::new(14, line as u16, 1), &wp_pad, np, &t_w),
+                    (RowAddr::new(14, line as u16, 2), &wn_pad, 2 * np, &t_w),
+                ];
+                for (src, data, region, lut) in srcs {
+                    self.bank.write_line(src, line_from_bytes(&data[l0..l1]));
+                    self.b_to_s(src, |k| addr(region + line * 32 + k), lut, None);
+                }
+            }
+            for (rail, sign) in [(1usize, 1i64), (2, -1)] {
+                // products into the scratch region at 3*np
+                for j in 0..nl {
+                    self.ann_mul(addr(j), addr(rail * np + j), addr(3 * np + j));
+                }
+                // MUX reduction tree, level by level, in place: level k
+                // pairs (2p, 2p+1) through select stream s_k into slot p —
+                // identical pairing/select order to mac_mux_chunk
+                let mut width = nl;
+                for s in selects.iter().take(depth as usize) {
+                    for p in 0..width / 2 {
+                        self.ann_acc(
+                            addr(3 * np + 2 * p),
+                            addr(3 * np + 2 * p + 1),
+                            s,
+                            addr(3 * np + p),
+                        );
+                    }
+                    width /= 2;
+                }
+                // pop-count the tree root; the other 31 S_TO_B lanes read
+                // never-written (all-zero) rows
+                let counts = self.s_to_b(
+                    |k| if k == 0 { addr(3 * np) } else { RowAddr::new(12, 4000 + k as u16, 0) },
+                    RowAddr::new(14, 200, 0),
+                    false,
+                );
+                raw += sign * counts[0] as i64;
+            }
+        }
+        raw as i32
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +301,26 @@ mod tests {
             assert_eq!(got[k], want);
         }
         assert_eq!(c.ledger.count("ANN_POOL"), 1);
+    }
+
+    #[test]
+    fn functional_mux_mac_matches_arithmetic_model() {
+        use crate::stochastic::mac::{mac_mux, mux_chunk_layout};
+        let mut rng = Rng::new(77);
+        for n in [5usize, 32, 70] {
+            let acts = gen::u8_vec(&mut rng, n);
+            let wq = gen::i16_vec(&mut rng, n, -255, 255);
+            let (wp, wn) = rails(&wq);
+            let mut c = PimController::new(PcramParams::default());
+            let got = c.mac_mux_functional(&acts, &wp, &wn);
+            assert_eq!(got, mac_mux(&acts, &wp, &wn), "n={n}");
+            let (chunks, nl, _) = mux_chunk_layout(n);
+            let (chunks, nl) = (chunks as u64, nl as u64);
+            assert_eq!(c.ledger.count("ANN_MUL"), chunks * 2 * nl);
+            assert_eq!(c.ledger.count("ANN_ACC"), chunks * 2 * (nl - 1));
+            assert_eq!(c.ledger.count("S_TO_B"), chunks * 2);
+            assert_eq!(c.ledger.count("B_TO_S"), chunks * 3 * nl.div_ceil(32));
+        }
     }
 
     #[test]

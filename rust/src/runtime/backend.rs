@@ -1,0 +1,89 @@
+//! Backend abstraction: the [`Executor`] trait every compute backend
+//! implements, plus [`TensorArg`], the plain-data tensor container shared
+//! by all backends (the PJRT client uploads it to device buffers; the
+//! SimBackend reads it directly).
+//!
+//! The L3 coordinator ([`crate::coordinator::Engine`]) is generic over an
+//! `Executor`, so the serving loop, dynamic batcher, and harness run
+//! identically on the pure-Rust [`super::SimBackend`] (hermetic, no
+//! artifacts) and on the PJRT path (`--features pjrt`, needs
+//! `make artifacts`).
+
+use anyhow::Result;
+
+/// A typed, shaped argument / activation tensor.  Plain host data — no
+/// device handles — so it exists with or without the `pjrt` feature.
+#[derive(Clone, Debug)]
+pub enum TensorArg {
+    U8 { dims: Vec<usize>, data: Vec<u8> },
+    U32 { dims: Vec<usize>, data: Vec<u32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+}
+
+impl TensorArg {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            TensorArg::U8 { dims, .. }
+            | TensorArg::U32 { dims, .. }
+            | TensorArg::I32 { dims, .. }
+            | TensorArg::F32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims().iter().product()
+    }
+}
+
+/// A compute backend executing whole-model forward passes for the serving
+/// engine.
+///
+/// Contract: `forward(batch, images)` receives `batch * input_len()` u8
+/// pixels (row-major images, zero-padded rows allowed) where `batch` is
+/// one of `batch_sizes()`, and returns `batch * output_len()` f32 logits.
+/// Implementations must be deterministic: the same bytes always produce
+/// the same logits, so batch padding and batch splitting never change
+/// predictions.
+pub trait Executor {
+    /// Supported (compiled) batch sizes, ascending and deduplicated.
+    fn batch_sizes(&self) -> &[usize];
+
+    /// Bytes per input image (28*28 for the benchmark CNNs).
+    fn input_len(&self) -> usize {
+        784
+    }
+
+    /// Logits per image.
+    fn output_len(&self) -> usize {
+        10
+    }
+
+    /// Execute one padded batch; see the trait-level contract.
+    fn forward(&self, batch: usize, images: &[u8]) -> Result<Vec<f32>>;
+
+    /// Backend label for logs and reports ("sim", "pjrt").
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_arg_shapes() {
+        let a = TensorArg::U8 { dims: vec![2, 3], data: vec![0; 6] };
+        assert_eq!(a.elements(), 6);
+        assert_eq!(a.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn tensor_arg_f32_roundtrip() {
+        let f = TensorArg::F32 { dims: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        assert_eq!(f.elements(), 4);
+        match f {
+            TensorArg::F32 { data, .. } => assert_eq!(data[3], 4.0),
+            _ => unreachable!(),
+        }
+    }
+}

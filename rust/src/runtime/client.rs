@@ -1,6 +1,8 @@
-//! PJRT client wrapper: HLO text -> compiled executable -> execution with
-//! typed tensor arguments.  Adapted from /opt/xla-example/load_hlo (HLO
-//! *text* is the interchange format — see python/compile/aot.py).
+//! PJRT client wrapper (feature `pjrt`): HLO text -> compiled executable
+//! -> execution with typed tensor arguments.  Adapted from
+//! /opt/xla-example/load_hlo (HLO *text* is the interchange format — see
+//! python/compile/aot.py).  [`TensorArg`] itself is plain data and lives
+//! in [`super::backend`] so the hermetic build shares it.
 
 use std::path::Path;
 use std::time::Instant;
@@ -8,41 +10,19 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
-/// A typed, shaped argument for an executable call.
-#[derive(Clone, Debug)]
-pub enum TensorArg {
-    U8 { dims: Vec<usize>, data: Vec<u8> },
-    U32 { dims: Vec<usize>, data: Vec<u32> },
-    I32 { dims: Vec<usize>, data: Vec<i32> },
-    F32 { dims: Vec<usize>, data: Vec<f32> },
-}
+use super::backend::TensorArg;
 
-impl TensorArg {
-    pub fn dims(&self) -> &[usize] {
-        match self {
-            TensorArg::U8 { dims, .. }
-            | TensorArg::U32 { dims, .. }
-            | TensorArg::I32 { dims, .. }
-            | TensorArg::F32 { dims, .. } => dims,
-        }
-    }
-
-    pub fn elements(&self) -> usize {
-        self.dims().iter().product()
-    }
-
-    /// Upload to a device buffer.  (The typed host->device path; the
-    /// Literal-based execute path silently zero-fills non-f32 inputs in
-    /// xla 0.1.6, so buffers are the only correct route.)
-    fn to_buffer(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
-        let buf = match self {
-            TensorArg::U8 { dims, data } => client.buffer_from_host_buffer(data, dims, None)?,
-            TensorArg::U32 { dims, data } => client.buffer_from_host_buffer(data, dims, None)?,
-            TensorArg::I32 { dims, data } => client.buffer_from_host_buffer(data, dims, None)?,
-            TensorArg::F32 { dims, data } => client.buffer_from_host_buffer(data, dims, None)?,
-        };
-        Ok(buf)
-    }
+/// Upload a [`TensorArg`] to a device buffer.  (The typed host->device
+/// path; the Literal-based execute path silently zero-fills non-f32
+/// inputs in xla 0.1.6, so buffers are the only correct route.)
+fn to_buffer(arg: &TensorArg, client: &PjRtClient) -> Result<PjRtBuffer> {
+    let buf = match arg {
+        TensorArg::U8 { dims, data } => client.buffer_from_host_buffer(data, dims, None)?,
+        TensorArg::U32 { dims, data } => client.buffer_from_host_buffer(data, dims, None)?,
+        TensorArg::I32 { dims, data } => client.buffer_from_host_buffer(data, dims, None)?,
+        TensorArg::F32 { dims, data } => client.buffer_from_host_buffer(data, dims, None)?,
+    };
+    Ok(buf)
 }
 
 /// A device-resident buffer uploaded once (weights, the CNT16 table) and
@@ -66,7 +46,7 @@ impl Runtime {
 
     /// Upload a tensor to the device once (see [`StaticBuffer`]).
     pub fn upload(&self, arg: &TensorArg) -> Result<StaticBuffer> {
-        Ok(StaticBuffer(arg.to_buffer(&self.client)?))
+        Ok(StaticBuffer(to_buffer(arg, &self.client)?))
     }
 
     /// Load an HLO-text artifact and compile it.
@@ -101,7 +81,7 @@ impl Executable {
     /// untyped literal for the caller to extract.
     pub fn execute_raw(&self, args: &[TensorArg]) -> Result<Literal> {
         let buffers: Vec<PjRtBuffer> =
-            args.iter().map(|a| a.to_buffer(&self.client)).collect::<Result<_>>()?;
+            args.iter().map(|a| to_buffer(a, &self.client)).collect::<Result<_>>()?;
         let result = self.exe.execute_b::<PjRtBuffer>(&buffers)?[0][0].to_literal_sync()?;
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
         Ok(result.to_tuple1()?)
@@ -119,7 +99,7 @@ impl Executable {
         fresh: &TensorArg,
         cached: &[StaticBuffer],
     ) -> Result<Vec<f32>> {
-        let first = fresh.to_buffer(&self.client)?;
+        let first = to_buffer(fresh, &self.client)?;
         let mut bufs: Vec<&PjRtBuffer> = Vec::with_capacity(1 + cached.len());
         bufs.push(&first);
         bufs.extend(cached.iter().map(|b| &b.0));
@@ -133,16 +113,86 @@ impl Executable {
     }
 }
 
+/// One compiled batch variant of a model artifact.
+struct Variant {
+    batch: usize,
+    exe: Executable,
+}
+
+/// PJRT-backed [`Executor`]: the compiled AOT batch variants plus the
+/// weight tensors uploaded to the device once at load time — the serving
+/// hot path only uploads the image tensor per call.
+pub struct PjrtExecutor {
+    variants: Vec<Variant>,
+    static_bufs: Vec<StaticBuffer>,
+    batch_sizes: Vec<usize>,
+    float_input: bool,
+}
+
+impl PjrtExecutor {
+    /// Compile every batch variant of `arch`/`mode` from the manifest and
+    /// bind `weight_args` (produced by `coordinator::ModelWeights`) as
+    /// device-resident buffers.
+    pub fn new(
+        rt: &Runtime,
+        manifest: &super::manifest::Manifest,
+        arch: &str,
+        mode: &str,
+        weight_args: &[TensorArg],
+    ) -> Result<Self> {
+        let specs = manifest.model_variants(arch, mode);
+        if specs.is_empty() {
+            anyhow::bail!("no artifacts for {arch}/{mode} — run `make artifacts`");
+        }
+        let mut variants = Vec::new();
+        for spec in &specs {
+            let exe = rt.load_hlo_text(&spec.path)?;
+            variants.push(Variant { batch: spec.batch.context("model without batch")?, exe });
+        }
+        variants.sort_by_key(|v| v.batch);
+        let static_bufs: Vec<StaticBuffer> =
+            weight_args.iter().map(|a| rt.upload(a)).collect::<Result<_>>()?;
+        let batch_sizes = variants.iter().map(|v| v.batch).collect();
+        Ok(PjrtExecutor { variants, static_bufs, batch_sizes, float_input: mode == "float" })
+    }
+}
+
+impl super::backend::Executor for PjrtExecutor {
+    fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    fn forward(&self, batch: usize, images: &[u8]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            images.len() == batch * 784,
+            "batch {batch}: got {} bytes, want {}",
+            images.len(),
+            batch * 784
+        );
+        let var = self
+            .variants
+            .iter()
+            .find(|v| v.batch == batch)
+            .with_context(|| format!("no compiled variant for batch {batch}"))?;
+        let img_arg = if self.float_input {
+            TensorArg::F32 {
+                dims: vec![batch, 28, 28],
+                data: images.iter().map(|&p| p as f32 / 255.0).collect(),
+            }
+        } else {
+            TensorArg::U8 { dims: vec![batch, 28, 28], data: images.to_vec() }
+        };
+        var.exe.execute_f32_cached(&img_arg, &self.static_bufs)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn tensor_arg_shapes() {
-        let a = TensorArg::U8 { dims: vec![2, 3], data: vec![0; 6] };
-        assert_eq!(a.elements(), 6);
-        assert_eq!(a.dims(), &[2, 3]);
-    }
 
     // PJRT end-to-end execution (incl. buffer upload round-trips) is
     // covered by rust/tests/runtime_e2e.rs, which needs artifacts; unit
@@ -151,10 +201,10 @@ mod tests {
     fn buffer_roundtrip_u8_and_f32() {
         let client = PjRtClient::cpu().unwrap();
         let a = TensorArg::U8 { dims: vec![4], data: vec![1, 2, 3, 4] };
-        let lit = a.to_buffer(&client).unwrap().to_literal_sync().unwrap();
+        let lit = to_buffer(&a, &client).unwrap().to_literal_sync().unwrap();
         assert_eq!(lit.to_vec::<u8>().unwrap(), vec![1, 2, 3, 4]);
         let f = TensorArg::F32 { dims: vec![2], data: vec![1.5, -2.25] };
-        let lit = f.to_buffer(&client).unwrap().to_literal_sync().unwrap();
+        let lit = to_buffer(&f, &client).unwrap().to_literal_sync().unwrap();
         assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.5, -2.25]);
     }
 }

@@ -1,16 +1,31 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts Python produced and
-//! executes them on the CPU PJRT client — the request-path compute engine.
+//! Execution runtime: the backend abstraction the L3 coordinator serves
+//! through, with two interchangeable implementations.
+//!
+//! * [`backend`] — the [`Executor`] trait and the plain-data [`TensorArg`]
+//!   container every backend shares.
+//! * [`sim`] — [`SimBackend`], the pure-Rust stochastic/float forward pass
+//!   (hermetic default: no Python, no PJRT, no artifacts).
+//! * [`client`] (feature `pjrt`) — loads the AOT HLO-text artifacts Python
+//!   produced and executes them on the CPU PJRT client
+//!   (`PjRtClient::cpu()` -> `HloModuleProto::from_text_file` -> compile
+//!   -> execute).
 //!
 //! [`tensorfile`] parses the TLV container shared with
 //! `python/compile/tensorfile.py` (weights, datasets, golden vectors);
-//! [`manifest`] reads `artifacts/manifest.json`; [`client`] wraps the
-//! `xla` crate (`PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
-//! compile -> execute).
+//! [`manifest`] reads `artifacts/manifest.json`.  Both are feature-free:
+//! the sim backend reads real weights from the same files when they
+//! exist.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
+pub mod sim;
 pub mod tensorfile;
 
-pub use client::{Executable, Runtime, StaticBuffer, TensorArg};
+pub use backend::{Executor, TensorArg};
+#[cfg(feature = "pjrt")]
+pub use client::{Executable, PjrtExecutor, Runtime, StaticBuffer};
 pub use manifest::{ArtifactSpec, Manifest};
+pub use sim::{SimBackend, SimMode, SimModel};
 pub use tensorfile::{Tensor, TensorData, TensorFile};

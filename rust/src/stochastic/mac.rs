@@ -87,9 +87,13 @@ pub fn mac_mux(acts: &[u8], wpos: &[u8], wneg: &[u8]) -> i32 {
 }
 
 /// (chunks, NL, depth) for an n-input layer in mux mode — mirrors
-/// `ref.mux_chunk_layout`.
+/// `ref.mux_chunk_layout`.  Degenerate widths are handled instead of
+/// asserted: n = 0 books zero chunks (a weightless layer issues no MUX
+/// flows) and n = 1 pads to the minimal 2-input tree.
 pub fn mux_chunk_layout(n: usize) -> (usize, usize, u32) {
-    assert!(n >= 1);
+    if n == 0 {
+        return (0, 2, 1);
+    }
     if n <= STREAM_BITS {
         let depth = (n.max(2) as f64).log2().ceil() as u32;
         let depth = depth.max(1);
@@ -164,6 +168,21 @@ mod tests {
         assert_eq!(mux_chunk_layout(257), (2, 256, 8));
         assert_eq!(mux_chunk_layout(784), (4, 256, 8));
         assert_eq!(mux_chunk_layout(1210), (5, 256, 8));
+    }
+
+    #[test]
+    fn mux_chunk_layout_degenerate_widths() {
+        // regression: n = 0 used to assert; it must book zero chunks with
+        // a valid (nl, depth) pair so downstream cost formulas stay sane
+        assert_eq!(mux_chunk_layout(0), (0, 2, 1));
+        assert_eq!(mux_chunk_layout(1), (1, 2, 1));
+        assert_eq!(mux_chunk_layout(2), (1, 2, 1));
+        assert_eq!(mux_chunk_layout(3), (1, 4, 2));
+        // and the degenerate widths execute, not just lay out
+        assert_eq!(mac_mux(&[], &[], &[]), 0);
+        let single = mac_mux(&[255], &[255], &[0]);
+        assert!(single >= 0, "single-operand mux MAC must run: {single}");
+        assert_eq!(mac_mux(&[200], &[0], &[0]), 0);
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Integration: whole MAC layers driven through the functional
+//! `PimController` (Fig. 5 activity flows on the bank model) must agree
+//! bit-for-bit with the pure arithmetic (`mac_binary` / `mac_binary_table`
+//! / `mac_mux`), and the command ledger must book exactly the Table 1
+//! rates for what was executed.
+
+use odin::pcram::PcramParams;
+use odin::pim::{Ledger, PimController, PimcCommand};
+use odin::stochastic::luts::cnt16;
+use odin::stochastic::mac::{mac_binary, mac_binary_table, mac_mux, mux_chunk_layout};
+use odin::stochastic::rails;
+use odin::util::rng::Rng;
+use odin::util::testkit::gen;
+
+/// A small dual-rail weight layer: m neurons of fan-in n.
+fn layer(rng: &mut Rng, n: usize, m: usize) -> (Vec<u8>, Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let acts = gen::u8_vec(rng, n);
+    let mut wps = Vec::with_capacity(m);
+    let mut wns = Vec::with_capacity(m);
+    for _ in 0..m {
+        let wq = gen::i16_vec(rng, n, -255, 255);
+        let (wp, wn) = rails(&wq);
+        wps.push(wp);
+        wns.push(wn);
+    }
+    (acts, wps, wns)
+}
+
+/// Recompute a ledger's totals from its command breakdown at Table 1
+/// rates; they must match what `issue` accumulated.
+fn assert_ledger_books_table1_rates(ledger: &Ledger, p: &PcramParams) {
+    let cmd_by_name = |name: &str| -> PimcCommand {
+        match name {
+            "B_TO_S" => PimcCommand::BToS,
+            "ANN_MUL" => PimcCommand::AnnMul,
+            "ANN_ACC" => PimcCommand::AnnAcc,
+            "S_TO_B" => PimcCommand::SToB,
+            "ANN_MUL_POP" => PimcCommand::AnnMulPop,
+            other => panic!("unexpected command {other}"),
+        }
+    };
+    let (mut reads, mut writes, mut ns, mut pj) = (0u64, 0u64, 0f64, 0f64);
+    for (&name, &count) in ledger.command_breakdown() {
+        let cmd = cmd_by_name(name);
+        reads += cmd.reads() * count;
+        writes += cmd.writes() * count;
+        ns += cmd.latency_ns(p) * count as f64;
+        pj += cmd.energy_pj(p) * count as f64;
+    }
+    assert_eq!(ledger.reads, reads);
+    assert_eq!(ledger.writes, writes);
+    assert!((ledger.ns - ns).abs() < 1e-6 * ns.max(1.0), "{} vs {ns}", ledger.ns);
+    assert!((ledger.pj - pj).abs() < 1e-6 * pj.max(1.0), "{} vs {pj}", ledger.pj);
+}
+
+#[test]
+fn binary_layer_through_controller_matches_arithmetic() {
+    let p = PcramParams::default();
+    let table = cnt16();
+    let mut rng = Rng::new(1001);
+    for (n, m) in [(7usize, 3usize), (32, 4), (70, 6), (121, 2)] {
+        let (acts, wps, wns) = layer(&mut rng, n, m);
+        let mut ctrl = PimController::new(p);
+        for i in 0..m {
+            let got = ctrl.mac_binary_functional(&acts, &wps[i], &wns[i]);
+            let want = mac_binary(&acts, &wps[i], &wns[i]);
+            assert_eq!(got, want, "n={n} neuron {i}");
+            assert_eq!(got, mac_binary_table(&table, &acts, &wps[i], &wns[i]));
+        }
+        // per-layer command accounting: each neuron converts 4 line
+        // groups (2 rails x acts+weights) and ANDs 2n products
+        let lines = n.div_ceil(32) as u64;
+        assert_eq!(ctrl.ledger.count("ANN_MUL"), (m * 2 * n) as u64);
+        assert_eq!(ctrl.ledger.count("B_TO_S"), m as u64 * 4 * lines);
+        assert_ledger_books_table1_rates(&ctrl.ledger, &p);
+    }
+}
+
+#[test]
+fn mux_layer_through_controller_matches_arithmetic() {
+    let p = PcramParams::default();
+    let mut rng = Rng::new(2002);
+    for (n, m) in [(5usize, 3usize), (25, 2), (70, 3), (300, 1)] {
+        let (acts, wps, wns) = layer(&mut rng, n, m);
+        let mut ctrl = PimController::new(p);
+        for i in 0..m {
+            let got = ctrl.mac_mux_functional(&acts, &wps[i], &wns[i]);
+            assert_eq!(got, mac_mux(&acts, &wps[i], &wns[i]), "n={n} neuron {i}");
+        }
+        let (chunks, nl, _) = mux_chunk_layout(n);
+        let (chunks, nl) = (chunks as u64, nl as u64);
+        assert_eq!(ctrl.ledger.count("ANN_MUL"), m as u64 * chunks * 2 * nl);
+        assert_eq!(ctrl.ledger.count("ANN_ACC"), m as u64 * chunks * 2 * (nl - 1));
+        assert_eq!(ctrl.ledger.count("S_TO_B"), m as u64 * chunks * 2);
+        assert_ledger_books_table1_rates(&ctrl.ledger, &p);
+    }
+}
+
+#[test]
+fn ledger_latency_matches_table1_spot_values() {
+    // The paper's Table 1 rows fall out of any executed flow set.
+    let p = PcramParams::default();
+    let mut ctrl = PimController::new(p);
+    let acts = vec![128u8; 32];
+    let wq: Vec<i16> = (0..32).map(|i| (i * 8 - 128) as i16).collect();
+    let (wp, wn) = rails(&wq);
+    ctrl.mac_binary_functional(&acts, &wp, &wn);
+    let l = &ctrl.ledger;
+    // array-only latencies per flow: B_TO_S 3504, S_TO_B 3456, ANN_MUL 108
+    let array_ns = 3504.0 * l.count("B_TO_S") as f64
+        + 3456.0 * l.count("S_TO_B") as f64
+        + 108.0 * l.count("ANN_MUL") as f64;
+    let addon_ns: f64 = l
+        .command_breakdown()
+        .iter()
+        .map(|(&name, &c)| {
+            let cmd = match name {
+                "B_TO_S" => PimcCommand::BToS,
+                "S_TO_B" => PimcCommand::SToB,
+                "ANN_MUL" => PimcCommand::AnnMul,
+                other => panic!("unexpected {other}"),
+            };
+            cmd.addon_delay_ns() * c as f64
+        })
+        .sum();
+    assert!((l.ns - (array_ns + addon_ns)).abs() < 1e-6, "{} vs {}", l.ns, array_ns + addon_ns);
+}
+
+#[test]
+fn functional_bank_activity_reconciles_with_ledger_commands() {
+    // The bank meters every real line access; the ledger books the
+    // Table 1 abstraction.  The two differ in known, fixed ways — B_TO_S
+    // books 33 reads but touches the array once (32 fetches hit the SRAM
+    // LUT), ANN_ACC does 2 functional reads against 1 booked (latched
+    // operands), S_TO_B drains 32 rows but writes one assembled line, and
+    // DMA staging writes are metered, never booked.  Reconcile exactly.
+    let mut rng = Rng::new(3003);
+    let n = 70usize;
+    let acts = gen::u8_vec(&mut rng, n);
+    let wq = gen::i16_vec(&mut rng, n, -255, 255);
+    let (wp, wn) = rails(&wq);
+
+    let mut ctrl = PimController::new(PcramParams::default());
+    ctrl.mac_mux_functional(&acts, &wp, &wn);
+    let meter = ctrl.bank.meter;
+    let l = &ctrl.ledger;
+    let (b, mul, acc, stb) = (
+        l.count("B_TO_S"),
+        l.count("ANN_MUL"),
+        l.count("ANN_ACC"),
+        l.count("S_TO_B"),
+    );
+    assert_eq!(meter.reads, b + mul + 2 * acc + 32 * stb);
+    let (chunks, nl, _) = mux_chunk_layout(n);
+    let staging = (chunks * 3 * nl.div_ceil(32)) as u64;
+    assert_eq!(meter.writes, staging + 32 * b + mul + acc + stb);
+}

@@ -1,0 +1,195 @@
+//! Property tests (via `util::testkit::forall_ok`) for the serving-loop
+//! and cost-model invariants:
+//!
+//! * coordinator::batcher — never drops a request, never forms a batch
+//!   larger than the clamped max, and a lone request is bounded by the
+//!   linger window (it executes rather than waiting forever).
+//! * mapper::map_topology / map_layer — monotone: more neurons or wider
+//!   fan-in never books less latency or energy.
+
+use std::time::{Duration, Instant};
+
+use odin::ann::Layer;
+use odin::coordinator::{BatchPolicy, Engine, MetricsHub, Server};
+use odin::dataset::TestSet;
+use odin::mapper::{map_layer, map_topology, ExecConfig};
+use odin::pim::AccumulateMode;
+use odin::util::testkit::{forall_ok, gen};
+
+// ---------------------------------------------------------------------------
+// batcher
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batcher_never_drops_and_respects_max_batch() {
+    // Float-mode sim engines are cheap enough to spawn per case.
+    forall_ok(
+        6,
+        |r| {
+            let requests = 1 + r.below(40) as usize;
+            let threads = 1 + r.below(4) as usize;
+            let max_batch = [1usize, 2, 5, 32][r.below(4) as usize];
+            (requests, threads, max_batch)
+        },
+        |&(requests, threads, max_batch)| {
+            let policy =
+                BatchPolicy { max_batch, linger: Duration::from_micros(200) };
+            let metrics = MetricsHub::new();
+            let (server, client) =
+                Server::spawn(|| Engine::sim("cnn1", "float"), policy, metrics.clone())
+                    .map_err(|e| format!("spawn: {e:#}"))?;
+            let test = TestSet::synthetic(requests, 13);
+            let clamp = max_batch.min(32).max(1);
+
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let client = client.clone();
+                let images: Vec<Vec<u8>> = test
+                    .samples
+                    .iter()
+                    .skip(t)
+                    .step_by(threads)
+                    .map(|s| s.image.clone())
+                    .collect();
+                handles.push(std::thread::spawn(move || {
+                    images
+                        .into_iter()
+                        .map(|img| client.infer_blocking(img).map(|r| r.batch))
+                        .collect::<Vec<_>>()
+                }));
+            }
+            let mut answered = 0usize;
+            for h in handles {
+                for outcome in h.join().map_err(|_| "client thread panicked".to_string())? {
+                    let batch = outcome.map_err(|e| format!("dropped request: {e:#}"))?;
+                    if batch == 0 || batch > clamp {
+                        return Err(format!("batch {batch} outside 1..={clamp}"));
+                    }
+                    answered += 1;
+                }
+            }
+            drop(client);
+            server.shutdown();
+            if answered != requests {
+                return Err(format!("{answered}/{requests} answered"));
+            }
+            let report = metrics.report();
+            if report.requests != requests as u64 {
+                return Err(format!("metrics saw {} of {requests}", report.requests));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_lone_request_bounded_by_linger() {
+    // A lone request must execute once the linger window closes instead
+    // of waiting for the batch to fill.  The bound is generous (CI jitter)
+    // but far below "stuck forever".
+    let linger = Duration::from_millis(50);
+    let policy = BatchPolicy { max_batch: 32, linger };
+    let (server, client) =
+        Server::spawn(|| Engine::sim("cnn1", "float"), policy, MetricsHub::new()).unwrap();
+    let img = TestSet::synthetic(1, 3).samples[0].image.clone();
+    // warm-up: first inference may pay one-time costs
+    client.infer_blocking(img.clone()).unwrap();
+    let t0 = Instant::now();
+    let resp = client.infer_blocking(img).unwrap();
+    let waited = t0.elapsed();
+    assert_eq!(resp.batch, 1, "lone request must ride alone");
+    assert!(
+        waited < linger + Duration::from_secs(5),
+        "lone request waited {waited:?} against a {linger:?} linger"
+    );
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn batcher_survives_engine_construction_failure() {
+    // A factory error must surface synchronously, not hang the caller.
+    let err = Server::spawn(
+        || Engine::sim("no-such-arch", "float"),
+        BatchPolicy::default(),
+        MetricsHub::new(),
+    );
+    assert!(err.is_err());
+}
+
+// ---------------------------------------------------------------------------
+// mapper monotonicity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fc_layer_cost_monotone_in_width_both_modes() {
+    for mode in [AccumulateMode::Binary, AccumulateMode::Mux] {
+        let cfg = ExecConfig { mode, ..Default::default() };
+        forall_ok(
+            24,
+            |r| {
+                let (a, b) = (gen::layer_width(r), gen::layer_width(r));
+                let (c, d) = (gen::layer_width(r), gen::layer_width(r));
+                // ordered pairs: (n1, m1) <= (n2, m2) componentwise
+                (a.min(b), c.min(d), a.max(b), c.max(d))
+            },
+            |&(n1, m1, n2, m2)| {
+                let small = map_layer(&Layer::Fc { n: n1, m: m1 }, &cfg);
+                let big = map_layer(&Layer::Fc { n: n2, m: m2 }, &cfg);
+                if big.ledger.ns + 1e-9 < small.ledger.ns {
+                    return Err(format!(
+                        "latency shrank: ({n1},{m1})={} vs ({n2},{m2})={} [{mode:?}]",
+                        small.ledger.ns, big.ledger.ns
+                    ));
+                }
+                if big.ledger.pj + 1e-9 < small.ledger.pj {
+                    return Err(format!(
+                        "energy shrank: ({n1},{m1}) vs ({n2},{m2}) [{mode:?}]"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn topology_cost_monotone_under_layer_widening() {
+    // Widening any single FC layer of a topology must not reduce the
+    // whole-topology latency/energy.
+    let cfg = ExecConfig::default();
+    forall_ok(
+        16,
+        |r| (gen::layer_width(r), 1 + r.below(32) as usize),
+        |&(extra, m)| {
+            let base = odin::ann::topology::cnn1();
+            let mut widened = base.clone();
+            // widen fc1's fan-in and neuron count
+            if let Layer::Fc { n, m: m0 } = widened.layers[2] {
+                widened.layers[2] = Layer::Fc { n: n + extra, m: m0 + m };
+            }
+            let c0 = map_topology(&base, &cfg);
+            let c1 = map_topology(&widened, &cfg);
+            if c1.total_ledger().ns + 1e-9 < c0.total_ledger().ns {
+                return Err(format!("latency shrank when widening by (+{extra}, +{m})"));
+            }
+            if c1.total_ledger().pj + 1e-9 < c0.total_ledger().pj {
+                return Err(format!("energy shrank when widening by (+{extra}, +{m})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn larger_topologies_cost_no_less() {
+    use odin::ann::topology::{cnn1, cnn2, vgg1, vgg2};
+    let cfg = ExecConfig::default();
+    let costs: Vec<f64> = [cnn1(), cnn2(), vgg1(), vgg2()]
+        .iter()
+        .map(|t| map_topology(t, &cfg).total_ledger().ns)
+        .collect();
+    assert!(costs[0] < costs[1], "cnn1 < cnn2");
+    assert!(costs[1] < costs[2], "cnn2 < vgg1");
+    assert!(costs[2] < costs[3], "vgg1 < vgg2 (extra 1x1 convs)");
+}
