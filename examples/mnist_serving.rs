@@ -1,36 +1,52 @@
 //! End-to-end driver (EXPERIMENTS.md §E2E): serve the whole test split
-//! through the dynamic-batching coordinator, measuring accuracy,
+//! through the sharded dynamic-batching coordinator, measuring accuracy,
 //! wall-clock latency/throughput, and the simulated in-PCRAM cost per
 //! request.  Runs hermetically on the SimBackend; with `make artifacts`
 //! the real weights and the real synth-MNIST split are served (accuracy
 //! is only meaningful then).
 //!
 //! ```bash
-//! cargo run --release --example mnist_serving
+//! cargo run --release --example mnist_serving             # cnn1, auto shards
+//! cargo run --release --example mnist_serving -- cnn2 4   # arch, shard count
 //! ```
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
-use odin::coordinator::{BatchPolicy, Engine, MetricsHub, Server, SYNTHETIC_SEED};
+use odin::coordinator::{
+    BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
+};
 use odin::dataset::TestSet;
 
-const CLIENT_THREADS: usize = 8;
+// Enough concurrent clients to keep several engine batches in flight —
+// fewer in-flight requests than one batch (32) would serialize the
+// shards and hide the pool's parallelism.
+const CLIENT_THREADS: usize = 64;
 
 fn main() -> Result<()> {
-    let arch = std::env::args().nth(1).unwrap_or_else(|| "cnn1".into());
+    let args: Vec<String> = std::env::args().collect();
+    let arch = args.get(1).cloned().unwrap_or_else(|| "cnn1".into());
+    let shards: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0);
+
     let metrics = MetricsHub::new();
-    let arch_f = arch.clone();
-    let (server, client) = Server::spawn(
-        move || Engine::sim_auto("artifacts", &arch_f, "fast"),
+    let weights = ModelWeights::load_or_synthetic("artifacts", &arch, SYNTHETIC_SEED)?;
+    // Split the cores between shards and each shard's row-parallelism so
+    // an auto-sized pool never oversubscribes the host.
+    let threads = EnginePool::threads_per_shard(shards);
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&weights, "fast", threads),
+        shards, // 0 = one shard per core
         BatchPolicy::default(),
         metrics.clone(),
     )?;
 
     let test = Arc::new(TestSet::load_or_synthetic("artifacts", 2048, SYNTHETIC_SEED)?);
     let n = test.len();
-    println!("serving {n} requests for {arch}/fast [sim] from {CLIENT_THREADS} client threads ...");
+    println!(
+        "serving {n} requests for {arch}/fast [sim] on {} shard(s) from {CLIENT_THREADS} client threads ...",
+        pool.shards()
+    );
 
     let correct = Arc::new(AtomicUsize::new(0));
     let t0 = std::time::Instant::now();
@@ -54,8 +70,8 @@ fn main() -> Result<()> {
         h.join().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
-    drop(client); // release the request channel so the batcher loop exits
-    server.shutdown();
+    drop(client); // release the request channel so the dispatcher exits
+    pool.shutdown();
 
     let acc = 100.0 * correct.load(Ordering::Relaxed) as f64 / n as f64;
     println!("\naccuracy: {acc:.2}%  ({} / {} correct)", correct.load(Ordering::Relaxed), n);

@@ -1,0 +1,73 @@
+//! Bank-parallel serving scale-out: end-to-end requests/s through the
+//! `EnginePool` with 1 shard vs one shard per core, identical weights and
+//! batch policy.
+//!
+//! The workload is open-loop: the whole request set is enqueued up
+//! front, then drained.  (A closed loop of a few blocking clients keeps
+//! fewer requests in flight than one engine batch, which serializes the
+//! shards and would measure ~1x regardless of pool size.)  Per-shard
+//! backends are pinned to a single row-worker so the measured speedup
+//! isolates the *sharding* axis; the backend's own row parallelism is
+//! measured by the shards=1, threads=auto row.
+//!
+//! ```bash
+//! cargo bench --bench serving_throughput
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+use odin::coordinator::{
+    BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
+};
+use odin::dataset::TestSet;
+
+const REQUESTS: usize = 1024;
+
+/// Serve `REQUESTS` open-loop requests through a pool and return
+/// requests/s.  `backend_threads` caps each shard's row parallelism
+/// (0 = auto).
+fn run(weights: &ModelWeights, shards: usize, backend_threads: usize) -> Result<f64> {
+    let w = weights.clone();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&w, "fast", backend_threads),
+        shards,
+        BatchPolicy::default(),
+        MetricsHub::new(),
+    )?;
+    let test = TestSet::synthetic(256, SYNTHETIC_SEED);
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..REQUESTS)
+        .map(|i| client.submit(test.samples[i % test.len()].image.clone()))
+        .collect();
+    for rx in receivers {
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("server stopped"))?
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    drop(client);
+    pool.shutdown();
+    Ok(REQUESTS as f64 / dt)
+}
+
+fn main() -> Result<()> {
+    let cores = EnginePool::auto_shards();
+    let weights = ModelWeights::synthetic("cnn1", SYNTHETIC_SEED)?;
+    // Build the shared CNT16 table up front so no run pays for it.
+    odin::runtime::sim::shared_cnt16();
+
+    println!("== bench group: serving_throughput ({REQUESTS} open-loop requests, {cores} cores) ==");
+    let single = run(&weights, 1, 1)?;
+    println!("{:<44} {single:>10.0} req/s", "shards=1 threads=1 (serial baseline)");
+    let single_rowpar = run(&weights, 1, 0)?;
+    println!("{:<44} {single_rowpar:>10.0} req/s", "shards=1 threads=auto (row-parallel)");
+    let pooled = run(&weights, cores, 1)?;
+    println!("{:<44} {pooled:>10.0} req/s", format!("shards={cores} threads=1 (bank-parallel)"));
+    println!(
+        "scale-out speedup: {:.2}x from sharding, {:.2}x from row parallelism",
+        pooled / single,
+        single_rowpar / single,
+    );
+    Ok(())
+}

@@ -1,20 +1,26 @@
-//! Dynamic batcher: the serving-loop heart of the L3 coordinator.
+//! Request/response plumbing of the serving layer: the submission
+//! [`Client`], the [`BatchPolicy`] (max batch + linger window), and the
+//! single-shard [`Server`] — the degenerate one-worker case of the
+//! sharded [`EnginePool`](super::EnginePool), kept as the minimal API for
+//! tests, examples, and backends that only want one engine thread.
 //!
 //! Requests arrive from any number of producer threads over an MPSC
-//! channel; a single engine thread drains the queue, forms the largest
+//! channel; the pool's dispatcher drains the queue, forms the largest
 //! batch the backend's variants allow (bounded by a linger window so a
-//! lone request is never stuck), executes, and answers each request over
-//! its own response channel.  std threads + channels — tokio is
-//! unavailable offline, and a single-owner engine thread also sidesteps
+//! lone request is never stuck), and each shard answers every request
+//! over its own response channel.  std threads + channels — tokio is
+//! unavailable offline, and single-owner engine threads also sidestep
 //! PJRT executable aliasing when that backend is enabled.
 //!
 //! Invariants (property-tested in `rust/tests/props.rs`): no request is
 //! ever dropped — every submit gets exactly one response or a disconnect;
-//! a formed batch never exceeds `min(policy.max_batch, engine max)`; a
+//! every *executed chunk* fits one engine (on a single-shard [`Server`]
+//! that bounds the whole formed batch by `min(policy.max_batch, engine
+//! max)`; an N-shard pool may form up to N engine-maxes and split); a
 //! lone request waits at most the linger window before executing.
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::thread::JoinHandle;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -23,33 +29,40 @@ use crate::runtime::Executor;
 
 use super::engine::{Engine, Prediction};
 use super::metrics::MetricsHub;
+use super::pool::EnginePool;
 
 /// One in-flight request.
-struct Request {
-    image: Vec<u8>,
-    enqueued: Instant,
-    respond: Sender<Result<Response, String>>,
+pub(crate) struct Request {
+    pub(crate) image: Vec<u8>,
+    pub(crate) enqueued: Instant,
+    pub(crate) respond: Sender<std::result::Result<Response, String>>,
 }
 
 /// Per-request response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The model's output for this request's image.
     pub prediction: Prediction,
-    /// Time spent queued before the batch formed.
+    /// Time spent queued before the batch formed (ns).
     pub queue_ns: u64,
-    /// Backend execution time of the whole batch (sim or PJRT).
+    /// Backend execution time of the whole batch (sim or PJRT, ns).
     pub exec_ns: u64,
-    /// Batch this request rode in.
+    /// Size of the batch this request rode in.
     pub batch: usize,
-    /// Simulated in-PCRAM latency/energy attributed to this request.
+    /// Pool shard that executed the batch (0 for a single-shard server).
+    pub shard: usize,
+    /// Simulated in-PCRAM latency attributed to this request (ns).
     pub sim_ns: f64,
+    /// Simulated in-PCRAM energy attributed to this request (pJ).
     pub sim_pj: f64,
 }
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
-    /// Max requests per batch (clamped to the engine's max variant).
+    /// Max requests per formed batch.  Clamped to the engine's largest
+    /// variant on a single-shard server; on an N-shard pool it may reach
+    /// N times that — the dispatcher splits such batches across shards.
     pub max_batch: usize,
     /// How long the first request may linger while the batch fills.
     pub linger: Duration,
@@ -61,15 +74,21 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Handle for submitting requests.
+/// Handle for submitting requests; cheap to clone across producer
+/// threads.  Dropping every clone releases the request queue, which is
+/// what lets the server/pool shut down.
 #[derive(Clone)]
 pub struct Client {
     tx: Sender<Request>,
 }
 
 impl Client {
+    pub(crate) fn new(tx: Sender<Request>) -> Self {
+        Client { tx }
+    }
+
     /// Submit one image; returns a receiver for the response.
-    pub fn submit(&self, image: Vec<u8>) -> Receiver<Result<Response, String>> {
+    pub fn submit(&self, image: Vec<u8>) -> Receiver<std::result::Result<Response, String>> {
         let (tx, rx) = mpsc::channel();
         let req = Request { image, enqueued: Instant::now(), respond: tx };
         // If the server is gone the receiver will see a disconnect.
@@ -86,126 +105,60 @@ impl Client {
     }
 }
 
-/// The running batcher.
+/// A running single-engine server: an [`EnginePool`] with exactly one
+/// shard.
+///
+/// ```
+/// use odin::coordinator::{BatchPolicy, Engine, MetricsHub, Server};
+///
+/// let (server, client) =
+///     Server::spawn(|| Engine::sim("cnn1", "float"), BatchPolicy::default(), MetricsHub::new())
+///         .unwrap();
+/// let response = client.infer_blocking(vec![0u8; 784]).unwrap();
+/// assert_eq!(response.shard, 0);
+/// drop(client);
+/// server.shutdown();
+/// ```
 pub struct Server {
-    handle: Option<JoinHandle<()>>,
-    tx: Option<Sender<Request>>,
+    pool: EnginePool,
 }
 
 impl Server {
     /// Spawn the engine thread.  Backend handles (e.g. PJRT) need not be
-    /// `Send`, so the engine is *constructed on* the batcher thread from a
+    /// `Send`, so the engine is *constructed on* the worker thread from a
     /// Send factory and lives there for its whole life; construction
     /// errors are reported back synchronously.
-    pub fn spawn<F, E>(factory: F, policy: BatchPolicy, metrics: MetricsHub) -> Result<(Server, Client)>
+    pub fn spawn<F, E>(
+        factory: F,
+        policy: BatchPolicy,
+        metrics: MetricsHub,
+    ) -> Result<(Server, Client)>
     where
         E: Executor + 'static,
         F: FnOnce() -> Result<Engine<E>> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let handle = std::thread::Builder::new()
-            .name("odin-batcher".into())
-            .spawn(move || {
-                let engine = match factory() {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                };
-                Self::run(engine, policy, metrics, rx)
-            })
-            .expect("spawning batcher thread");
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(msg)) => {
-                let _ = handle.join();
-                anyhow::bail!("engine construction failed: {msg}");
-            }
-            Err(_) => anyhow::bail!("batcher thread died during construction"),
-        }
-        Ok((Server { handle: Some(handle), tx: Some(tx.clone()) }, Client { tx }))
+        // The pool wants a per-shard Fn factory; with one shard the
+        // FnOnce is invoked exactly once, so smuggle it through a cell.
+        let cell = Arc::new(Mutex::new(Some(factory)));
+        let (pool, client) = EnginePool::spawn(
+            move |_shard| {
+                let factory = cell
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("single-shard pool invokes the factory exactly once");
+                factory()
+            },
+            1,
+            policy,
+            metrics,
+        )?;
+        Ok((Server { pool }, client))
     }
 
-    fn run<E: Executor>(
-        engine: Engine<E>,
-        policy: BatchPolicy,
-        metrics: MetricsHub,
-        rx: Receiver<Request>,
-    ) {
-        let max_batch = policy.max_batch.min(engine.max_batch()).max(1);
-        loop {
-            // block for the first request
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => return, // all clients gone
-            };
-            let deadline = Instant::now() + policy.linger;
-            let mut batch = vec![first];
-            while batch.len() < max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => batch.push(r),
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => break,
-                }
-            }
-            Self::execute(&engine, &metrics, batch);
-        }
-    }
-
-    fn execute<E: Executor>(engine: &Engine<E>, metrics: &MetricsHub, batch: Vec<Request>) {
-        let images: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
-        match engine.infer(&images) {
-            Ok((preds, exec)) => {
-                let per_req_sim_ns = exec.sim_ns / batch.len() as f64;
-                let per_req_sim_pj = exec.sim_pj / batch.len() as f64;
-                for (req, pred) in batch.into_iter().zip(preds) {
-                    let queue_ns = req.enqueued.elapsed().as_nanos() as u64 - exec.exec_ns.min(
-                        req.enqueued.elapsed().as_nanos() as u64,
-                    );
-                    let resp = Response {
-                        prediction: pred,
-                        queue_ns,
-                        exec_ns: exec.exec_ns,
-                        batch: exec.batch,
-                        sim_ns: per_req_sim_ns,
-                        sim_pj: per_req_sim_pj,
-                    };
-                    metrics.record(&resp);
-                    let _ = req.respond.send(Ok(resp));
-                }
-            }
-            Err(e) => {
-                let msg = format!("inference failed: {e:#}");
-                for req in batch {
-                    let _ = req.respond.send(Err(msg.clone()));
-                }
-            }
-        }
-    }
-
-    /// Stop accepting requests and join the engine thread.
-    pub fn shutdown(mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+    /// Stop accepting requests and join the engine thread; call after
+    /// dropping all [`Client`] clones.
+    pub fn shutdown(self) {
+        self.pool.shutdown();
     }
 }

@@ -26,17 +26,21 @@ pub const SYNTHETIC_SEED: u64 = 0x0D1A;
 /// Inference output for one image.
 #[derive(Clone, Debug)]
 pub struct Prediction {
+    /// Raw per-class logits.
     pub logits: [f32; 10],
+    /// Index of the largest logit (the predicted class).
     pub argmax: u8,
 }
 
 /// Engine statistics for one executed batch.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchExec {
+    /// Number of real (caller-supplied) images in the batch.
     pub batch: usize,
     /// Total padded rows executed (sums across splits when the batch
     /// exceeded the largest backend variant).
     pub padded_batch: usize,
+    /// Wall-clock backend execution time (ns).
     pub exec_ns: u64,
     /// Simulated ODIN in-PCRAM latency for the batch (ns).
     pub sim_ns: f64,
@@ -44,8 +48,23 @@ pub struct BatchExec {
     pub sim_pj: f64,
 }
 
+/// One arch+mode bound to a compute backend, with the mapper's simulated
+/// per-inference PCRAM cost attached.
+///
+/// ```
+/// use odin::coordinator::Engine;
+///
+/// let engine = Engine::sim("cnn1", "float").unwrap();
+/// let image = vec![7u8; 784];
+/// let (predictions, exec) = engine.infer(&[&image]).unwrap();
+/// assert_eq!(predictions.len(), 1);
+/// assert_eq!(exec.batch, 1);
+/// assert!(exec.sim_ns > 0.0, "every inference carries its simulated PCRAM cost");
+/// ```
 pub struct Engine<E: Executor> {
+    /// Topology name ("cnn1", "cnn2", ...).
     pub arch: String,
+    /// Arithmetic mode ("fast", "sc", "mux", "float").
     pub mode: String,
     exec: E,
     /// Supported batch sizes, ascending.
@@ -78,14 +97,17 @@ impl<E: Executor> Engine<E> {
         })
     }
 
+    /// The wrapped compute backend.
     pub fn executor(&self) -> &E {
         &self.exec
     }
 
+    /// Supported batch sizes, ascending.
     pub fn batch_sizes(&self) -> Vec<usize> {
         self.sizes.clone()
     }
 
+    /// Largest supported batch size.
     pub fn max_batch(&self) -> usize {
         *self.sizes.last().unwrap()
     }
@@ -147,6 +169,7 @@ impl<E: Executor> Engine<E> {
         Ok((preds, exec))
     }
 
+    /// The mapper's simulated `(latency ns, energy pJ)` per inference.
     pub fn sim_cost_per_inference(&self) -> (f64, f64) {
         (self.sim_ns_per_inf, self.sim_pj_per_inf)
     }
@@ -161,6 +184,7 @@ impl Engine<SimBackend> {
         Self::sim_seeded(arch, mode, SYNTHETIC_SEED)
     }
 
+    /// Artifact-free engine with synthetic weights from an explicit seed.
     pub fn sim_seeded(arch: &str, mode: &str, seed: u64) -> Result<Self> {
         Self::sim_from_weights(&ModelWeights::synthetic(arch, seed)?, mode)
     }
@@ -168,8 +192,20 @@ impl Engine<SimBackend> {
     /// Sim engine over an explicit weight store (real artifact weights or
     /// synthetic).
     pub fn sim_from_weights(weights: &ModelWeights, mode: &str) -> Result<Self> {
+        Self::sim_from_weights_threads(weights, mode, 0)
+    }
+
+    /// Like [`Engine::sim_from_weights`] but with an explicit row-level
+    /// parallelism budget for the backend (`0` = one worker per core) —
+    /// pass [`EnginePool::threads_per_shard`](super::EnginePool::threads_per_shard)
+    /// to split the host cores between a pool's shards.
+    pub fn sim_from_weights_threads(
+        weights: &ModelWeights,
+        mode: &str,
+        threads: usize,
+    ) -> Result<Self> {
         let sim_mode = SimMode::parse(mode)?;
-        let backend = SimBackend::new(weights.sim_model()?, sim_mode);
+        let backend = SimBackend::new(weights.sim_model()?, sim_mode).with_threads(threads);
         Self::from_executor(&weights.arch, mode, backend)
     }
 

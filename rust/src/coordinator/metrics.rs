@@ -1,59 +1,195 @@
-//! Serving metrics: shared, thread-safe aggregation of request outcomes.
+//! Serving metrics: shared, thread-safe aggregation of request outcomes,
+//! pooled across the whole server and broken down per shard.
+//!
+//! **Snapshot consistency.**  Every executed batch is recorded under a
+//! *single* lock acquisition ([`MetricsHub::record_batch`]), so a
+//! snapshot taken concurrently from another thread
+//! ([`MetricsHub::report`]) always observes whole batches.  The earlier
+//! per-response recording let a snapshot land in the middle of a batch's
+//! response loop and under-report `padded_rows` / `mean_batch`; the
+//! regression test `snapshots_never_observe_partial_batches` pins the
+//! fixed behavior.
+//!
+//! Queue-depth gauges are shared atomics owned by the engine pool (the
+//! dispatcher increments, the shard worker decrements); the hub holds a
+//! reference per shard and samples them at report time.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
 
 use super::batcher::Response;
+use super::engine::BatchExec;
+
+/// Per-shard aggregate state.
+#[derive(Default)]
+struct ShardSlot {
+    requests: u64,
+    errors: u64,
+    batches: u64,
+    padded_rows: u64,
+    busy_ns: u64,
+    exec_us: Summary,
+    depth_gauge: Option<Arc<AtomicUsize>>,
+}
 
 #[derive(Default)]
 struct Inner {
     requests: u64,
+    errors: u64,
+    batches: u64,
+    padded_rows: u64,
     batches_seen: Summary,
     queue_us: Summary,
     exec_us: Summary,
     sim_us: Summary,
     sim_pj: f64,
     started: Option<Instant>,
+    shards: Vec<ShardSlot>,
+}
+
+impl Inner {
+    fn slot(&mut self, shard: usize) -> &mut ShardSlot {
+        if self.shards.len() <= shard {
+            self.shards.resize_with(shard + 1, ShardSlot::default);
+        }
+        &mut self.shards[shard]
+    }
 }
 
 /// Cloneable handle to the shared metrics state.
+///
+/// ```
+/// use odin::coordinator::MetricsHub;
+///
+/// let hub = MetricsHub::new();
+/// let report = hub.report();
+/// assert_eq!(report.requests, 0);
+/// assert_eq!(report.throughput_rps, 0.0);
+/// ```
 #[derive(Clone, Default)]
 pub struct MetricsHub(Arc<Mutex<Inner>>);
 
-/// Snapshot for reporting.
+/// Point-in-time aggregate over one shard (see [`MetricsReport::shards`]).
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    /// Shard index within the pool.
+    pub shard: usize,
+    /// Requests answered successfully by this shard.
+    pub requests: u64,
+    /// Requests that failed in this shard's backend.
+    pub errors: u64,
+    /// Batches this shard executed.
+    pub batches: u64,
+    /// Total padded rows this shard executed (>= `requests`).
+    pub padded_rows: u64,
+    /// Requests dispatched to this shard but not yet answered.
+    pub queue_depth: usize,
+    /// Fraction of wall time spent executing batches, in [0, 1].
+    pub utilization: f64,
+    /// Median per-batch execution time (us).
+    pub exec_us_p50: f64,
+    /// 99th-percentile per-batch execution time (us).
+    pub exec_us_p99: f64,
+}
+
+/// Pooled snapshot for reporting (plus the per-shard breakdown).
 #[derive(Clone, Debug)]
 pub struct MetricsReport {
+    /// Requests answered successfully, pool-wide.
     pub requests: u64,
+    /// Requests that failed in a backend, pool-wide.
+    pub errors: u64,
+    /// Batches executed, pool-wide.
+    pub batches: u64,
+    /// Total padded rows executed, pool-wide (>= `requests`).
+    pub padded_rows: u64,
+    /// Successful requests per second since the first recorded batch.
     pub throughput_rps: f64,
+    /// Mean executed-batch size weighted per request.
     pub mean_batch: f64,
+    /// Median time a request spent queued before its batch ran (us).
     pub queue_us_p50: f64,
+    /// 99th-percentile queue time (us).
     pub queue_us_p99: f64,
+    /// Median backend execution time of the batch a request rode in (us).
     pub exec_us_p50: f64,
+    /// 99th-percentile backend execution time (us).
     pub exec_us_p99: f64,
+    /// Mean simulated in-PCRAM latency attributed per request (us).
     pub sim_us_mean: f64,
+    /// Total simulated in-PCRAM energy (mJ).
     pub sim_mj_total: f64,
+    /// Per-shard breakdown, indexed by shard id.
+    pub shards: Vec<ShardReport>,
 }
 
 impl MetricsHub {
+    /// Fresh, empty hub.
     pub fn new() -> Self {
         Self::default()
     }
 
-    pub fn record(&self, resp: &Response) {
+    /// Pre-size the per-shard table so a report lists every shard of a
+    /// pool even before it has served traffic.
+    pub fn ensure_shards(&self, n: usize) {
         let mut g = self.0.lock().unwrap();
-        if g.started.is_none() {
-            g.started = Some(Instant::now());
+        if n > 0 {
+            g.slot(n - 1);
         }
-        g.requests += 1;
-        g.batches_seen.push(resp.batch as f64);
-        g.queue_us.push(resp.queue_ns as f64 / 1e3);
-        g.exec_us.push(resp.exec_ns as f64 / 1e3);
-        g.sim_us.push(resp.sim_ns / 1e3);
-        g.sim_pj += resp.sim_pj;
     }
 
+    /// Attach the shared queue-depth gauge for `shard` (the pool's
+    /// dispatcher increments it, the shard worker decrements it); reports
+    /// sample the gauge at snapshot time.
+    pub fn attach_depth_gauge(&self, shard: usize, gauge: Arc<AtomicUsize>) {
+        let mut g = self.0.lock().unwrap();
+        g.slot(shard).depth_gauge = Some(gauge);
+    }
+
+    /// Record one executed batch — all of its responses and the batch
+    /// ledger — atomically, under a single lock acquisition, so concurrent
+    /// [`MetricsHub::report`] snapshots never observe a half-recorded
+    /// batch.
+    pub fn record_batch(&self, shard: usize, exec: &BatchExec, responses: &[Response]) {
+        let mut g = self.0.lock().unwrap();
+        if g.started.is_none() {
+            // The measurement window opens when the first batch *started*
+            // executing, not when it finished recording — otherwise a
+            // short run divides the first batch's busy_ns by a near-zero
+            // elapsed window and utilization spuriously saturates.
+            let now = Instant::now();
+            g.started =
+                Some(now.checked_sub(Duration::from_nanos(exec.exec_ns)).unwrap_or(now));
+        }
+        g.requests += responses.len() as u64;
+        g.batches += 1;
+        g.padded_rows += exec.padded_batch as u64;
+        for resp in responses {
+            g.batches_seen.push(resp.batch as f64);
+            g.queue_us.push(resp.queue_ns as f64 / 1e3);
+            g.exec_us.push(resp.exec_ns as f64 / 1e3);
+            g.sim_us.push(resp.sim_ns / 1e3);
+            g.sim_pj += resp.sim_pj;
+        }
+        let slot = g.slot(shard);
+        slot.requests += responses.len() as u64;
+        slot.batches += 1;
+        slot.padded_rows += exec.padded_batch as u64;
+        slot.busy_ns += exec.exec_ns;
+        slot.exec_us.push(exec.exec_ns as f64 / 1e3);
+    }
+
+    /// Record `k` requests that failed in `shard`'s backend.
+    pub fn record_failures(&self, shard: usize, k: usize) {
+        let mut g = self.0.lock().unwrap();
+        g.errors += k as u64;
+        g.slot(shard).errors += k as u64;
+    }
+
+    /// Consistent snapshot of the pooled and per-shard aggregates.
     pub fn report(&self) -> MetricsReport {
         let mut g = self.0.lock().unwrap();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
@@ -61,30 +197,81 @@ impl MetricsHub {
         let mean_batch = g.batches_seen.mean();
         let sim_us_mean = g.sim_us.mean();
         let sim_mj_total = g.sim_pj / 1e9;
+        let queue_us_p50 = g.queue_us.percentile(50.0);
+        let queue_us_p99 = g.queue_us.percentile(99.0);
+        let exec_us_p50 = g.exec_us.percentile(50.0);
+        let exec_us_p99 = g.exec_us.percentile(99.0);
+        let (errors, batches, padded_rows) = (g.errors, g.batches, g.padded_rows);
+        let shards = g
+            .shards
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| ShardReport {
+                shard: i,
+                requests: s.requests,
+                errors: s.errors,
+                batches: s.batches,
+                padded_rows: s.padded_rows,
+                queue_depth: s
+                    .depth_gauge
+                    .as_ref()
+                    .map(|d| d.load(Ordering::Relaxed))
+                    .unwrap_or(0),
+                utilization: if elapsed > 0.0 {
+                    (s.busy_ns as f64 / 1e9 / elapsed).min(1.0)
+                } else {
+                    0.0
+                },
+                exec_us_p50: s.exec_us.percentile(50.0),
+                exec_us_p99: s.exec_us.percentile(99.0),
+            })
+            .collect();
         MetricsReport {
             requests,
+            errors,
+            batches,
+            padded_rows,
             throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
             mean_batch,
-            queue_us_p50: g.queue_us.percentile(50.0),
-            queue_us_p99: g.queue_us.percentile(99.0),
-            exec_us_p50: g.exec_us.percentile(50.0),
-            exec_us_p99: g.exec_us.percentile(99.0),
+            queue_us_p50,
+            queue_us_p99,
+            exec_us_p50,
+            exec_us_p99,
             sim_us_mean,
             sim_mj_total,
+            shards,
         }
     }
 }
 
 impl MetricsReport {
+    /// Human-readable dump: the pooled aggregates followed by one line per
+    /// shard (requests, batches, utilization, queue depth, exec p50/p99).
     pub fn print(&self, label: &str) {
         println!("-- metrics: {label} --");
         println!("requests            {}", self.requests);
+        if self.errors > 0 {
+            println!("errors              {}", self.errors);
+        }
         println!("throughput          {:.1} req/s", self.throughput_rps);
+        println!("batches             {} ({} padded rows)", self.batches, self.padded_rows);
         println!("mean batch          {:.2}", self.mean_batch);
         println!("queue p50/p99       {:.1} / {:.1} us", self.queue_us_p50, self.queue_us_p99);
         println!("exec  p50/p99       {:.1} / {:.1} us", self.exec_us_p50, self.exec_us_p99);
         println!("sim ODIN latency    {:.2} us/inf", self.sim_us_mean);
         println!("sim ODIN energy     {:.4} mJ total", self.sim_mj_total);
+        for s in &self.shards {
+            println!(
+                "shard {:<2}  {:>7} req  {:>6} batches  util {:>5.1}%  depth {:>3}  exec p50/p99 {:.1} / {:.1} us",
+                s.shard,
+                s.requests,
+                s.batches,
+                100.0 * s.utilization,
+                s.queue_depth,
+                s.exec_us_p50,
+                s.exec_us_p99,
+            );
+        }
     }
 }
 
@@ -99,8 +286,19 @@ mod tests {
             queue_ns: 1000,
             exec_ns,
             batch,
+            shard: 0,
             sim_ns: 5000.0,
             sim_pj: 2.0e6,
+        }
+    }
+
+    fn exec(batch: usize, exec_ns: u64) -> BatchExec {
+        BatchExec {
+            batch,
+            padded_batch: batch,
+            exec_ns,
+            sim_ns: 5000.0 * batch as f64,
+            sim_pj: 2.0e6 * batch as f64,
         }
     }
 
@@ -108,10 +306,11 @@ mod tests {
     fn aggregates_requests() {
         let m = MetricsHub::new();
         for _ in 0..10 {
-            m.record(&resp(4, 2_000_000));
+            m.record_batch(0, &exec(1, 2_000_000), &[resp(4, 2_000_000)]);
         }
         let r = m.report();
         assert_eq!(r.requests, 10);
+        assert_eq!(r.batches, 10);
         assert!((r.mean_batch - 4.0).abs() < 1e-9);
         assert!((r.exec_us_p50 - 2000.0).abs() < 1e-6);
         assert!((r.sim_mj_total - 10.0 * 2.0e6 / 1e9).abs() < 1e-12);
@@ -122,5 +321,68 @@ mod tests {
         let r = MetricsHub::new().report();
         assert_eq!(r.requests, 0);
         assert_eq!(r.throughput_rps, 0.0);
+        assert!(r.shards.is_empty());
+    }
+
+    #[test]
+    fn per_shard_breakdown_attributes_batches() {
+        let m = MetricsHub::new();
+        m.ensure_shards(3);
+        m.record_batch(0, &exec(2, 1_000), &[resp(2, 1_000), resp(2, 1_000)]);
+        m.record_batch(2, &exec(1, 3_000), &[resp(1, 3_000)]);
+        m.record_failures(1, 4);
+        let r = m.report();
+        assert_eq!(r.shards.len(), 3);
+        assert_eq!(r.requests, 3);
+        assert_eq!(r.errors, 4);
+        assert_eq!(r.shards[0].requests, 2);
+        assert_eq!(r.shards[0].batches, 1);
+        assert_eq!(r.shards[1].errors, 4);
+        assert_eq!(r.shards[2].requests, 1);
+    }
+
+    #[test]
+    fn depth_gauge_is_sampled_at_report_time() {
+        let m = MetricsHub::new();
+        let gauge = Arc::new(AtomicUsize::new(0));
+        m.attach_depth_gauge(0, Arc::clone(&gauge));
+        gauge.store(7, Ordering::Relaxed);
+        assert_eq!(m.report().shards[0].queue_depth, 7);
+        gauge.store(2, Ordering::Relaxed);
+        assert_eq!(m.report().shards[0].queue_depth, 2);
+    }
+
+    #[test]
+    fn snapshots_never_observe_partial_batches() {
+        // Regression for the drain race: a report taken while a batch is
+        // being recorded must see either none or all of it.  With the old
+        // per-response recording the reader below observed request counts
+        // that were not multiples of the batch size.
+        use std::sync::atomic::AtomicBool;
+
+        let hub = MetricsHub::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let hub = hub.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let responses: Vec<Response> = (0..8).map(|_| resp(8, 1_000)).collect();
+                let e = exec(8, 1_000);
+                for _ in 0..500 {
+                    hub.record_batch(0, &e, &responses);
+                }
+                stop.store(true, Ordering::Relaxed);
+            })
+        };
+        while !stop.load(Ordering::Relaxed) {
+            let r = hub.report();
+            assert_eq!(r.requests % 8, 0, "snapshot saw a partially recorded batch");
+            assert_eq!(r.padded_rows, r.batches * 8);
+            assert_eq!(r.requests, r.batches * 8);
+        }
+        writer.join().unwrap();
+        let r = hub.report();
+        assert_eq!(r.requests, 500 * 8);
+        assert_eq!(r.batches, 500);
     }
 }

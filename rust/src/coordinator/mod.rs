@@ -1,25 +1,37 @@
 //! L3 coordinator: weight store, model engine (generic over the compute
-//! backend), dynamic batcher, and serving metrics.  The inference server
-//! composes as
+//! backend), dynamic batcher, the sharded engine pool, and serving
+//! metrics.  The inference server composes as
 //!
 //! ```text
-//! clients --submit--> [mpsc queue] --drain--> Engine<E: Executor>
-//!                         |                      |
-//!                    BatchPolicy        mapper's per-inference
-//!                  (max batch, linger)  PCRAM ledger attached
+//! clients --submit--> [mpsc queue] --drain--> dispatcher
+//!                         |                      | split + least-loaded
+//!                    BatchPolicy          +------+------+
+//!                  (max batch, linger)    v      v      v
+//!                                      shard0 shard1 .. shardN-1
+//!                                      Engine<E: Executor> each
+//!                                         |  mapper's per-inference
+//!                                         |  PCRAM ledger attached
+//!                                         +--> MetricsHub (per-shard
+//!                                              + pooled aggregates)
 //! ```
 //!
 //! `E` is the pure-Rust [`crate::runtime::SimBackend`] by default (no
 //! Python, no artifacts: weights come from the deterministic synthetic
 //! generator or from `artifacts/weights/` when present) or the PJRT
-//! executor under `--features pjrt`.
+//! executor under `--features pjrt`.  [`EnginePool`] is the bank-parallel
+//! scale-out — one engine worker per shard, mirroring ODIN's concurrent
+//! PCRAM subarrays; [`Server`] is its single-shard degenerate case.  See
+//! `docs/ARCHITECTURE.md` for the whole-stack design.
+#![deny(missing_docs)]
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod pool;
 pub mod weights;
 
 pub use batcher::{BatchPolicy, Client, Response, Server};
-pub use engine::{Engine, Prediction, SimEngine, SYNTHETIC_SEED};
-pub use metrics::{MetricsHub, MetricsReport};
+pub use engine::{BatchExec, Engine, Prediction, SimEngine, SYNTHETIC_SEED};
+pub use metrics::{MetricsHub, MetricsReport, ShardReport};
+pub use pool::EnginePool;
 pub use weights::ModelWeights;

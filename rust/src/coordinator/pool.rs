@@ -1,0 +1,355 @@
+//! Sharded serving: the bank-parallel scale-out of the single-engine
+//! batcher.
+//!
+//! ODIN's throughput comes from parallelism *in the memory itself* — many
+//! PCRAM subarrays computing bit-parallel stochastic MACs concurrently.
+//! The host-side mirror of that design is the [`EnginePool`]: `N` engine
+//! workers ("shards"), each owning its own [`Engine`] built from the same
+//! weights, fed from one MPSC request queue by a dispatcher thread that
+//! forms batches exactly like the single-engine server and routes them to
+//! the least-loaded shard:
+//!
+//! ```text
+//! clients --submit--> [mpsc queue] --> dispatcher (linger + max-batch,
+//!                                          |        split + least-loaded)
+//!                        +----------------+----------------+
+//!                        v                v                v
+//!                   shard 0          shard 1    ...   shard N-1
+//!                 Engine<E> #0     Engine<E> #1      Engine<E> #N-1
+//!                        |                |                |
+//!                        +---- per-shard + pooled MetricsHub ----+
+//! ```
+//!
+//! A formed batch larger than one engine's biggest variant is *split*
+//! into per-shard chunks so it executes concurrently across shards;
+//! everything else is routed whole to the shard with the smallest queue
+//! depth (ties broken round-robin).  Because every backend is
+//! deterministic and every shard is built from identical weights, shard
+//! routing never changes predictions: pool outputs are bit-identical to a
+//! single engine serving the same requests (property-tested in
+//! `rust/tests/props.rs`).
+//!
+//! Invariants, inherited from the single-engine batcher and re-tested for
+//! the pool: no request is ever dropped or answered twice; a formed chunk
+//! never exceeds the engine's largest batch variant; a lone request waits
+//! at most the linger window.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::Executor;
+
+use super::batcher::{BatchPolicy, Client, Request, Response};
+use super::engine::Engine;
+use super::metrics::MetricsHub;
+
+/// Dispatcher-side handle to one shard worker.
+struct Shard {
+    tx: Sender<Vec<Request>>,
+    depth: Arc<AtomicUsize>,
+}
+
+/// A running sharded server: one dispatcher thread plus one engine worker
+/// thread per shard.
+///
+/// Quickstart — two shards serving the synthetic CNN:
+///
+/// ```
+/// use odin::coordinator::{BatchPolicy, Engine, EnginePool, MetricsHub};
+///
+/// let metrics = MetricsHub::new();
+/// let (pool, client) = EnginePool::spawn(
+///     |_shard| Engine::sim("cnn1", "float"),
+///     2,
+///     BatchPolicy::default(),
+///     metrics.clone(),
+/// )
+/// .unwrap();
+/// assert_eq!(pool.shards(), 2);
+///
+/// let response = client.infer_blocking(vec![0u8; 784]).unwrap();
+/// assert_eq!(response.prediction.logits.len(), 10);
+///
+/// drop(client); // release the request queue so the dispatcher exits
+/// pool.shutdown();
+/// assert_eq!(metrics.report().requests, 1);
+/// ```
+///
+/// Dropping the pool (implicitly or via [`EnginePool::shutdown`]) joins
+/// every pool thread, which — as with the single-engine server before it
+/// — only completes once all [`Client`] clones are gone: drop the
+/// clients first.
+pub struct EnginePool {
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    tx: Option<Sender<Request>>,
+}
+
+impl EnginePool {
+    /// Default shard count: one engine worker per available core.
+    pub fn auto_shards() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Row-parallelism budget for each shard's backend when `shards`
+    /// workers (`0` = [`EnginePool::auto_shards`], as in
+    /// [`EnginePool::spawn`]) share this host: the cores are split
+    /// between the two axes so an auto-sized pool never oversubscribes
+    /// (`max(1, cores / shards)`).
+    pub fn threads_per_shard(shards: usize) -> usize {
+        let n = if shards == 0 { Self::auto_shards() } else { shards };
+        (Self::auto_shards() / n).max(1)
+    }
+
+    /// Spawn `shards` engine workers (`0` means [`EnginePool::auto_shards`])
+    /// plus the dispatcher.
+    ///
+    /// `factory(shard_id)` runs *on each worker thread* — backend handles
+    /// (e.g. PJRT) need not be `Send`; the factory closure itself must be
+    /// `Send + Clone` so every shard can construct its own engine.  All
+    /// shards must construct successfully or the whole pool is torn down
+    /// and the first error is returned synchronously.
+    pub fn spawn<F, E>(
+        factory: F,
+        shards: usize,
+        policy: BatchPolicy,
+        metrics: MetricsHub,
+    ) -> Result<(EnginePool, Client)>
+    where
+        E: Executor + 'static,
+        F: Fn(usize) -> Result<Engine<E>> + Send + Clone + 'static,
+    {
+        let n = if shards == 0 { Self::auto_shards() } else { shards };
+        let mut workers = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        let mut readies = Vec::with_capacity(n);
+        for shard in 0..n {
+            let (btx, brx) = mpsc::channel::<Vec<Request>>();
+            let (rtx, rrx) = mpsc::channel::<std::result::Result<usize, String>>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let fac = factory.clone();
+            let hub = metrics.clone();
+            let gauge = Arc::clone(&depth);
+            let handle = std::thread::Builder::new()
+                .name(format!("odin-shard-{shard}"))
+                .spawn(move || {
+                    let engine = match fac(shard) {
+                        Ok(e) => {
+                            let _ = rtx.send(Ok(e.max_batch()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = rtx.send(Err(format!("{e:#}")));
+                            return;
+                        }
+                    };
+                    // The factory often captures a full weight store;
+                    // release it so each shard holds one model copy (the
+                    // engine's), not two, for its whole serving life.
+                    drop(fac);
+                    Self::worker(shard, engine, brx, hub, gauge);
+                })
+                .expect("spawning shard thread");
+            workers.push(handle);
+            handles.push(Shard { tx: btx, depth });
+            readies.push(rrx);
+        }
+
+        let mut engine_max = usize::MAX;
+        let mut first_err: Option<String> = None;
+        for rrx in readies {
+            match rrx.recv() {
+                Ok(Ok(max_batch)) => engine_max = engine_max.min(max_batch),
+                Ok(Err(msg)) => {
+                    first_err.get_or_insert(msg);
+                }
+                Err(_) => {
+                    first_err.get_or_insert("shard thread died during construction".to_string());
+                }
+            }
+        }
+        if let Some(msg) = first_err {
+            drop(handles); // disconnect batch channels so healthy workers exit
+            for w in workers {
+                let _ = w.join();
+            }
+            anyhow::bail!("engine construction failed: {msg}");
+        }
+
+        // Register shard state with the hub only once every shard
+        // constructed, so a failed spawn leaves the caller's hub clean.
+        metrics.ensure_shards(n);
+        for (shard, h) in handles.iter().enumerate() {
+            metrics.attach_depth_gauge(shard, Arc::clone(&h.depth));
+        }
+
+        let (tx, rx) = mpsc::channel::<Request>();
+        let dispatcher = std::thread::Builder::new()
+            .name("odin-dispatch".into())
+            .spawn(move || Self::dispatch(rx, handles, policy, engine_max))
+            .expect("spawning dispatcher thread");
+        let pool = EnginePool { dispatcher: Some(dispatcher), workers, tx: Some(tx.clone()) };
+        Ok((pool, Client::new(tx)))
+    }
+
+    /// Number of engine workers in the pool.
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The dispatcher loop: form a batch (first request blocks, then fill
+    /// until the linger window closes or the gather cap is reached), then
+    /// route it.  The gather cap is the batch policy clamped to what the
+    /// whole pool can execute at once, so one formed batch may span every
+    /// shard.
+    fn dispatch(
+        rx: Receiver<Request>,
+        shards: Vec<Shard>,
+        policy: BatchPolicy,
+        engine_max: usize,
+    ) {
+        let per_shard = engine_max.max(1);
+        let gather = policy.max_batch.clamp(1, per_shard * shards.len());
+        let mut rr = 0usize;
+        loop {
+            let first = match rx.recv() {
+                Ok(r) => r,
+                // All clients gone: dropping the shard senders (this
+                // function's stack) disconnects the workers, which exit.
+                Err(_) => return,
+            };
+            let deadline = Instant::now() + policy.linger;
+            let mut batch = vec![first];
+            while batch.len() < gather {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // Oversized batches are split into per-shard chunks; each
+            // chunk (and each whole small batch) goes to the least-loaded
+            // shard, so a burst fans out across the pool.
+            let mut rest = batch;
+            while !rest.is_empty() {
+                let take = rest.len().min(per_shard);
+                let chunk: Vec<Request> = rest.drain(..take).collect();
+                let target = Self::pick_shard(&shards, &mut rr);
+                shards[target].depth.fetch_add(chunk.len(), Ordering::Relaxed);
+                if shards[target].tx.send(chunk).is_err() {
+                    // A worker can only disappear during teardown; the
+                    // dropped chunk's response channels disconnect, which
+                    // clients observe as a server shutdown.
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Least-loaded shard by queue depth, ties broken round-robin.
+    fn pick_shard(shards: &[Shard], rr: &mut usize) -> usize {
+        let mut best = *rr % shards.len();
+        let mut best_depth = shards[best].depth.load(Ordering::Relaxed);
+        for i in 1..shards.len() {
+            let idx = (*rr + i) % shards.len();
+            let d = shards[idx].depth.load(Ordering::Relaxed);
+            if d < best_depth {
+                best = idx;
+                best_depth = d;
+            }
+        }
+        *rr = rr.wrapping_add(1);
+        best
+    }
+
+    /// One shard's serve loop: execute dispatched chunks until the
+    /// dispatcher hangs up.
+    fn worker<E: Executor>(
+        shard: usize,
+        engine: Engine<E>,
+        rx: Receiver<Vec<Request>>,
+        metrics: MetricsHub,
+        depth: Arc<AtomicUsize>,
+    ) {
+        while let Ok(batch) = rx.recv() {
+            let k = batch.len();
+            Self::execute(shard, &engine, &metrics, batch);
+            depth.fetch_sub(k, Ordering::Relaxed);
+        }
+    }
+
+    /// Execute one chunk on this shard's engine and answer every request.
+    fn execute<E: Executor>(
+        shard: usize,
+        engine: &Engine<E>,
+        metrics: &MetricsHub,
+        batch: Vec<Request>,
+    ) {
+        let images: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        match engine.infer(&images) {
+            Ok((preds, exec)) => {
+                let per_req_sim_ns = exec.sim_ns / batch.len() as f64;
+                let per_req_sim_pj = exec.sim_pj / batch.len() as f64;
+                let mut senders = Vec::with_capacity(batch.len());
+                let mut responses = Vec::with_capacity(batch.len());
+                for (req, pred) in batch.into_iter().zip(preds) {
+                    let waited = req.enqueued.elapsed().as_nanos() as u64;
+                    senders.push(req.respond);
+                    responses.push(Response {
+                        prediction: pred,
+                        queue_ns: waited.saturating_sub(exec.exec_ns),
+                        exec_ns: exec.exec_ns,
+                        batch: exec.batch,
+                        shard,
+                        sim_ns: per_req_sim_ns,
+                        sim_pj: per_req_sim_pj,
+                    });
+                }
+                // The whole batch is recorded under one lock before any
+                // response is released (see metrics.rs on why).
+                metrics.record_batch(shard, &exec, &responses);
+                for (tx, resp) in senders.into_iter().zip(responses) {
+                    let _ = tx.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                let msg = format!("inference failed: {e:#}");
+                metrics.record_failures(shard, batch.len());
+                for req in batch {
+                    let _ = req.respond.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+
+    /// Stop accepting requests and join every pool thread.  Call after
+    /// dropping all [`Client`] clones — the dispatcher only exits once the
+    /// request queue fully disconnects.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

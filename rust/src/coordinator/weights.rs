@@ -19,9 +19,13 @@ use crate::stochastic::{encode_rotated_weight, LANES};
 /// One layer's quantized weights in (n, m) layout plus bias.
 #[derive(Clone, Debug)]
 pub struct QuantLayer {
+    /// Fan-in.
     pub n: usize,
+    /// Neurons / output maps.
     pub m: usize,
-    pub q: Vec<i16>, // (n, m) row-major, q in [-255, 255]
+    /// Quantized weights, (n, m) row-major, values in [-255, 255].
+    pub q: Vec<i16>,
+    /// Per-neuron bias (f32, applied in the CMOS epilogue).
     pub bias: Vec<f32>,
 }
 
@@ -62,6 +66,7 @@ impl QuantLayer {
         )
     }
 
+    /// The bias vector as an (m,) f32 argument tensor.
     pub fn bias_arg(&self) -> TensorArg {
         TensorArg::F32 { dims: vec![self.m], data: self.bias.clone() }
     }
@@ -71,17 +76,26 @@ impl QuantLayer {
 /// and the quantization scales.
 #[derive(Clone, Debug)]
 pub struct ModelWeights {
+    /// Topology name ("cnn1", "cnn2").
     pub arch: String,
+    /// Quantized convolution layer.
     pub conv: QuantLayer,
+    /// Quantized hidden fully-connected layer.
     pub fc1: QuantLayer,
+    /// Quantized logits layer.
     pub fc2: QuantLayer,
+    /// Float convolution weights, (n, m) row-major.
     pub conv_w: Vec<f32>,
+    /// Float fc1 weights, (n, m) row-major.
     pub fc1_w: Vec<f32>,
+    /// Float fc2 weights, (n, m) row-major.
     pub fc2_w: Vec<f32>,
-    pub scales: [f32; 6], // s_in, conv s_w, conv s_out, fc1 s_w, fc1 s_out, fc2 s_w
+    /// `[s_in, conv s_w, conv s_out, fc1 s_w, fc1 s_out, fc2 s_w]`.
+    pub scales: [f32; 6],
 }
 
 impl ModelWeights {
+    /// Load the trained/quantized tensors Python exported for `arch`.
     pub fn load(artifacts_dir: impl AsRef<Path>, arch: &str) -> Result<Self> {
         let tf = TensorFile::load(artifacts_dir.as_ref().join(format!("weights/{arch}.bin")))?;
         let layer = |qname: &str, bname: &str| -> Result<QuantLayer> {

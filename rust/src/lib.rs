@@ -21,9 +21,11 @@
 //!   - the PJRT executor (**feature `pjrt`**): JAX forward graphs
 //!     (`python/compile/model.py`) AOT-lowered to HLO text once by
 //!     `make artifacts` and executed via the `xla` crate.
-//! * **L3** — this crate's serving layer: the engine + dynamic batcher
-//!   ([`coordinator`], generic over the backend) and the paper's
-//!   evaluation substrate — a transaction-level PCRAM simulator
+//! * **L3** — this crate's serving layer: the engine, dynamic batcher,
+//!   and the sharded [`coordinator::EnginePool`] (N engine workers fed by
+//!   a splitting/least-loaded dispatcher — the host-side mirror of ODIN's
+//!   bank-level parallelism; all generic over the backend) plus the
+//!   paper's evaluation substrate — a transaction-level PCRAM simulator
 //!   ([`pcram`]), the five PIMC commands with a functional controller
 //!   ([`pim`]), the ANN-to-command mapper ([`mapper`]), and the CPU/ISAAC
 //!   baselines ([`baselines`]).  Python never runs on the request path —
@@ -32,7 +34,10 @@
 //! `cargo build --release && cargo test -q` is fully offline and
 //! artifact-free; [`harness`] regenerates every table and figure of the
 //! paper's evaluation section; `cargo run --release -- --help` lists the
-//! entry points, and `examples/` holds runnable end-to-end drivers.
+//! entry points, and `examples/` holds runnable end-to-end drivers.  The
+//! whole-stack design — including the serving data flow and how the sim
+//! cost accounting maps back to the paper — is documented in
+//! `docs/ARCHITECTURE.md`.
 
 pub mod util;
 pub mod stochastic;

@@ -10,7 +10,9 @@
 //! odin eval  [--arch cnn1] [--mode fast] [--limit N] [--backend sim|pjrt]
 //!                                accuracy of a model on the test set
 //! odin serve [--arch cnn1] [--requests N] [--concurrency K] [--backend ..]
-//!                                dynamic-batching serving demo + metrics
+//!            [--shards N|auto] [--batch B] [--linger-us U]
+//!                                sharded dynamic-batching serving demo +
+//!                                per-shard metrics
 //! odin ablation                  binary vs mux accumulation cost/error
 //! odin selftest                  hermetic cross-checks (+ golden/PJRT
 //!                                when artifacts / the pjrt feature exist)
@@ -23,10 +25,14 @@
 //! `make artifacts`.  (clap is unavailable offline; flags are parsed by
 //! hand.)
 
+use std::time::Duration;
+
 use anyhow::{bail, Result};
 
 use odin::ann::topology;
-use odin::coordinator::{BatchPolicy, Engine, MetricsHub, ModelWeights, Server, SYNTHETIC_SEED};
+use odin::coordinator::{
+    BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
+};
 use odin::dataset::TestSet;
 use odin::harness::{fig6, headline, table1, table2, table3};
 use odin::mapper::{map_topology, ExecConfig};
@@ -76,8 +82,16 @@ fn main() -> Result<()> {
         "serve" => {
             let arch = flag(&args, "--arch", "cnn1");
             let requests: usize = flag(&args, "--requests", "256").parse()?;
-            let concurrency: usize = flag(&args, "--concurrency", "4").parse()?;
-            cmd_serve(&artifacts, &backend, &arch, requests, concurrency)?;
+            // Default concurrency keeps several engine batches in flight
+            // so a multi-shard pool actually runs its shards concurrently.
+            let concurrency: usize = flag(&args, "--concurrency", "64").parse()?;
+            let shards_s = flag(&args, "--shards", "auto");
+            let shards: usize = if shards_s == "auto" { 0 } else { shards_s.parse()? };
+            let max_batch: usize = flag(&args, "--batch", "32").parse()?;
+            let linger_us: u64 = flag(&args, "--linger-us", "300").parse()?;
+            let policy =
+                BatchPolicy { max_batch, linger: Duration::from_micros(linger_us) };
+            cmd_serve(&artifacts, &backend, &arch, requests, concurrency, shards, policy)?;
         }
         "ablation" => {
             cmd_ablation();
@@ -97,6 +111,7 @@ const HELP: &str = "odin — PCRAM PIM accelerator reproduction
 commands: table1 table2 table3 fig6 headline eval serve ablation selftest
 common flags: --artifacts DIR --backend sim|pjrt
 eval/serve: --arch cnn1|cnn2 --mode fast|sc|mux|float
+serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
 (`sim` is hermetic: synthetic weights/data unless artifacts exist;
  `pjrt` needs a build with --features pjrt and `make artifacts`)";
 
@@ -183,47 +198,82 @@ fn measured_accuracy(artifacts: &str, backend: &str) -> Result<Vec<(String, f64)
     Ok(out)
 }
 
-/// Serving demo: spawn the batcher, hammer it from client threads.
+/// Serving demo: spawn the sharded engine pool, hammer it from client
+/// threads, dump pooled + per-shard metrics.
 fn cmd_serve(
     artifacts: &str,
     backend: &str,
     arch: &str,
     requests: usize,
     concurrency: usize,
+    shards: usize,
+    policy: BatchPolicy,
 ) -> Result<()> {
     let metrics = MetricsHub::new();
-    let (artifacts_o, arch_o) = (artifacts.to_string(), arch.to_string());
-    let (server, client) = match backend {
-        "sim" => Server::spawn(
-            move || Engine::sim_auto(&artifacts_o, &arch_o, "fast"),
-            BatchPolicy::default(),
-            metrics.clone(),
-        )?,
+    // `auto` means one sim shard per core; PJRT engines compile every
+    // batch variant and hold their own executables, so auto stays at one
+    // shard there — scale it explicitly with --shards N.
+    let n_shards = if shards != 0 {
+        shards
+    } else if backend == "pjrt" {
+        1
+    } else {
+        EnginePool::auto_shards()
+    };
+    let (pool, client) = match backend {
+        "sim" => {
+            // Load/synthesize the weights once; every shard clones them.
+            // The host cores are split between the shards: each shard's
+            // backend row-parallelizes its batches over its core budget.
+            let weights = ModelWeights::load_or_synthetic(artifacts, arch, SYNTHETIC_SEED)?;
+            let threads = EnginePool::threads_per_shard(n_shards);
+            EnginePool::spawn(
+                move |_shard| Engine::sim_from_weights_threads(&weights, "fast", threads),
+                n_shards,
+                policy,
+                metrics.clone(),
+            )?
+        }
         #[cfg(feature = "pjrt")]
-        "pjrt" => Server::spawn(
-            move || {
-                let rt = odin::runtime::Runtime::cpu()?;
-                let manifest = odin::runtime::Manifest::load(&artifacts_o)?;
-                Engine::new(&rt, &manifest, &artifacts_o, &arch_o, "fast")
-            },
-            BatchPolicy::default(),
-            metrics.clone(),
-        )?,
+        "pjrt" => {
+            let (artifacts_o, arch_o) = (artifacts.to_string(), arch.to_string());
+            EnginePool::spawn(
+                move |_shard| {
+                    let rt = odin::runtime::Runtime::cpu()?;
+                    let manifest = odin::runtime::Manifest::load(&artifacts_o)?;
+                    Engine::new(&rt, &manifest, &artifacts_o, &arch_o, "fast")
+                },
+                n_shards,
+                policy,
+                metrics.clone(),
+            )?
+        }
         other => bail!("unknown backend {other} (rebuild with --features pjrt for pjrt)"),
     };
-    println!("serving {arch}/fast [{backend}] with dynamic batching");
+    println!(
+        "serving {arch}/fast [{backend}] with {} shard(s), dynamic batching (max {} / {:?})",
+        pool.shards(),
+        policy.max_batch,
+        policy.linger,
+    );
 
     let test = load_test_set(artifacts)?;
     let mut handles = Vec::new();
-    let per_thread = requests / concurrency.max(1);
+    // Spread the request count exactly across the client threads (the
+    // first `extra` threads take one more), so small --requests runs
+    // still serve every request.
+    let concurrency = concurrency.clamp(1, requests.max(1));
+    let base = requests / concurrency;
+    let extra = requests % concurrency;
     for t in 0..concurrency {
         let client = client.clone();
+        let take = base + usize::from(t < extra);
         let images: Vec<Vec<u8>> = test
             .samples
             .iter()
             .cycle()
-            .skip(t * per_thread)
-            .take(per_thread)
+            .skip(t * base + t.min(extra))
+            .take(take)
             .map(|s| s.image.clone())
             .collect();
         handles.push(std::thread::spawn(move || {
@@ -237,8 +287,8 @@ fn cmd_serve(
         }));
     }
     let ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
-    drop(client); // release the request channel so the batcher loop exits
-    server.shutdown();
+    drop(client); // release the request channel so the dispatcher exits
+    pool.shutdown();
     println!("completed {ok}/{requests} requests");
     metrics.report().print(arch);
     Ok(())

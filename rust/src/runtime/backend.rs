@@ -14,6 +14,7 @@ use anyhow::Result;
 /// A typed, shaped argument / activation tensor.  Plain host data — no
 /// device handles — so it exists with or without the `pjrt` feature.
 #[derive(Clone, Debug)]
+#[allow(missing_docs)] // variants: dtype x {dims, row-major data}
 pub enum TensorArg {
     U8 { dims: Vec<usize>, data: Vec<u8> },
     U32 { dims: Vec<usize>, data: Vec<u32> },
@@ -22,6 +23,7 @@ pub enum TensorArg {
 }
 
 impl TensorArg {
+    /// The tensor's shape.
     pub fn dims(&self) -> &[usize] {
         match self {
             TensorArg::U8 { dims, .. }
@@ -31,6 +33,7 @@ impl TensorArg {
         }
     }
 
+    /// Total element count (product of `dims`).
     pub fn elements(&self) -> usize {
         self.dims().iter().product()
     }

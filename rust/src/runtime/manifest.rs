@@ -10,30 +10,42 @@ use crate::util::json::{parse, Json};
 /// Declared argument spec of one artifact.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArgSpec {
+    /// Argument tensor shape.
     pub shape: Vec<usize>,
+    /// Argument dtype name ("uint8", "float32", ...).
     pub dtype: String,
 }
 
 /// One artifact entry.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// Artifact kind ("model", "tile", ...).
     pub kind: String,
+    /// Topology the artifact was lowered for, when applicable.
     pub arch: Option<String>,
+    /// Arithmetic mode, when applicable.
     pub mode: Option<String>,
+    /// Compiled batch size, when applicable.
     pub batch: Option<usize>,
+    /// Declared argument tensors (after the image input).
     pub args: Vec<ArgSpec>,
+    /// Path to the HLO text file.
     pub path: PathBuf,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Artifacts by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
 impl Manifest {
+    /// Parse `<artifacts_dir>/manifest.json`.
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json"))
@@ -74,6 +86,7 @@ impl Manifest {
         Ok(Manifest { artifacts, dir })
     }
 
+    /// Look up an artifact by name.
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts.get(name).with_context(|| format!("artifact {name} not in manifest"))
     }

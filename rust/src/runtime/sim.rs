@@ -40,11 +40,14 @@ pub struct DenseLayer {
     pub m: usize,
     /// Quantized weights, (n, m) row-major: `q[j * m + i]`, in [-255, 255].
     pub q: Vec<i16>,
-    /// Dual-rail u8 weights in the kernels' (m, n) layout: `wpos[i * n + j]`.
+    /// Positive dual rail, u8, in the kernels' (m, n) layout:
+    /// `wpos[i * n + j]`.
     pub wpos: Vec<u8>,
+    /// Negative dual rail, same layout as `wpos`.
     pub wneg: Vec<u8>,
     /// Float weights, (n, m) row-major (the float reference path).
     pub w: Vec<f32>,
+    /// Per-neuron bias (applied in the CMOS epilogue).
     pub bias: Vec<f32>,
     /// Weight quantization scale (w ~= q * s_w).
     pub s_w: f32,
@@ -73,7 +76,9 @@ impl DenseLayer {
 /// [`DenseLayer`] per weighted layer (pool layers carry no weights).
 #[derive(Clone, Debug)]
 pub struct SimModel {
+    /// Topology name, lowercase ("cnn1", ...).
     pub arch: String,
+    /// The paper topology this model instantiates.
     pub topo: Topology,
     /// One entry per `topo.layers` element; `None` for pool layers.
     pub dense: Vec<Option<DenseLayer>>,
@@ -412,6 +417,7 @@ impl SimModel {
         bail!("topology {} has no logits layer", self.topo.name)
     }
 
+    /// Float reference forward without activation tracing.
     pub fn forward_float(&self, img: &[u8]) -> Result<Vec<f32>> {
         self.forward_float_traced(img, |_, _| {})
     }
@@ -457,6 +463,7 @@ pub enum SimMode {
 }
 
 impl SimMode {
+    /// Parse a mode name ("fast", "sc", "mux", "float").
     pub fn parse(s: &str) -> Result<SimMode> {
         Ok(match s {
             "fast" => SimMode::Fast,
@@ -467,6 +474,7 @@ impl SimMode {
         })
     }
 
+    /// The canonical mode name.
     pub fn as_str(&self) -> &'static str {
         match self {
             SimMode::Fast => "fast",
@@ -489,18 +497,38 @@ pub fn shared_cnt16() -> &'static Cnt16 {
     TABLE.get_or_init(cnt16)
 }
 
-/// Pure-Rust [`Executor`]: runs [`SimModel`] forward passes natively.
+/// Pure-Rust [`Executor`]: runs [`SimModel`] forward passes natively,
+/// parallelizing batches across rows (images are independent, so the
+/// batch loop fans out over scoped threads — one shard of an engine pool
+/// still uses multiple cores).
+///
+/// ```
+/// use odin::runtime::{Executor, SimBackend, SimMode};
+///
+/// let backend = SimBackend::synthetic("cnn1", SimMode::Float, 1).unwrap();
+/// let logits = backend.forward(1, &vec![0u8; 784]).unwrap();
+/// assert_eq!(logits.len(), 10);
+/// ```
 pub struct SimBackend {
     model: SimModel,
     mode: SimMode,
     table: Option<&'static Cnt16>,
     batch_sizes: Vec<usize>,
+    threads: usize,
 }
 
 impl SimBackend {
+    /// Wrap a model in the given arithmetic mode (fast mode builds /
+    /// reuses the process-wide CNT16 table).
     pub fn new(model: SimModel, mode: SimMode) -> Self {
         let table = matches!(mode, SimMode::Fast).then(shared_cnt16);
-        SimBackend { model, mode, table, batch_sizes: DEFAULT_BATCH_SIZES.to_vec() }
+        SimBackend {
+            model,
+            mode,
+            table,
+            batch_sizes: DEFAULT_BATCH_SIZES.to_vec(),
+            threads: 0,
+        }
     }
 
     /// Synthetic-weight backend for a named topology.
@@ -508,6 +536,7 @@ impl SimBackend {
         Ok(Self::new(SimModel::synthetic_by_name(arch, seed)?, mode))
     }
 
+    /// Override the advertised batch-size ladder.
     pub fn with_batch_sizes(mut self, mut sizes: Vec<usize>) -> Self {
         sizes.retain(|&b| b > 0);
         sizes.sort_unstable();
@@ -518,12 +547,33 @@ impl SimBackend {
         self
     }
 
+    /// Cap the row-level parallelism of [`Executor::forward`] (`0`, the
+    /// default, means one worker per available core; `1` forces the
+    /// serial path).  Outputs are bit-identical at any setting — rows are
+    /// independent and each row's arithmetic is deterministic.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The wrapped model.
     pub fn model(&self) -> &SimModel {
         &self.model
     }
 
+    /// The configured arithmetic mode.
     pub fn mode(&self) -> SimMode {
         self.mode
+    }
+
+    /// Effective row-parallelism for a batch of `batch` rows.
+    fn row_workers(&self, batch: usize) -> usize {
+        let cap = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        cap.min(batch).max(1)
     }
 
     /// One image through the configured path.
@@ -560,21 +610,60 @@ impl Executor for SimBackend {
         let il = self.model.input_len();
         ensure!(images.len() == batch * il, "batch {batch}: got {} bytes, want {}",
             images.len(), batch * il);
-        let mut out = Vec::with_capacity(batch * self.model.output_len());
+        let ol = self.model.output_len();
         // The engine zero-pads partial batches up to a ladder size; the
         // backend is deterministic, so all-zero rows share one forward
         // pass instead of paying up to ladder-size redundant passes.
-        let mut zero_logits: Option<Vec<f32>> = None;
-        for b in 0..batch {
-            let img = &images[b * il..(b + 1) * il];
-            if img.iter().all(|&p| p == 0) {
-                if zero_logits.is_none() {
-                    zero_logits = Some(self.forward_one(img)?);
+        let any_zero_row =
+            (0..batch).any(|b| images[b * il..(b + 1) * il].iter().all(|&p| p == 0));
+        let zero_logits: Option<Vec<f32>> = if any_zero_row {
+            Some(self.forward_one(&vec![0u8; il])?)
+        } else {
+            None
+        };
+        let workers = self.row_workers(batch);
+        if workers == 1 {
+            let mut out = Vec::with_capacity(batch * ol);
+            for b in 0..batch {
+                let img = &images[b * il..(b + 1) * il];
+                match (&zero_logits, img.iter().all(|&p| p == 0)) {
+                    (Some(z), true) => out.extend_from_slice(z),
+                    _ => out.extend(self.forward_one(img)?),
                 }
-                out.extend_from_slice(zero_logits.as_ref().unwrap());
-            } else {
-                out.extend(self.forward_one(img)?);
             }
+            return Ok(out);
+        }
+        // Row-parallel path: rows are independent, so fan the batch out
+        // over scoped threads writing disjoint slices of the output.
+        // Outputs are bit-identical to the serial path.
+        let mut out = vec![0f32; batch * ol];
+        let rows_per = (batch + workers - 1) / workers;
+        let results: Vec<Result<()>> = std::thread::scope(|scope| {
+            let mut tasks = Vec::with_capacity(workers);
+            for (t, out_chunk) in out.chunks_mut(rows_per * ol).enumerate() {
+                let zero = zero_logits.as_deref();
+                tasks.push(scope.spawn(move || -> Result<()> {
+                    let rows = out_chunk.len() / ol;
+                    for i in 0..rows {
+                        let b = t * rows_per + i;
+                        let img = &images[b * il..(b + 1) * il];
+                        match (zero, img.iter().all(|&p| p == 0)) {
+                            (Some(z), true) => out_chunk[i * ol..(i + 1) * ol]
+                                .copy_from_slice(z),
+                            _ => out_chunk[i * ol..(i + 1) * ol]
+                                .copy_from_slice(&self.forward_one(img)?),
+                        }
+                    }
+                    Ok(())
+                }));
+            }
+            tasks
+                .into_iter()
+                .map(|h| h.join().expect("sim row worker panicked"))
+                .collect()
+        });
+        for r in results {
+            r?;
         }
         Ok(out)
     }
@@ -695,6 +784,31 @@ mod tests {
         let out = b.forward(2, &both).unwrap();
         assert_eq!(&out[..10], &b.forward_one(&i1).unwrap()[..]);
         assert_eq!(&out[10..], &b.forward_one(&i2).unwrap()[..]);
+    }
+
+    #[test]
+    fn row_parallel_forward_bit_identical_to_serial() {
+        // The thread count must never change outputs: serial (1), a
+        // worker per row (8), and more workers than rows (32) all agree
+        // bit-for-bit, including on interleaved zero (padding) rows.
+        let model = SimModel::synthetic_by_name("cnn1", 29).unwrap();
+        let mut data = Vec::with_capacity(8 * 784);
+        for i in 0..8u64 {
+            if i % 3 == 2 {
+                data.extend_from_slice(&[0u8; 784]); // padding row
+            } else {
+                data.extend_from_slice(&noise_image(100 + i, 784));
+            }
+        }
+        let serial = SimBackend::new(model.clone(), SimMode::Float).with_threads(1);
+        let par = SimBackend::new(model.clone(), SimMode::Float).with_threads(8);
+        let over = SimBackend::new(model, SimMode::Float).with_threads(32);
+        let a = serial.forward(8, &data).unwrap();
+        let b = par.forward(8, &data).unwrap();
+        let c = over.forward(8, &data).unwrap();
+        assert_eq!(a.len(), 80);
+        assert_eq!(a, b, "threads=8 diverged from serial");
+        assert_eq!(a, c, "threads=32 diverged from serial");
     }
 
     #[test]

@@ -11,6 +11,7 @@ const MAGIC: u32 = 0x4F44_494E; // "ODIN"
 
 /// Typed tensor payload.
 #[derive(Clone, Debug, PartialEq)]
+#[allow(missing_docs)] // variants: one per supported dtype
 pub enum TensorData {
     U8(Vec<u8>),
     I16(Vec<i16>),
@@ -20,6 +21,7 @@ pub enum TensorData {
 }
 
 impl TensorData {
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             TensorData::U8(v) => v.len(),
@@ -30,6 +32,7 @@ impl TensorData {
         }
     }
 
+    /// True when the payload has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -38,15 +41,19 @@ impl TensorData {
 /// A named, shaped tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Shape (row-major).
     pub dims: Vec<usize>,
+    /// Typed payload.
     pub data: TensorData,
 }
 
 impl Tensor {
+    /// Total element count (product of `dims`).
     pub fn elements(&self) -> usize {
         self.dims.iter().product::<usize>()
     }
 
+    /// The payload as u8, or an error on a dtype mismatch.
     pub fn as_u8(&self) -> Result<&[u8]> {
         match &self.data {
             TensorData::U8(v) => Ok(v),
@@ -54,6 +61,7 @@ impl Tensor {
         }
     }
 
+    /// The payload as i16, or an error on a dtype mismatch.
     pub fn as_i16(&self) -> Result<&[i16]> {
         match &self.data {
             TensorData::I16(v) => Ok(v),
@@ -61,6 +69,7 @@ impl Tensor {
         }
     }
 
+    /// The payload as f32, or an error on a dtype mismatch.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
@@ -68,6 +77,7 @@ impl Tensor {
         }
     }
 
+    /// The payload as u32, or an error on a dtype mismatch.
     pub fn as_u32(&self) -> Result<&[u32]> {
         match &self.data {
             TensorData::U32(v) => Ok(v),
@@ -75,6 +85,7 @@ impl Tensor {
         }
     }
 
+    /// The payload as i32, or an error on a dtype mismatch.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             TensorData::I32(v) => Ok(v),
@@ -86,6 +97,7 @@ impl Tensor {
 /// Parsed tensor file.
 #[derive(Clone, Debug, Default)]
 pub struct TensorFile {
+    /// Tensors by name.
     pub tensors: BTreeMap<String, Tensor>,
 }
 
@@ -96,12 +108,14 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
 }
 
 impl TensorFile {
+    /// Read and parse a tensor file from disk.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
         Self::parse(&bytes).with_context(|| format!("parsing {path:?}"))
     }
 
+    /// Parse the TLV container from raw bytes.
     pub fn parse(bytes: &[u8]) -> Result<Self> {
         let mut r = bytes;
         let magic = read_u32(&mut r)?;
@@ -173,6 +187,7 @@ impl TensorFile {
         Ok(TensorFile { tensors })
     }
 
+    /// Look up a tensor by name.
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors.get(name).with_context(|| format!("tensor {name} missing"))
     }

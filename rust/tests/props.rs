@@ -4,13 +4,17 @@
 //! * coordinator::batcher — never drops a request, never forms a batch
 //!   larger than the clamped max, and a lone request is bounded by the
 //!   linger window (it executes rather than waiting forever).
+//! * coordinator::pool — across any shard count: no request dropped or
+//!   answered twice, responses bit-identical to a single engine serving
+//!   the same weights, per-shard metrics sum to the pooled totals, and
+//!   the pool survives a many-producer stress run.
 //! * mapper::map_topology / map_layer — monotone: more neurons or wider
 //!   fan-in never books less latency or energy.
 
 use std::time::{Duration, Instant};
 
 use odin::ann::Layer;
-use odin::coordinator::{BatchPolicy, Engine, MetricsHub, Server};
+use odin::coordinator::{BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights, Server};
 use odin::dataset::TestSet;
 use odin::mapper::{map_layer, map_topology, ExecConfig};
 use odin::pim::AccumulateMode;
@@ -111,6 +115,198 @@ fn batcher_survives_engine_construction_failure() {
     // A factory error must surface synchronously, not hang the caller.
     let err = Server::spawn(
         || Engine::sim("no-such-arch", "float"),
+        BatchPolicy::default(),
+        MetricsHub::new(),
+    );
+    assert!(err.is_err());
+}
+
+// ---------------------------------------------------------------------------
+// engine pool (sharded serving)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_never_drops_or_duplicates_across_shards() {
+    // Across shard counts, producer counts, and batch policies (including
+    // a policy whose max exceeds one engine's largest variant, forcing
+    // the dispatcher to split batches across shards): every request is
+    // answered exactly once, every executed chunk fits one engine, and
+    // the per-shard metrics sum to the pooled totals.
+    forall_ok(
+        5,
+        |r| {
+            let requests = 1 + r.below(60) as usize;
+            let producers = 1 + r.below(6) as usize;
+            let shards = 1 + r.below(4) as usize;
+            let max_batch = [4usize, 32, 64, 128][r.below(4) as usize];
+            (requests, producers, shards, max_batch)
+        },
+        |&(requests, producers, shards, max_batch)| {
+            let policy = BatchPolicy { max_batch, linger: Duration::from_micros(200) };
+            let metrics = MetricsHub::new();
+            let weights = ModelWeights::synthetic("cnn1", 17)
+                .map_err(|e| format!("weights: {e:#}"))?;
+            let (pool, client) = EnginePool::spawn(
+                move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+                shards,
+                policy,
+                metrics.clone(),
+            )
+            .map_err(|e| format!("spawn: {e:#}"))?;
+            let test = TestSet::synthetic(requests, 13);
+
+            let mut handles = Vec::new();
+            for t in 0..producers {
+                let client = client.clone();
+                let images: Vec<Vec<u8>> = test
+                    .samples
+                    .iter()
+                    .skip(t)
+                    .step_by(producers)
+                    .map(|s| s.image.clone())
+                    .collect();
+                handles.push(std::thread::spawn(move || {
+                    images
+                        .into_iter()
+                        .map(|img| {
+                            let rx = client.submit(img);
+                            let first = rx.recv();
+                            // exactly one response per submit: the channel
+                            // must be empty-and-disconnected afterwards
+                            let duplicated = rx.try_recv().is_ok();
+                            (first, duplicated)
+                        })
+                        .collect::<Vec<_>>()
+                }));
+            }
+            let mut answered = 0usize;
+            for h in handles {
+                for (outcome, duplicated) in
+                    h.join().map_err(|_| "producer thread panicked".to_string())?
+                {
+                    if duplicated {
+                        return Err("a request was answered twice".to_string());
+                    }
+                    let resp = outcome
+                        .map_err(|_| "dropped request (server hung up)".to_string())?
+                        .map_err(|e| format!("request failed: {e}"))?;
+                    if resp.batch == 0 || resp.batch > 32 {
+                        return Err(format!("chunk of {} exceeds one engine", resp.batch));
+                    }
+                    if resp.shard >= shards {
+                        return Err(format!("shard {} out of range", resp.shard));
+                    }
+                    answered += 1;
+                }
+            }
+            drop(client);
+            pool.shutdown();
+            if answered != requests {
+                return Err(format!("{answered}/{requests} answered"));
+            }
+            let report = metrics.report();
+            if report.requests != requests as u64 {
+                return Err(format!("metrics saw {} of {requests}", report.requests));
+            }
+            if report.shards.len() != shards {
+                return Err(format!("{} shard slots, want {shards}", report.shards.len()));
+            }
+            let shard_sum: u64 = report.shards.iter().map(|s| s.requests).sum();
+            if shard_sum != requests as u64 {
+                return Err(format!("per-shard sum {shard_sum} != {requests}"));
+            }
+            let depth_sum: usize = report.shards.iter().map(|s| s.queue_depth).sum();
+            if depth_sum != 0 {
+                return Err(format!("residual queue depth {depth_sum} after drain"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pool_results_bit_identical_to_single_engine() {
+    // Shard routing and batch composition must never change predictions:
+    // the same weights served by a 4-shard pool and by a direct
+    // single-engine call produce bit-identical logits per image.
+    let weights = ModelWeights::synthetic("cnn1", 42).unwrap();
+    let reference = Engine::sim_from_weights(&weights, "float").unwrap();
+    let pool_weights = weights.clone();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&pool_weights, "float", 1),
+        4,
+        BatchPolicy::default(),
+        MetricsHub::new(),
+    )
+    .unwrap();
+    let test = TestSet::synthetic(64, 5);
+    let receivers: Vec<_> =
+        test.samples.iter().map(|s| client.submit(s.image.clone())).collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        let (one, _) = reference.infer(&[&test.samples[i].image]).unwrap();
+        assert_eq!(
+            resp.prediction.logits, one[0].logits,
+            "image {i} diverged (shard {})",
+            resp.shard
+        );
+    }
+    drop(client);
+    pool.shutdown();
+}
+
+#[test]
+fn pool_stress_many_producers() {
+    // Loom-free stress: 16 producer threads hammering an auto-sized pool
+    // with interleaved submissions; everything is answered and accounted.
+    const PRODUCERS: usize = 16;
+    const PER_PRODUCER: usize = 24;
+    let metrics = MetricsHub::new();
+    let weights = ModelWeights::synthetic("cnn1", 23).unwrap();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+        0, // auto
+        BatchPolicy { max_batch: 64, linger: Duration::from_micros(100) },
+        metrics.clone(),
+    )
+    .unwrap();
+    let img = TestSet::synthetic(1, 3).samples[0].image.clone();
+    let mut handles = Vec::new();
+    for _ in 0..PRODUCERS {
+        let client = client.clone();
+        let img = img.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            for _ in 0..PER_PRODUCER {
+                if client.infer_blocking(img.clone()).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let answered: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    drop(client);
+    pool.shutdown();
+    assert_eq!(answered, PRODUCERS * PER_PRODUCER);
+    let report = metrics.report();
+    assert_eq!(report.requests, (PRODUCERS * PER_PRODUCER) as u64);
+    assert_eq!(report.errors, 0);
+    assert!(report.padded_rows >= report.requests);
+}
+
+#[test]
+fn pool_construction_failure_tears_down_all_shards() {
+    // One bad factory call must fail the whole spawn synchronously.
+    let err = EnginePool::spawn(
+        |shard| {
+            if shard == 2 {
+                Engine::sim("no-such-arch", "float")
+            } else {
+                Engine::sim("cnn1", "float")
+            }
+        },
+        4,
         BatchPolicy::default(),
         MetricsHub::new(),
     );
