@@ -8,6 +8,9 @@
 //! ```bash
 //! cargo run --release --example mnist_serving             # cnn1, auto shards
 //! cargo run --release --example mnist_serving -- cnn2 4   # arch, shard count
+//! cargo run --release --example mnist_serving -- cnn1 0 --net
+//!                       # same workload through the L4 loopback TCP
+//!                       # front-end (wire protocol + response cache)
 //! ```
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -18,6 +21,7 @@ use odin::coordinator::{
     BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
 };
 use odin::dataset::TestSet;
+use odin::frontend::{Frontend, FrontendConfig, NetClient};
 
 // Enough concurrent clients to keep several engine batches in flight —
 // fewer in-flight requests than one batch (32) would serialize the
@@ -26,6 +30,8 @@ const CLIENT_THREADS: usize = 64;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
+    let net = args.iter().any(|a| a == "--net");
+    let args: Vec<String> = args.into_iter().filter(|a| a != "--net").collect();
     let arch = args.get(1).cloned().unwrap_or_else(|| "cnn1".into());
     let shards: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0);
 
@@ -43,10 +49,28 @@ fn main() -> Result<()> {
 
     let test = Arc::new(TestSet::load_or_synthetic("artifacts", 2048, SYNTHETIC_SEED)?);
     let n = test.len();
+    let transport = if net { "loopback TCP" } else { "in-process" };
     println!(
-        "serving {n} requests for {arch}/fast [sim] on {} shard(s) from {CLIENT_THREADS} client threads ...",
+        "serving {n} requests for {arch}/fast [sim, {transport}] on {} shard(s) from {CLIENT_THREADS} client threads ...",
         pool.shards()
     );
+
+    // With --net the same workload flows through the L4 front-end: each
+    // client thread owns one TCP connection and the wire protocol, and a
+    // response cache absorbs repeated rows.
+    let frontend = if net {
+        Some(Frontend::spawn(
+            "127.0.0.1:0",
+            client.clone(),
+            &arch,
+            "fast",
+            FrontendConfig { cache_capacity: 4096, ..FrontendConfig::default() },
+            metrics.clone(),
+        )?)
+    } else {
+        None
+    };
+    let addr = frontend.as_ref().map(|f| f.local_addr());
 
     let correct = Arc::new(AtomicUsize::new(0));
     let t0 = std::time::Instant::now();
@@ -55,21 +79,32 @@ fn main() -> Result<()> {
         let client = client.clone();
         let test = Arc::clone(&test);
         let correct = Arc::clone(&correct);
-        handles.push(std::thread::spawn(move || {
+        let arch = arch.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let net_client =
+                addr.map(|a| NetClient::connect(a, &arch, "fast")).transpose()?;
             for i in (t..test.len()).step_by(CLIENT_THREADS) {
                 let s = &test.samples[i];
-                if let Ok(resp) = client.infer_blocking(s.image.clone()) {
-                    if resp.prediction.argmax == s.label {
-                        correct.fetch_add(1, Ordering::Relaxed);
+                let predicted = match &net_client {
+                    Some(nc) => nc.infer(s.image.clone()).ok().map(|r| r.argmax),
+                    None => {
+                        client.infer_blocking(s.image.clone()).ok().map(|r| r.prediction.argmax)
                     }
+                };
+                if predicted == Some(s.label) {
+                    correct.fetch_add(1, Ordering::Relaxed);
                 }
             }
+            Ok(())
         }));
     }
     for h in handles {
-        h.join().unwrap();
+        h.join().unwrap()?;
     }
     let wall = t0.elapsed().as_secs_f64();
+    if let Some(f) = frontend {
+        f.shutdown();
+    }
     drop(client); // release the request channel so the dispatcher exits
     pool.shutdown();
 

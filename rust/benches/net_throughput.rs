@@ -1,0 +1,179 @@
+//! End-to-end requests/s through the L4 TCP front-end over loopback,
+//! against the same pool served in-process — what the network boundary
+//! (framing, syscalls, admission, cache) costs and buys.
+//!
+//! Three measurements:
+//! * closed loop, in-process — the PR-2 baseline (no network).
+//! * closed loop, TCP — 16 connections, one blocking request at a time
+//!   each, with and without the response cache on a duplicate-heavy
+//!   working set (64 distinct rows), so the cache's effect is visible.
+//! * open loop, TCP + `shed` admission — the whole request set
+//!   pipelined onto one connection against a small queue cap: reports
+//!   served vs shed and shows shedding never deadlocks.
+//!
+//! ```bash
+//! cargo bench --bench net_throughput
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+use odin::coordinator::{
+    BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
+};
+use odin::dataset::TestSet;
+use odin::frontend::{
+    AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError,
+};
+
+const REQUESTS: usize = 1024;
+const CONNECTIONS: usize = 16;
+const DISTINCT_ROWS: usize = 64;
+
+fn spawn_pool(weights: &ModelWeights) -> Result<(EnginePool, Client, MetricsHub)> {
+    let metrics = MetricsHub::new();
+    let w = weights.clone();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&w, "fast", 1),
+        0, // one shard per core
+        BatchPolicy::default(),
+        metrics.clone(),
+    )?;
+    Ok((pool, client, metrics))
+}
+
+/// Closed loop, in-process: the no-network baseline.
+fn run_in_process(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<f64> {
+    let (pool, client, _metrics) = spawn_pool(weights)?;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..CONNECTIONS {
+        let client = client.clone();
+        let work: Vec<Vec<u8>> =
+            images.iter().skip(t).step_by(CONNECTIONS).cloned().collect();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            for img in work {
+                client.infer_blocking(img)?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    drop(client);
+    pool.shutdown();
+    Ok(REQUESTS as f64 / dt)
+}
+
+/// Closed loop over TCP: `CONNECTIONS` blocking clients; returns
+/// (requests/s, cache hit rate).
+fn run_closed_tcp(weights: &ModelWeights, images: &[Vec<u8>], cache: usize) -> Result<(f64, f64)> {
+    let (pool, client, metrics) = spawn_pool(weights)?;
+    let frontend = Frontend::spawn(
+        "127.0.0.1:0",
+        client.clone(),
+        "cnn1",
+        "fast",
+        FrontendConfig { cache_capacity: cache, ..FrontendConfig::default() },
+        metrics.clone(),
+    )?;
+    let addr = frontend.local_addr();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..CONNECTIONS {
+        let work: Vec<Vec<u8>> =
+            images.iter().skip(t).step_by(CONNECTIONS).cloned().collect();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let net = NetClient::connect(addr, "cnn1", "fast")?;
+            for img in work {
+                net.infer(img).map_err(anyhow::Error::new)?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    frontend.shutdown();
+    drop(client);
+    pool.shutdown();
+    let hit_rate = metrics.report().frontend.cache_hit_rate();
+    Ok((REQUESTS as f64 / dt, hit_rate))
+}
+
+/// Open loop over TCP with `shed` admission: pipeline everything onto
+/// one connection; returns (served, shed, completed requests/s).
+fn run_open_shed(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<(usize, usize, f64)> {
+    let (pool, client, metrics) = spawn_pool(weights)?;
+    let frontend = Frontend::spawn(
+        "127.0.0.1:0",
+        client.clone(),
+        "cnn1",
+        "fast",
+        FrontendConfig {
+            admission: AdmissionConfig {
+                policy: AdmissionPolicy::Shed,
+                queue_cap: 64,
+                ..AdmissionConfig::default()
+            },
+            ..FrontendConfig::default()
+        },
+        metrics.clone(),
+    )?;
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "fast")?;
+    let t0 = Instant::now();
+    let receivers: Vec<_> = images.iter().map(|img| net.submit(img.clone())).collect();
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    for rx in receivers {
+        match NetClient::wait(rx) {
+            Ok(_) => served += 1,
+            Err(NetError::Overloaded { .. }) => shed += 1,
+            Err(e) => anyhow::bail!("unexpected outcome: {e}"),
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    drop(net);
+    frontend.shutdown();
+    drop(client);
+    pool.shutdown();
+    Ok((served, shed, served as f64 / dt))
+}
+
+fn main() -> Result<()> {
+    let weights = ModelWeights::synthetic("cnn1", SYNTHETIC_SEED)?;
+    // Duplicate-heavy working set: REQUESTS draws over DISTINCT_ROWS
+    // rows, so a response cache can actually earn hits.
+    let test = TestSet::synthetic(DISTINCT_ROWS, SYNTHETIC_SEED);
+    let images: Vec<Vec<u8>> =
+        (0..REQUESTS).map(|i| test.samples[i % DISTINCT_ROWS].image.clone()).collect();
+    // Build the shared CNT16 table up front so no run pays for it.
+    odin::runtime::sim::shared_cnt16();
+
+    println!(
+        "== bench group: net_throughput ({REQUESTS} requests, {DISTINCT_ROWS} distinct rows, {CONNECTIONS} connections) =="
+    );
+    let base = run_in_process(&weights, &images)?;
+    println!("{:<52} {base:>10.0} req/s", "closed loop, in-process (baseline)");
+    let (tcp, _) = run_closed_tcp(&weights, &images, 0)?;
+    println!("{:<52} {tcp:>10.0} req/s", "closed loop, TCP, cache off");
+    let (tcp_cached, hit_rate) = run_closed_tcp(&weights, &images, 4096)?;
+    println!(
+        "{:<52} {tcp_cached:>10.0} req/s",
+        format!("closed loop, TCP, cache on ({:.0}% hits)", 100.0 * hit_rate)
+    );
+    let (served, shed, open_rps) = run_open_shed(&weights, &images)?;
+    println!(
+        "{:<52} {open_rps:>10.0} req/s",
+        format!("open loop, TCP, shed admission ({served} ok / {shed} shed)")
+    );
+    println!(
+        "network tax: {:.2}x vs in-process; cache speedup: {:.2}x",
+        base / tcp.max(1e-9),
+        tcp_cached / tcp.max(1e-9),
+    );
+    Ok(())
+}

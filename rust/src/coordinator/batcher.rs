@@ -19,6 +19,7 @@
 //! max)`; an N-shard pool may form up to N engine-maxes and split); a
 //! lone request waits at most the linger window before executing.
 
+use std::fmt;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -35,8 +36,46 @@ use super::pool::EnginePool;
 pub(crate) struct Request {
     pub(crate) image: Vec<u8>,
     pub(crate) enqueued: Instant,
-    pub(crate) respond: Sender<std::result::Result<Response, String>>,
+    pub(crate) respond: Sender<std::result::Result<Response, ServeError>>,
 }
+
+/// Typed per-request failure carried over the response channel (and, via
+/// `frontend::wire`, over the network) instead of a free-form string.
+///
+/// The shard worker validates every request *individually* before
+/// batching it into the engine, so a malformed request — e.g. a row of
+/// the wrong byte width arriving over the network — is answered with
+/// [`ServeError::WrongRowWidth`] on its own while the well-formed
+/// requests sharing its batch still execute and succeed.  A bad request
+/// can therefore never poison its batch or take down a shard.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's row has the wrong byte width for the served model.
+    WrongRowWidth {
+        /// Bytes the request supplied.
+        got: usize,
+        /// Bytes the model expects.
+        want: usize,
+    },
+    /// The backend failed while executing the batch this request rode in.
+    Backend(String),
+    /// The server stopped before answering.
+    Shutdown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::WrongRowWidth { got, want } => {
+                write!(f, "wrong row width: got {got} bytes, want {want}")
+            }
+            ServeError::Backend(msg) => write!(f, "backend failure: {msg}"),
+            ServeError::Shutdown => write!(f, "server stopped before answering"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Per-request response.
 #[derive(Clone, Debug)]
@@ -88,7 +127,7 @@ impl Client {
     }
 
     /// Submit one image; returns a receiver for the response.
-    pub fn submit(&self, image: Vec<u8>) -> Receiver<std::result::Result<Response, String>> {
+    pub fn submit(&self, image: Vec<u8>) -> Receiver<std::result::Result<Response, ServeError>> {
         let (tx, rx) = mpsc::channel();
         let req = Request { image, enqueued: Instant::now(), respond: tx };
         // If the server is gone the receiver will see a disconnect.
@@ -96,12 +135,18 @@ impl Client {
         rx
     }
 
+    /// Submit and wait, with the typed error preserved (a disconnected
+    /// server maps to [`ServeError::Shutdown`]).
+    pub fn infer(&self, image: Vec<u8>) -> std::result::Result<Response, ServeError> {
+        match self.submit(image).recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(ServeError::Shutdown),
+        }
+    }
+
     /// Submit and wait (convenience for examples/tests).
     pub fn infer_blocking(&self, image: Vec<u8>) -> Result<Response> {
-        self.submit(image)
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server stopped"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        self.infer(image).map_err(anyhow::Error::new)
     }
 }
 

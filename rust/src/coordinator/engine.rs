@@ -112,6 +112,12 @@ impl<E: Executor> Engine<E> {
         *self.sizes.last().unwrap()
     }
 
+    /// Bytes per input row the backend expects (784 for the benchmark
+    /// CNNs) — the width every served request is validated against.
+    pub fn input_len(&self) -> usize {
+        self.exec.input_len()
+    }
+
     /// Smallest supported batch size that fits `k`; `None` when `k`
     /// exceeds the largest variant (the caller then splits — the old
     /// fallback silently picked the last variant and bailed downstream).

@@ -14,7 +14,7 @@
 //! dispatcher increments, the shard worker decrements); the hub holds a
 //! reference per shard and samples them at report time.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -33,6 +33,24 @@ struct ShardSlot {
     busy_ns: u64,
     exec_us: Summary,
     depth_gauge: Option<Arc<AtomicUsize>>,
+}
+
+/// Counters owned by the network front-end (admission gate, response
+/// cache, connection handling); all zero when serving stays in-process.
+/// Plain atomics outside the hub mutex: they are bumped several times on
+/// every network request's hot path (often while the admission gate's
+/// own lock is held), so they must never serialize connections behind
+/// the batch-recording lock.
+#[derive(Default)]
+struct FrontendCounters {
+    admitted: AtomicU64,
+    block_waits: AtomicU64,
+    shed: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+    net_connections: AtomicU64,
+    net_responses: AtomicU64,
 }
 
 #[derive(Default)]
@@ -70,7 +88,10 @@ impl Inner {
 /// assert_eq!(report.throughput_rps, 0.0);
 /// ```
 #[derive(Clone, Default)]
-pub struct MetricsHub(Arc<Mutex<Inner>>);
+pub struct MetricsHub {
+    inner: Arc<Mutex<Inner>>,
+    frontend: Arc<FrontendCounters>,
+}
 
 /// Point-in-time aggregate over one shard (see [`MetricsReport::shards`]).
 #[derive(Clone, Debug)]
@@ -93,6 +114,53 @@ pub struct ShardReport {
     pub exec_us_p50: f64,
     /// 99th-percentile per-batch execution time (us).
     pub exec_us_p99: f64,
+}
+
+/// Point-in-time aggregate over the network front-end (admission gate,
+/// response cache, connections).  All-zero for in-process serving.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrontendReport {
+    /// Requests admitted into the engine pool by the gate.
+    pub admitted: u64,
+    /// Admissions that had to wait for capacity (`block` policy).
+    pub block_waits: u64,
+    /// Requests shed with `Overloaded` (`shed` policy).
+    pub shed: u64,
+    /// Responses served straight from the cache (no pool work).
+    pub cache_hits: u64,
+    /// Cache lookups that missed (the request then went to admission —
+    /// under `shed` it may still have been rejected before the pool).
+    pub cache_misses: u64,
+    /// Entries evicted to stay within the cache capacity.
+    pub cache_evictions: u64,
+    /// TCP connections accepted.
+    pub net_connections: u64,
+    /// Response frames written back to clients.
+    pub net_responses: u64,
+}
+
+impl FrontendReport {
+    /// Cache hit rate in [0, 1] (0 when the cache saw no lookups).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let looked = self.cache_hits + self.cache_misses;
+        if looked == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / looked as f64
+        }
+    }
+
+    fn any(&self) -> bool {
+        self.admitted
+            + self.block_waits
+            + self.shed
+            + self.cache_hits
+            + self.cache_misses
+            + self.cache_evictions
+            + self.net_connections
+            + self.net_responses
+            > 0
+    }
 }
 
 /// Pooled snapshot for reporting (plus the per-shard breakdown).
@@ -124,6 +192,8 @@ pub struct MetricsReport {
     pub sim_mj_total: f64,
     /// Per-shard breakdown, indexed by shard id.
     pub shards: Vec<ShardReport>,
+    /// Network front-end aggregates (all-zero for in-process serving).
+    pub frontend: FrontendReport,
 }
 
 impl MetricsHub {
@@ -135,7 +205,7 @@ impl MetricsHub {
     /// Pre-size the per-shard table so a report lists every shard of a
     /// pool even before it has served traffic.
     pub fn ensure_shards(&self, n: usize) {
-        let mut g = self.0.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
         if n > 0 {
             g.slot(n - 1);
         }
@@ -145,7 +215,7 @@ impl MetricsHub {
     /// dispatcher increments it, the shard worker decrements it); reports
     /// sample the gauge at snapshot time.
     pub fn attach_depth_gauge(&self, shard: usize, gauge: Arc<AtomicUsize>) {
-        let mut g = self.0.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
         g.slot(shard).depth_gauge = Some(gauge);
     }
 
@@ -154,7 +224,7 @@ impl MetricsHub {
     /// [`MetricsHub::report`] snapshots never observe a half-recorded
     /// batch.
     pub fn record_batch(&self, shard: usize, exec: &BatchExec, responses: &[Response]) {
-        let mut g = self.0.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
         if g.started.is_none() {
             // The measurement window opens when the first batch *started*
             // executing, not when it finished recording — otherwise a
@@ -184,14 +254,55 @@ impl MetricsHub {
 
     /// Record `k` requests that failed in `shard`'s backend.
     pub fn record_failures(&self, shard: usize, k: usize) {
-        let mut g = self.0.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
         g.errors += k as u64;
         g.slot(shard).errors += k as u64;
     }
 
-    /// Consistent snapshot of the pooled and per-shard aggregates.
+    /// Record one request admitted into the pool by the front-end gate.
+    pub fn record_admitted(&self) {
+        self.frontend.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one admission that had to wait for capacity (`block`).
+    pub fn record_block_wait(&self) {
+        self.frontend.block_waits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request shed with `Overloaded` (`shed`).
+    pub fn record_shed(&self) {
+        self.frontend.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one response served straight from the response cache.
+    pub fn record_cache_hit(&self) {
+        self.frontend.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one cache lookup that missed.
+    pub fn record_cache_miss(&self) {
+        self.frontend.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one cache entry evicted to stay within capacity.
+    pub fn record_cache_eviction(&self) {
+        self.frontend.cache_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one accepted TCP connection.
+    pub fn record_net_connection(&self) {
+        self.frontend.net_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one response frame written back to a network client.
+    pub fn record_net_response(&self) {
+        self.frontend.net_responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent snapshot of the pooled and per-shard aggregates (the
+    /// lock-free front-end counters are sampled at snapshot time).
     pub fn report(&self) -> MetricsReport {
-        let mut g = self.0.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         let requests = g.requests;
         let mean_batch = g.batches_seen.mean();
@@ -202,6 +313,17 @@ impl MetricsHub {
         let exec_us_p50 = g.exec_us.percentile(50.0);
         let exec_us_p99 = g.exec_us.percentile(99.0);
         let (errors, batches, padded_rows) = (g.errors, g.batches, g.padded_rows);
+        let f = &self.frontend;
+        let frontend = FrontendReport {
+            admitted: f.admitted.load(Ordering::Relaxed),
+            block_waits: f.block_waits.load(Ordering::Relaxed),
+            shed: f.shed.load(Ordering::Relaxed),
+            cache_hits: f.cache_hits.load(Ordering::Relaxed),
+            cache_misses: f.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: f.cache_evictions.load(Ordering::Relaxed),
+            net_connections: f.net_connections.load(Ordering::Relaxed),
+            net_responses: f.net_responses.load(Ordering::Relaxed),
+        };
         let shards = g
             .shards
             .iter_mut()
@@ -240,6 +362,7 @@ impl MetricsHub {
             sim_us_mean,
             sim_mj_total,
             shards,
+            frontend,
         }
     }
 }
@@ -260,6 +383,26 @@ impl MetricsReport {
         println!("exec  p50/p99       {:.1} / {:.1} us", self.exec_us_p50, self.exec_us_p99);
         println!("sim ODIN latency    {:.2} us/inf", self.sim_us_mean);
         println!("sim ODIN energy     {:.4} mJ total", self.sim_mj_total);
+        if self.frontend.any() {
+            let f = &self.frontend;
+            println!(
+                "admission           {} admitted, {} waited, {} shed",
+                f.admitted, f.block_waits, f.shed
+            );
+            if f.cache_hits + f.cache_misses + f.cache_evictions > 0 {
+                println!(
+                    "cache               {} hits / {} misses ({:.1}% hit rate), {} evicted",
+                    f.cache_hits,
+                    f.cache_misses,
+                    100.0 * f.cache_hit_rate(),
+                    f.cache_evictions
+                );
+            }
+            println!(
+                "network             {} connections, {} responses",
+                f.net_connections, f.net_responses
+            );
+        }
         for s in &self.shards {
             println!(
                 "shard {:<2}  {:>7} req  {:>6} batches  util {:>5.1}%  depth {:>3}  exec p50/p99 {:.1} / {:.1} us",
@@ -272,6 +415,70 @@ impl MetricsReport {
                 s.exec_us_p99,
             );
         }
+    }
+
+    /// Machine-readable dump of the whole snapshot as compact JSON
+    /// (pooled aggregates, per-shard breakdown, front-end counters), so
+    /// benches and CI consume serving metrics without scraping stdout.
+    /// The text round-trips through [`crate::util::json::parse`].
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+
+        fn num(v: f64) -> Json {
+            Json::Num(v)
+        }
+        fn int(v: u64) -> Json {
+            Json::Num(v as f64)
+        }
+
+        let mut o = BTreeMap::new();
+        o.insert("requests".to_string(), int(self.requests));
+        o.insert("errors".to_string(), int(self.errors));
+        o.insert("batches".to_string(), int(self.batches));
+        o.insert("padded_rows".to_string(), int(self.padded_rows));
+        o.insert("throughput_rps".to_string(), num(self.throughput_rps));
+        o.insert("mean_batch".to_string(), num(self.mean_batch));
+        o.insert("queue_us_p50".to_string(), num(self.queue_us_p50));
+        o.insert("queue_us_p99".to_string(), num(self.queue_us_p99));
+        o.insert("exec_us_p50".to_string(), num(self.exec_us_p50));
+        o.insert("exec_us_p99".to_string(), num(self.exec_us_p99));
+        o.insert("sim_us_mean".to_string(), num(self.sim_us_mean));
+        o.insert("sim_mj_total".to_string(), num(self.sim_mj_total));
+
+        let f = &self.frontend;
+        let mut fo = BTreeMap::new();
+        fo.insert("admitted".to_string(), int(f.admitted));
+        fo.insert("block_waits".to_string(), int(f.block_waits));
+        fo.insert("shed".to_string(), int(f.shed));
+        fo.insert("cache_hits".to_string(), int(f.cache_hits));
+        fo.insert("cache_misses".to_string(), int(f.cache_misses));
+        fo.insert("cache_evictions".to_string(), int(f.cache_evictions));
+        fo.insert("cache_hit_rate".to_string(), num(f.cache_hit_rate()));
+        fo.insert("net_connections".to_string(), int(f.net_connections));
+        fo.insert("net_responses".to_string(), int(f.net_responses));
+        o.insert("frontend".to_string(), Json::Obj(fo));
+
+        let shards = self
+            .shards
+            .iter()
+            .map(|s| {
+                let mut so = BTreeMap::new();
+                so.insert("shard".to_string(), int(s.shard as u64));
+                so.insert("requests".to_string(), int(s.requests));
+                so.insert("errors".to_string(), int(s.errors));
+                so.insert("batches".to_string(), int(s.batches));
+                so.insert("padded_rows".to_string(), int(s.padded_rows));
+                so.insert("queue_depth".to_string(), int(s.queue_depth as u64));
+                so.insert("utilization".to_string(), num(s.utilization));
+                so.insert("exec_us_p50".to_string(), num(s.exec_us_p50));
+                so.insert("exec_us_p99".to_string(), num(s.exec_us_p99));
+                Json::Obj(so)
+            })
+            .collect();
+        o.insert("shards".to_string(), Json::Arr(shards));
+
+        Json::Obj(o).to_string()
     }
 }
 
@@ -350,6 +557,35 @@ mod tests {
         assert_eq!(m.report().shards[0].queue_depth, 7);
         gauge.store(2, Ordering::Relaxed);
         assert_eq!(m.report().shards[0].queue_depth, 2);
+    }
+
+    #[test]
+    fn frontend_counters_and_json_round_trip() {
+        let m = MetricsHub::new();
+        m.ensure_shards(2);
+        m.record_batch(1, &exec(2, 1_000), &[resp(2, 1_000), resp(2, 1_000)]);
+        m.record_admitted();
+        m.record_admitted();
+        m.record_shed();
+        m.record_cache_hit();
+        m.record_cache_miss();
+        m.record_cache_miss();
+        m.record_cache_eviction();
+        m.record_net_connection();
+        m.record_net_response();
+        let r = m.report();
+        assert_eq!(r.frontend.admitted, 2);
+        assert_eq!(r.frontend.shed, 1);
+        assert_eq!(r.frontend.cache_hits, 1);
+        assert!((r.frontend.cache_hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.path(&["requests"]).unwrap().as_usize(), Some(2));
+        assert_eq!(j.path(&["frontend", "cache_hits"]).unwrap().as_usize(), Some(1));
+        assert_eq!(j.path(&["frontend", "shed"]).unwrap().as_usize(), Some(1));
+        let shards = j.path(&["shards"]).unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[1].get("requests").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -30,8 +30,8 @@ pub mod metrics;
 pub mod pool;
 pub mod weights;
 
-pub use batcher::{BatchPolicy, Client, Response, Server};
+pub use batcher::{BatchPolicy, Client, Response, ServeError, Server};
 pub use engine::{BatchExec, Engine, Prediction, SimEngine, SYNTHETIC_SEED};
-pub use metrics::{MetricsHub, MetricsReport, ShardReport};
+pub use metrics::{FrontendReport, MetricsHub, MetricsReport, ShardReport};
 pub use pool::EnginePool;
 pub use weights::ModelWeights;

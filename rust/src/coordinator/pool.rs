@@ -44,7 +44,7 @@ use anyhow::Result;
 
 use crate::runtime::Executor;
 
-use super::batcher::{BatchPolicy, Client, Request, Response};
+use super::batcher::{BatchPolicy, Client, Request, Response, ServeError};
 use super::engine::Engine;
 use super::metrics::MetricsHub;
 
@@ -287,12 +287,32 @@ impl EnginePool {
     }
 
     /// Execute one chunk on this shard's engine and answer every request.
+    ///
+    /// Each request is width-validated *individually* before the chunk
+    /// reaches the engine: a malformed row (e.g. from the network
+    /// front-end) is answered with a typed [`ServeError::WrongRowWidth`]
+    /// on its own, and the well-formed requests sharing its chunk still
+    /// execute — a bad request can never poison its batch or kill the
+    /// shard.
     fn execute<E: Executor>(
         shard: usize,
         engine: &Engine<E>,
         metrics: &MetricsHub,
         batch: Vec<Request>,
     ) {
+        let want = engine.input_len();
+        let (batch, bad): (Vec<Request>, Vec<Request>) =
+            batch.into_iter().partition(|r| r.image.len() == want);
+        if !bad.is_empty() {
+            metrics.record_failures(shard, bad.len());
+            for req in bad {
+                let got = req.image.len();
+                let _ = req.respond.send(Err(ServeError::WrongRowWidth { got, want }));
+            }
+        }
+        if batch.is_empty() {
+            return;
+        }
         let images: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
         match engine.infer(&images) {
             Ok((preds, exec)) => {
@@ -321,10 +341,10 @@ impl EnginePool {
                 }
             }
             Err(e) => {
-                let msg = format!("inference failed: {e:#}");
+                let err = ServeError::Backend(format!("inference failed: {e:#}"));
                 metrics.record_failures(shard, batch.len());
                 for req in batch {
-                    let _ = req.respond.send(Err(msg.clone()));
+                    let _ = req.respond.send(Err(err.clone()));
                 }
             }
         }

@@ -1,0 +1,213 @@
+//! Bounded admission control for the network front-end.
+//!
+//! The engine pool's request queue is unbounded: an in-process caller
+//! that outruns the engines simply builds memory pressure and latency
+//! inside its own process.  A *network* front-end cannot afford that — a
+//! public-facing service needs an explicit overload policy.  The
+//! [`AdmissionGate`] bounds the number of requests in flight between the
+//! front-end and the pool:
+//!
+//! ```text
+//!            in_flight < cap            in_flight == cap
+//!   admit ───────────────────▶ Permit   ────────┬─────────▶
+//!                                               │ policy = Block:
+//!                                               │   wait on condvar until
+//!                                               │   a Permit drops, then
+//!                                               │   admit (backpressure)
+//!                                               │ policy = Shed:
+//!                                               │   Err(retry_after_ms)
+//!                                               ▼   → wire `Overloaded`
+//! ```
+//!
+//! Admission happens on the connection's *reader* thread while responses
+//! are written by a separate writer thread, so a blocked admit never
+//! stalls response delivery — permits keep draining and a `Block` gate
+//! always makes progress (no deadlock; pinned by the loopback tests).
+//! Every decision is counted in the shared
+//! [`MetricsHub`](crate::coordinator::MetricsHub).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::MetricsHub;
+
+/// What to do with a request that arrives while the gate is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Apply backpressure: the connection's reader waits for capacity
+    /// (its TCP socket fills up and throttles the client).
+    Block,
+    /// Shed load: answer immediately with a structured `Overloaded`
+    /// carrying a retry-after hint, never queueing the request.
+    Shed,
+}
+
+impl AdmissionPolicy {
+    /// Parse a CLI spelling (`"block"` | `"shed"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "block" => Some(AdmissionPolicy::Block),
+            "shed" => Some(AdmissionPolicy::Shed),
+            _ => None,
+        }
+    }
+}
+
+/// Gate configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Full-gate behavior.
+    pub policy: AdmissionPolicy,
+    /// Max requests in flight between front-end and pool (>= 1).
+    pub queue_cap: usize,
+    /// Backoff hint carried by `Overloaded` responses (milliseconds).
+    pub retry_after_ms: u32,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { policy: AdmissionPolicy::Block, queue_cap: 256, retry_after_ms: 25 }
+    }
+}
+
+struct GateState {
+    cfg: AdmissionConfig,
+    in_flight: Mutex<usize>,
+    freed: Condvar,
+    metrics: MetricsHub,
+}
+
+/// Shared, cloneable admission gate (one per front-end, shared by all
+/// connection threads).
+#[derive(Clone)]
+pub struct AdmissionGate {
+    state: Arc<GateState>,
+}
+
+/// RAII admission slot: holding it means one request is in flight to the
+/// pool; dropping it (after the response is written, or on any error
+/// path) frees the slot and wakes one blocked admitter.
+pub struct Permit {
+    state: Arc<GateState>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut n = self.state.in_flight.lock().unwrap();
+        *n = n.saturating_sub(1);
+        drop(n);
+        self.state.freed.notify_one();
+    }
+}
+
+impl AdmissionGate {
+    /// Build a gate (`queue_cap` is clamped to at least 1).
+    pub fn new(mut cfg: AdmissionConfig, metrics: MetricsHub) -> Self {
+        cfg.queue_cap = cfg.queue_cap.max(1);
+        AdmissionGate {
+            state: Arc::new(GateState {
+                cfg,
+                in_flight: Mutex::new(0),
+                freed: Condvar::new(),
+                metrics,
+            }),
+        }
+    }
+
+    /// Try to admit one request.  Returns a [`Permit`] on success; under
+    /// the `Shed` policy a full gate returns `Err(retry_after_ms)` for a
+    /// structured `Overloaded` response instead of queueing.
+    pub fn admit(&self) -> Result<Permit, u32> {
+        let s = &self.state;
+        let mut n = s.in_flight.lock().unwrap();
+        if *n >= s.cfg.queue_cap {
+            match s.cfg.policy {
+                AdmissionPolicy::Shed => {
+                    s.metrics.record_shed();
+                    return Err(s.cfg.retry_after_ms);
+                }
+                AdmissionPolicy::Block => {
+                    s.metrics.record_block_wait();
+                    while *n >= s.cfg.queue_cap {
+                        n = s.freed.wait(n).unwrap();
+                    }
+                }
+            }
+        }
+        *n += 1;
+        s.metrics.record_admitted();
+        Ok(Permit { state: Arc::clone(s) })
+    }
+
+    /// Requests currently in flight (admitted, response not yet written).
+    pub fn in_flight(&self) -> usize {
+        *self.state.in_flight.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_rejects_at_capacity_with_hint() {
+        let m = MetricsHub::new();
+        let gate = AdmissionGate::new(
+            AdmissionConfig { policy: AdmissionPolicy::Shed, queue_cap: 2, retry_after_ms: 7 },
+            m.clone(),
+        );
+        let p1 = gate.admit().unwrap();
+        let p2 = gate.admit().unwrap();
+        assert_eq!(gate.admit().unwrap_err(), 7);
+        assert_eq!(gate.in_flight(), 2);
+        drop(p1);
+        let p3 = gate.admit().unwrap();
+        drop(p2);
+        drop(p3);
+        assert_eq!(gate.in_flight(), 0);
+        let r = m.report();
+        assert_eq!(r.frontend.admitted, 3);
+        assert_eq!(r.frontend.shed, 1);
+        assert_eq!(r.frontend.block_waits, 0);
+    }
+
+    #[test]
+    fn block_waits_until_a_permit_frees() {
+        let m = MetricsHub::new();
+        let gate = AdmissionGate::new(
+            AdmissionConfig { policy: AdmissionPolicy::Block, queue_cap: 1, retry_after_ms: 1 },
+            m.clone(),
+        );
+        let held = gate.admit().unwrap();
+        let waiter = {
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                let p = gate.admit().unwrap(); // blocks until `held` drops
+                drop(p);
+            })
+        };
+        // Wait until the waiter has observably hit the full-gate branch
+        // (record_block_wait fires while it holds the gate lock, so once
+        // the counter reads 1 the waiter is in — or headed into — the
+        // condvar wait, and the permit drop below cannot race past it).
+        while m.report().frontend.block_waits == 0 {
+            std::thread::yield_now();
+        }
+        drop(held);
+        waiter.join().unwrap();
+        assert_eq!(gate.in_flight(), 0);
+        let r = m.report();
+        assert_eq!(r.frontend.admitted, 2);
+        assert_eq!(r.frontend.block_waits, 1);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let gate = AdmissionGate::new(
+            AdmissionConfig { policy: AdmissionPolicy::Shed, queue_cap: 0, retry_after_ms: 1 },
+            MetricsHub::new(),
+        );
+        let p = gate.admit().unwrap();
+        assert!(gate.admit().is_err());
+        drop(p);
+    }
+}

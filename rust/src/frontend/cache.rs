@@ -1,0 +1,232 @@
+//! Sharded LRU response cache keyed by `(arch, mode, input row)`.
+//!
+//! **Why caching cannot change results.**  Every backend behind the
+//! engine pool is deterministic (`Executor` contract: same bytes in,
+//! same logits out — the property the pool's shard routing already
+//! relies on), so replaying a stored response for a byte-identical row
+//! is bit-identical to re-executing it.  Keys compare the *full* row
+//! bytes — a hash is only used to pick the cache shard — so hash
+//! collisions can never serve the wrong scores.  The loopback
+//! integration tests pin cached == uncached bit-identity.
+//!
+//! The cache sits *in front of* admission control: a hit costs no pool
+//! work, so it is answered even when the gate is full — under overload a
+//! hot working set keeps being served while cold requests shed.
+//!
+//! Eviction is least-recently-used per shard (monotonic touch ticks, the
+//! oldest tick evicted on overflow).  Hits, misses, and evictions are
+//! counted in the shared [`MetricsHub`](crate::coordinator::MetricsHub).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::MetricsHub;
+
+/// The cached outcome of one inference: the scores plus the pool shard
+/// that originally produced them (replayed so cached responses stay
+/// shaped like live ones).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CachedScores {
+    /// Raw per-class logits.
+    pub logits: [f32; 10],
+    /// Predicted class.
+    pub argmax: u8,
+    /// Pool shard that originally executed this row.
+    pub shard: u32,
+}
+
+/// Full cache key: model coordinates plus the complete input row.
+/// `Arc`s keep clones cheap (the row is shared, not copied).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    arch: Arc<str>,
+    mode: Arc<str>,
+    row: Arc<Vec<u8>>,
+}
+
+impl CacheKey {
+    /// Build a key; the row is wrapped once and shared by every clone.
+    pub fn new(arch: Arc<str>, mode: Arc<str>, row: Vec<u8>) -> Self {
+        CacheKey { arch, mode, row: Arc::new(row) }
+    }
+
+    /// The input row this key was built from.
+    pub fn row(&self) -> &[u8] {
+        &self.row
+    }
+}
+
+struct Entry {
+    scores: CachedScores,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<CacheKey, Entry>,
+    tick: u64,
+}
+
+/// Sharded LRU response cache (see module docs).
+pub struct ResponseCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+    metrics: MetricsHub,
+}
+
+impl ResponseCache {
+    /// Build a cache holding at most `capacity` responses in total
+    /// (clamped to >= 1), spread over up to 8 lock shards.  The bound is
+    /// enforced per shard (`floor(capacity / shards)` each, so total
+    /// residency never exceeds `capacity`); a working set whose keys all
+    /// hash to one shard therefore starts evicting below the total
+    /// capacity — the price of sharded locking.
+    pub fn new(capacity: usize, metrics: MetricsHub) -> Self {
+        let cap = capacity.max(1);
+        let n = cap.min(8);
+        let per_shard_cap = cap / n; // n <= cap, so always >= 1
+        let shards = (0..n).map(|_| Mutex::new(Shard::default())).collect();
+        ResponseCache { shards, per_shard_cap, metrics }
+    }
+
+    fn shard_for(&self, key: &CacheKey) -> &Mutex<Shard> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Look up a row; a hit refreshes its recency.  Records hit/miss.
+    pub fn get(&self, key: &CacheKey) -> Option<CachedScores> {
+        let hit = {
+            let mut s = self.shard_for(key).lock().unwrap();
+            s.tick += 1;
+            let tick = s.tick;
+            s.map.get_mut(key).map(|e| {
+                e.last_used = tick;
+                e.scores
+            })
+        };
+        match hit {
+            Some(_) => self.metrics.record_cache_hit(),
+            None => self.metrics.record_cache_miss(),
+        }
+        hit
+    }
+
+    /// Insert (or refresh) a row's scores, evicting the least-recently
+    /// used entries of the shard while it is over capacity.
+    ///
+    /// Eviction picks the victim with a linear scan of the shard
+    /// (O(capacity / shards) under the shard lock).  That is deliberate:
+    /// at the CLI-scale capacities this serves (hundreds to a few
+    /// thousand entries per shard) the scan is cheaper and simpler than
+    /// maintaining an intrusive LRU list; revisit if capacities grow
+    /// past ~10^5 entries.
+    pub fn put(&self, key: CacheKey, scores: CachedScores) {
+        let mut evicted = 0u64;
+        {
+            let mut s = self.shard_for(&key).lock().unwrap();
+            s.tick += 1;
+            let tick = s.tick;
+            s.map.insert(key, Entry { scores, last_used: tick });
+            while s.map.len() > self.per_shard_cap {
+                let victim =
+                    s.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone());
+                match victim {
+                    Some(k) => {
+                        s.map.remove(&k);
+                        evicted += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        for _ in 0..evicted {
+            self.metrics.record_cache_eviction();
+        }
+    }
+
+    /// Entries currently cached (across all shards).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(row: &[u8]) -> CacheKey {
+        CacheKey::new(Arc::from("cnn1"), Arc::from("fast"), row.to_vec())
+    }
+
+    fn scores(v: f32) -> CachedScores {
+        CachedScores { logits: [v; 10], argmax: 3, shard: 1 }
+    }
+
+    #[test]
+    fn hit_after_put_miss_before() {
+        let m = MetricsHub::new();
+        let c = ResponseCache::new(16, m.clone());
+        assert_eq!(c.get(&key(&[1, 2, 3])), None);
+        c.put(key(&[1, 2, 3]), scores(0.5));
+        assert_eq!(c.get(&key(&[1, 2, 3])), Some(scores(0.5)));
+        assert_eq!(c.get(&key(&[1, 2, 4])), None, "different row must miss");
+        let r = m.report();
+        assert_eq!(r.frontend.cache_hits, 1);
+        assert_eq!(r.frontend.cache_misses, 2);
+    }
+
+    #[test]
+    fn distinct_model_coordinates_are_distinct_entries() {
+        let c = ResponseCache::new(16, MetricsHub::new());
+        let row = vec![7u8; 8];
+        c.put(CacheKey::new(Arc::from("cnn1"), Arc::from("fast"), row.clone()), scores(1.0));
+        c.put(CacheKey::new(Arc::from("cnn1"), Arc::from("sc"), row.clone()), scores(2.0));
+        c.put(CacheKey::new(Arc::from("cnn2"), Arc::from("fast"), row.clone()), scores(3.0));
+        assert_eq!(c.len(), 3);
+        let got = c
+            .get(&CacheKey::new(Arc::from("cnn1"), Arc::from("sc"), row))
+            .unwrap();
+        assert_eq!(got, scores(2.0));
+    }
+
+    #[test]
+    fn evicts_least_recently_used_and_counts() {
+        let m = MetricsHub::new();
+        // capacity 1 -> a single shard with cap 1: every insert evicts
+        // the previous entry.
+        let c = ResponseCache::new(1, m.clone());
+        c.put(key(&[1]), scores(1.0));
+        c.put(key(&[2]), scores(2.0));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&key(&[1])), None, "older entry evicted");
+        assert_eq!(c.get(&key(&[2])), Some(scores(2.0)));
+        assert_eq!(m.report().frontend.cache_evictions, 1);
+    }
+
+    #[test]
+    fn touch_refreshes_recency() {
+        // Keys may land in different lock shards, so drive a
+        // single-shard cache explicitly to observe LRU order.
+        let c = ResponseCache {
+            shards: vec![Mutex::new(Shard::default())],
+            per_shard_cap: 2,
+            metrics: MetricsHub::new(),
+        };
+        c.put(key(&[1]), scores(1.0));
+        c.put(key(&[2]), scores(2.0));
+        assert_eq!(c.get(&key(&[1])), Some(scores(1.0))); // touch [1]
+        c.put(key(&[3]), scores(3.0)); // evicts [2], the LRU
+        assert_eq!(c.get(&key(&[2])), None);
+        assert_eq!(c.get(&key(&[1])), Some(scores(1.0)));
+        assert_eq!(c.get(&key(&[3])), Some(scores(3.0)));
+    }
+}

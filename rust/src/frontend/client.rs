@@ -1,0 +1,211 @@
+//! Blocking, pipelining network client for the TCP front-end.
+//!
+//! One [`NetClient`] owns one TCP connection.  [`NetClient::submit`]
+//! writes a request frame and returns immediately with a receiver, so
+//! any number of requests can be in flight on one connection (open
+//! loop); [`NetClient::infer`] is the blocking closed-loop convenience.
+//! A background reader thread routes response frames to their waiting
+//! receivers by request id.  Dropping the client closes the socket and
+//! joins the reader; any still-pending receivers disconnect, which
+//! callers observe as [`NetError::Disconnected`] — a request is never
+//! silently dropped.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireStatus};
+
+/// A successful network inference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetResponse {
+    /// Raw per-class logits (bit-identical to in-process execution).
+    pub logits: [f32; 10],
+    /// Predicted class.
+    pub argmax: u8,
+    /// Pool shard that produced the scores.
+    pub shard: u32,
+    /// True when the server answered from its response cache.
+    pub cached: bool,
+}
+
+/// A typed network inference failure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetError {
+    /// Shed by the server's admission gate; retry after the hint.
+    Overloaded {
+        /// Suggested backoff before retrying (milliseconds).
+        retry_after_ms: u32,
+    },
+    /// The server answered with a typed error.
+    Remote {
+        /// What went wrong server-side.
+        kind: WireErrorKind,
+        /// Human-readable detail from the server.
+        message: String,
+    },
+    /// The connection closed before this request was answered.
+    Disconnected,
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Overloaded { retry_after_ms } => {
+                write!(f, "server overloaded; retry after {retry_after_ms} ms")
+            }
+            NetError::Remote { kind, message } => write!(f, "server error ({kind:?}): {message}"),
+            NetError::Disconnected => write!(f, "connection closed before a response"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+struct Inner {
+    stream: TcpStream,
+    writer: Mutex<TcpStream>,
+    pending: Mutex<HashMap<u64, Sender<WireResponse>>>,
+    closed: AtomicBool,
+    next_id: AtomicU64,
+    arch: String,
+    mode: String,
+}
+
+/// Blocking, pipelining client over one front-end connection (see
+/// module docs).
+pub struct NetClient {
+    inner: Arc<Inner>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl NetClient {
+    /// Connect to a front-end and speak for `arch`/`mode` (the model the
+    /// front-end serves; anything else is answered `UnknownModel`).
+    /// Names longer than the wire format's `u16` length fields are
+    /// rejected here, so `submit` can never encode a corrupt frame.
+    pub fn connect(addr: impl ToSocketAddrs, arch: &str, mode: &str) -> io::Result<NetClient> {
+        if arch.len() > u16::MAX as usize || mode.len() > u16::MAX as usize {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "arch/mode names are limited to 65535 bytes by the wire format",
+            ));
+        }
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone()?;
+        let read_half = stream.try_clone()?;
+        let inner = Arc::new(Inner {
+            stream,
+            writer: Mutex::new(writer),
+            pending: Mutex::new(HashMap::new()),
+            closed: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            arch: arch.to_string(),
+            mode: mode.to_string(),
+        });
+        let reader = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("odin-net-client".into())
+                .spawn(move || Self::read_loop(read_half, inner))?
+        };
+        Ok(NetClient { inner, reader: Some(reader) })
+    }
+
+    fn read_loop(mut stream: TcpStream, inner: Arc<Inner>) {
+        loop {
+            match wire::read_frame(&mut stream) {
+                Ok(Some(Frame::Response(resp))) => {
+                    let waiter = inner.pending.lock().unwrap().remove(&resp.id);
+                    if let Some(tx) = waiter {
+                        let _ = tx.send(resp);
+                    }
+                }
+                // A server never sends requests; tolerate and move on.
+                Ok(Some(Frame::Request(_))) => {}
+                Ok(None) | Err(_) => break,
+            }
+        }
+        // Mark closed *before* draining so a concurrent submit either
+        // lands before the drain (removed here) or sees the flag and
+        // removes itself — either way its receiver disconnects.
+        inner.closed.store(true, Ordering::SeqCst);
+        inner.pending.lock().unwrap().clear();
+    }
+
+    /// Send one request without waiting (pipelining): the returned
+    /// receiver yields the response frame, or disconnects if the
+    /// connection dies first.  A row too large to fit one wire frame is
+    /// answered locally with a typed `BadRequest` — the connection (and
+    /// every other pipelined request on it) stays alive.
+    pub fn submit(&self, row: Vec<u8>) -> Receiver<WireResponse> {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let overhead = 64 + self.inner.arch.len() + self.inner.mode.len();
+        if row.len() + overhead > wire::MAX_FRAME {
+            let _ = tx.send(WireResponse {
+                id,
+                status: WireStatus::Error {
+                    kind: WireErrorKind::BadRequest,
+                    message: format!(
+                        "row of {} bytes exceeds the {}-byte frame limit",
+                        row.len(),
+                        wire::MAX_FRAME
+                    ),
+                },
+            });
+            return rx;
+        }
+        self.inner.pending.lock().unwrap().insert(id, tx);
+        let frame = Frame::Request(WireRequest {
+            id,
+            arch: self.inner.arch.clone(),
+            mode: self.inner.mode.clone(),
+            row,
+        });
+        let write_failed = {
+            let mut w = self.inner.writer.lock().unwrap();
+            wire::write_frame(&mut *w, &frame).is_err()
+        };
+        if write_failed || self.inner.closed.load(Ordering::SeqCst) {
+            self.inner.pending.lock().unwrap().remove(&id);
+        }
+        rx
+    }
+
+    /// Resolve one submitted request into a typed outcome.
+    pub fn wait(rx: Receiver<WireResponse>) -> Result<NetResponse, NetError> {
+        match rx.recv() {
+            Ok(WireResponse { status: WireStatus::Ok { shard, argmax, cached, logits }, .. }) => {
+                Ok(NetResponse { logits, argmax, shard, cached })
+            }
+            Ok(WireResponse { status: WireStatus::Error { kind, message }, .. }) => {
+                Err(NetError::Remote { kind, message })
+            }
+            Ok(WireResponse { status: WireStatus::Overloaded { retry_after_ms }, .. }) => {
+                Err(NetError::Overloaded { retry_after_ms })
+            }
+            Err(_) => Err(NetError::Disconnected),
+        }
+    }
+
+    /// Submit and block for the typed outcome (closed loop).
+    pub fn infer(&self, row: Vec<u8>) -> Result<NetResponse, NetError> {
+        Self::wait(self.submit(row))
+    }
+}
+
+impl Drop for NetClient {
+    fn drop(&mut self) {
+        let _ = self.inner.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}

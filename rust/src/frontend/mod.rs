@@ -1,0 +1,42 @@
+//! L4 network front-end: the TCP boundary that lets external clients
+//! drive the sharded [`EnginePool`](crate::coordinator::EnginePool).
+//!
+//! ODIN's pitch is serving ANN inference at accelerator speed; the
+//! ROADMAP's north star is a service under public traffic.  Layers 1-3
+//! end at an in-process `Client`, so until now a request had to
+//! originate inside the process that owns the pool.  This subsystem adds
+//! the missing network boundary — std-only (no tokio, no serde: the
+//! container is offline), mirroring how the rest of the stack owns its
+//! substrates:
+//!
+//! * [`wire`] — versioned, length-prefixed binary protocol; strict
+//!   decoding, exhaustive round-trip tests.
+//! * [`server`] — `TcpListener` accept loop; per-connection reader and
+//!   writer threads pipeline many in-flight requests per connection into
+//!   the pool.
+//! * [`admission`] — bounded in-flight gate with a `block` (TCP
+//!   backpressure) or `shed` (structured `Overloaded{retry_after}`)
+//!   policy, so overload never stalls the pool dispatcher.
+//! * [`cache`] — sharded LRU response cache keyed by the full
+//!   `(arch, mode, row)` — bit-identical to uncached execution because
+//!   every backend is deterministic.
+//! * [`client`] — blocking, pipelining Rust client used by the tests,
+//!   `examples/mnist_serving.rs`, and `benches/net_throughput.rs`.
+//!
+//! End to end: `odin serve --listen 127.0.0.1:0 --cache 1024 --admission
+//! shed --queue-cap 256` serves the pool over loopback; everything stays
+//! hermetic and offline.  See `docs/ARCHITECTURE.md` for the L4 design
+//! (wire format table, admission state diagram, cache coherence note).
+#![deny(missing_docs)]
+
+pub mod admission;
+pub mod cache;
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use admission::{AdmissionConfig, AdmissionGate, AdmissionPolicy, Permit};
+pub use cache::{CacheKey, CachedScores, ResponseCache};
+pub use client::{NetClient, NetError, NetResponse};
+pub use server::{Frontend, FrontendConfig};
+pub use wire::{Frame, WireErrorKind, WireRequest, WireResponse, WireStatus, WIRE_VERSION};

@@ -1,0 +1,426 @@
+//! The TCP front-end server: accept loop + per-connection reader/writer
+//! threads bridging [`wire`] frames into the engine pool.
+//!
+//! ```text
+//!              accept loop (one thread)
+//!                    │ per connection
+//!        ┌───────────┴───────────┐
+//!        ▼                       ▼
+//!  reader thread            writer thread
+//!  read_frame ──▶ decode    drain FIFO of outcomes:
+//!   │ arch/mode check        • Immediate (cache hit, typed error,
+//!   │ cache lookup             Overloaded) — write now
+//!   │ admission gate         • Pending — wait for the pool response,
+//!   │ pool submit ──────────▶  insert into the cache, release the
+//!   ▼ next frame               admission permit, write
+//! ```
+//!
+//! The reader never waits for a response before reading the next frame,
+//! so one connection pipelines arbitrarily many in-flight requests into
+//! the pool; the writer answers them in submission order (responses
+//! carry the request id, so clients may match them however they like).
+//! Because admission blocks only the reader while the writer keeps
+//! draining permits, a full `block` gate applies TCP backpressure to the
+//! client instead of deadlocking.  A peer that stops *reading* responses
+//! is torn down once a response write blocks for `WRITE_TIMEOUT` (30 s),
+//! which releases every admission permit its queue was holding — one
+//! bad client can degrade the shared gate only briefly, never wedge it.
+//!
+//! A front-end serves one `(arch, mode)` pair — the coordinates of the
+//! engines behind the pool.  Requests for any other model are answered
+//! with a typed `UnknownModel` error.  Malformed rows are *not* rejected
+//! here: they flow to the pool, whose per-request width validation
+//! answers them with `WrongRowWidth` — one validation path for local and
+//! network callers, regression-tested over the wire.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Client, MetricsHub, Response, ServeError};
+
+use super::admission::{AdmissionConfig, AdmissionGate, Permit};
+use super::cache::{CacheKey, CachedScores, ResponseCache};
+use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireStatus};
+
+/// Bound on each connection's queued-but-unwritten responses.  Immediate
+/// responses (cache hits, typed errors, `Overloaded`) take no admission
+/// permit, so without this bound a client that sends requests but never
+/// reads responses would grow server memory without limit; a full queue
+/// instead blocks the reader, which stops reading frames and lets TCP
+/// backpressure throttle the peer.
+const WRITER_QUEUE: usize = 1024;
+
+/// How long one response write may block before the connection is
+/// declared dead.  A peer that stops *reading* wedges its writer thread
+/// mid-`write_frame` while admission permits sit in the queued `Pending`
+/// messages behind it; the timeout tears that connection down (dropping
+/// the queue releases every permit), so a single non-reading client can
+/// starve the shared gate for at most this long.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Front-end configuration: overload policy plus response caching.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontendConfig {
+    /// Admission gate configuration (policy, capacity, retry hint).
+    pub admission: AdmissionConfig,
+    /// Total response-cache capacity in entries; `0` disables caching.
+    pub cache_capacity: usize,
+    /// Max concurrently open connections; further accepts are refused
+    /// (dropped) until one closes.  Each connection costs two OS
+    /// threads, so this — not the admission gate, which only bounds
+    /// in-flight *requests* — is what stops a connection flood from
+    /// exhausting the process.
+    pub max_connections: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            admission: AdmissionConfig::default(),
+            cache_capacity: 0,
+            max_connections: 1024,
+        }
+    }
+}
+
+struct Shared {
+    stop: AtomicBool,
+    /// Read-half handles of live connections, kept weakly so a finished
+    /// connection closes its socket immediately; `shutdown` upgrades
+    /// whatever is still alive to unblock the readers.
+    conns: Mutex<Vec<Weak<TcpStream>>>,
+    metrics: MetricsHub,
+    gate: AdmissionGate,
+    cache: Option<ResponseCache>,
+    client: Client,
+    arch: Arc<str>,
+    mode: Arc<str>,
+    max_connections: usize,
+}
+
+/// A running TCP front-end over an engine pool.
+///
+/// The front-end borrows the pool through a [`Client`] clone — it does
+/// not own the pool.  Shut down in this order: drop local clients, call
+/// [`Frontend::shutdown`] (joins every front-end thread), then shut the
+/// pool down.
+pub struct Frontend {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<Vec<JoinHandle<()>>>>,
+}
+
+enum WriterMsg {
+    /// Already-resolved response (cache hit, protocol error, shed).
+    Immediate(WireResponse),
+    /// A pool submission to wait on, then answer.
+    Pending {
+        id: u64,
+        rx: Receiver<std::result::Result<Response, ServeError>>,
+        permit: Permit,
+        key: Option<CacheKey>,
+    },
+}
+
+impl Frontend {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral loopback
+    /// port) and serve `pool_client`'s engine pool, which must be built
+    /// from engines for exactly `arch`/`mode`.
+    pub fn spawn(
+        listen: &str,
+        pool_client: Client,
+        arch: &str,
+        mode: &str,
+        cfg: FrontendConfig,
+        metrics: MetricsHub,
+    ) -> Result<Frontend> {
+        let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            metrics: metrics.clone(),
+            gate: AdmissionGate::new(cfg.admission, metrics.clone()),
+            cache: (cfg.cache_capacity > 0)
+                .then(|| ResponseCache::new(cfg.cache_capacity, metrics)),
+            client: pool_client,
+            arch: Arc::from(arch),
+            mode: Arc::from(mode),
+            max_connections: cfg.max_connections.max(1),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("odin-accept".into())
+                .spawn(move || Self::accept_loop(listener, shared))
+                .context("spawning accept thread")?
+        };
+        Ok(Frontend { addr, shared, accept: Some(accept) })
+    }
+
+    /// The address the front-end actually bound (resolves `:0` ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Vec<JoinHandle<()>> {
+        let mut handles = Vec::new();
+        loop {
+            let stream = match listener.accept() {
+                Ok((stream, _peer)) => stream,
+                Err(_) => {
+                    if shared.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Persistent accept errors (e.g. fd exhaustion) must
+                    // not busy-spin a core; back off briefly.
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    continue;
+                }
+            };
+            // The shutdown wake-up connect lands here with `stop` set.
+            if shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            // Reap finished connections so a long-running front-end does
+            // not accumulate one dead handle per connection ever served
+            // (dropping a finished JoinHandle just detaches it), and so
+            // `handles.len()` counts live connections for the cap below.
+            handles.retain(|h| !h.is_finished());
+            if handles.len() >= shared.max_connections {
+                // Connection flood: refuse by dropping the socket — each
+                // connection costs two OS threads, so accepting past the
+                // cap would let idle connections exhaust the process.
+                drop(stream);
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            shared.metrics.record_net_connection();
+            let read_half = Arc::new(stream);
+            {
+                let mut conns = shared.conns.lock().unwrap();
+                conns.retain(|w| w.strong_count() > 0);
+                conns.push(Arc::downgrade(&read_half));
+            }
+            let sh = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name("odin-conn".into())
+                .spawn(move || Self::connection(read_half, sh));
+            if let Ok(h) = spawned {
+                handles.push(h);
+            }
+        }
+        handles
+    }
+
+    /// One connection: this thread reads and dispatches frames; a paired
+    /// writer thread answers them (see module docs for the data flow).
+    fn connection(read_half: Arc<TcpStream>, shared: Arc<Shared>) {
+        let write_half = match read_half.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let _ = write_half.set_write_timeout(Some(WRITE_TIMEOUT));
+        let (wtx, wrx) = mpsc::sync_channel::<WriterMsg>(WRITER_QUEUE);
+        let writer = {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("odin-conn-writer".into())
+                .spawn(move || Self::writer(write_half, wrx, sh))
+        };
+        let writer = match writer {
+            Ok(h) => h,
+            Err(_) => return,
+        };
+        let mut reader = &*read_half;
+        loop {
+            match wire::read_frame(&mut reader) {
+                Ok(Some(Frame::Request(req))) => {
+                    if Self::handle_request(req, &wtx, &shared).is_err() {
+                        break; // writer gone (socket died)
+                    }
+                }
+                Ok(Some(Frame::Response(resp))) => {
+                    let answer = WireResponse {
+                        id: resp.id,
+                        status: WireStatus::Error {
+                            kind: WireErrorKind::BadRequest,
+                            message: "unexpected response frame from client".to_string(),
+                        },
+                    };
+                    if wtx.send(WriterMsg::Immediate(answer)).is_err() {
+                        break;
+                    }
+                }
+                // Clean EOF, a malformed frame, or a closed socket all
+                // end the connection; queued work still drains.
+                Ok(None) | Err(_) => break,
+            }
+        }
+        drop(wtx);
+        let _ = writer.join();
+        let _ = read_half.shutdown(Shutdown::Both);
+    }
+
+    /// Dispatch one decoded request; `Err` means the writer is gone.
+    /// Sends into the bounded writer queue, so a peer that stops reading
+    /// responses eventually blocks this reader (TCP backpressure) rather
+    /// than growing server memory.
+    fn handle_request(
+        req: WireRequest,
+        wtx: &SyncSender<WriterMsg>,
+        shared: &Shared,
+    ) -> std::result::Result<(), ()> {
+        if req.arch.as_str() != &*shared.arch || req.mode.as_str() != &*shared.mode {
+            let answer = WireResponse {
+                id: req.id,
+                status: WireStatus::Error {
+                    kind: WireErrorKind::UnknownModel,
+                    message: format!(
+                        "this front-end serves {}/{}, not {}/{}",
+                        shared.arch, shared.mode, req.arch, req.mode
+                    ),
+                },
+            };
+            return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
+        }
+        // Cache lookup comes before admission: a hit costs no pool work,
+        // so the hot working set keeps serving even under overload.
+        let (key, row) = match shared.cache.as_ref() {
+            Some(cache) => {
+                let k = CacheKey::new(
+                    Arc::clone(&shared.arch),
+                    Arc::clone(&shared.mode),
+                    req.row,
+                );
+                if let Some(hit) = cache.get(&k) {
+                    let answer = WireResponse {
+                        id: req.id,
+                        status: WireStatus::Ok {
+                            shard: hit.shard,
+                            argmax: hit.argmax,
+                            cached: true,
+                            logits: hit.logits,
+                        },
+                    };
+                    return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
+                }
+                let row = k.row().to_vec();
+                (Some(k), row)
+            }
+            None => (None, req.row),
+        };
+        let permit = match shared.gate.admit() {
+            Ok(p) => p,
+            Err(retry_after_ms) => {
+                let answer = WireResponse {
+                    id: req.id,
+                    status: WireStatus::Overloaded { retry_after_ms },
+                };
+                return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
+            }
+        };
+        let rx = shared.client.submit(row);
+        wtx.send(WriterMsg::Pending { id: req.id, rx, permit, key }).map_err(|_| ())
+    }
+
+    /// Writer loop: resolve each queued outcome in order and write it.
+    fn writer(mut stream: TcpStream, wrx: Receiver<WriterMsg>, shared: Arc<Shared>) {
+        while let Ok(msg) = wrx.recv() {
+            let resp = match msg {
+                WriterMsg::Immediate(r) => r,
+                WriterMsg::Pending { id, rx, permit, key } => {
+                    let status = match rx.recv() {
+                        Ok(Ok(resp)) => {
+                            let scores = CachedScores {
+                                logits: resp.prediction.logits,
+                                argmax: resp.prediction.argmax,
+                                shard: resp.shard as u32,
+                            };
+                            if let (Some(cache), Some(k)) = (shared.cache.as_ref(), key) {
+                                cache.put(k, scores);
+                            }
+                            WireStatus::Ok {
+                                shard: scores.shard,
+                                argmax: scores.argmax,
+                                cached: false,
+                                logits: scores.logits,
+                            }
+                        }
+                        Ok(Err(e)) => WireStatus::Error {
+                            kind: error_kind(&e),
+                            message: e.to_string(),
+                        },
+                        Err(_) => WireStatus::Error {
+                            kind: WireErrorKind::Shutdown,
+                            message: "engine pool stopped".to_string(),
+                        },
+                    };
+                    drop(permit);
+                    WireResponse { id, status }
+                }
+            };
+            if wire::write_frame(&mut stream, &Frame::Response(resp)).is_err() {
+                // Dead socket: exiting drops the queued messages, whose
+                // permits release on drop — admission never leaks slots.
+                break;
+            }
+            shared.metrics.record_net_response();
+        }
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+
+    /// Stop accepting, close every live connection, and join every
+    /// front-end thread.  The engine pool is not owned and keeps
+    /// running; shut it down separately afterwards.
+    pub fn shutdown(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection (a
+        // wildcard bind address is not connectable; use loopback).
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(wake);
+        let conn_handles = self.accept.take().map(|h| h.join().unwrap_or_default());
+        for conn in self.shared.conns.lock().unwrap().drain(..) {
+            if let Some(stream) = conn.upgrade() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        if let Some(handles) = conn_handles {
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for Frontend {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_impl();
+        }
+    }
+}
+
+fn error_kind(e: &ServeError) -> WireErrorKind {
+    match e {
+        ServeError::WrongRowWidth { .. } => WireErrorKind::WrongRowWidth,
+        ServeError::Backend(_) => WireErrorKind::Backend,
+        ServeError::Shutdown => WireErrorKind::Shutdown,
+    }
+}

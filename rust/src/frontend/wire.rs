@@ -1,0 +1,532 @@
+//! Versioned length-prefixed binary wire protocol of the L4 front-end.
+//!
+//! Every frame is `[u32 body-length (LE)] [body]`; the body starts with a
+//! version byte and a kind byte, so the protocol can evolve without
+//! breaking framing.  All integers are little-endian; logits travel as
+//! raw IEEE-754 f32 bits, so network scores are bit-identical to
+//! in-process scores.
+//!
+//! ```text
+//! request  body: [ver u8][kind=1][id u64][arch u16+bytes][mode u16+bytes]
+//!                [row u32+bytes]
+//! response body: [ver u8][kind=2][id u64][status u8] ...
+//!   status 0 Ok:         [shard u32][argmax u8][cached u8][10 x f32]
+//!   status 1 Error:      [kind u8][message u32+bytes]
+//!   status 2 Overloaded: [retry_after_ms u32]
+//! ```
+//!
+//! Decoding is strict: unknown versions, kinds, status/error codes,
+//! truncated bodies, trailing bytes, and frame lengths outside
+//! `1..=`[`MAX_FRAME`] are all `InvalidData` errors — a malformed or
+//! hostile peer can never make the server allocate unboundedly or
+//! misparse a frame.  Exhaustive encode/decode round-trip tests live at
+//! the bottom of this module.
+
+use std::io::{self, Read, Write};
+
+/// Protocol version byte carried by every frame.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on a frame body, guarding malformed/hostile length
+/// prefixes (a 784-byte MNIST row frame is ~850 bytes).
+pub const MAX_FRAME: usize = 1 << 20;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+
+/// Typed error kinds a response can carry — the wire mirror of
+/// [`crate::coordinator::ServeError`] plus protocol-level rejections.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireErrorKind {
+    /// The request frame itself was malformed or misused the protocol.
+    BadRequest,
+    /// The row payload has the wrong byte width for the served model.
+    WrongRowWidth,
+    /// The requested arch/mode is not what this front-end serves.
+    UnknownModel,
+    /// The backend failed while executing the request's batch.
+    Backend,
+    /// The server stopped before answering.
+    Shutdown,
+}
+
+impl WireErrorKind {
+    fn code(self) -> u8 {
+        match self {
+            WireErrorKind::BadRequest => 0,
+            WireErrorKind::WrongRowWidth => 1,
+            WireErrorKind::UnknownModel => 2,
+            WireErrorKind::Backend => 3,
+            WireErrorKind::Shutdown => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(WireErrorKind::BadRequest),
+            1 => Some(WireErrorKind::WrongRowWidth),
+            2 => Some(WireErrorKind::UnknownModel),
+            3 => Some(WireErrorKind::Backend),
+            4 => Some(WireErrorKind::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// One inference request: client-chosen correlation id, the model
+/// coordinates, and the raw input row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireRequest {
+    /// Client-chosen id echoed back in the response (pipelining key).
+    pub id: u64,
+    /// Topology name ("cnn1", "cnn2", ...).
+    pub arch: String,
+    /// Arithmetic mode ("fast", "sc", "mux", "float").
+    pub mode: String,
+    /// Raw input row bytes (784 for the benchmark CNNs).
+    pub row: Vec<u8>,
+}
+
+/// Response payload: scores, a typed error, or an overload rejection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireStatus {
+    /// Successful inference.
+    Ok {
+        /// Pool shard that executed (or originally produced, for cache
+        /// hits) this result.
+        shard: u32,
+        /// Predicted class (index of the largest logit).
+        argmax: u8,
+        /// True when served from the response cache without pool work.
+        cached: bool,
+        /// Raw per-class logits, bit-identical to in-process execution.
+        logits: [f32; 10],
+    },
+    /// Typed failure; the request was seen but could not be served.
+    Error {
+        /// What went wrong.
+        kind: WireErrorKind,
+        /// Human-readable detail.
+        message: String,
+    },
+    /// Shed by admission control; retry after the hinted backoff.
+    Overloaded {
+        /// Suggested client backoff before retrying (milliseconds).
+        retry_after_ms: u32,
+    },
+}
+
+/// One response frame (the echo of a request id plus its status).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResponse {
+    /// The id of the request this answers.
+    pub id: u64,
+    /// Outcome.
+    pub status: WireStatus,
+}
+
+/// A decoded frame: either direction of the protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client-to-server inference request.
+    Request(WireRequest),
+    /// Server-to-client response.
+    Response(WireResponse),
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cursor { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.b.len() - self.i < n {
+            return Err(bad(format!(
+                "truncated frame: wanted {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> io::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> io::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self, len: usize) -> io::Result<String> {
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| bad("non-utf8 string field".to_string()))
+    }
+
+    fn finish(&self) -> io::Result<()> {
+        if self.i != self.b.len() {
+            return Err(bad(format!("{} trailing bytes after frame body", self.b.len() - self.i)));
+        }
+        Ok(())
+    }
+}
+
+impl Frame {
+    /// Encode the full frame, length prefix included.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(64);
+        body.push(WIRE_VERSION);
+        match self {
+            Frame::Request(r) => {
+                body.push(KIND_REQUEST);
+                put_u64(&mut body, r.id);
+                put_u16(&mut body, r.arch.len() as u16);
+                body.extend_from_slice(r.arch.as_bytes());
+                put_u16(&mut body, r.mode.len() as u16);
+                body.extend_from_slice(r.mode.as_bytes());
+                put_u32(&mut body, r.row.len() as u32);
+                body.extend_from_slice(&r.row);
+            }
+            Frame::Response(r) => {
+                body.push(KIND_RESPONSE);
+                put_u64(&mut body, r.id);
+                match &r.status {
+                    WireStatus::Ok { shard, argmax, cached, logits } => {
+                        body.push(0);
+                        put_u32(&mut body, *shard);
+                        body.push(*argmax);
+                        body.push(u8::from(*cached));
+                        for l in logits {
+                            body.extend_from_slice(&l.to_le_bytes());
+                        }
+                    }
+                    WireStatus::Error { kind, message } => {
+                        body.push(1);
+                        body.push(kind.code());
+                        put_u32(&mut body, message.len() as u32);
+                        body.extend_from_slice(message.as_bytes());
+                    }
+                    WireStatus::Overloaded { retry_after_ms } => {
+                        body.push(2);
+                        put_u32(&mut body, *retry_after_ms);
+                    }
+                }
+            }
+        }
+        // Oversized bodies are rejected by `write_frame` (and by the
+        // peer's `read_frame`); encode itself stays total.
+        let mut out = Vec::with_capacity(4 + body.len());
+        put_u32(&mut out, body.len() as u32);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode a frame body (the bytes after the length prefix).
+    pub fn decode_body(body: &[u8]) -> io::Result<Frame> {
+        let mut c = Cursor::new(body);
+        let version = c.u8()?;
+        if version != WIRE_VERSION {
+            return Err(bad(format!("unsupported wire version {version} (want {WIRE_VERSION})")));
+        }
+        let kind = c.u8()?;
+        let frame = match kind {
+            KIND_REQUEST => {
+                let id = c.u64()?;
+                let arch_len = c.u16()? as usize;
+                let arch = c.string(arch_len)?;
+                let mode_len = c.u16()? as usize;
+                let mode = c.string(mode_len)?;
+                let row_len = c.u32()? as usize;
+                let row = c.take(row_len)?.to_vec();
+                Frame::Request(WireRequest { id, arch, mode, row })
+            }
+            KIND_RESPONSE => {
+                let id = c.u64()?;
+                let status = match c.u8()? {
+                    0 => {
+                        let shard = c.u32()?;
+                        let argmax = c.u8()?;
+                        let cached = c.u8()? != 0;
+                        let mut logits = [0f32; 10];
+                        for l in logits.iter_mut() {
+                            *l = c.f32()?;
+                        }
+                        WireStatus::Ok { shard, argmax, cached, logits }
+                    }
+                    1 => {
+                        let code = c.u8()?;
+                        let kind = WireErrorKind::from_code(code)
+                            .ok_or_else(|| bad(format!("unknown error kind {code}")))?;
+                        let msg_len = c.u32()? as usize;
+                        let message = c.string(msg_len)?;
+                        WireStatus::Error { kind, message }
+                    }
+                    2 => WireStatus::Overloaded { retry_after_ms: c.u32()? },
+                    s => return Err(bad(format!("unknown response status {s}"))),
+                };
+                Frame::Response(WireResponse { id, status })
+            }
+            k => return Err(bad(format!("unknown frame kind {k}"))),
+        };
+        c.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Write one frame and flush it onto the wire.  A frame whose body
+/// exceeds [`MAX_FRAME`] is rejected *before* any byte is written — the
+/// peer would refuse it at the length prefix and kill the connection, so
+/// failing locally keeps the stream clean and the connection alive.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> io::Result<()> {
+    let bytes = frame.encode();
+    if bytes.len() - 4 > MAX_FRAME {
+        return Err(bad(format!("frame body of {} bytes exceeds {MAX_FRAME}", bytes.len() - 4)));
+    }
+    w.write_all(&bytes)?;
+    w.flush()
+}
+
+/// Read one frame.  Returns `Ok(None)` on a clean EOF at a frame
+/// boundary; EOF mid-frame and every malformed encoding are errors.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Frame>> {
+    let mut len4 = [0u8; 4];
+    if !read_exact_or_eof(r, &mut len4)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(bad(format!("frame length {len} outside 1..={MAX_FRAME}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Frame::decode_body(&body).map(Some)
+}
+
+/// `read_exact` that distinguishes a clean EOF before the first byte
+/// (`Ok(false)`) from EOF mid-buffer (an error).
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<bool> {
+    let mut n = 0;
+    while n < buf.len() {
+        match r.read(&mut buf[n..]) {
+            Ok(0) => {
+                if n == 0 {
+                    return Ok(false);
+                }
+                return Err(bad("eof mid-frame".to_string()));
+            }
+            Ok(k) => n += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(frame: Frame) {
+        let bytes = frame.encode();
+        let mut r = bytes.as_slice();
+        let decoded = read_frame(&mut r).unwrap().expect("a frame");
+        assert_eq!(decoded, frame);
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF after one frame");
+    }
+
+    #[test]
+    fn request_round_trips() {
+        round_trip(Frame::Request(WireRequest {
+            id: 0,
+            arch: String::new(),
+            mode: String::new(),
+            row: Vec::new(),
+        }));
+        round_trip(Frame::Request(WireRequest {
+            id: u64::MAX,
+            arch: "cnn1".to_string(),
+            mode: "fast".to_string(),
+            row: (0..=255).cycle().take(784).collect(),
+        }));
+    }
+
+    #[test]
+    fn every_response_status_round_trips() {
+        let logits = [
+            0.0f32,
+            -1.5,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            f32::MIN,
+            1e-30,
+            3.25,
+            -0.0,
+            42.0,
+            7.125,
+        ];
+        round_trip(Frame::Response(WireResponse {
+            id: 7,
+            status: WireStatus::Ok { shard: 3, argmax: 9, cached: true, logits },
+        }));
+        round_trip(Frame::Response(WireResponse {
+            id: 8,
+            status: WireStatus::Ok { shard: u32::MAX, argmax: 0, cached: false, logits },
+        }));
+        for kind in [
+            WireErrorKind::BadRequest,
+            WireErrorKind::WrongRowWidth,
+            WireErrorKind::UnknownModel,
+            WireErrorKind::Backend,
+            WireErrorKind::Shutdown,
+        ] {
+            round_trip(Frame::Response(WireResponse {
+                id: 9,
+                status: WireStatus::Error { kind, message: format!("boom {kind:?}") },
+            }));
+        }
+        round_trip(Frame::Response(WireResponse {
+            id: 10,
+            status: WireStatus::Overloaded { retry_after_ms: 25 },
+        }));
+    }
+
+    #[test]
+    fn pipelined_frames_decode_in_order() {
+        let mut bytes = Vec::new();
+        for id in 0..5u64 {
+            bytes.extend_from_slice(
+                &Frame::Request(WireRequest {
+                    id,
+                    arch: "cnn1".to_string(),
+                    mode: "fast".to_string(),
+                    row: vec![id as u8; 16],
+                })
+                .encode(),
+            );
+        }
+        let mut r = bytes.as_slice();
+        for id in 0..5u64 {
+            match read_frame(&mut r).unwrap().unwrap() {
+                Frame::Request(req) => assert_eq!(req.id, id),
+                f => panic!("unexpected frame {f:?}"),
+            }
+        }
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut bytes = Frame::Request(WireRequest {
+            id: 1,
+            arch: "cnn1".to_string(),
+            mode: "fast".to_string(),
+            row: vec![0; 4],
+        })
+        .encode();
+        bytes[4] = WIRE_VERSION + 1; // version byte is first in the body
+        assert!(read_frame(&mut bytes.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind_status_and_error_code() {
+        assert!(Frame::decode_body(&[WIRE_VERSION, 9]).is_err(), "unknown kind");
+        // response with unknown status byte
+        let mut body = vec![WIRE_VERSION, 2];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(9);
+        assert!(Frame::decode_body(&body).is_err(), "unknown status");
+        // error status with unknown error code
+        let mut body = vec![WIRE_VERSION, 2];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(1);
+        body.push(99);
+        body.extend_from_slice(&0u32.to_le_bytes());
+        assert!(Frame::decode_body(&body).is_err(), "unknown error kind");
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing_bytes() {
+        let full = Frame::Request(WireRequest {
+            id: 3,
+            arch: "cnn1".to_string(),
+            mode: "fast".to_string(),
+            row: vec![1, 2, 3],
+        })
+        .encode();
+        let body = &full[4..];
+        // every strict prefix of the body must fail to decode
+        for cut in 0..body.len() {
+            assert!(Frame::decode_body(&body[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // trailing garbage after a valid body must fail too
+        let mut extended = body.to_vec();
+        extended.push(0);
+        assert!(Frame::decode_body(&extended).is_err());
+    }
+
+    #[test]
+    fn write_frame_rejects_oversized_body_without_writing() {
+        let frame = Frame::Request(WireRequest {
+            id: 1,
+            arch: "cnn1".to_string(),
+            mode: "fast".to_string(),
+            row: vec![0u8; MAX_FRAME + 1],
+        });
+        let mut out = Vec::new();
+        assert!(write_frame(&mut out, &frame).is_err());
+        assert!(out.is_empty(), "nothing may reach the wire for an unframeable payload");
+    }
+
+    #[test]
+    fn rejects_hostile_lengths() {
+        // frame length prefix of zero
+        let zero = 0u32.to_le_bytes();
+        assert!(read_frame(&mut zero.as_slice()).is_err());
+        // frame length prefix beyond MAX_FRAME
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        assert!(read_frame(&mut huge.as_slice()).is_err());
+        // eof mid-frame (length says 100, only 3 bytes follow)
+        let mut bytes = 100u32.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[1, 2, 3]);
+        assert!(read_frame(&mut bytes.as_slice()).is_err());
+        // eof mid-length-prefix
+        let short = [1u8, 0];
+        assert!(read_frame(&mut short.as_slice()).is_err());
+    }
+}

@@ -30,6 +30,13 @@
 //!   ([`pim`]), the ANN-to-command mapper ([`mapper`]), and the CPU/ISAAC
 //!   baselines ([`baselines`]).  Python never runs on the request path —
 //!   and with the default backend it never runs at all.
+//! * **L4** — the network front-end ([`frontend`]): a std-only TCP
+//!   serving layer over the pool — versioned binary wire protocol,
+//!   pipelined per-connection serving, admission control
+//!   (block/shed + `Overloaded` backpressure), a sharded LRU response
+//!   cache (bit-identical to uncached execution), and a blocking Rust
+//!   client.  `odin serve --listen ADDR` exposes it; in-process serving
+//!   stays the default, so the whole suite remains hermetic.
 //!
 //! `cargo build --release && cargo test -q` is fully offline and
 //! artifact-free; [`harness`] regenerates every table and figure of the
@@ -48,5 +55,6 @@ pub mod mapper;
 pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
+pub mod frontend;
 pub mod harness;
 pub mod dataset;

@@ -11,8 +11,13 @@
 //!                                accuracy of a model on the test set
 //! odin serve [--arch cnn1] [--requests N] [--concurrency K] [--backend ..]
 //!            [--shards N|auto] [--batch B] [--linger-us U]
+//!            [--listen ADDR] [--cache N]
+//!            [--admission block|shed] [--queue-cap Q]
+//!            [--metrics-json PATH]
 //!                                sharded dynamic-batching serving demo +
-//!                                per-shard metrics
+//!                                per-shard metrics; --listen exposes the
+//!                                pool over TCP (the L4 front-end) and
+//!                                drives it with network clients
 //! odin ablation                  binary vs mux accumulation cost/error
 //! odin selftest                  hermetic cross-checks (+ golden/PJRT
 //!                                when artifacts / the pjrt feature exist)
@@ -27,24 +32,25 @@
 
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use odin::ann::topology;
 use odin::coordinator::{
     BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
 };
 use odin::dataset::TestSet;
+use odin::frontend::{AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient};
 use odin::harness::{fig6, headline, table1, table2, table3};
 use odin::mapper::{map_topology, ExecConfig};
 use odin::pim::AccumulateMode;
 use odin::util::{fmt_ns, fmt_pj};
 
 fn flag(args: &[String], name: &str, default: &str) -> String {
-    args.iter()
-        .position(|a| a == name)
-        .and_then(|i| args.get(i + 1))
-        .cloned()
-        .unwrap_or_else(|| default.to_string())
+    opt_flag(args, name).unwrap_or_else(|| default.to_string())
+}
+
+fn opt_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
 }
 
 fn main() -> Result<()> {
@@ -91,7 +97,22 @@ fn main() -> Result<()> {
             let linger_us: u64 = flag(&args, "--linger-us", "300").parse()?;
             let policy =
                 BatchPolicy { max_batch, linger: Duration::from_micros(linger_us) };
-            cmd_serve(&artifacts, &backend, &arch, requests, concurrency, shards, policy)?;
+            let admission_s = flag(&args, "--admission", "block");
+            let admission = AdmissionPolicy::parse(&admission_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown admission policy {admission_s}"))?;
+            let opts = ServeOpts {
+                arch,
+                requests,
+                concurrency,
+                shards,
+                policy,
+                listen: opt_flag(&args, "--listen"),
+                cache: flag(&args, "--cache", "0").parse()?,
+                admission,
+                queue_cap: flag(&args, "--queue-cap", "256").parse()?,
+                metrics_json: opt_flag(&args, "--metrics-json"),
+            };
+            cmd_serve(&artifacts, &backend, &opts)?;
         }
         "ablation" => {
             cmd_ablation();
@@ -110,8 +131,13 @@ fn main() -> Result<()> {
 const HELP: &str = "odin — PCRAM PIM accelerator reproduction
 commands: table1 table2 table3 fig6 headline eval serve ablation selftest
 common flags: --artifacts DIR --backend sim|pjrt
-eval/serve: --arch cnn1|cnn2 --mode fast|sc|mux|float
+eval:  --arch cnn1|cnn2 --mode fast|sc|mux|float --limit N
 serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
+       --listen ADDR (e.g. 127.0.0.1:0 — serve the pool over TCP and
+                      drive it with network clients; default: in-process)
+       --cache N (response-cache entries, 0 = off)
+       --admission block|shed --queue-cap Q (overload policy + in-flight cap)
+       --metrics-json PATH (dump the MetricsReport snapshot as JSON)
 (`sim` is hermetic: synthetic weights/data unless artifacts exist;
  `pjrt` needs a build with --features pjrt and `make artifacts`)";
 
@@ -198,23 +224,36 @@ fn measured_accuracy(artifacts: &str, backend: &str) -> Result<Vec<(String, f64)
     Ok(out)
 }
 
-/// Serving demo: spawn the sharded engine pool, hammer it from client
-/// threads, dump pooled + per-shard metrics.
-fn cmd_serve(
-    artifacts: &str,
-    backend: &str,
-    arch: &str,
+/// Parsed `serve` options (model, load shape, pool policy, and the
+/// optional L4 network front-end knobs).
+struct ServeOpts {
+    arch: String,
     requests: usize,
     concurrency: usize,
     shards: usize,
     policy: BatchPolicy,
-) -> Result<()> {
+    /// `Some(addr)` exposes the pool over TCP and drives it with
+    /// network clients; `None` keeps the original in-process demo.
+    listen: Option<String>,
+    /// Response-cache entries (0 disables the cache).
+    cache: usize,
+    admission: AdmissionPolicy,
+    queue_cap: usize,
+    /// Dump the final `MetricsReport` as JSON to this path.
+    metrics_json: Option<String>,
+}
+
+/// Serving demo: spawn the sharded engine pool, hammer it from client
+/// threads — in-process by default, over loopback TCP with `--listen` —
+/// then dump pooled + per-shard (+ front-end) metrics.
+fn cmd_serve(artifacts: &str, backend: &str, opts: &ServeOpts) -> Result<()> {
     let metrics = MetricsHub::new();
+    let (arch, policy) = (opts.arch.as_str(), opts.policy);
     // `auto` means one sim shard per core; PJRT engines compile every
     // batch variant and hold their own executables, so auto stays at one
     // shard there — scale it explicitly with --shards N.
-    let n_shards = if shards != 0 {
-        shards
+    let n_shards = if opts.shards != 0 {
+        opts.shards
     } else if backend == "pjrt" {
         1
     } else {
@@ -258,39 +297,92 @@ fn cmd_serve(
     );
 
     let test = load_test_set(artifacts)?;
-    let mut handles = Vec::new();
+    let (requests, concurrency) = (opts.requests, opts.concurrency);
     // Spread the request count exactly across the client threads (the
     // first `extra` threads take one more), so small --requests runs
     // still serve every request.
     let concurrency = concurrency.clamp(1, requests.max(1));
     let base = requests / concurrency;
     let extra = requests % concurrency;
-    for t in 0..concurrency {
-        let client = client.clone();
+    let images_for = |t: usize| -> Vec<Vec<u8>> {
         let take = base + usize::from(t < extra);
-        let images: Vec<Vec<u8>> = test
-            .samples
+        test.samples
             .iter()
             .cycle()
             .skip(t * base + t.min(extra))
             .take(take)
             .map(|s| s.image.clone())
-            .collect();
-        handles.push(std::thread::spawn(move || {
-            let mut ok = 0usize;
-            for img in images {
-                if client.infer_blocking(img).is_ok() {
-                    ok += 1;
-                }
+            .collect()
+    };
+
+    let ok = match &opts.listen {
+        None => {
+            let mut handles = Vec::new();
+            for t in 0..concurrency {
+                let client = client.clone();
+                let images = images_for(t);
+                handles.push(std::thread::spawn(move || {
+                    let mut ok = 0usize;
+                    for img in images {
+                        if client.infer_blocking(img).is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                }));
             }
+            handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+        }
+        Some(listen) => {
+            let cfg = FrontendConfig {
+                admission: AdmissionConfig {
+                    policy: opts.admission,
+                    queue_cap: opts.queue_cap,
+                    ..AdmissionConfig::default()
+                },
+                cache_capacity: opts.cache,
+                ..FrontendConfig::default()
+            };
+            let frontend =
+                Frontend::spawn(listen, client.clone(), arch, "fast", cfg, metrics.clone())?;
+            let addr = frontend.local_addr();
+            println!(
+                "L4 front-end listening on {addr} (cache {}, admission {:?}, queue cap {})",
+                opts.cache, opts.admission, opts.queue_cap
+            );
+            let mut handles = Vec::new();
+            for t in 0..concurrency {
+                let images = images_for(t);
+                let arch = arch.to_string();
+                handles.push(std::thread::spawn(move || -> Result<usize> {
+                    let net = NetClient::connect(addr, &arch, "fast")?;
+                    let mut ok = 0usize;
+                    for img in images {
+                        if net.infer(img).is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    Ok(ok)
+                }));
+            }
+            let mut ok = 0usize;
+            for h in handles {
+                ok += h.join().unwrap()?;
+            }
+            frontend.shutdown();
             ok
-        }));
-    }
-    let ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        }
+    };
     drop(client); // release the request channel so the dispatcher exits
     pool.shutdown();
     println!("completed {ok}/{requests} requests");
-    metrics.report().print(arch);
+    let report = metrics.report();
+    report.print(arch);
+    if let Some(path) = &opts.metrics_json {
+        std::fs::write(path, report.to_json())
+            .with_context(|| format!("writing metrics json to {path}"))?;
+        println!("metrics json written to {path}");
+    }
     Ok(())
 }
 

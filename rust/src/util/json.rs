@@ -1,6 +1,8 @@
-//! Minimal recursive-descent JSON parser — serde is unavailable offline.
-//! Supports the full JSON grammar we emit from Python (objects, arrays,
-//! strings with escapes, numbers, bools, null); errors carry byte offsets.
+//! Minimal recursive-descent JSON parser and emitter — serde is
+//! unavailable offline.  Supports the full JSON grammar we exchange with
+//! Python and with serving-metrics consumers (objects, arrays, strings
+//! with escapes, numbers, bools, null); parse errors carry byte offsets,
+//! and `Display` emits text that round-trips through [`parse`].
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -63,6 +65,65 @@ impl Json {
         }
         Some(cur)
     }
+}
+
+/// Serialize to compact JSON text that round-trips through [`parse`].
+/// Non-finite numbers (JSON has no NaN/Infinity) emit as `null`.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    f.write_str("null")
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    write!(f, "{n:.0}")
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{item}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 #[derive(Debug)]
@@ -312,5 +373,35 @@ mod tests {
     #[test]
     fn whitespace_tolerant() {
         assert!(parse(" {\n\t\"k\" :\r [ 1 , 2 ] } ").is_ok());
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        let mut obj = BTreeMap::new();
+        obj.insert("count".to_string(), Json::Num(42.0));
+        obj.insert("rate".to_string(), Json::Num(0.125));
+        obj.insert("label".to_string(), Json::Str("a \"b\"\n\\c".to_string()));
+        obj.insert("flag".to_string(), Json::Bool(true));
+        obj.insert("gone".to_string(), Json::Null);
+        obj.insert(
+            "shards".to_string(),
+            Json::Arr(vec![Json::Num(0.0), Json::Num(1.0), Json::Num(-3.5)]),
+        );
+        let j = Json::Obj(obj);
+        assert_eq!(parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn display_integers_have_no_fraction() {
+        assert_eq!(Json::Num(1000000.0).to_string(), "1000000");
+        assert_eq!(Json::Num(-7.0).to_string(), "-7");
+        assert_eq!(Json::Num(2.5).to_string(), "2.5");
+    }
+
+    #[test]
+    fn display_nonfinite_becomes_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(parse(&Json::Num(f64::NAN).to_string()).unwrap(), Json::Null);
     }
 }

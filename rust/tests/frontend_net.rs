@@ -1,0 +1,325 @@
+//! Loopback integration tests for the L4 network front-end: the wire
+//! protocol, pipelined per-connection serving, admission control, the
+//! response cache, and typed error propagation — all against a real
+//! `EnginePool` over `127.0.0.1:0`, so the suite stays offline and
+//! hermetic.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use odin::coordinator::{BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelWeights};
+use odin::dataset::TestSet;
+use odin::frontend::{
+    AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError,
+    WireErrorKind,
+};
+
+/// Pool + front-end over an ephemeral loopback port, serving
+/// cnn1/float on single-threaded sim engines.
+fn spawn_stack(
+    shards: usize,
+    cfg: FrontendConfig,
+) -> (EnginePool, Client, Frontend, MetricsHub) {
+    let metrics = MetricsHub::new();
+    let weights = ModelWeights::synthetic("cnn1", 99).unwrap();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+        shards,
+        BatchPolicy { max_batch: 32, linger: Duration::from_micros(200) },
+        metrics.clone(),
+    )
+    .unwrap();
+    let frontend =
+        Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics.clone())
+            .unwrap();
+    (pool, client, frontend, metrics)
+}
+
+fn teardown(pool: EnginePool, client: Client, frontend: Frontend) {
+    frontend.shutdown();
+    drop(client);
+    pool.shutdown();
+}
+
+/// The acceptance bar: 16 concurrent connections, each pipelining its
+/// requests, all answered bit-identically to direct pool submission,
+/// with zero drops and zero duplicates.
+#[test]
+fn sixteen_connections_pipelined_bit_identical_to_pool() {
+    const CONNECTIONS: usize = 16;
+    const PER_CONNECTION: usize = 24;
+
+    let (pool, client, frontend, metrics) = spawn_stack(4, FrontendConfig::default());
+    let addr = frontend.local_addr();
+    // Direct-path reference: the same engine the pool shards run.
+    let weights = ModelWeights::synthetic("cnn1", 99).unwrap();
+    let reference = Arc::new(Engine::sim_from_weights_threads(&weights, "float", 1).unwrap());
+    let test = Arc::new(TestSet::synthetic(CONNECTIONS * PER_CONNECTION, 7));
+
+    let mut handles = Vec::new();
+    for c in 0..CONNECTIONS {
+        let test = Arc::clone(&test);
+        let reference = Arc::clone(&reference);
+        handles.push(std::thread::spawn(move || {
+            let net = NetClient::connect(addr, "cnn1", "float").unwrap();
+            let mine: Vec<&Vec<u8>> = test
+                .samples
+                .iter()
+                .skip(c)
+                .step_by(CONNECTIONS)
+                .map(|s| &s.image)
+                .collect();
+            // Open loop: pipeline every request before reading answers.
+            let receivers: Vec<_> =
+                mine.iter().map(|img| net.submit((*img).clone())).collect();
+            let mut answered = 0usize;
+            for (i, rx) in receivers.into_iter().enumerate() {
+                let first = rx.recv().expect("request dropped");
+                assert!(
+                    rx.try_recv().is_err(),
+                    "connection {c} request {i} answered twice"
+                );
+                let resp = match first.status {
+                    odin::frontend::WireStatus::Ok { logits, .. } => logits,
+                    other => panic!("connection {c} request {i}: {other:?}"),
+                };
+                let (direct, _) = reference.infer(&[mine[i].as_slice()]).unwrap();
+                assert_eq!(
+                    resp, direct[0].logits,
+                    "connection {c} request {i} diverged from direct execution"
+                );
+                answered += 1;
+            }
+            answered
+        }));
+    }
+    let answered: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(answered, CONNECTIONS * PER_CONNECTION, "every request answered exactly once");
+
+    teardown(pool, client, frontend);
+    let report = metrics.report();
+    assert_eq!(report.requests, (CONNECTIONS * PER_CONNECTION) as u64);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.frontend.net_connections, CONNECTIONS as u64);
+    assert_eq!(report.frontend.net_responses, (CONNECTIONS * PER_CONNECTION) as u64);
+    assert_eq!(report.frontend.admitted, (CONNECTIONS * PER_CONNECTION) as u64);
+}
+
+/// Saturating open-loop load against a tiny `shed` gate: some requests
+/// are served, some are shed with a structured `Overloaded` — every
+/// single one is answered (no deadlock, no drop).
+#[test]
+fn shed_admission_sheds_under_saturation_without_deadlock() {
+    const REQUESTS: usize = 256;
+
+    let cfg = FrontendConfig {
+        admission: AdmissionConfig {
+            policy: AdmissionPolicy::Shed,
+            queue_cap: 2,
+            retry_after_ms: 9,
+        },
+        ..FrontendConfig::default()
+    };
+    let (pool, client, frontend, metrics) = spawn_stack(1, cfg);
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let img = TestSet::synthetic(1, 3).samples[0].image.clone();
+
+    // Blast the whole set without waiting: far more in flight than the
+    // gate allows, so shedding must kick in.
+    let receivers: Vec<_> = (0..REQUESTS).map(|_| net.submit(img.clone())).collect();
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    for rx in receivers {
+        match NetClient::wait(rx) {
+            Ok(_) => served += 1,
+            Err(NetError::Overloaded { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, 9, "retry hint must come from the config");
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected outcome: {e}"),
+        }
+    }
+    assert_eq!(served + shed, REQUESTS, "every request answered");
+    assert!(served > 0, "the gate must admit at least its capacity");
+    assert!(shed > 0, "a saturating open loop against cap=2 must shed");
+
+    drop(net);
+    teardown(pool, client, frontend);
+    let report = metrics.report();
+    assert_eq!(report.frontend.shed, shed as u64);
+    assert_eq!(report.frontend.admitted, served as u64);
+    assert_eq!(report.requests, served as u64);
+}
+
+/// Block admission under the same saturating load: nothing is shed,
+/// nothing deadlocks — the reader just backpressures.
+#[test]
+fn block_admission_serves_everything_under_saturation() {
+    const REQUESTS: usize = 128;
+
+    let cfg = FrontendConfig {
+        admission: AdmissionConfig {
+            policy: AdmissionPolicy::Block,
+            queue_cap: 2,
+            retry_after_ms: 1,
+        },
+        ..FrontendConfig::default()
+    };
+    let (pool, client, frontend, metrics) = spawn_stack(2, cfg);
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let img = TestSet::synthetic(1, 5).samples[0].image.clone();
+    let receivers: Vec<_> = (0..REQUESTS).map(|_| net.submit(img.clone())).collect();
+    for rx in receivers {
+        NetClient::wait(rx).expect("block policy must serve everything");
+    }
+    drop(net);
+    teardown(pool, client, frontend);
+    let report = metrics.report();
+    assert_eq!(report.frontend.admitted, REQUESTS as u64);
+    assert_eq!(report.frontend.shed, 0);
+}
+
+/// Cache hits are bit-identical to uncached execution, marked `cached`,
+/// and visible in the JSON metrics dump.
+#[test]
+fn cache_hits_bit_identical_and_reported_in_json() {
+    let cfg = FrontendConfig {
+        cache_capacity: 64,
+        ..FrontendConfig::default()
+    };
+    let (pool, client, frontend, metrics) = spawn_stack(2, cfg);
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let test = TestSet::synthetic(8, 11);
+
+    // First pass fills the cache, second pass must hit it.
+    let mut first = Vec::new();
+    for s in &test.samples {
+        let r = net.infer(s.image.clone()).unwrap();
+        assert!(!r.cached, "first sight of a row cannot be a cache hit");
+        first.push(r);
+    }
+    for (i, s) in test.samples.iter().enumerate() {
+        let r = net.infer(s.image.clone()).unwrap();
+        assert!(r.cached, "second sight of row {i} must hit the cache");
+        assert_eq!(r.logits, first[i].logits, "cached scores must be bit-identical");
+        assert_eq!(r.shard, first[i].shard, "cache replays the originating shard");
+    }
+
+    drop(net);
+    teardown(pool, client, frontend);
+    let report = metrics.report();
+    assert_eq!(report.frontend.cache_hits, test.samples.len() as u64);
+    assert_eq!(report.frontend.cache_misses, test.samples.len() as u64);
+    assert!(report.frontend.cache_hit_rate() > 0.0);
+    // Cache hits never reach the pool: it served each row exactly once.
+    assert_eq!(report.requests, test.samples.len() as u64);
+
+    // The acceptance criterion consumes this via JSON.
+    let json = odin::util::json::parse(&report.to_json()).unwrap();
+    let hits = json.path(&["frontend", "cache_hits"]).unwrap().as_usize().unwrap();
+    assert_eq!(hits, test.samples.len());
+    assert!(json.path(&["frontend", "cache_hit_rate"]).unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// A malformed (wrong-width) request over the wire gets a typed
+/// `WrongRowWidth` error — and the shard survives: well-formed requests
+/// on the same connection, both pipelined alongside and after the bad
+/// one, still succeed.
+#[test]
+fn bad_width_request_gets_typed_error_and_shard_survives() {
+    let (pool, client, frontend, metrics) = spawn_stack(1, FrontendConfig::default());
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let good = TestSet::synthetic(1, 13).samples[0].image.clone();
+
+    // Pipeline good and bad together so they can share a batch.
+    let rx_good1 = net.submit(good.clone());
+    let rx_bad = net.submit(vec![7u8; 100]);
+    let rx_good2 = net.submit(good.clone());
+    NetClient::wait(rx_good1).expect("good request co-batched with a bad one must succeed");
+    match NetClient::wait(rx_bad) {
+        Err(NetError::Remote { kind: WireErrorKind::WrongRowWidth, message }) => {
+            assert!(message.contains("100"), "error should name the bad width: {message}");
+            assert!(message.contains("784"), "error should name the wanted width: {message}");
+        }
+        other => panic!("expected a typed WrongRowWidth error, got {other:?}"),
+    }
+    NetClient::wait(rx_good2).expect("good request after a bad one must succeed");
+
+    // The shard is still alive and serving.
+    let after = net.infer(good).expect("shard must survive a malformed request");
+    assert_eq!(after.shard, 0);
+
+    drop(net);
+    teardown(pool, client, frontend);
+    assert_eq!(metrics.report().errors, 1, "exactly the malformed request errored");
+}
+
+/// A row too large to frame is answered locally with a typed error and
+/// the connection survives for pipelined neighbors and later requests.
+#[test]
+fn oversized_row_rejected_locally_without_killing_the_connection() {
+    let (pool, client, frontend, _metrics) = spawn_stack(1, FrontendConfig::default());
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let good = TestSet::synthetic(1, 3).samples[0].image.clone();
+
+    let rx_good = net.submit(good.clone());
+    let rx_huge = net.submit(vec![0u8; odin::frontend::wire::MAX_FRAME + 1]);
+    match NetClient::wait(rx_huge) {
+        Err(NetError::Remote { kind: WireErrorKind::BadRequest, message }) => {
+            assert!(message.contains("frame limit"), "unexpected message: {message}");
+        }
+        other => panic!("expected a local BadRequest, got {other:?}"),
+    }
+    NetClient::wait(rx_good).expect("pipelined neighbor must survive");
+    net.infer(good).expect("connection must stay usable");
+
+    drop(net);
+    teardown(pool, client, frontend);
+}
+
+/// Requests for a model the front-end does not serve get a typed
+/// `UnknownModel` error without touching the pool.
+#[test]
+fn unknown_model_is_rejected_with_typed_error() {
+    let (pool, client, frontend, metrics) = spawn_stack(1, FrontendConfig::default());
+    let addr = frontend.local_addr();
+    let img = TestSet::synthetic(1, 3).samples[0].image.clone();
+
+    let wrong_arch = NetClient::connect(addr, "cnn2", "float").unwrap();
+    match wrong_arch.infer(img.clone()) {
+        Err(NetError::Remote { kind: WireErrorKind::UnknownModel, .. }) => {}
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    let wrong_mode = NetClient::connect(addr, "cnn1", "fast").unwrap();
+    match wrong_mode.infer(img) {
+        Err(NetError::Remote { kind: WireErrorKind::UnknownModel, .. }) => {}
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+
+    drop(wrong_arch);
+    drop(wrong_mode);
+    teardown(pool, client, frontend);
+    assert_eq!(metrics.report().requests, 0, "rejections never reach the pool");
+}
+
+/// Shutting the front-end down mid-conversation disconnects clients
+/// cleanly: pending receivers disconnect rather than hang.
+#[test]
+fn frontend_shutdown_disconnects_clients_cleanly() {
+    let (pool, client, frontend, _metrics) = spawn_stack(1, FrontendConfig::default());
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let img = TestSet::synthetic(1, 3).samples[0].image.clone();
+    net.infer(img.clone()).unwrap();
+
+    frontend.shutdown();
+    // After shutdown the submit either fails to write or its receiver
+    // disconnects; either way the caller gets Disconnected, not a hang.
+    match net.infer(img) {
+        Err(NetError::Disconnected) => {}
+        Ok(_) => panic!("server is gone; infer cannot succeed"),
+        Err(e) => panic!("expected Disconnected, got {e}"),
+    }
+    drop(net);
+    drop(client);
+    pool.shutdown();
+}

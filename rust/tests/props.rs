@@ -7,7 +7,10 @@
 //! * coordinator::pool — across any shard count: no request dropped or
 //!   answered twice, responses bit-identical to a single engine serving
 //!   the same weights, per-shard metrics sum to the pooled totals, and
-//!   the pool survives a many-producer stress run.
+//!   the pool survives a many-producer stress run.  Shutdown under load
+//!   answers or reports every in-flight request (never a silent drop),
+//!   and a malformed row gets a typed `ServeError::WrongRowWidth` on its
+//!   own without poisoning the rest of its batch.
 //! * mapper::map_topology / map_layer — monotone: more neurons or wider
 //!   fan-in never books less latency or energy.
 
@@ -293,6 +296,113 @@ fn pool_stress_many_producers() {
     assert_eq!(report.requests, (PRODUCERS * PER_PRODUCER) as u64);
     assert_eq!(report.errors, 0);
     assert!(report.padded_rows >= report.requests);
+}
+
+#[test]
+fn pool_in_flight_at_shutdown_answered_or_reported() {
+    // Shutdown under load: every request in flight when
+    // `EnginePool::shutdown` is called is either answered (Ok or a typed
+    // error) or reported as a disconnect — never silently dropped, and
+    // never left hanging.  The dispatcher drains its queue on
+    // disconnect, so with the current design everything is *answered*;
+    // the receiver-disconnect arm is the contract's fallback, counted so
+    // a future regression that drops requests fails the accounting.
+    const GOOD: usize = 150;
+    const BAD: usize = 30;
+    let metrics = MetricsHub::new();
+    let weights = ModelWeights::synthetic("cnn1", 31).unwrap();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+        3,
+        BatchPolicy { max_batch: 32, linger: Duration::from_micros(500) },
+        metrics.clone(),
+    )
+    .unwrap();
+    let test = TestSet::synthetic(GOOD, 13);
+    let mut receivers = Vec::new();
+    for (i, s) in test.samples.iter().enumerate() {
+        receivers.push((true, client.submit(s.image.clone())));
+        if i % (GOOD / BAD) == 0 && receivers.iter().filter(|(good, _)| !good).count() < BAD {
+            // interleave malformed rows so typed errors are in flight too
+            receivers.push((false, client.submit(vec![0u8; 16])));
+        }
+    }
+    let submitted = receivers.len();
+    // Shut down immediately, with (almost) everything still in flight.
+    drop(client);
+    pool.shutdown();
+
+    let (mut ok, mut typed_err, mut disconnected) = (0usize, 0usize, 0usize);
+    for (good, rx) in receivers {
+        // A silent drop would hang here; bound the wait so a regression
+        // fails fast instead of wedging the suite.
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(_)) => {
+                assert!(good, "malformed request must not succeed");
+                ok += 1;
+            }
+            Ok(Err(e)) => {
+                assert!(!good, "well-formed request failed: {e}");
+                typed_err += 1;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => disconnected += 1,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                panic!("a request was silently dropped at shutdown")
+            }
+        }
+    }
+    assert_eq!(ok + typed_err + disconnected, submitted, "every request accounted for");
+    // The dispatcher drains everything already queued before exiting.
+    assert_eq!(disconnected, 0, "nothing queued before shutdown may be abandoned");
+    assert_eq!(ok, GOOD);
+    let report = metrics.report();
+    assert_eq!(report.requests, ok as u64, "metrics agree with answered requests");
+    assert_eq!(report.errors, typed_err as u64);
+}
+
+#[test]
+fn pool_answers_bad_width_typed_without_poisoning_the_batch() {
+    // A malformed row must get a typed WrongRowWidth error on its own
+    // while the well-formed requests sharing its batch still succeed
+    // (the engine-side bail used to fail the whole batch).
+    use odin::coordinator::ServeError;
+
+    let weights = ModelWeights::synthetic("cnn1", 77).unwrap();
+    let reference = Engine::sim_from_weights(&weights, "float").unwrap();
+    let pool_weights = weights.clone();
+    let metrics = MetricsHub::new();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&pool_weights, "float", 1),
+        1,
+        // Long linger so good and bad requests ride the same batch.
+        BatchPolicy { max_batch: 32, linger: Duration::from_millis(20) },
+        metrics.clone(),
+    )
+    .unwrap();
+    let good = TestSet::synthetic(4, 5);
+    let rx_good: Vec<_> =
+        good.samples.iter().map(|s| client.submit(s.image.clone())).collect();
+    let rx_bad = client.submit(vec![1u8; 42]);
+    let rx_empty = client.submit(Vec::new());
+
+    for (i, rx) in rx_good.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().expect("good request poisoned by a bad batchmate");
+        let (direct, _) = reference.infer(&[good.samples[i].image.as_slice()]).unwrap();
+        assert_eq!(resp.prediction.logits, direct[0].logits, "image {i}");
+    }
+    match rx_bad.recv().unwrap() {
+        Err(e) => assert_eq!(e, ServeError::WrongRowWidth { got: 42, want: 784 }),
+        Ok(_) => panic!("42-byte row must not be served"),
+    }
+    match rx_empty.recv().unwrap() {
+        Err(e) => assert_eq!(e, ServeError::WrongRowWidth { got: 0, want: 784 }),
+        Ok(_) => panic!("empty row must not be served"),
+    }
+    drop(client);
+    pool.shutdown();
+    let report = metrics.report();
+    assert_eq!(report.requests, 4);
+    assert_eq!(report.errors, 2);
 }
 
 #[test]
