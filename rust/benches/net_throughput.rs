@@ -15,11 +15,13 @@
 //! cargo bench --bench net_throughput
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 use odin::coordinator::{
-    BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
+    BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelRegistry, ModelSpec, ModelWeights,
+    SYNTHETIC_SEED,
 };
 use odin::dataset::TestSet;
 use odin::frontend::{
@@ -104,6 +106,56 @@ fn run_closed_tcp(weights: &ModelWeights, images: &[Vec<u8>], cache: usize) -> R
     Ok((REQUESTS as f64 / dt, hit_rate))
 }
 
+/// Closed loop over TCP through a two-model `ModelRegistry`: half the
+/// connections drive each model, measuring what per-request
+/// `(arch, mode)` routing costs on top of single-model serving (plus
+/// one mid-run hot swap, whose cost should be invisible at this scale).
+fn run_registry_tcp(images: &[Vec<u8>]) -> Result<f64> {
+    let metrics = MetricsHub::new();
+    let registry = Arc::new(ModelRegistry::spawn(
+        vec![
+            ModelSpec::synthetic("cnn1", "fast", SYNTHETIC_SEED).with_shards(0),
+            ModelSpec::synthetic("cnn2", "fast", SYNTHETIC_SEED).with_shards(0),
+        ],
+        BatchPolicy::default(),
+        metrics.clone(),
+    )?);
+    let frontend = Frontend::spawn_registry(
+        "127.0.0.1:0",
+        Arc::clone(&registry),
+        FrontendConfig::default(),
+        metrics,
+    )?;
+    let addr = frontend.local_addr();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..CONNECTIONS {
+        let arch = if t % 2 == 0 { "cnn1" } else { "cnn2" };
+        let work: Vec<Vec<u8>> =
+            images.iter().skip(t).step_by(CONNECTIONS).cloned().collect();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let net = NetClient::connect(addr, arch, "fast")?;
+            for img in work {
+                net.infer(img).map_err(anyhow::Error::new)?;
+            }
+            Ok(())
+        }));
+    }
+    // A hot swap mid-load: installs at batch boundaries, so it must not
+    // disturb in-flight traffic (responses just start reporting epoch 1).
+    registry.swap_seed("cnn1", "fast", SYNTHETIC_SEED + 1)?;
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    frontend.shutdown();
+    match Arc::try_unwrap(registry) {
+        Ok(r) => r.shutdown(),
+        Err(strays) => drop(strays),
+    }
+    Ok(REQUESTS as f64 / dt)
+}
+
 /// Open loop over TCP with `shed` admission: pipeline everything onto
 /// one connection; returns (served, shed, completed requests/s).
 fn run_open_shed(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<(usize, usize, f64)> {
@@ -164,6 +216,11 @@ fn main() -> Result<()> {
     println!(
         "{:<52} {tcp_cached:>10.0} req/s",
         format!("closed loop, TCP, cache on ({:.0}% hits)", 100.0 * hit_rate)
+    );
+    let registry_rps = run_registry_tcp(&images)?;
+    println!(
+        "{:<52} {registry_rps:>10.0} req/s",
+        "closed loop, TCP, 2-model registry (+1 hot swap)"
     );
     let (served, shed, open_rps) = run_open_shed(&weights, &images)?;
     println!(

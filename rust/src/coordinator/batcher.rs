@@ -90,6 +90,10 @@ pub struct Response {
     pub batch: usize,
     /// Pool shard that executed the batch (0 for a single-shard server).
     pub shard: usize,
+    /// Weights epoch this request executed under (0 until a hot swap
+    /// installs a newer generation).  A response is always produced by
+    /// exactly one epoch's engine — batches never mix epochs.
+    pub epoch: u64,
     /// Simulated in-PCRAM latency attributed to this request (ns).
     pub sim_ns: f64,
     /// Simulated in-PCRAM energy attributed to this request (pJ).

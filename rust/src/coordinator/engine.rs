@@ -8,6 +8,14 @@
 //! (`--features pjrt`).  Oversized batches are split across backend
 //! executions rather than rejected, so `infer` accepts any non-empty
 //! batch.
+//!
+//! An engine is **immutable for its whole life**: weights are bound at
+//! construction and never change underneath an inference.  Hot weight
+//! swaps happen a layer up — the pool replaces whole engines at batch
+//! boundaries (`EnginePool::spawn_versioned` /
+//! [`ModelRegistry`](super::registry::ModelRegistry)) — which is what
+//! makes "no batch ever mixes weight epochs" a structural guarantee
+//! rather than a locking discipline.
 
 use std::time::Instant;
 

@@ -14,6 +14,7 @@
 //! dispatcher increments, the shard worker decrements); the hub holds a
 //! reference per shard and samples them at report time.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -23,7 +24,10 @@ use crate::util::stats::Summary;
 use super::batcher::Response;
 use super::engine::BatchExec;
 
-/// Per-shard aggregate state.
+/// Per-shard aggregate state.  With a multi-model registry several pools
+/// share one hub, so shard `i` aggregates across every pool's shard `i`
+/// (and holds one depth gauge per pool); the per-model breakdown lives
+/// in [`ModelSlot`].
 #[derive(Default)]
 struct ShardSlot {
     requests: u64,
@@ -32,7 +36,20 @@ struct ShardSlot {
     padded_rows: u64,
     busy_ns: u64,
     exec_us: Summary,
-    depth_gauge: Option<Arc<AtomicUsize>>,
+    depth_gauges: Vec<Arc<AtomicUsize>>,
+}
+
+/// Per-model aggregate state, keyed by `"arch/mode"`: request/error
+/// counts, the installed weights epoch, swap activity, and how many
+/// requests each epoch served.
+#[derive(Default)]
+struct ModelSlot {
+    requests: u64,
+    errors: u64,
+    epoch: u64,
+    swaps: u64,
+    swap_failures: u64,
+    epochs: BTreeMap<u64, u64>,
 }
 
 /// Counters owned by the network front-end (admission gate, response
@@ -66,6 +83,7 @@ struct Inner {
     sim_pj: f64,
     started: Option<Instant>,
     shards: Vec<ShardSlot>,
+    models: BTreeMap<String, ModelSlot>,
 }
 
 impl Inner {
@@ -74,6 +92,15 @@ impl Inner {
             self.shards.resize_with(shard + 1, ShardSlot::default);
         }
         &mut self.shards[shard]
+    }
+
+    fn model(&mut self, model: &str) -> &mut ModelSlot {
+        // Look up by &str first so the steady state (model already
+        // known) allocates nothing.
+        if self.models.contains_key(model) {
+            return self.models.get_mut(model).unwrap();
+        }
+        self.models.entry(model.to_string()).or_default()
     }
 }
 
@@ -163,6 +190,27 @@ impl FrontendReport {
     }
 }
 
+/// Point-in-time aggregate over one served model (`"arch/mode"`),
+/// including its hot-swap history (see [`MetricsReport::models`]).
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    /// Model coordinates as `"arch/mode"`.
+    pub model: String,
+    /// Requests answered successfully for this model.
+    pub requests: u64,
+    /// Requests that failed for this model.
+    pub errors: u64,
+    /// Currently installed weights epoch.
+    pub epoch: u64,
+    /// Hot swaps installed over this model's lifetime.
+    pub swaps: u64,
+    /// Shard-side engine rebuilds that failed (the shard kept serving
+    /// its previous epoch).
+    pub swap_failures: u64,
+    /// Requests served under each weights epoch, ascending by epoch.
+    pub epochs: Vec<(u64, u64)>,
+}
+
 /// Pooled snapshot for reporting (plus the per-shard breakdown).
 #[derive(Clone, Debug)]
 pub struct MetricsReport {
@@ -190,8 +238,14 @@ pub struct MetricsReport {
     pub sim_us_mean: f64,
     /// Total simulated in-PCRAM energy (mJ).
     pub sim_mj_total: f64,
-    /// Per-shard breakdown, indexed by shard id.
+    /// Per-shard breakdown, indexed by shard id.  When several pools
+    /// (a multi-model registry) share the hub, shard `i` aggregates
+    /// across every pool's shard `i`; see [`MetricsReport::models`] for
+    /// the per-model view.
     pub shards: Vec<ShardReport>,
+    /// Per-model breakdown (requests, epoch, swap history), sorted by
+    /// `"arch/mode"`.
+    pub models: Vec<ModelReport>,
     /// Network front-end aggregates (all-zero for in-process serving).
     pub frontend: FrontendReport,
 }
@@ -211,19 +265,38 @@ impl MetricsHub {
         }
     }
 
-    /// Attach the shared queue-depth gauge for `shard` (the pool's
+    /// Attach a shared queue-depth gauge for `shard` (the pool's
     /// dispatcher increments it, the shard worker decrements it); reports
-    /// sample the gauge at snapshot time.
+    /// sample the gauges at snapshot time.  Attaching is additive: when
+    /// several pools (a multi-model registry) share one hub, shard `i`'s
+    /// reported depth is the sum over every pool's shard `i`.
     pub fn attach_depth_gauge(&self, shard: usize, gauge: Arc<AtomicUsize>) {
         let mut g = self.inner.lock().unwrap();
-        g.slot(shard).depth_gauge = Some(gauge);
+        g.slot(shard).depth_gauges.push(gauge);
+    }
+
+    /// Pre-register `model` (as `"arch/mode"`) at `epoch` so a report
+    /// lists every served model even before it has seen traffic.
+    pub fn ensure_model(&self, model: &str, epoch: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let slot = g.model(model);
+        slot.epoch = slot.epoch.max(epoch);
     }
 
     /// Record one executed batch — all of its responses and the batch
     /// ledger — atomically, under a single lock acquisition, so concurrent
     /// [`MetricsHub::report`] snapshots never observe a half-recorded
-    /// batch.
-    pub fn record_batch(&self, shard: usize, exec: &BatchExec, responses: &[Response]) {
+    /// batch.  `model` is the serving `"arch/mode"` pair and `epoch` the
+    /// weights epoch the batch executed under (a batch never mixes
+    /// epochs, so one pair describes all of its responses).
+    pub fn record_batch(
+        &self,
+        shard: usize,
+        model: &str,
+        epoch: u64,
+        exec: &BatchExec,
+        responses: &[Response],
+    ) {
         let mut g = self.inner.lock().unwrap();
         if g.started.is_none() {
             // The measurement window opens when the first batch *started*
@@ -250,13 +323,34 @@ impl MetricsHub {
         slot.padded_rows += exec.padded_batch as u64;
         slot.busy_ns += exec.exec_ns;
         slot.exec_us.push(exec.exec_ns as f64 / 1e3);
+        let n = responses.len() as u64;
+        let m = g.model(model);
+        m.requests += n;
+        m.epoch = m.epoch.max(epoch);
+        *m.epochs.entry(epoch).or_insert(0) += n;
     }
 
-    /// Record `k` requests that failed in `shard`'s backend.
-    pub fn record_failures(&self, shard: usize, k: usize) {
+    /// Record `k` requests for `model` that failed in `shard`'s backend.
+    pub fn record_failures(&self, shard: usize, model: &str, k: usize) {
         let mut g = self.inner.lock().unwrap();
         g.errors += k as u64;
         g.slot(shard).errors += k as u64;
+        g.model(model).errors += k as u64;
+    }
+
+    /// Record one installed hot swap of `model`'s weights to `epoch`.
+    pub fn record_swap(&self, model: &str, epoch: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let slot = g.model(model);
+        slot.swaps += 1;
+        slot.epoch = slot.epoch.max(epoch);
+    }
+
+    /// Record one shard-side engine rebuild that failed after a swap
+    /// (the shard keeps serving its previous epoch).
+    pub fn record_swap_failure(&self, model: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.model(model).swap_failures += 1;
     }
 
     /// Record one request admitted into the pool by the front-end gate.
@@ -324,6 +418,19 @@ impl MetricsHub {
             net_connections: f.net_connections.load(Ordering::Relaxed),
             net_responses: f.net_responses.load(Ordering::Relaxed),
         };
+        let models = g
+            .models
+            .iter()
+            .map(|(name, m)| ModelReport {
+                model: name.clone(),
+                requests: m.requests,
+                errors: m.errors,
+                epoch: m.epoch,
+                swaps: m.swaps,
+                swap_failures: m.swap_failures,
+                epochs: m.epochs.iter().map(|(&e, &n)| (e, n)).collect(),
+            })
+            .collect();
         let shards = g
             .shards
             .iter_mut()
@@ -335,10 +442,10 @@ impl MetricsHub {
                 batches: s.batches,
                 padded_rows: s.padded_rows,
                 queue_depth: s
-                    .depth_gauge
-                    .as_ref()
+                    .depth_gauges
+                    .iter()
                     .map(|d| d.load(Ordering::Relaxed))
-                    .unwrap_or(0),
+                    .sum(),
                 utilization: if elapsed > 0.0 {
                     (s.busy_ns as f64 / 1e9 / elapsed).min(1.0)
                 } else {
@@ -362,6 +469,7 @@ impl MetricsHub {
             sim_us_mean,
             sim_mj_total,
             shards,
+            models,
             frontend,
         }
     }
@@ -403,6 +511,24 @@ impl MetricsReport {
                 f.net_connections, f.net_responses
             );
         }
+        for m in &self.models {
+            let epochs: Vec<String> =
+                m.epochs.iter().map(|(e, n)| format!("{e}:{n}")).collect();
+            println!(
+                "model {:<12} epoch {:<3} {:>7} req  {:>3} errors  {} swaps{}  per-epoch req [{}]",
+                m.model,
+                m.epoch,
+                m.requests,
+                m.errors,
+                m.swaps,
+                if m.swap_failures > 0 {
+                    format!(" ({} failed)", m.swap_failures)
+                } else {
+                    String::new()
+                },
+                epochs.join(" "),
+            );
+        }
         for s in &self.shards {
             println!(
                 "shard {:<2}  {:>7} req  {:>6} batches  util {:>5.1}%  depth {:>3}  exec p50/p99 {:.1} / {:.1} us",
@@ -423,7 +549,6 @@ impl MetricsReport {
     /// The text round-trips through [`crate::util::json::parse`].
     pub fn to_json(&self) -> String {
         use crate::util::json::Json;
-        use std::collections::BTreeMap;
 
         fn num(v: f64) -> Json {
             Json::Num(v)
@@ -478,6 +603,28 @@ impl MetricsReport {
             .collect();
         o.insert("shards".to_string(), Json::Arr(shards));
 
+        let models = self
+            .models
+            .iter()
+            .map(|m| {
+                let mut mo = BTreeMap::new();
+                mo.insert("model".to_string(), Json::Str(m.model.clone()));
+                mo.insert("requests".to_string(), int(m.requests));
+                mo.insert("errors".to_string(), int(m.errors));
+                mo.insert("epoch".to_string(), int(m.epoch));
+                mo.insert("swaps".to_string(), int(m.swaps));
+                mo.insert("swap_failures".to_string(), int(m.swap_failures));
+                let epochs = m
+                    .epochs
+                    .iter()
+                    .map(|&(e, n)| (e.to_string(), int(n)))
+                    .collect::<BTreeMap<String, Json>>();
+                mo.insert("epochs".to_string(), Json::Obj(epochs));
+                Json::Obj(mo)
+            })
+            .collect();
+        o.insert("models".to_string(), Json::Arr(models));
+
         Json::Obj(o).to_string()
     }
 }
@@ -494,10 +641,13 @@ mod tests {
             exec_ns,
             batch,
             shard: 0,
+            epoch: 0,
             sim_ns: 5000.0,
             sim_pj: 2.0e6,
         }
     }
+
+    const MODEL: &str = "cnn1/fast";
 
     fn exec(batch: usize, exec_ns: u64) -> BatchExec {
         BatchExec {
@@ -513,7 +663,7 @@ mod tests {
     fn aggregates_requests() {
         let m = MetricsHub::new();
         for _ in 0..10 {
-            m.record_batch(0, &exec(1, 2_000_000), &[resp(4, 2_000_000)]);
+            m.record_batch(0, MODEL, 0, &exec(1, 2_000_000), &[resp(4, 2_000_000)]);
         }
         let r = m.report();
         assert_eq!(r.requests, 10);
@@ -535,9 +685,9 @@ mod tests {
     fn per_shard_breakdown_attributes_batches() {
         let m = MetricsHub::new();
         m.ensure_shards(3);
-        m.record_batch(0, &exec(2, 1_000), &[resp(2, 1_000), resp(2, 1_000)]);
-        m.record_batch(2, &exec(1, 3_000), &[resp(1, 3_000)]);
-        m.record_failures(1, 4);
+        m.record_batch(0, MODEL, 0, &exec(2, 1_000), &[resp(2, 1_000), resp(2, 1_000)]);
+        m.record_batch(2, MODEL, 0, &exec(1, 3_000), &[resp(1, 3_000)]);
+        m.record_failures(1, MODEL, 4);
         let r = m.report();
         assert_eq!(r.shards.len(), 3);
         assert_eq!(r.requests, 3);
@@ -557,13 +707,53 @@ mod tests {
         assert_eq!(m.report().shards[0].queue_depth, 7);
         gauge.store(2, Ordering::Relaxed);
         assert_eq!(m.report().shards[0].queue_depth, 2);
+        // Two pools sharing the hub (a multi-model registry): shard 0's
+        // depth is the sum of both pools' shard-0 gauges.
+        let second = Arc::new(AtomicUsize::new(5));
+        m.attach_depth_gauge(0, Arc::clone(&second));
+        assert_eq!(m.report().shards[0].queue_depth, 7);
+    }
+
+    #[test]
+    fn per_model_and_epoch_counters_track_swaps() {
+        let m = MetricsHub::new();
+        m.ensure_model("cnn2/fast", 0);
+        m.record_batch(0, MODEL, 0, &exec(2, 1_000), &[resp(2, 1_000), resp(2, 1_000)]);
+        m.record_swap(MODEL, 1);
+        m.record_batch(1, MODEL, 1, &exec(1, 1_000), &[resp(1, 1_000)]);
+        m.record_failures(0, MODEL, 2);
+        m.record_swap_failure(MODEL);
+        let r = m.report();
+        assert_eq!(r.models.len(), 2, "pre-registered model must appear with no traffic");
+        let cnn1 = r.models.iter().find(|mo| mo.model == MODEL).unwrap();
+        assert_eq!(cnn1.requests, 3);
+        assert_eq!(cnn1.errors, 2);
+        assert_eq!(cnn1.epoch, 1);
+        assert_eq!(cnn1.swaps, 1);
+        assert_eq!(cnn1.swap_failures, 1);
+        assert_eq!(cnn1.epochs, vec![(0, 2), (1, 1)]);
+        let cnn2 = r.models.iter().find(|mo| mo.model == "cnn2/fast").unwrap();
+        assert_eq!(cnn2.requests, 0);
+        assert_eq!(cnn2.epoch, 0);
+
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        let models = j.path(&["models"]).unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+        let jm = models
+            .iter()
+            .find(|mo| mo.get("model").unwrap().as_str() == Some(MODEL))
+            .unwrap();
+        assert_eq!(jm.get("epoch").unwrap().as_usize(), Some(1));
+        assert_eq!(jm.get("swaps").unwrap().as_usize(), Some(1));
+        assert_eq!(jm.path(&["epochs", "0"]).unwrap().as_usize(), Some(2));
+        assert_eq!(jm.path(&["epochs", "1"]).unwrap().as_usize(), Some(1));
     }
 
     #[test]
     fn frontend_counters_and_json_round_trip() {
         let m = MetricsHub::new();
         m.ensure_shards(2);
-        m.record_batch(1, &exec(2, 1_000), &[resp(2, 1_000), resp(2, 1_000)]);
+        m.record_batch(1, MODEL, 0, &exec(2, 1_000), &[resp(2, 1_000), resp(2, 1_000)]);
         m.record_admitted();
         m.record_admitted();
         m.record_shed();
@@ -605,7 +795,7 @@ mod tests {
                 let responses: Vec<Response> = (0..8).map(|_| resp(8, 1_000)).collect();
                 let e = exec(8, 1_000);
                 for _ in 0..500 {
-                    hub.record_batch(0, &e, &responses);
+                    hub.record_batch(0, MODEL, 0, &e, &responses);
                 }
                 stop.store(true, Ordering::Relaxed);
             })

@@ -20,18 +20,23 @@
 //! generator or from `artifacts/weights/` when present) or the PJRT
 //! executor under `--features pjrt`.  [`EnginePool`] is the bank-parallel
 //! scale-out — one engine worker per shard, mirroring ODIN's concurrent
-//! PCRAM subarrays; [`Server`] is its single-shard degenerate case.  See
-//! `docs/ARCHITECTURE.md` for the whole-stack design.
+//! PCRAM subarrays; [`Server`] is its single-shard degenerate case; the
+//! [`ModelRegistry`] owns one pool per `(arch, mode)` with hot-swappable,
+//! epoch-versioned weights — the software mirror of reprogramming one
+//! PCRAM substrate across network topologies.  See `docs/ARCHITECTURE.md`
+//! for the whole-stack design.
 #![deny(missing_docs)]
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod pool;
+pub mod registry;
 pub mod weights;
 
 pub use batcher::{BatchPolicy, Client, Response, ServeError, Server};
 pub use engine::{BatchExec, Engine, Prediction, SimEngine, SYNTHETIC_SEED};
-pub use metrics::{FrontendReport, MetricsHub, MetricsReport, ShardReport};
-pub use pool::EnginePool;
+pub use metrics::{FrontendReport, MetricsHub, MetricsReport, ModelReport, ShardReport};
+pub use pool::{EnginePool, SwapHandle};
+pub use registry::{ModelId, ModelRegistry, ModelSpec};
 pub use weights::ModelWeights;

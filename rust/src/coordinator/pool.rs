@@ -33,8 +33,22 @@
 //! the pool: no request is ever dropped or answered twice; a formed chunk
 //! never exceeds the engine's largest batch variant; a lone request waits
 //! at most the linger window.
+//!
+//! **Hot-swappable weights.**  [`EnginePool::spawn_versioned`] returns a
+//! [`SwapHandle`] alongside the pool.  [`SwapHandle::swap`] installs a
+//! new engine factory and bumps the weights *epoch*; each shard worker
+//! checks the epoch at its next chunk boundary and rebuilds its engine
+//! before executing — an executed chunk therefore runs entirely on one
+//! epoch's engine, and **no batch ever mixes epochs**.  Every
+//! [`Response`] carries the epoch it executed under, so callers (and the
+//! front-end response cache, which keys on the epoch) always know which
+//! weight generation produced their scores.  A request admitted just
+//! before a swap may still execute on the previous epoch on a worker
+//! that has not reached its boundary yet; its response is tagged with
+//! that earlier epoch and is bit-identical to a pure run of it
+//! (property-tested in `rust/tests/registry_swap.rs`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -52,6 +66,63 @@ use super::metrics::MetricsHub;
 struct Shard {
     tx: Sender<Vec<Request>>,
     depth: Arc<AtomicUsize>,
+}
+
+/// The authoritative pending-swap record: epoch and factory are updated
+/// together under one lock so a worker can never pair a new epoch number
+/// with an older factory (or vice versa) across rapid swaps.
+struct PendingSwap<E: Executor> {
+    epoch: u64,
+    factory: Option<Arc<dyn Fn(usize) -> Result<Engine<E>> + Send + Sync>>,
+}
+
+/// Shared swap channel between a pool's shard workers and its
+/// [`SwapHandle`].
+struct SwapState<E: Executor> {
+    /// Fast-path mirror of the installed epoch; workers compare it to
+    /// their engine's epoch before each chunk without taking the lock.
+    current: AtomicU64,
+    pending: Mutex<PendingSwap<E>>,
+}
+
+/// Handle for hot-swapping a pool's weights (see module docs).  Cheap to
+/// clone; every clone talks to the same pool.
+pub struct SwapHandle<E: Executor> {
+    state: Arc<SwapState<E>>,
+}
+
+impl<E: Executor> Clone for SwapHandle<E> {
+    fn clone(&self) -> Self {
+        SwapHandle { state: Arc::clone(&self.state) }
+    }
+}
+
+impl<E: Executor> SwapHandle<E> {
+    /// The currently installed weights epoch (workers converge to it at
+    /// their next chunk boundary).
+    pub fn epoch(&self) -> u64 {
+        self.state.current.load(Ordering::Acquire)
+    }
+
+    /// Install a new engine factory and return the new epoch.  The swap
+    /// is atomic at batch boundaries: each worker rebuilds its engine
+    /// *between* chunks, so no executed batch mixes epochs.  The factory
+    /// must build engines for the same `(arch, mode)` and batch ladder
+    /// as the pool was spawned with (the registry validates this by
+    /// probe-building an engine before calling here).
+    pub fn swap<F>(&self, factory: F) -> u64
+    where
+        F: Fn(usize) -> Result<Engine<E>> + Send + Sync + 'static,
+    {
+        let mut g = self.state.pending.lock().unwrap();
+        g.epoch += 1;
+        g.factory = Some(Arc::new(factory));
+        let epoch = g.epoch;
+        // Mirror after the lock-guarded install: a worker that sees the
+        // new number is guaranteed to find (at least) the new factory.
+        self.state.current.store(epoch, Ordering::Release);
+        epoch
+    }
 }
 
 /// A running sharded server: one dispatcher thread plus one engine worker
@@ -124,7 +195,30 @@ impl EnginePool {
         E: Executor + 'static,
         F: Fn(usize) -> Result<Engine<E>> + Send + Clone + 'static,
     {
+        let (pool, client, _swap) = Self::spawn_versioned(factory, 0, shards, policy, metrics)?;
+        Ok((pool, client))
+    }
+
+    /// [`EnginePool::spawn`] plus hot-swap support: the engines start at
+    /// weights epoch `initial_epoch`, and the returned [`SwapHandle`]
+    /// installs newer weight generations at batch boundaries (see module
+    /// docs for the atomicity contract).
+    pub fn spawn_versioned<F, E>(
+        factory: F,
+        initial_epoch: u64,
+        shards: usize,
+        policy: BatchPolicy,
+        metrics: MetricsHub,
+    ) -> Result<(EnginePool, Client, SwapHandle<E>)>
+    where
+        E: Executor + 'static,
+        F: Fn(usize) -> Result<Engine<E>> + Send + Clone + 'static,
+    {
         let n = if shards == 0 { Self::auto_shards() } else { shards };
+        let swap_state = Arc::new(SwapState {
+            current: AtomicU64::new(initial_epoch),
+            pending: Mutex::new(PendingSwap { epoch: initial_epoch, factory: None }),
+        });
         let mut workers = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         let mut readies = Vec::with_capacity(n);
@@ -135,6 +229,7 @@ impl EnginePool {
             let fac = factory.clone();
             let hub = metrics.clone();
             let gauge = Arc::clone(&depth);
+            let swap = Arc::clone(&swap_state);
             let handle = std::thread::Builder::new()
                 .name(format!("odin-shard-{shard}"))
                 .spawn(move || {
@@ -152,7 +247,7 @@ impl EnginePool {
                     // release it so each shard holds one model copy (the
                     // engine's), not two, for its whole serving life.
                     drop(fac);
-                    Self::worker(shard, engine, brx, hub, gauge);
+                    Self::worker(shard, engine, brx, hub, gauge, swap, initial_epoch);
                 })
                 .expect("spawning shard thread");
             workers.push(handle);
@@ -194,7 +289,7 @@ impl EnginePool {
             .spawn(move || Self::dispatch(rx, handles, policy, engine_max))
             .expect("spawning dispatcher thread");
         let pool = EnginePool { dispatcher: Some(dispatcher), workers, tx: Some(tx.clone()) };
-        Ok((pool, Client::new(tx)))
+        Ok((pool, Client::new(tx), SwapHandle { state: swap_state }))
     }
 
     /// Number of engine workers in the pool.
@@ -271,17 +366,43 @@ impl EnginePool {
     }
 
     /// One shard's serve loop: execute dispatched chunks until the
-    /// dispatcher hangs up.
+    /// dispatcher hangs up.  A pending hot swap is picked up *between*
+    /// chunks — the engine is replaced wholesale before the next chunk
+    /// executes, so a chunk always runs entirely on one epoch's engine.
     fn worker<E: Executor>(
         shard: usize,
-        engine: Engine<E>,
+        mut engine: Engine<E>,
         rx: Receiver<Vec<Request>>,
         metrics: MetricsHub,
         depth: Arc<AtomicUsize>,
+        swap: Arc<SwapState<E>>,
+        mut epoch: u64,
     ) {
+        let mut model = format!("{}/{}", engine.arch, engine.mode);
         while let Ok(batch) = rx.recv() {
+            if swap.current.load(Ordering::Acquire) != epoch {
+                let (next_epoch, factory) = {
+                    let g = swap.pending.lock().unwrap();
+                    (g.epoch, g.factory.clone())
+                };
+                if next_epoch != epoch {
+                    if let Some(factory) = factory {
+                        match factory(shard) {
+                            Ok(e) => {
+                                engine = e;
+                                epoch = next_epoch;
+                                model = format!("{}/{}", engine.arch, engine.mode);
+                            }
+                            // Keep serving the old epoch rather than
+                            // dropping the chunk; responses stay tagged
+                            // truthfully and the failure is counted.
+                            Err(_) => metrics.record_swap_failure(&model),
+                        }
+                    }
+                }
+            }
             let k = batch.len();
-            Self::execute(shard, &engine, &metrics, batch);
+            Self::execute(shard, &engine, epoch, &model, &metrics, batch);
             depth.fetch_sub(k, Ordering::Relaxed);
         }
     }
@@ -297,6 +418,8 @@ impl EnginePool {
     fn execute<E: Executor>(
         shard: usize,
         engine: &Engine<E>,
+        epoch: u64,
+        model: &str,
         metrics: &MetricsHub,
         batch: Vec<Request>,
     ) {
@@ -304,7 +427,7 @@ impl EnginePool {
         let (batch, bad): (Vec<Request>, Vec<Request>) =
             batch.into_iter().partition(|r| r.image.len() == want);
         if !bad.is_empty() {
-            metrics.record_failures(shard, bad.len());
+            metrics.record_failures(shard, model, bad.len());
             for req in bad {
                 let got = req.image.len();
                 let _ = req.respond.send(Err(ServeError::WrongRowWidth { got, want }));
@@ -329,20 +452,21 @@ impl EnginePool {
                         exec_ns: exec.exec_ns,
                         batch: exec.batch,
                         shard,
+                        epoch,
                         sim_ns: per_req_sim_ns,
                         sim_pj: per_req_sim_pj,
                     });
                 }
                 // The whole batch is recorded under one lock before any
                 // response is released (see metrics.rs on why).
-                metrics.record_batch(shard, &exec, &responses);
+                metrics.record_batch(shard, model, epoch, &exec, &responses);
                 for (tx, resp) in senders.into_iter().zip(responses) {
                     let _ = tx.send(Ok(resp));
                 }
             }
             Err(e) => {
                 let err = ServeError::Backend(format!("inference failed: {e:#}"));
-                metrics.record_failures(shard, batch.len());
+                metrics.record_failures(shard, model, batch.len());
                 for req in batch {
                     let _ = req.respond.send(Err(err.clone()));
                 }

@@ -1,0 +1,394 @@
+//! Multi-model serving: the [`ModelRegistry`] owns one
+//! [`EnginePool`] per `(arch, mode)` pair and hot-swaps each model's
+//! weights behind a monotonically increasing *epoch*.
+//!
+//! ODIN's premise is that many ANN topologies share one in-situ
+//! substrate — the same PCRAM fabric is reprogrammed from MLP-S to a
+//! LeNet-style CNN by writing different weights (ATRIA and RAPIDNN make
+//! the same reconfigurability argument).  The registry is the software
+//! analogue: one process serves several models at once, and installing
+//! new weights for a model is a runtime operation, not a restart.
+//!
+//! ```text
+//!              ModelRegistry
+//!   (arch,mode) ──▶ ModelEntry ──▶ EnginePool (its own shards)
+//!   "cnn1/fast"        │ epoch 0 ──swap──▶ epoch 1 ──swap──▶ epoch 2
+//!   "cnn2/fast"        │
+//!   "cnn1/sc"          └─ SwapHandle: install factory, bump epoch
+//! ```
+//!
+//! **Epoch lifecycle.**  Freshly spawned models serve epoch 0.
+//! [`ModelRegistry::swap_weights`] validates the replacement weights
+//! (same arch; probe-builds an engine), stamps them with the next epoch,
+//! and installs them through the pool's [`SwapHandle`]; each shard
+//! worker replaces its engine at its next batch boundary, so **no
+//! executed batch ever mixes epochs**.  Every
+//! [`Response`](super::batcher::Response) reports the epoch it executed
+//! under, and the front-end response cache includes
+//! the epoch in its key — a swap therefore invalidates stale cache
+//! entries *by construction* (old-epoch keys can no longer be looked
+//! up), instead of requiring an explicit flush.
+//!
+//! The registry serves the hermetic [`SimBackend`]; PJRT serving stays
+//! single-model through [`EnginePool::spawn`] directly.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::sim::SimBackend;
+
+use super::batcher::{BatchPolicy, Client};
+use super::engine::Engine;
+use super::metrics::MetricsHub;
+use super::pool::{EnginePool, SwapHandle};
+use super::weights::ModelWeights;
+
+/// Model coordinates: which topology in which arithmetic mode.  The
+/// registry routes every request by this pair; `Display` renders the
+/// canonical `"arch/mode"` spelling used in metrics.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId {
+    /// Topology name ("cnn1", "cnn2", ...).
+    pub arch: String,
+    /// Arithmetic mode ("fast", "sc", "mux", "float").
+    pub mode: String,
+}
+
+impl ModelId {
+    /// Build an id from its parts.
+    pub fn new(arch: impl Into<String>, mode: impl Into<String>) -> Self {
+        ModelId { arch: arch.into(), mode: mode.into() }
+    }
+
+    /// Parse the CLI spelling `ARCH:MODE` (a `/` separator is accepted
+    /// too, matching the metrics rendering).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (arch, mode) = s
+            .split_once(':')
+            .or_else(|| s.split_once('/'))
+            .with_context(|| format!("model {s:?} is not ARCH:MODE"))?;
+        ensure!(!arch.is_empty() && !mode.is_empty(), "model {s:?} is not ARCH:MODE");
+        Ok(ModelId::new(arch, mode))
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.arch, self.mode)
+    }
+}
+
+/// One model the registry should spawn: coordinates, where its weights
+/// come from, and how its pool is sized.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Model coordinates.
+    pub id: ModelId,
+    /// Directory probed for real weights (`weights/<arch>.bin`) before
+    /// falling back to deterministic synthetic weights; swap-by-seed
+    /// reloads from the same place.
+    pub artifacts_dir: String,
+    /// Seed for the synthetic fallback of the *initial* weights.
+    pub seed: u64,
+    /// Engine workers for this model's pool (`0` = resolved by the
+    /// registry: the host cores split evenly across all models).
+    pub shards: usize,
+    /// Row-parallel threads inside each shard's backend (`0` = resolved
+    /// by the registry so the host is never oversubscribed).
+    pub threads: usize,
+}
+
+impl ModelSpec {
+    /// A spec serving synthetic weights (the hermetic default; real
+    /// artifacts in `artifacts/` are still picked up when present).
+    pub fn synthetic(arch: &str, mode: &str, seed: u64) -> Self {
+        ModelSpec {
+            id: ModelId::new(arch, mode),
+            artifacts_dir: "artifacts".to_string(),
+            seed,
+            shards: 1,
+            threads: 0,
+        }
+    }
+
+    /// Override the pool's shard count (`0` = auto).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Override the per-shard row-parallelism budget (`0` = auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Override where weights are loaded (and swap-reloaded) from.
+    pub fn with_artifacts(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+}
+
+/// One registered model: its pool, submission client, swap handle, and
+/// the bookkeeping a reload needs.  Field order matters for `Drop`: the
+/// client disconnects from the request queue before the pool joins its
+/// threads.
+struct ModelEntry {
+    client: Client,
+    pool: EnginePool,
+    swap: SwapHandle<SimBackend>,
+    /// Serializes swaps per model so the stamped `ModelWeights::epoch`
+    /// always matches the epoch the pool installs.
+    swap_lock: Mutex<()>,
+    threads: usize,
+    artifacts_dir: String,
+}
+
+/// A set of independently pooled, hot-swappable models keyed by
+/// `(arch, mode)` (see module docs).
+///
+/// ```
+/// use odin::coordinator::{BatchPolicy, MetricsHub, ModelRegistry, ModelSpec, ModelWeights};
+///
+/// let metrics = MetricsHub::new();
+/// let registry = ModelRegistry::spawn(
+///     vec![
+///         ModelSpec::synthetic("cnn1", "float", 1),
+///         ModelSpec::synthetic("cnn2", "float", 2),
+///     ],
+///     BatchPolicy::default(),
+///     metrics.clone(),
+/// )
+/// .unwrap();
+///
+/// let (client, epoch) = registry.route("cnn1", "float").unwrap();
+/// assert_eq!(epoch, 0);
+/// let response = client.infer_blocking(vec![0u8; 784]).unwrap();
+/// assert_eq!(response.epoch, 0);
+///
+/// // Hot-swap cnn1 to a new weight generation: the epoch advances and
+/// // later responses report it.
+/// let next = ModelWeights::synthetic("cnn1", 7).unwrap();
+/// assert_eq!(registry.swap_weights("cnn1", "float", next).unwrap(), 1);
+///
+/// drop(client);
+/// registry.shutdown();
+/// assert_eq!(metrics.report().models.len(), 2);
+/// ```
+pub struct ModelRegistry {
+    entries: HashMap<ModelId, ModelEntry>,
+    metrics: MetricsHub,
+}
+
+impl ModelRegistry {
+    /// Spawn one engine pool per spec.  Specs with `shards == 0` share
+    /// the host cores evenly; duplicate `(arch, mode)` pairs are
+    /// rejected.  All pools report into the shared `metrics` hub
+    /// (per-model counters keep them distinguishable).
+    pub fn spawn(
+        specs: Vec<ModelSpec>,
+        policy: BatchPolicy,
+        metrics: MetricsHub,
+    ) -> Result<ModelRegistry> {
+        ensure!(!specs.is_empty(), "a registry needs at least one model");
+        let cores = EnginePool::auto_shards();
+        let auto_share = (cores / specs.len()).max(1);
+        let resolved: Vec<usize> =
+            specs.iter().map(|s| if s.shards == 0 { auto_share } else { s.shards }).collect();
+        let total_shards: usize = resolved.iter().sum();
+        let auto_threads = (cores / total_shards.max(1)).max(1);
+
+        let mut entries = HashMap::new();
+        for (spec, shards) in specs.into_iter().zip(resolved) {
+            if entries.contains_key(&spec.id) {
+                bail!("model {} specified twice", spec.id);
+            }
+            let threads = if spec.threads == 0 { auto_threads } else { spec.threads };
+            let weights =
+                ModelWeights::load_or_synthetic(&spec.artifacts_dir, &spec.id.arch, spec.seed)?;
+            let (pool, client, swap) = {
+                let w = weights.clone();
+                let mode = spec.id.mode.clone();
+                EnginePool::spawn_versioned(
+                    move |_shard| Engine::sim_from_weights_threads(&w, &mode, threads),
+                    weights.epoch,
+                    shards,
+                    policy,
+                    metrics.clone(),
+                )
+                .with_context(|| format!("spawning pool for {}", spec.id))?
+            };
+            metrics.ensure_model(&spec.id.to_string(), weights.epoch);
+            entries.insert(
+                spec.id,
+                ModelEntry {
+                    client,
+                    pool,
+                    swap,
+                    swap_lock: Mutex::new(()),
+                    threads,
+                    artifacts_dir: spec.artifacts_dir,
+                },
+            );
+        }
+        Ok(ModelRegistry { entries, metrics })
+    }
+
+    /// The served models with their current epochs, sorted by id.
+    pub fn models(&self) -> Vec<(ModelId, u64)> {
+        let mut out: Vec<(ModelId, u64)> =
+            self.entries.iter().map(|(id, e)| (id.clone(), e.swap.epoch())).collect();
+        out.sort();
+        out
+    }
+
+    /// Route a request: the submission client and current weights epoch
+    /// for `(arch, mode)`, or `None` when the model is not served.  The
+    /// epoch is the one new work is *expected* to execute under; a
+    /// response reports the epoch it actually ran on.
+    pub fn route(&self, arch: &str, mode: &str) -> Option<(Client, u64)> {
+        let entry = self.entries.get(&ModelId::new(arch, mode))?;
+        Some((entry.client.clone(), entry.swap.epoch()))
+    }
+
+    /// The current weights epoch of `(arch, mode)`.
+    pub fn epoch(&self, arch: &str, mode: &str) -> Option<u64> {
+        self.entries.get(&ModelId::new(arch, mode)).map(|e| e.swap.epoch())
+    }
+
+    /// Total shard workers across every model's pool.
+    pub fn total_shards(&self) -> usize {
+        self.entries.values().map(|e| e.pool.shards()).sum()
+    }
+
+    /// Hot-swap `(arch, mode)` to `weights`: validate (the arch must
+    /// match; the weights must build a working engine), stamp the next
+    /// epoch, install at the pool's batch boundaries, and return the new
+    /// epoch.  In-flight batches finish on the epoch they started under;
+    /// no batch mixes epochs.
+    pub fn swap_weights(&self, arch: &str, mode: &str, weights: ModelWeights) -> Result<u64> {
+        let id = ModelId::new(arch, mode);
+        let entry = self
+            .entries
+            .get(&id)
+            .with_context(|| format!("unknown model {id} (not in this registry)"))?;
+        ensure!(
+            weights.arch == arch,
+            "swap rejected: weights are for arch {:?}, model is {id}",
+            weights.arch
+        );
+        let _serialized = entry.swap_lock.lock().unwrap();
+        let epoch = entry.swap.epoch() + 1;
+        let weights = weights.with_epoch(epoch);
+        // Probe-build once so a broken weight set is rejected here with
+        // the cause, not silently skipped shard-side mid-swap.
+        Engine::sim_from_weights_threads(&weights, mode, entry.threads)
+            .with_context(|| format!("swap rejected: weights fail to build an engine for {id}"))?;
+        let threads = entry.threads;
+        let mode_owned = mode.to_string();
+        let installed = entry.swap.swap(move |_shard| {
+            Engine::sim_from_weights_threads(&weights, &mode_owned, threads)
+        });
+        debug_assert_eq!(installed, epoch, "swaps are serialized per model");
+        self.metrics.record_swap(&id.to_string(), installed);
+        Ok(installed)
+    }
+
+    /// Hot-swap `(arch, mode)` by reloading from the model's weight
+    /// source: real artifacts when present, deterministic synthetic
+    /// weights from `seed` otherwise.  This is what the wire-level swap
+    /// request (`odin swap`) invokes.
+    pub fn swap_seed(&self, arch: &str, mode: &str, seed: u64) -> Result<u64> {
+        let id = ModelId::new(arch, mode);
+        let entry = self
+            .entries
+            .get(&id)
+            .with_context(|| format!("unknown model {id} (not in this registry)"))?;
+        let weights = ModelWeights::load_or_synthetic(&entry.artifacts_dir, arch, seed)?;
+        self.swap_weights(arch, mode, weights)
+    }
+
+    /// Shut every pool down (joins all pool threads).  Callers must drop
+    /// routed [`Client`] clones first; the registry's own per-entry
+    /// clients are dropped here before each pool joins.
+    pub fn shutdown(self) {
+        // Entry field order drops each client before its pool, so the
+        // dispatchers observe a disconnect and exit; consuming `self` is
+        // the whole implementation.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_id_parses_both_spellings() {
+        assert_eq!(ModelId::parse("cnn1:fast").unwrap(), ModelId::new("cnn1", "fast"));
+        assert_eq!(ModelId::parse("cnn2/sc").unwrap(), ModelId::new("cnn2", "sc"));
+        assert!(ModelId::parse("cnn1").is_err());
+        assert!(ModelId::parse(":fast").is_err());
+        assert!(ModelId::parse("cnn1:").is_err());
+        assert_eq!(ModelId::new("cnn1", "fast").to_string(), "cnn1/fast");
+    }
+
+    #[test]
+    fn routes_and_epochs_per_model() {
+        let registry = ModelRegistry::spawn(
+            vec![
+                ModelSpec::synthetic("cnn1", "float", 1),
+                ModelSpec::synthetic("cnn1", "fast", 1),
+            ],
+            BatchPolicy::default(),
+            MetricsHub::new(),
+        )
+        .unwrap();
+        assert!(registry.route("cnn1", "float").is_some());
+        assert!(registry.route("cnn1", "fast").is_some());
+        assert!(registry.route("cnn2", "float").is_none(), "unregistered model has no route");
+        assert_eq!(registry.epoch("cnn1", "float"), Some(0));
+        let models = registry.models();
+        assert_eq!(models.len(), 2);
+        registry.shutdown();
+    }
+
+    #[test]
+    fn duplicate_models_are_rejected() {
+        let err = ModelRegistry::spawn(
+            vec![
+                ModelSpec::synthetic("cnn1", "float", 1),
+                ModelSpec::synthetic("cnn1", "float", 2),
+            ],
+            BatchPolicy::default(),
+            MetricsHub::new(),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn swap_rejects_wrong_arch_and_unknown_model() {
+        let metrics = MetricsHub::new();
+        let registry = ModelRegistry::spawn(
+            vec![ModelSpec::synthetic("cnn1", "float", 1)],
+            BatchPolicy::default(),
+            metrics.clone(),
+        )
+        .unwrap();
+        let wrong = ModelWeights::synthetic("cnn2", 5).unwrap();
+        assert!(registry.swap_weights("cnn1", "float", wrong).is_err());
+        let ok = ModelWeights::synthetic("cnn1", 5).unwrap();
+        assert!(registry.swap_weights("cnn2", "float", ok.clone()).is_err());
+        assert_eq!(registry.epoch("cnn1", "float"), Some(0), "failed swaps leave the epoch");
+        assert_eq!(registry.swap_weights("cnn1", "float", ok).unwrap(), 1);
+        assert_eq!(registry.epoch("cnn1", "float"), Some(1));
+        registry.shutdown();
+        let report = metrics.report();
+        let m = report.models.iter().find(|m| m.model == "cnn1/float").unwrap();
+        assert_eq!(m.swaps, 1);
+        assert_eq!(m.epoch, 1);
+    }
+}

@@ -78,6 +78,14 @@ impl QuantLayer {
 pub struct ModelWeights {
     /// Topology name ("cnn1", "cnn2").
     pub arch: String,
+    /// Weights epoch: which installed generation of this model these
+    /// tensors belong to.  Freshly loaded/synthesized weights are epoch
+    /// 0; every hot swap through
+    /// [`ModelRegistry`](super::registry::ModelRegistry) stamps the next
+    /// epoch before installing, and every served response reports the
+    /// epoch it executed under — the response cache keys on it, so a
+    /// swap implicitly invalidates all earlier entries.
+    pub epoch: u64,
     /// Quantized convolution layer.
     pub conv: QuantLayer,
     /// Quantized hidden fully-connected layer.
@@ -113,6 +121,7 @@ impl ModelWeights {
         ensure!(scales_t.len() == 6, "scales len {}", scales_t.len());
         Ok(ModelWeights {
             arch: arch.to_string(),
+            epoch: 0,
             conv: layer("conv_q", "conv_b")?,
             fc1: layer("fc1_q", "fc1_b")?,
             fc2: layer("fc2_q", "fc2_b")?,
@@ -176,6 +185,7 @@ impl ModelWeights {
         ];
         Ok(ModelWeights {
             arch: sim.arch.clone(),
+            epoch: 0,
             conv: layer(conv_d),
             fc1: layer(fc1_d),
             fc2: layer(fc2_d),
@@ -184,6 +194,13 @@ impl ModelWeights {
             fc2_w: fc2_d.w.clone(),
             scales,
         })
+    }
+
+    /// Stamp these weights as belonging to `epoch` (builder-style; used
+    /// by the registry when installing a hot swap).
+    pub fn with_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
+        self
     }
 
     /// Materialize the executable [`SimModel`] for the sim backend.

@@ -23,6 +23,10 @@
 //! are written by a separate writer thread, so a blocked admit never
 //! stalls response delivery — permits keep draining and a `Block` gate
 //! always makes progress (no deadlock; pinned by the loopback tests).
+//! Response-cache **hits never touch the gate**: they are answered
+//! before admission and acquire no permit, so a saturated gate still
+//! serves the hot working set and a burst of hits cannot leak slots
+//! (also pinned by the loopback tests, which drain the gate to zero).
 //! Every decision is counted in the shared
 //! [`MetricsHub`](crate::coordinator::MetricsHub).
 
@@ -142,6 +146,11 @@ impl AdmissionGate {
     pub fn in_flight(&self) -> usize {
         *self.state.in_flight.lock().unwrap()
     }
+
+    /// The gate's configured capacity (after the >= 1 clamp).
+    pub fn capacity(&self) -> usize {
+        self.state.cfg.queue_cap
+    }
 }
 
 #[cfg(test)]
@@ -206,6 +215,7 @@ mod tests {
             AdmissionConfig { policy: AdmissionPolicy::Shed, queue_cap: 0, retry_after_ms: 1 },
             MetricsHub::new(),
         );
+        assert_eq!(gate.capacity(), 1, "capacity reports the clamped value");
         let p = gate.admit().unwrap();
         assert!(gate.admit().is_err());
         drop(p);

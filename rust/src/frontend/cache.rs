@@ -1,13 +1,19 @@
-//! Sharded LRU response cache keyed by `(arch, mode, input row)`.
+//! Sharded LRU response cache keyed by `(arch, mode, weights epoch,
+//! input row)`.
 //!
 //! **Why caching cannot change results.**  Every backend behind the
 //! engine pool is deterministic (`Executor` contract: same bytes in,
 //! same logits out — the property the pool's shard routing already
-//! relies on), so replaying a stored response for a byte-identical row
-//! is bit-identical to re-executing it.  Keys compare the *full* row
-//! bytes — a hash is only used to pick the cache shard — so hash
-//! collisions can never serve the wrong scores.  The loopback
-//! integration tests pin cached == uncached bit-identity.
+//! relies on) *for a fixed weight generation*, so replaying a stored
+//! response for a byte-identical row is bit-identical to re-executing
+//! it on the same epoch.  Weights are hot-swappable, which is exactly
+//! why the **epoch is part of the key**: a swap moves lookups to the
+//! new epoch, so every pre-swap entry becomes unreachable — stale
+//! responses are impossible by construction, with no flush to forget.
+//! Keys compare the *full* row bytes — a hash is only used to pick the
+//! cache shard — so hash collisions can never serve the wrong scores.
+//! The loopback integration tests pin cached == uncached bit-identity
+//! and the never-serve-across-a-swap property.
 //!
 //! The cache sits *in front of* admission control: a hit costs no pool
 //! work, so it is answered even when the gate is full — under overload a
@@ -25,8 +31,8 @@ use std::sync::{Arc, Mutex};
 use crate::coordinator::MetricsHub;
 
 /// The cached outcome of one inference: the scores plus the pool shard
-/// that originally produced them (replayed so cached responses stay
-/// shaped like live ones).
+/// and weights epoch that originally produced them (replayed so cached
+/// responses stay shaped like live ones).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CachedScores {
     /// Raw per-class logits.
@@ -35,26 +41,45 @@ pub struct CachedScores {
     pub argmax: u8,
     /// Pool shard that originally executed this row.
     pub shard: u32,
+    /// Weights epoch that originally executed this row (always equal to
+    /// the key's epoch — the server re-keys an insert to the epoch the
+    /// response actually ran on).
+    pub epoch: u64,
 }
 
-/// Full cache key: model coordinates plus the complete input row.
-/// `Arc`s keep clones cheap (the row is shared, not copied).
+/// Full cache key: model coordinates, weights epoch, and the complete
+/// input row.  `Arc`s keep clones cheap (the row is shared, not
+/// copied).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct CacheKey {
     arch: Arc<str>,
     mode: Arc<str>,
+    epoch: u64,
     row: Arc<Vec<u8>>,
 }
 
 impl CacheKey {
     /// Build a key; the row is wrapped once and shared by every clone.
-    pub fn new(arch: Arc<str>, mode: Arc<str>, row: Vec<u8>) -> Self {
-        CacheKey { arch, mode, row: Arc::new(row) }
+    pub fn new(arch: Arc<str>, mode: Arc<str>, epoch: u64, row: Vec<u8>) -> Self {
+        CacheKey { arch, mode, epoch, row: Arc::new(row) }
     }
 
     /// The input row this key was built from.
     pub fn row(&self) -> &[u8] {
         &self.row
+    }
+
+    /// The weights epoch this key addresses.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The same key re-addressed to `epoch` (used when inserting: the
+    /// entry must live under the epoch the response *executed* on,
+    /// which may be newer than the epoch at admission time).
+    pub fn with_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
+        self
     }
 }
 
@@ -72,35 +97,45 @@ struct Shard {
 /// Sharded LRU response cache (see module docs).
 pub struct ResponseCache {
     shards: Vec<Mutex<Shard>>,
-    per_shard_cap: usize,
+    /// Per-shard capacity.  Sums to exactly the configured total: the
+    /// division remainder is distributed one entry each to the first
+    /// `capacity % shards` shards (an even `floor` split used to make a
+    /// hot shard start evicting below the configured total).
+    caps: Vec<usize>,
     metrics: MetricsHub,
 }
 
 impl ResponseCache {
     /// Build a cache holding at most `capacity` responses in total
     /// (clamped to >= 1), spread over up to 8 lock shards.  The bound is
-    /// enforced per shard (`floor(capacity / shards)` each, so total
-    /// residency never exceeds `capacity`); a working set whose keys all
-    /// hash to one shard therefore starts evicting below the total
-    /// capacity — the price of sharded locking.
+    /// enforced per shard, and the per-shard caps sum to *exactly*
+    /// `capacity` (regression-tested): `capacity / shards` each, with
+    /// the remainder spread one-per-shard from the front.
     pub fn new(capacity: usize, metrics: MetricsHub) -> Self {
         let cap = capacity.max(1);
         let n = cap.min(8);
-        let per_shard_cap = cap / n; // n <= cap, so always >= 1
+        let (base, extra) = (cap / n, cap % n);
+        let caps: Vec<usize> = (0..n).map(|i| base + usize::from(i < extra)).collect();
+        debug_assert_eq!(caps.iter().sum::<usize>(), cap);
         let shards = (0..n).map(|_| Mutex::new(Shard::default())).collect();
-        ResponseCache { shards, per_shard_cap, metrics }
+        ResponseCache { shards, caps, metrics }
     }
 
-    fn shard_for(&self, key: &CacheKey) -> &Mutex<Shard> {
+    /// Total configured capacity (the per-shard caps sum to this).
+    pub fn capacity(&self) -> usize {
+        self.caps.iter().sum()
+    }
+
+    fn shard_index(&self, key: &CacheKey) -> usize {
         let mut h = DefaultHasher::new();
         key.hash(&mut h);
-        &self.shards[(h.finish() as usize) % self.shards.len()]
+        (h.finish() as usize) % self.shards.len()
     }
 
     /// Look up a row; a hit refreshes its recency.  Records hit/miss.
     pub fn get(&self, key: &CacheKey) -> Option<CachedScores> {
         let hit = {
-            let mut s = self.shard_for(key).lock().unwrap();
+            let mut s = self.shards[self.shard_index(key)].lock().unwrap();
             s.tick += 1;
             let tick = s.tick;
             s.map.get_mut(key).map(|e| {
@@ -127,11 +162,13 @@ impl ResponseCache {
     pub fn put(&self, key: CacheKey, scores: CachedScores) {
         let mut evicted = 0u64;
         {
-            let mut s = self.shard_for(&key).lock().unwrap();
+            let idx = self.shard_index(&key);
+            let cap = self.caps[idx];
+            let mut s = self.shards[idx].lock().unwrap();
             s.tick += 1;
             let tick = s.tick;
             s.map.insert(key, Entry { scores, last_used: tick });
-            while s.map.len() > self.per_shard_cap {
+            while s.map.len() > cap {
                 let victim =
                     s.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone());
                 match victim {
@@ -164,11 +201,15 @@ mod tests {
     use super::*;
 
     fn key(row: &[u8]) -> CacheKey {
-        CacheKey::new(Arc::from("cnn1"), Arc::from("fast"), row.to_vec())
+        CacheKey::new(Arc::from("cnn1"), Arc::from("fast"), 0, row.to_vec())
+    }
+
+    fn key_at(epoch: u64, row: &[u8]) -> CacheKey {
+        CacheKey::new(Arc::from("cnn1"), Arc::from("fast"), epoch, row.to_vec())
     }
 
     fn scores(v: f32) -> CachedScores {
-        CachedScores { logits: [v; 10], argmax: 3, shard: 1 }
+        CachedScores { logits: [v; 10], argmax: 3, shard: 1, epoch: 0 }
     }
 
     #[test]
@@ -188,14 +229,54 @@ mod tests {
     fn distinct_model_coordinates_are_distinct_entries() {
         let c = ResponseCache::new(16, MetricsHub::new());
         let row = vec![7u8; 8];
-        c.put(CacheKey::new(Arc::from("cnn1"), Arc::from("fast"), row.clone()), scores(1.0));
-        c.put(CacheKey::new(Arc::from("cnn1"), Arc::from("sc"), row.clone()), scores(2.0));
-        c.put(CacheKey::new(Arc::from("cnn2"), Arc::from("fast"), row.clone()), scores(3.0));
+        c.put(CacheKey::new(Arc::from("cnn1"), Arc::from("fast"), 0, row.clone()), scores(1.0));
+        c.put(CacheKey::new(Arc::from("cnn1"), Arc::from("sc"), 0, row.clone()), scores(2.0));
+        c.put(CacheKey::new(Arc::from("cnn2"), Arc::from("fast"), 0, row.clone()), scores(3.0));
         assert_eq!(c.len(), 3);
         let got = c
-            .get(&CacheKey::new(Arc::from("cnn1"), Arc::from("sc"), row))
+            .get(&CacheKey::new(Arc::from("cnn1"), Arc::from("sc"), 0, row))
             .unwrap();
         assert_eq!(got, scores(2.0));
+    }
+
+    #[test]
+    fn epoch_is_part_of_the_key() {
+        // The stale-read fix by construction: an entry stored under
+        // epoch 0 is invisible to epoch-1 lookups (and vice versa), so a
+        // weight swap implicitly invalidates everything it outdated.
+        let c = ResponseCache::new(16, MetricsHub::new());
+        let row = [9u8; 16];
+        c.put(key_at(0, &row), scores(1.0));
+        assert_eq!(c.get(&key_at(1, &row)), None, "post-swap lookup must miss");
+        c.put(key_at(1, &row), scores(2.0));
+        assert_eq!(c.get(&key_at(0, &row)), Some(scores(1.0)));
+        assert_eq!(c.get(&key_at(1, &row)), Some(scores(2.0)));
+        assert_eq!(key_at(0, &row).with_epoch(1), key_at(1, &row));
+    }
+
+    #[test]
+    fn per_shard_caps_sum_to_the_configured_capacity() {
+        // Regression: `floor(capacity / shards)` per shard used to lose
+        // the division remainder, so e.g. capacity 12 over 8 shards
+        // yielded 8 effective slots and a hot shard evicted well below
+        // the configured total.  The remainder is now distributed.
+        let m = MetricsHub::new();
+        for cap in 1..=41 {
+            let c = ResponseCache::new(cap, m.clone());
+            assert_eq!(c.capacity(), cap, "capacity {cap} must survive sharding");
+            let per_shard: Vec<usize> = c.caps.clone();
+            let max = per_shard.iter().max().unwrap();
+            let min = per_shard.iter().min().unwrap();
+            assert!(max - min <= 1, "capacity {cap}: remainder spread unevenly {per_shard:?}");
+        }
+        // And the cache can actually hold exactly its configured total
+        // when keys spread across shards: fill far past capacity and
+        // check residency never exceeds it.
+        let c = ResponseCache::new(12, m);
+        for i in 0..200u32 {
+            c.put(key(&i.to_le_bytes()), scores(i as f32));
+            assert!(c.len() <= 12, "residency above configured capacity");
+        }
     }
 
     #[test]
@@ -218,7 +299,7 @@ mod tests {
         // single-shard cache explicitly to observe LRU order.
         let c = ResponseCache {
             shards: vec![Mutex::new(Shard::default())],
-            per_shard_cap: 2,
+            caps: vec![2],
             metrics: MetricsHub::new(),
         };
         c.put(key(&[1]), scores(1.0));

@@ -19,7 +19,7 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireStatus};
+use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireStatus, WireSwap};
 
 /// A successful network inference.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -30,6 +30,8 @@ pub struct NetResponse {
     pub argmax: u8,
     /// Pool shard that produced the scores.
     pub shard: u32,
+    /// Weights epoch that produced the scores (advances on hot swaps).
+    pub epoch: u64,
     /// True when the server answered from its response cache.
     pub cached: bool,
 }
@@ -127,8 +129,9 @@ impl NetClient {
                         let _ = tx.send(resp);
                     }
                 }
-                // A server never sends requests; tolerate and move on.
-                Ok(Some(Frame::Request(_))) => {}
+                // A server never sends requests or swap frames;
+                // tolerate and move on.
+                Ok(Some(Frame::Request(_))) | Ok(Some(Frame::Swap(_))) => {}
                 Ok(None) | Err(_) => break,
             }
         }
@@ -146,9 +149,9 @@ impl NetClient {
     /// every other pipelined request on it) stays alive.
     pub fn submit(&self, row: Vec<u8>) -> Receiver<WireResponse> {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
         let overhead = 64 + self.inner.arch.len() + self.inner.mode.len();
         if row.len() + overhead > wire::MAX_FRAME {
+            let (tx, rx) = mpsc::channel();
             let _ = tx.send(WireResponse {
                 id,
                 status: WireStatus::Error {
@@ -162,16 +165,26 @@ impl NetClient {
             });
             return rx;
         }
-        self.inner.pending.lock().unwrap().insert(id, tx);
         let frame = Frame::Request(WireRequest {
             id,
             arch: self.inner.arch.clone(),
             mode: self.inner.mode.clone(),
             row,
         });
+        self.send_frame(id, &frame)
+    }
+
+    /// Register `id` as pending, write `frame`, and hand back the
+    /// response receiver.  On a failed write — or a close racing the
+    /// write — the pending slot is removed so the receiver disconnects
+    /// instead of hanging (shared by [`NetClient::submit`] and
+    /// [`NetClient::swap`]).
+    fn send_frame(&self, id: u64, frame: &Frame) -> Receiver<WireResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.inner.pending.lock().unwrap().insert(id, tx);
         let write_failed = {
             let mut w = self.inner.writer.lock().unwrap();
-            wire::write_frame(&mut *w, &frame).is_err()
+            wire::write_frame(&mut *w, frame).is_err()
         };
         if write_failed || self.inner.closed.load(Ordering::SeqCst) {
             self.inner.pending.lock().unwrap().remove(&id);
@@ -182,15 +195,20 @@ impl NetClient {
     /// Resolve one submitted request into a typed outcome.
     pub fn wait(rx: Receiver<WireResponse>) -> Result<NetResponse, NetError> {
         match rx.recv() {
-            Ok(WireResponse { status: WireStatus::Ok { shard, argmax, cached, logits }, .. }) => {
-                Ok(NetResponse { logits, argmax, shard, cached })
-            }
+            Ok(WireResponse {
+                status: WireStatus::Ok { shard, argmax, cached, epoch, logits },
+                ..
+            }) => Ok(NetResponse { logits, argmax, shard, epoch, cached }),
             Ok(WireResponse { status: WireStatus::Error { kind, message }, .. }) => {
                 Err(NetError::Remote { kind, message })
             }
             Ok(WireResponse { status: WireStatus::Overloaded { retry_after_ms }, .. }) => {
                 Err(NetError::Overloaded { retry_after_ms })
             }
+            Ok(WireResponse { status: WireStatus::Swapped { .. }, .. }) => Err(NetError::Remote {
+                kind: WireErrorKind::BadRequest,
+                message: "unexpected swap acknowledgement for an inference request".to_string(),
+            }),
             Err(_) => Err(NetError::Disconnected),
         }
     }
@@ -198,6 +216,44 @@ impl NetClient {
     /// Submit and block for the typed outcome (closed loop).
     pub fn infer(&self, row: Vec<u8>) -> Result<NetResponse, NetError> {
         Self::wait(self.submit(row))
+    }
+
+    /// Ask the server to hot-swap `arch`/`mode` to a new weight
+    /// generation (reloaded from the server's weight source; `seed`
+    /// feeds the synthetic fallback).  Blocks for the acknowledgement
+    /// and returns the newly installed epoch.  Requires a multi-model
+    /// (registry) front-end; single-model front-ends answer with a
+    /// typed `BadRequest`.  Names too long for the wire format's `u16`
+    /// length fields are rejected locally (same invariant as
+    /// [`NetClient::connect`]: an oversized name must never corrupt the
+    /// stream and kill the connection's other in-flight requests).
+    pub fn swap(&self, arch: &str, mode: &str, seed: u64) -> Result<u64, NetError> {
+        if arch.len() > u16::MAX as usize || mode.len() > u16::MAX as usize {
+            return Err(NetError::Remote {
+                kind: WireErrorKind::BadRequest,
+                message: "arch/mode names are limited to 65535 bytes by the wire format"
+                    .to_string(),
+            });
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = Frame::Swap(WireSwap {
+            id,
+            arch: arch.to_string(),
+            mode: mode.to_string(),
+            seed,
+        });
+        let rx = self.send_frame(id, &frame);
+        match rx.recv() {
+            Ok(WireResponse { status: WireStatus::Swapped { epoch }, .. }) => Ok(epoch),
+            Ok(WireResponse { status: WireStatus::Error { kind, message }, .. }) => {
+                Err(NetError::Remote { kind, message })
+            }
+            Ok(_) => Err(NetError::Remote {
+                kind: WireErrorKind::BadRequest,
+                message: "unexpected response to a swap request".to_string(),
+            }),
+            Err(_) => Err(NetError::Disconnected),
+        }
     }
 }
 

@@ -10,23 +10,33 @@
 //! substrates:
 //!
 //! * [`wire`] — versioned, length-prefixed binary protocol; strict
-//!   decoding, exhaustive round-trip tests.
+//!   decoding, exhaustive round-trip tests.  Version 2 carries the
+//!   weights epoch on every `Ok` and a hot-swap surface
+//!   (`Swap` → `Swapped{epoch}` / `UnknownModel`).
 //! * [`server`] — `TcpListener` accept loop; per-connection reader and
-//!   writer threads pipeline many in-flight requests per connection into
-//!   the pool.
+//!   writer threads pipeline many in-flight requests per connection.
+//!   [`Frontend::spawn`] serves one `(arch, mode)` pool;
+//!   [`Frontend::spawn_registry`] routes per request across every model
+//!   of a [`ModelRegistry`](crate::coordinator::ModelRegistry) and
+//!   honors hot-swap frames.
 //! * [`admission`] — bounded in-flight gate with a `block` (TCP
 //!   backpressure) or `shed` (structured `Overloaded{retry_after}`)
-//!   policy, so overload never stalls the pool dispatcher.
+//!   policy, so overload never stalls the pool dispatcher.  Cache hits
+//!   bypass the gate entirely.
 //! * [`cache`] — sharded LRU response cache keyed by the full
-//!   `(arch, mode, row)` — bit-identical to uncached execution because
-//!   every backend is deterministic.
+//!   `(arch, mode, epoch, row)` — bit-identical to uncached execution
+//!   because every backend is deterministic per weight generation, and
+//!   swap-safe because the epoch in the key makes pre-swap entries
+//!   unreachable the moment new weights install.
 //! * [`client`] — blocking, pipelining Rust client used by the tests,
-//!   `examples/mnist_serving.rs`, and `benches/net_throughput.rs`.
+//!   `examples/mnist_serving.rs`, and `benches/net_throughput.rs`;
+//!   [`NetClient::swap`] drives wire-level hot swaps (`odin swap`).
 //!
-//! End to end: `odin serve --listen 127.0.0.1:0 --cache 1024 --admission
-//! shed --queue-cap 256` serves the pool over loopback; everything stays
-//! hermetic and offline.  See `docs/ARCHITECTURE.md` for the L4 design
-//! (wire format table, admission state diagram, cache coherence note).
+//! End to end: `odin serve --listen 127.0.0.1:0 --model cnn1:fast
+//! --model cnn2:fast --cache 1024 --admission shed --queue-cap 256`
+//! serves several models over loopback; everything stays hermetic and
+//! offline.  See `docs/ARCHITECTURE.md` for the L4 design (wire format
+//! table, admission state diagram, registry/epoch lifecycle).
 #![deny(missing_docs)]
 
 pub mod admission;
@@ -39,4 +49,6 @@ pub use admission::{AdmissionConfig, AdmissionGate, AdmissionPolicy, Permit};
 pub use cache::{CacheKey, CachedScores, ResponseCache};
 pub use client::{NetClient, NetError, NetResponse};
 pub use server::{Frontend, FrontendConfig};
-pub use wire::{Frame, WireErrorKind, WireRequest, WireResponse, WireStatus, WIRE_VERSION};
+pub use wire::{
+    Frame, WireErrorKind, WireRequest, WireResponse, WireStatus, WireSwap, WIRE_VERSION,
+};

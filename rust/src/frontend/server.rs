@@ -26,12 +26,25 @@
 //! which releases every admission permit its queue was holding — one
 //! bad client can degrade the shared gate only briefly, never wedge it.
 //!
-//! A front-end serves one `(arch, mode)` pair — the coordinates of the
-//! engines behind the pool.  Requests for any other model are answered
-//! with a typed `UnknownModel` error.  Malformed rows are *not* rejected
-//! here: they flow to the pool, whose per-request width validation
-//! answers them with `WrongRowWidth` — one validation path for local and
-//! network callers, regression-tested over the wire.
+//! **Routing.**  A front-end built with [`Frontend::spawn`] serves one
+//! `(arch, mode)` pair; one built with [`Frontend::spawn_registry`]
+//! routes each request by its `(arch, mode)` to the matching pool of a
+//! [`ModelRegistry`] — several models behind one listener, each with
+//! hot-swappable, epoch-versioned weights (swap frames are answered
+//! `Swapped{epoch}`).  Requests for an unserved model are answered with
+//! a typed `UnknownModel` error naming what *is* served.  Malformed
+//! rows are *not* rejected here: they flow to the pool, whose
+//! per-request width validation answers them with `WrongRowWidth` — one
+//! validation path for local and network callers, regression-tested
+//! over the wire.
+//!
+//! **Admission and the cache-hit fast path.**  Cache lookups run
+//! *before* the admission gate and a hit is answered immediately — it
+//! never acquires a permit, so the hot working set keeps serving even
+//! while the gate is saturated, and a burst of hits can never leak gate
+//! slots (pinned by the loopback tests).  Only requests that actually
+//! reach the pool hold a permit, released when their response is
+//! written (or their connection dies).
 
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -42,11 +55,12 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::{Client, MetricsHub, Response, ServeError};
 
 use super::admission::{AdmissionConfig, AdmissionGate, Permit};
 use super::cache::{CacheKey, CachedScores, ResponseCache};
-use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireStatus};
+use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireStatus, WireSwap};
 
 /// Bound on each connection's queued-but-unwritten responses.  Immediate
 /// responses (cache hits, typed errors, `Overloaded`) take no admission
@@ -89,6 +103,46 @@ impl Default for FrontendConfig {
     }
 }
 
+/// Where requests go: one fixed pool, or a multi-model registry routed
+/// by `(arch, mode)`.
+enum Router {
+    /// One `(arch, mode)` pair over one pool client (always epoch 0 —
+    /// single-pool front-ends have no swap surface).
+    Single {
+        client: Client,
+        arch: Arc<str>,
+        mode: Arc<str>,
+    },
+    /// Route per request through a [`ModelRegistry`]; epochs advance
+    /// with hot swaps.
+    Registry(Arc<ModelRegistry>),
+}
+
+impl Router {
+    /// The submission client and current weights epoch for a model, or
+    /// `None` when this front-end does not serve it.
+    fn route(&self, arch: &str, mode: &str) -> Option<(Client, u64)> {
+        match self {
+            Router::Single { client, arch: a, mode: m } => {
+                (arch == &**a && mode == &**m).then(|| (client.clone(), 0))
+            }
+            Router::Registry(r) => r.route(arch, mode),
+        }
+    }
+
+    /// Human-readable list of served models for `UnknownModel` errors.
+    fn served(&self) -> String {
+        match self {
+            Router::Single { arch, mode, .. } => format!("{arch}/{mode}"),
+            Router::Registry(r) => {
+                let names: Vec<String> =
+                    r.models().into_iter().map(|(id, _)| id.to_string()).collect();
+                names.join(", ")
+            }
+        }
+    }
+}
+
 struct Shared {
     stop: AtomicBool,
     /// Read-half handles of live connections, kept weakly so a finished
@@ -98,18 +152,17 @@ struct Shared {
     metrics: MetricsHub,
     gate: AdmissionGate,
     cache: Option<ResponseCache>,
-    client: Client,
-    arch: Arc<str>,
-    mode: Arc<str>,
+    router: Router,
     max_connections: usize,
 }
 
-/// A running TCP front-end over an engine pool.
+/// A running TCP front-end over an engine pool (or several, via a
+/// [`ModelRegistry`]).
 ///
-/// The front-end borrows the pool through a [`Client`] clone — it does
-/// not own the pool.  Shut down in this order: drop local clients, call
-/// [`Frontend::shutdown`] (joins every front-end thread), then shut the
-/// pool down.
+/// The front-end borrows the pool(s) through [`Client`] clones — it
+/// does not own them.  Shut down in this order: drop local clients,
+/// call [`Frontend::shutdown`] (joins every front-end thread), then
+/// shut the pool/registry down.
 pub struct Frontend {
     addr: SocketAddr,
     shared: Arc<Shared>,
@@ -132,11 +185,43 @@ impl Frontend {
     /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral loopback
     /// port) and serve `pool_client`'s engine pool, which must be built
     /// from engines for exactly `arch`/`mode`.
+    ///
+    /// A single-model front-end assumes a **fixed weight generation**:
+    /// it caches under epoch 0 and has no swap surface.  Do not point it
+    /// (with a cache enabled) at a pool whose weights you hot-swap
+    /// through [`EnginePool::spawn_versioned`](crate::coordinator::EnginePool::spawn_versioned)
+    /// — post-swap lookups would still find pre-swap entries.  Pools
+    /// with mutable weights belong behind [`Frontend::spawn_registry`],
+    /// whose epoch-keyed cache makes stale reads impossible.
     pub fn spawn(
         listen: &str,
         pool_client: Client,
         arch: &str,
         mode: &str,
+        cfg: FrontendConfig,
+        metrics: MetricsHub,
+    ) -> Result<Frontend> {
+        let router =
+            Router::Single { client: pool_client, arch: Arc::from(arch), mode: Arc::from(mode) };
+        Self::spawn_router(listen, router, cfg, metrics)
+    }
+
+    /// Bind `listen` and serve every model of `registry`, routing each
+    /// request by its `(arch, mode)`.  Swap frames are honored: the
+    /// registry reloads the model's weights and the response cache's
+    /// epoch keying retires all stale entries automatically.
+    pub fn spawn_registry(
+        listen: &str,
+        registry: Arc<ModelRegistry>,
+        cfg: FrontendConfig,
+        metrics: MetricsHub,
+    ) -> Result<Frontend> {
+        Self::spawn_router(listen, Router::Registry(registry), cfg, metrics)
+    }
+
+    fn spawn_router(
+        listen: &str,
+        router: Router,
         cfg: FrontendConfig,
         metrics: MetricsHub,
     ) -> Result<Frontend> {
@@ -149,9 +234,7 @@ impl Frontend {
             gate: AdmissionGate::new(cfg.admission, metrics.clone()),
             cache: (cfg.cache_capacity > 0)
                 .then(|| ResponseCache::new(cfg.cache_capacity, metrics)),
-            client: pool_client,
-            arch: Arc::from(arch),
-            mode: Arc::from(mode),
+            router,
             max_connections: cfg.max_connections.max(1),
         });
         let accept = {
@@ -167,6 +250,14 @@ impl Frontend {
     /// The address the front-end actually bound (resolves `:0` ports).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Admission permits currently held (admitted requests whose
+    /// response has not been written yet).  Cache hits never hold one;
+    /// after all in-flight work drains this returns to zero — exposed so
+    /// tests and operators can verify the gate never leaks slots.
+    pub fn admission_in_flight(&self) -> usize {
+        self.shared.gate.in_flight()
     }
 
     fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Vec<JoinHandle<()>> {
@@ -246,6 +337,11 @@ impl Frontend {
                         break; // writer gone (socket died)
                     }
                 }
+                Ok(Some(Frame::Swap(swap))) => {
+                    if Self::handle_swap(swap, &wtx, &shared).is_err() {
+                        break;
+                    }
+                }
                 Ok(Some(Frame::Response(resp))) => {
                     let answer = WireResponse {
                         id: resp.id,
@@ -277,28 +373,42 @@ impl Frontend {
         wtx: &SyncSender<WriterMsg>,
         shared: &Shared,
     ) -> std::result::Result<(), ()> {
-        if req.arch.as_str() != &*shared.arch || req.mode.as_str() != &*shared.mode {
-            let answer = WireResponse {
-                id: req.id,
-                status: WireStatus::Error {
-                    kind: WireErrorKind::UnknownModel,
-                    message: format!(
-                        "this front-end serves {}/{}, not {}/{}",
-                        shared.arch, shared.mode, req.arch, req.mode
-                    ),
-                },
-            };
-            return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
-        }
+        let (client, epoch) = match shared.router.route(&req.arch, &req.mode) {
+            Some(route) => route,
+            None => {
+                let answer = WireResponse {
+                    id: req.id,
+                    status: WireStatus::Error {
+                        kind: WireErrorKind::UnknownModel,
+                        message: format!(
+                            "this front-end serves [{}], not {}/{}",
+                            shared.router.served(),
+                            req.arch,
+                            req.mode
+                        ),
+                    },
+                };
+                return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
+            }
+        };
         // Cache lookup comes before admission: a hit costs no pool work,
-        // so the hot working set keeps serving even under overload.
+        // so the hot working set keeps serving even under overload — and
+        // it must NOT acquire an admission permit (a saturated gate
+        // still serves hits; a burst of hits cannot leak slots).  The
+        // key carries the model's *current* epoch, so entries from
+        // before a hot swap can never be served after it.
         let (key, row) = match shared.cache.as_ref() {
             Some(cache) => {
-                let k = CacheKey::new(
-                    Arc::clone(&shared.arch),
-                    Arc::clone(&shared.mode),
-                    req.row,
-                );
+                // Single-model front-ends reuse their interned name Arcs
+                // (zero allocation, as before multi-model routing); the
+                // registry path interns per request.
+                let (arch, mode) = match &shared.router {
+                    Router::Single { arch, mode, .. } => (Arc::clone(arch), Arc::clone(mode)),
+                    Router::Registry(_) => {
+                        (Arc::from(req.arch.as_str()), Arc::from(req.mode.as_str()))
+                    }
+                };
+                let k = CacheKey::new(arch, mode, epoch, req.row);
                 if let Some(hit) = cache.get(&k) {
                     let answer = WireResponse {
                         id: req.id,
@@ -306,6 +416,7 @@ impl Frontend {
                             shard: hit.shard,
                             argmax: hit.argmax,
                             cached: true,
+                            epoch: hit.epoch,
                             logits: hit.logits,
                         },
                     };
@@ -326,8 +437,48 @@ impl Frontend {
                 return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
             }
         };
-        let rx = shared.client.submit(row);
+        let rx = client.submit(row);
         wtx.send(WriterMsg::Pending { id: req.id, rx, permit, key }).map_err(|_| ())
+    }
+
+    /// Handle one hot-swap frame.  Swaps are admin operations: they take
+    /// no admission permit and are answered immediately (`Swapped` with
+    /// the new epoch, or a typed error).  `Err` means the writer is
+    /// gone.
+    fn handle_swap(
+        swap: WireSwap,
+        wtx: &SyncSender<WriterMsg>,
+        shared: &Shared,
+    ) -> std::result::Result<(), ()> {
+        let status = match &shared.router {
+            Router::Single { .. } => WireStatus::Error {
+                kind: WireErrorKind::BadRequest,
+                message: "hot swap needs a multi-model front-end (serve with --model)"
+                    .to_string(),
+            },
+            Router::Registry(registry) => {
+                if registry.route(&swap.arch, &swap.mode).is_none() {
+                    WireStatus::Error {
+                        kind: WireErrorKind::UnknownModel,
+                        message: format!(
+                            "this front-end serves [{}], not {}/{}",
+                            shared.router.served(),
+                            swap.arch,
+                            swap.mode
+                        ),
+                    }
+                } else {
+                    match registry.swap_seed(&swap.arch, &swap.mode, swap.seed) {
+                        Ok(epoch) => WireStatus::Swapped { epoch },
+                        Err(e) => WireStatus::Error {
+                            kind: WireErrorKind::Backend,
+                            message: format!("swap failed: {e:#}"),
+                        },
+                    }
+                }
+            }
+        };
+        wtx.send(WriterMsg::Immediate(WireResponse { id: swap.id, status })).map_err(|_| ())
     }
 
     /// Writer loop: resolve each queued outcome in order and write it.
@@ -342,14 +493,21 @@ impl Frontend {
                                 logits: resp.prediction.logits,
                                 argmax: resp.prediction.argmax,
                                 shard: resp.shard as u32,
+                                epoch: resp.epoch,
                             };
                             if let (Some(cache), Some(k)) = (shared.cache.as_ref(), key) {
-                                cache.put(k, scores);
+                                // Insert under the epoch the response
+                                // *executed* on — a swap may have landed
+                                // after admission, and an entry must
+                                // never sit under an epoch whose engine
+                                // did not produce its bytes.
+                                cache.put(k.with_epoch(resp.epoch), scores);
                             }
                             WireStatus::Ok {
                                 shard: scores.shard,
                                 argmax: scores.argmax,
                                 cached: false,
+                                epoch: scores.epoch,
                                 logits: scores.logits,
                             }
                         }

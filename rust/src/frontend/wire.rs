@@ -9,11 +9,20 @@
 //! ```text
 //! request  body: [ver u8][kind=1][id u64][arch u16+bytes][mode u16+bytes]
 //!                [row u32+bytes]
+//! swap     body: [ver u8][kind=3][id u64][arch u16+bytes][mode u16+bytes]
+//!                [seed u64]
 //! response body: [ver u8][kind=2][id u64][status u8] ...
-//!   status 0 Ok:         [shard u32][argmax u8][cached u8][10 x f32]
+//!   status 0 Ok:         [shard u32][argmax u8][cached u8][epoch u64]
+//!                        [10 x f32]
 //!   status 1 Error:      [kind u8][message u32+bytes]
 //!   status 2 Overloaded: [retry_after_ms u32]
+//!   status 3 Swapped:    [epoch u64]
 //! ```
+//!
+//! Version 2 added the weights *epoch* to `Ok` (which generation of the
+//! model produced the scores) and the swap surface (`kind 3` requests a
+//! hot weight swap; `Swapped` acknowledges it with the new epoch) — the
+//! `Ok` layout changed, hence the version bump.
 //!
 //! Decoding is strict: unknown versions, kinds, status/error codes,
 //! truncated bodies, trailing bytes, and frame lengths outside
@@ -25,7 +34,7 @@
 use std::io::{self, Read, Write};
 
 /// Protocol version byte carried by every frame.
-pub const WIRE_VERSION: u8 = 1;
+pub const WIRE_VERSION: u8 = 2;
 
 /// Upper bound on a frame body, guarding malformed/hostile length
 /// prefixes (a 784-byte MNIST row frame is ~850 bytes).
@@ -33,6 +42,7 @@ pub const MAX_FRAME: usize = 1 << 20;
 
 const KIND_REQUEST: u8 = 1;
 const KIND_RESPONSE: u8 = 2;
+const KIND_SWAP: u8 = 3;
 
 /// Typed error kinds a response can carry — the wire mirror of
 /// [`crate::coordinator::ServeError`] plus protocol-level rejections.
@@ -87,7 +97,24 @@ pub struct WireRequest {
     pub row: Vec<u8>,
 }
 
-/// Response payload: scores, a typed error, or an overload rejection.
+/// One hot-swap request: install a new weight generation for a served
+/// model.  The server reloads from the model's weight source (real
+/// artifacts when present, deterministic synthetic weights from `seed`
+/// otherwise) and answers [`WireStatus::Swapped`] with the new epoch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireSwap {
+    /// Client-chosen id echoed back in the response.
+    pub id: u64,
+    /// Topology name of the model to swap.
+    pub arch: String,
+    /// Arithmetic mode of the model to swap.
+    pub mode: String,
+    /// Seed for the synthetic-weights fallback of the reload.
+    pub seed: u64,
+}
+
+/// Response payload: scores, a typed error, an overload rejection, or a
+/// swap acknowledgement.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireStatus {
     /// Successful inference.
@@ -99,6 +126,9 @@ pub enum WireStatus {
         argmax: u8,
         /// True when served from the response cache without pool work.
         cached: bool,
+        /// Weights epoch that produced these scores (cache hits replay
+        /// the epoch that originally executed the row).
+        epoch: u64,
         /// Raw per-class logits, bit-identical to in-process execution.
         logits: [f32; 10],
     },
@@ -113,6 +143,12 @@ pub enum WireStatus {
     Overloaded {
         /// Suggested client backoff before retrying (milliseconds).
         retry_after_ms: u32,
+    },
+    /// A hot weight swap was installed; later responses for the model
+    /// report this (or a newer) epoch.
+    Swapped {
+        /// The newly installed weights epoch.
+        epoch: u64,
     },
 }
 
@@ -132,6 +168,9 @@ pub enum Frame {
     Request(WireRequest),
     /// Server-to-client response.
     Response(WireResponse),
+    /// Client-to-server hot-swap request (answered with
+    /// [`WireStatus::Swapped`] or a typed error).
+    Swap(WireSwap),
 }
 
 fn bad(msg: String) -> io::Error {
@@ -227,11 +266,12 @@ impl Frame {
                 body.push(KIND_RESPONSE);
                 put_u64(&mut body, r.id);
                 match &r.status {
-                    WireStatus::Ok { shard, argmax, cached, logits } => {
+                    WireStatus::Ok { shard, argmax, cached, epoch, logits } => {
                         body.push(0);
                         put_u32(&mut body, *shard);
                         body.push(*argmax);
                         body.push(u8::from(*cached));
+                        put_u64(&mut body, *epoch);
                         for l in logits {
                             body.extend_from_slice(&l.to_le_bytes());
                         }
@@ -246,7 +286,20 @@ impl Frame {
                         body.push(2);
                         put_u32(&mut body, *retry_after_ms);
                     }
+                    WireStatus::Swapped { epoch } => {
+                        body.push(3);
+                        put_u64(&mut body, *epoch);
+                    }
                 }
+            }
+            Frame::Swap(s) => {
+                body.push(KIND_SWAP);
+                put_u64(&mut body, s.id);
+                put_u16(&mut body, s.arch.len() as u16);
+                body.extend_from_slice(s.arch.as_bytes());
+                put_u16(&mut body, s.mode.len() as u16);
+                body.extend_from_slice(s.mode.as_bytes());
+                put_u64(&mut body, s.seed);
             }
         }
         // Oversized bodies are rejected by `write_frame` (and by the
@@ -283,11 +336,12 @@ impl Frame {
                         let shard = c.u32()?;
                         let argmax = c.u8()?;
                         let cached = c.u8()? != 0;
+                        let epoch = c.u64()?;
                         let mut logits = [0f32; 10];
                         for l in logits.iter_mut() {
                             *l = c.f32()?;
                         }
-                        WireStatus::Ok { shard, argmax, cached, logits }
+                        WireStatus::Ok { shard, argmax, cached, epoch, logits }
                     }
                     1 => {
                         let code = c.u8()?;
@@ -298,9 +352,19 @@ impl Frame {
                         WireStatus::Error { kind, message }
                     }
                     2 => WireStatus::Overloaded { retry_after_ms: c.u32()? },
+                    3 => WireStatus::Swapped { epoch: c.u64()? },
                     s => return Err(bad(format!("unknown response status {s}"))),
                 };
                 Frame::Response(WireResponse { id, status })
+            }
+            KIND_SWAP => {
+                let id = c.u64()?;
+                let arch_len = c.u16()? as usize;
+                let arch = c.string(arch_len)?;
+                let mode_len = c.u16()? as usize;
+                let mode = c.string(mode_len)?;
+                let seed = c.u64()?;
+                Frame::Swap(WireSwap { id, arch, mode, seed })
             }
             k => return Err(bad(format!("unknown frame kind {k}"))),
         };
@@ -402,11 +466,17 @@ mod tests {
         ];
         round_trip(Frame::Response(WireResponse {
             id: 7,
-            status: WireStatus::Ok { shard: 3, argmax: 9, cached: true, logits },
+            status: WireStatus::Ok { shard: 3, argmax: 9, cached: true, epoch: 0, logits },
         }));
         round_trip(Frame::Response(WireResponse {
             id: 8,
-            status: WireStatus::Ok { shard: u32::MAX, argmax: 0, cached: false, logits },
+            status: WireStatus::Ok {
+                shard: u32::MAX,
+                argmax: 0,
+                cached: false,
+                epoch: u64::MAX,
+                logits,
+            },
         }));
         for kind in [
             WireErrorKind::BadRequest,
@@ -424,6 +494,38 @@ mod tests {
             id: 10,
             status: WireStatus::Overloaded { retry_after_ms: 25 },
         }));
+        round_trip(Frame::Response(WireResponse {
+            id: 11,
+            status: WireStatus::Swapped { epoch: 3 },
+        }));
+    }
+
+    #[test]
+    fn swap_frames_round_trip() {
+        round_trip(Frame::Swap(WireSwap {
+            id: 0,
+            arch: String::new(),
+            mode: String::new(),
+            seed: 0,
+        }));
+        round_trip(Frame::Swap(WireSwap {
+            id: u64::MAX,
+            arch: "cnn1".to_string(),
+            mode: "fast".to_string(),
+            seed: 0xDEAD_BEEF,
+        }));
+        // Truncation strictness holds for the swap layout too.
+        let full = Frame::Swap(WireSwap {
+            id: 3,
+            arch: "cnn2".to_string(),
+            mode: "sc".to_string(),
+            seed: 42,
+        })
+        .encode();
+        let body = &full[4..];
+        for cut in 0..body.len() {
+            assert!(Frame::decode_body(&body[..cut]).is_err(), "prefix {cut} decoded");
+        }
     }
 
     #[test]

@@ -22,21 +22,28 @@
 //!     (`python/compile/model.py`) AOT-lowered to HLO text once by
 //!     `make artifacts` and executed via the `xla` crate.
 //! * **L3** — this crate's serving layer: the engine, dynamic batcher,
-//!   and the sharded [`coordinator::EnginePool`] (N engine workers fed by
+//!   the sharded [`coordinator::EnginePool`] (N engine workers fed by
 //!   a splitting/least-loaded dispatcher — the host-side mirror of ODIN's
-//!   bank-level parallelism; all generic over the backend) plus the
-//!   paper's evaluation substrate — a transaction-level PCRAM simulator
-//!   ([`pcram`]), the five PIMC commands with a functional controller
-//!   ([`pim`]), the ANN-to-command mapper ([`mapper`]), and the CPU/ISAAC
-//!   baselines ([`baselines`]).  Python never runs on the request path —
-//!   and with the default backend it never runs at all.
+//!   bank-level parallelism; all generic over the backend), and the
+//!   multi-model [`coordinator::ModelRegistry`] (one pool per
+//!   `(arch, mode)` with hot-swappable, epoch-versioned weights — the
+//!   software mirror of reprogramming one PCRAM substrate across
+//!   topologies), plus the paper's evaluation substrate — a
+//!   transaction-level PCRAM simulator ([`pcram`]), the five PIMC
+//!   commands with a functional controller ([`pim`]), the
+//!   ANN-to-command mapper ([`mapper`]), and the CPU/ISAAC baselines
+//!   ([`baselines`]).  Python never runs on the request path — and with
+//!   the default backend it never runs at all.
 //! * **L4** — the network front-end ([`frontend`]): a std-only TCP
-//!   serving layer over the pool — versioned binary wire protocol,
+//!   serving layer over the pool(s) — versioned binary wire protocol
+//!   (with a hot-swap surface), per-request routing by `(arch, mode)`,
 //!   pipelined per-connection serving, admission control
 //!   (block/shed + `Overloaded` backpressure), a sharded LRU response
-//!   cache (bit-identical to uncached execution), and a blocking Rust
-//!   client.  `odin serve --listen ADDR` exposes it; in-process serving
-//!   stays the default, so the whole suite remains hermetic.
+//!   cache keyed by the weights epoch (bit-identical to uncached
+//!   execution, swap-safe by construction), and a blocking Rust client.
+//!   `odin serve --listen ADDR [--model ARCH:MODE]...` exposes it;
+//!   in-process serving stays the default, so the whole suite remains
+//!   hermetic.
 //!
 //! `cargo build --release && cargo test -q` is fully offline and
 //! artifact-free; [`harness`] regenerates every table and figure of the

@@ -11,13 +11,20 @@
 //!                                accuracy of a model on the test set
 //! odin serve [--arch cnn1] [--requests N] [--concurrency K] [--backend ..]
 //!            [--shards N|auto] [--batch B] [--linger-us U]
+//!            [--model ARCH:MODE[:WEIGHTS]]...  (repeatable: multi-model)
+//!            [--swap-mid ARCH:MODE]  (hot-swap that model mid-demo)
 //!            [--listen ADDR] [--cache N]
 //!            [--admission block|shed] [--queue-cap Q]
 //!            [--metrics-json PATH]
 //!                                sharded dynamic-batching serving demo +
 //!                                per-shard metrics; --listen exposes the
 //!                                pool over TCP (the L4 front-end) and
-//!                                drives it with network clients
+//!                                drives it with network clients; --model
+//!                                (repeatable) serves several models from
+//!                                one registry with hot-swappable weights
+//! odin swap  --addr HOST:PORT --model ARCH:MODE [--seed N]
+//!                                hot-swap a running front-end's model to
+//!                                a new weight generation (epoch++)
 //! odin ablation                  binary vs mux accumulation cost/error
 //! odin selftest                  hermetic cross-checks (+ golden/PJRT
 //!                                when artifacts / the pjrt feature exist)
@@ -30,13 +37,15 @@
 //! `make artifacts`.  (clap is unavailable offline; flags are parsed by
 //! hand.)
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use odin::ann::topology;
 use odin::coordinator::{
-    BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
+    BatchPolicy, Engine, EnginePool, MetricsHub, ModelId, ModelRegistry, ModelSpec, ModelWeights,
+    SYNTHETIC_SEED,
 };
 use odin::dataset::TestSet;
 use odin::frontend::{AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient};
@@ -51,6 +60,15 @@ fn flag(args: &[String], name: &str, default: &str) -> String {
 
 fn opt_flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+/// Every value of a repeatable flag (`--model a --model b` -> [a, b]).
+fn multi_flag(args: &[String], name: &str) -> Vec<String> {
+    args.iter()
+        .enumerate()
+        .filter(|(_, a)| *a == name)
+        .filter_map(|(i, _)| args.get(i + 1).cloned())
+        .collect()
 }
 
 fn main() -> Result<()> {
@@ -106,13 +124,35 @@ fn main() -> Result<()> {
                 concurrency,
                 shards,
                 policy,
+                models: multi_flag(&args, "--model"),
+                swap_mid: opt_flag(&args, "--swap-mid"),
                 listen: opt_flag(&args, "--listen"),
                 cache: flag(&args, "--cache", "0").parse()?,
                 admission,
                 queue_cap: flag(&args, "--queue-cap", "256").parse()?,
                 metrics_json: opt_flag(&args, "--metrics-json"),
             };
-            cmd_serve(&artifacts, &backend, &opts)?;
+            if opts.models.is_empty() {
+                ensure!(
+                    opts.swap_mid.is_none(),
+                    "--swap-mid needs multi-model serving (pass --model at least once)"
+                );
+                cmd_serve(&artifacts, &backend, &opts)?;
+            } else {
+                cmd_serve_registry(&artifacts, &backend, &opts)?;
+            }
+        }
+        "swap" => {
+            let addr = opt_flag(&args, "--addr")
+                .ok_or_else(|| anyhow::anyhow!("swap needs --addr HOST:PORT"))?;
+            let model = opt_flag(&args, "--model")
+                .ok_or_else(|| anyhow::anyhow!("swap needs --model ARCH:MODE"))?;
+            let id = ModelId::parse(&model)?;
+            let seed: u64 = flag(&args, "--seed", "1").parse()?;
+            let client = NetClient::connect(addr.as_str(), &id.arch, &id.mode)
+                .with_context(|| format!("connecting to {addr}"))?;
+            let epoch = client.swap(&id.arch, &id.mode, seed).map_err(anyhow::Error::new)?;
+            println!("swapped {id} to epoch {epoch} (weights seed {seed})");
         }
         "ablation" => {
             cmd_ablation();
@@ -129,15 +169,23 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "odin — PCRAM PIM accelerator reproduction
-commands: table1 table2 table3 fig6 headline eval serve ablation selftest
+commands: table1 table2 table3 fig6 headline eval serve swap ablation selftest
 common flags: --artifacts DIR --backend sim|pjrt
 eval:  --arch cnn1|cnn2 --mode fast|sc|mux|float --limit N
 serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
-       --listen ADDR (e.g. 127.0.0.1:0 — serve the pool over TCP and
-                      drive it with network clients; default: in-process)
-       --cache N (response-cache entries, 0 = off)
+       --model ARCH:MODE[:WEIGHTS] (repeatable — serve several models from
+                      one registry; WEIGHTS is a synthetic seed or an
+                      artifacts dir; weights are hot-swappable per model)
+       --swap-mid ARCH:MODE (demo: hot-swap that model between two phases
+                      and verify the epoch-keyed cache resets)
+       --listen ADDR (e.g. 127.0.0.1:0 — serve over TCP and drive it with
+                      network clients; default: in-process)
+       --cache N (response-cache entries, 0 = off; keyed by weights epoch)
        --admission block|shed --queue-cap Q (overload policy + in-flight cap)
-       --metrics-json PATH (dump the MetricsReport snapshot as JSON)
+       --metrics-json PATH (dump the MetricsReport snapshot as JSON,
+                      incl. per-model/per-epoch counters)
+swap:  --addr HOST:PORT --model ARCH:MODE [--seed N] — hot-swap a running
+       multi-model front-end's weights; prints the new epoch
 (`sim` is hermetic: synthetic weights/data unless artifacts exist;
  `pjrt` needs a build with --features pjrt and `make artifacts`)";
 
@@ -232,6 +280,12 @@ struct ServeOpts {
     concurrency: usize,
     shards: usize,
     policy: BatchPolicy,
+    /// Repeatable `--model ARCH:MODE[:WEIGHTS]` specs; non-empty routes
+    /// the demo through a multi-model `ModelRegistry`.
+    models: Vec<String>,
+    /// Demo: hot-swap this model between two load phases and verify the
+    /// epoch-keyed cache resets (`ARCH:MODE`).
+    swap_mid: Option<String>,
     /// `Some(addr)` exposes the pool over TCP and drives it with
     /// network clients; `None` keeps the original in-process demo.
     listen: Option<String>,
@@ -378,6 +432,197 @@ fn cmd_serve(artifacts: &str, backend: &str, opts: &ServeOpts) -> Result<()> {
     println!("completed {ok}/{requests} requests");
     let report = metrics.report();
     report.print(arch);
+    if let Some(path) = &opts.metrics_json {
+        std::fs::write(path, report.to_json())
+            .with_context(|| format!("writing metrics json to {path}"))?;
+        println!("metrics json written to {path}");
+    }
+    Ok(())
+}
+
+/// Parse one `--model ARCH:MODE[:WEIGHTS]` spec.  `WEIGHTS` is either a
+/// synthetic-weights seed (all digits) or an artifacts directory to
+/// load from; omitted means the default artifacts dir with the default
+/// seed fallback.
+fn parse_model_spec(artifacts: &str, s: &str) -> Result<ModelSpec> {
+    let parts: Vec<&str> = s.split(':').collect();
+    ensure!(
+        (parts.len() == 2 || parts.len() == 3) && !parts[0].is_empty() && !parts[1].is_empty(),
+        "--model wants ARCH:MODE[:WEIGHTS], got {s:?}"
+    );
+    let mut spec =
+        ModelSpec::synthetic(parts[0], parts[1], SYNTHETIC_SEED).with_artifacts(artifacts);
+    if let Some(w) = parts.get(2) {
+        match w.parse::<u64>() {
+            Ok(seed) => spec.seed = seed,
+            Err(_) => spec = spec.with_artifacts(*w),
+        }
+    }
+    Ok(spec)
+}
+
+/// Multi-model serving demo: spawn a `ModelRegistry` (one pool per
+/// `--model`), drive every model concurrently — in-process or through
+/// the L4 front-end with `--listen` — optionally hot-swap one model
+/// between two load phases (`--swap-mid`), then dump the per-model /
+/// per-epoch metrics.
+fn cmd_serve_registry(artifacts: &str, backend: &str, opts: &ServeOpts) -> Result<()> {
+    ensure!(
+        backend == "sim",
+        "multi-model serving (--model) runs on the hermetic sim backend; \
+         pjrt serving stays single-model"
+    );
+    let metrics = MetricsHub::new();
+    let mut specs = Vec::new();
+    for m in &opts.models {
+        specs.push(parse_model_spec(artifacts, m)?.with_shards(opts.shards));
+    }
+    let ids: Vec<ModelId> = specs.iter().map(|s| s.id.clone()).collect();
+    let swap_mid = opts.swap_mid.as_deref().map(ModelId::parse).transpose()?;
+    if let Some(id) = &swap_mid {
+        ensure!(ids.contains(id), "--swap-mid {id} is not among the served --model specs");
+    }
+    let registry = Arc::new(ModelRegistry::spawn(specs, opts.policy, metrics.clone())?);
+    let names: Vec<String> = ids.iter().map(|id| id.to_string()).collect();
+    println!(
+        "serving {} model(s) [sim] from one registry: {} ({} shard(s) total, batching max {} / {:?})",
+        ids.len(),
+        names.join(", "),
+        registry.total_shards(),
+        opts.policy.max_batch,
+        opts.policy.linger,
+    );
+
+    let test = load_test_set(artifacts)?;
+    let requests = opts.requests;
+    // At least one client per model so every model actually serves (and
+    // a --swap-mid target always has traffic to reset).
+    let concurrency = opts.concurrency.clamp(1, requests.max(1)).max(ids.len());
+    let base = requests / concurrency;
+    let extra = requests % concurrency;
+    let images_for = |t: usize| -> Vec<Vec<u8>> {
+        let take = base + usize::from(t < extra);
+        test.samples
+            .iter()
+            .cycle()
+            .skip(t * base + t.min(extra))
+            .take(take)
+            .map(|s| s.image.clone())
+            .collect()
+    };
+
+    let frontend = match &opts.listen {
+        Some(listen) => {
+            let cfg = FrontendConfig {
+                admission: AdmissionConfig {
+                    policy: opts.admission,
+                    queue_cap: opts.queue_cap,
+                    ..AdmissionConfig::default()
+                },
+                cache_capacity: opts.cache,
+                ..FrontendConfig::default()
+            };
+            let f = Frontend::spawn_registry(listen, Arc::clone(&registry), cfg, metrics.clone())?;
+            println!(
+                "L4 front-end listening on {} (cache {}, admission {:?}, queue cap {})",
+                f.local_addr(),
+                opts.cache,
+                opts.admission,
+                opts.queue_cap
+            );
+            Some(f)
+        }
+        None => None,
+    };
+    let addr = frontend.as_ref().map(|f| f.local_addr());
+
+    let total_ok = {
+        // One load phase: every client thread hammers its model (clients
+        // are assigned round-robin across the registry's models).
+        let run_phase = |label: &str| -> Result<usize> {
+            let mut handles = Vec::new();
+            for t in 0..concurrency {
+                let id = ids[t % ids.len()].clone();
+                let images = images_for(t);
+                match addr {
+                    Some(a) => handles.push(std::thread::spawn(move || -> Result<usize> {
+                        let net = NetClient::connect(a, &id.arch, &id.mode)?;
+                        let mut ok = 0usize;
+                        for img in images {
+                            if net.infer(img).is_ok() {
+                                ok += 1;
+                            }
+                        }
+                        Ok(ok)
+                    })),
+                    None => {
+                        let (client, _epoch) = registry
+                            .route(&id.arch, &id.mode)
+                            .expect("every assigned id is registered");
+                        handles.push(std::thread::spawn(move || -> Result<usize> {
+                            let mut ok = 0usize;
+                            for img in images {
+                                if client.infer(img).is_ok() {
+                                    ok += 1;
+                                }
+                            }
+                            Ok(ok)
+                        }));
+                    }
+                }
+            }
+            let mut ok = 0usize;
+            for h in handles {
+                ok += h.join().unwrap()?;
+            }
+            println!("  phase {label}: {ok} requests ok");
+            Ok(ok)
+        };
+
+        let mut total = run_phase("1")?;
+        if let Some(swap_id) = &swap_mid {
+            let pre = metrics.report();
+            let seed = SYNTHETIC_SEED + 1;
+            let epoch = match addr {
+                // Through the wire when listening (what `odin swap`
+                // does), directly on the registry otherwise.
+                Some(a) => {
+                    let net = NetClient::connect(a, &swap_id.arch, &swap_id.mode)?;
+                    net.swap(&swap_id.arch, &swap_id.mode, seed).map_err(anyhow::Error::new)?
+                }
+                None => registry.swap_seed(&swap_id.arch, &swap_id.mode, seed)?,
+            };
+            println!("hot-swapped {swap_id} to epoch {epoch} (weights seed {seed})");
+            total += run_phase("2 (post-swap, same rows)")?;
+            // The response cache lives in the L4 front-end, so the
+            // reset is only observable when listening with a cache on.
+            if opts.cache > 0 && addr.is_some() {
+                let post = metrics.report();
+                let grew = post.frontend.cache_misses.saturating_sub(pre.frontend.cache_misses);
+                ensure!(
+                    grew > 0,
+                    "post-swap replays of cached rows must miss: the epoch is part of the key"
+                );
+                println!(
+                    "post-swap cache reset OK: misses {} -> {} (+{grew}) — pre-swap entries \
+                     are unreachable under epoch {epoch}",
+                    pre.frontend.cache_misses, post.frontend.cache_misses
+                );
+            }
+        }
+        total
+    };
+
+    if let Some(f) = frontend {
+        f.shutdown();
+    }
+    match Arc::try_unwrap(registry) {
+        Ok(r) => r.shutdown(),
+        Err(strays) => drop(strays),
+    }
+    println!("completed {total_ok} requests");
+    let report = metrics.report();
+    report.print("registry");
     if let Some(path) = &opts.metrics_json {
         std::fs::write(path, report.to_json())
             .with_context(|| format!("writing metrics json to {path}"))?;

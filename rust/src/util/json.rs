@@ -3,6 +3,15 @@
 //! Python and with serving-metrics consumers (objects, arrays, strings
 //! with escapes, numbers, bools, null); parse errors carry byte offsets,
 //! and `Display` emits text that round-trips through [`parse`].
+//!
+//! Strings are handled for *arbitrary* content — registry model names
+//! are user-supplied via the CLI, so control characters and non-ASCII
+//! must survive: the emitter escapes every control character and writes
+//! non-ASCII as raw UTF-8 (valid JSON), and the parser decodes `\uXXXX`
+//! escapes including **surrogate pairs** — Python's `json.dumps`
+//! default (`ensure_ascii=True`) ships every non-BMP character as a
+//! pair, which used to decode as two U+FFFD here.  Lone surrogates are
+//! now rejected instead of silently corrupted.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -275,15 +284,37 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("truncated \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
-                            self.i += 4;
+                            let cp = self.hex4()?;
+                            let c = match cp {
+                                // High surrogate: must be followed by a
+                                // low one (how Python's json.dumps ships
+                                // non-BMP text by default); combine.
+                                0xD800..=0xDBFF => {
+                                    if self.b.get(self.i + 1) == Some(&b'\\')
+                                        && self.b.get(self.i + 2) == Some(&b'u')
+                                    {
+                                        self.i += 2; // step to the second 'u'
+                                        let lo = self.hex4()?;
+                                        if !(0xDC00..=0xDFFF).contains(&lo) {
+                                            return Err(self.err(
+                                                "high surrogate not followed by a low surrogate",
+                                            ));
+                                        }
+                                        let combined =
+                                            0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                        // Always a valid scalar: the pair
+                                        // range tops out at U+10FFFF.
+                                        char::from_u32(combined).unwrap_or('\u{FFFD}')
+                                    } else {
+                                        return Err(self.err("unpaired high surrogate"));
+                                    }
+                                }
+                                0xDC00..=0xDFFF => {
+                                    return Err(self.err("unpaired low surrogate"))
+                                }
+                                cp => char::from_u32(cp).unwrap_or('\u{FFFD}'),
+                            };
+                            s.push(c);
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -301,6 +332,23 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Read the 4 hex digits of a `\u` escape.  `self.i` must point at
+    /// the `u`; on return it points at the last hex digit (the string
+    /// loop's shared advance then steps past it).
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.i + 4 >= self.b.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let raw = &self.b[self.i + 1..self.i + 5];
+        if !raw.iter().all(|b| b.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(raw).map_err(|_| self.err("bad \\u escape"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.i += 4;
+        Ok(cp)
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
@@ -347,6 +395,58 @@ mod tests {
     fn escapes() {
         let j = parse(r#""a\n\t\"\\A""#).unwrap();
         assert_eq!(j.as_str(), Some("a\n\t\"\\A"));
+    }
+
+    #[test]
+    fn every_control_character_round_trips() {
+        // Registry model names are user-supplied via the CLI, so every
+        // control character must survive emit -> parse unchanged.
+        let s: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let j = Json::Str(s.clone());
+        let text = j.to_string();
+        assert!(
+            text.bytes().skip(1).take(text.len() - 2).all(|b| b >= 0x20),
+            "control characters must be escaped on the wire: {text:?}"
+        );
+        assert_eq!(parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn non_ascii_and_astral_round_trip() {
+        for name in ["modèle", "モデル一号", "ƒ(x)", "😀🦀", "a\u{10FFFF}b"] {
+            let j = Json::Str(name.to_string());
+            assert_eq!(parse(&j.to_string()).unwrap(), j, "round-trip of {name:?}");
+        }
+        // Non-ASCII inside object keys (model names key the metrics).
+        let mut obj = BTreeMap::new();
+        obj.insert("モデル/fast".to_string(), Json::Num(1.0));
+        let j = Json::Obj(obj);
+        assert_eq!(parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_like_python_emits_them() {
+        // Python's json.dumps default (ensure_ascii=True) emits non-BMP
+        // characters as \u surrogate pairs; they used to decode as two
+        // U+FFFD replacement characters.
+        assert_eq!(parse("\"\\ud83d\\ude00\"").unwrap(), Json::Str("\u{1F600}".to_string()));
+        assert_eq!(
+            parse("\"\\ud83e\\udd80 crab\"").unwrap(),
+            Json::Str("\u{1F980} crab".to_string())
+        );
+        // BMP escapes still decode directly.
+        assert_eq!(parse("\"\\u00e8\\u0041\"").unwrap(), Json::Str("\u{e8}A".to_string()));
+    }
+
+    #[test]
+    fn lone_surrogates_are_rejected_not_corrupted() {
+        assert!(parse(r#""\ud83d""#).is_err(), "unpaired high surrogate");
+        assert!(parse(r#""\ud83dx""#).is_err(), "high surrogate followed by text");
+        assert!(parse(r#""\ude00""#).is_err(), "unpaired low surrogate");
+        assert!(parse(r#""\ud83dA""#).is_err(), "high surrogate + non-low escape");
+        assert!(parse(r#""\u12g4""#).is_err(), "non-hex digits");
+        assert!(parse(r#""\u+123""#).is_err(), "sign is not a hex digit");
+        assert!(parse(r#""\ud83""#).is_err(), "truncated escape");
     }
 
     #[test]

@@ -7,12 +7,19 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use odin::coordinator::{BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelWeights};
+use odin::coordinator::{
+    BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelRegistry, ModelSpec, ModelWeights,
+};
 use odin::dataset::TestSet;
 use odin::frontend::{
     AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError,
     WireErrorKind,
 };
+
+/// An artifacts dir that never exists, pinning every registry test to
+/// the deterministic synthetic weight generator (so reference engines
+/// can be rebuilt from the same seeds).
+const NO_ARTIFACTS: &str = "/nonexistent-odin-test-artifacts";
 
 /// Pool + front-end over an ephemeral loopback port, serving
 /// cnn1/float on single-threaded sim engines.
@@ -300,6 +307,233 @@ fn unknown_model_is_rejected_with_typed_error() {
     drop(wrong_mode);
     teardown(pool, client, frontend);
     assert_eq!(metrics.report().requests, 0, "rejections never reach the pool");
+}
+
+/// Registry front-end + loopback clients for multi-model tests; every
+/// model is `float` on single-threaded sim engines with synthetic
+/// weights seeded per arch.
+fn spawn_registry_stack(
+    specs: Vec<ModelSpec>,
+    cfg: FrontendConfig,
+) -> (Arc<ModelRegistry>, Frontend, MetricsHub) {
+    let metrics = MetricsHub::new();
+    let policy = BatchPolicy { max_batch: 32, linger: Duration::from_micros(200) };
+    let registry = Arc::new(ModelRegistry::spawn(specs, policy, metrics.clone()).unwrap());
+    let frontend =
+        Frontend::spawn_registry("127.0.0.1:0", Arc::clone(&registry), cfg, metrics.clone())
+            .unwrap();
+    (registry, frontend, metrics)
+}
+
+fn teardown_registry(registry: Arc<ModelRegistry>, frontend: Frontend) {
+    frontend.shutdown();
+    match Arc::try_unwrap(registry) {
+        Ok(r) => r.shutdown(),
+        Err(strays) => drop(strays),
+    }
+}
+
+/// The tentpole acceptance path: one front-end serving two models, each
+/// request routed by its `(arch, mode)` to the right pool, every
+/// response bit-identical to a direct run of that model's engine; an
+/// unserved model gets a typed `UnknownModel` naming what is served.
+#[test]
+fn registry_frontend_routes_two_models_bit_identically() {
+    const PER_MODEL: usize = 16;
+
+    let specs = vec![
+        ModelSpec::synthetic("cnn1", "float", 41).with_artifacts(NO_ARTIFACTS),
+        ModelSpec::synthetic("cnn2", "float", 42).with_artifacts(NO_ARTIFACTS),
+    ];
+    let (registry, frontend, metrics) = spawn_registry_stack(specs, FrontendConfig::default());
+    let addr = frontend.local_addr();
+    let test = Arc::new(TestSet::synthetic(PER_MODEL, 7));
+
+    let mut handles = Vec::new();
+    for (arch, seed) in [("cnn1", 41u64), ("cnn2", 42u64)] {
+        let test = Arc::clone(&test);
+        handles.push(std::thread::spawn(move || {
+            let weights = ModelWeights::synthetic(arch, seed).unwrap();
+            let reference = Engine::sim_from_weights_threads(&weights, "float", 1).unwrap();
+            let net = NetClient::connect(addr, arch, "float").unwrap();
+            for s in &test.samples {
+                let got = net.infer(s.image.clone()).unwrap();
+                assert_eq!(got.epoch, 0, "{arch}: fresh registry serves epoch 0");
+                let (direct, _) = reference.infer(&[s.image.as_slice()]).unwrap();
+                assert_eq!(
+                    got.logits, direct[0].logits,
+                    "{arch}: routed response diverged from its own model"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // A model the registry does not serve: typed error naming the menu.
+    let net = NetClient::connect(addr, "cnn1", "fast").unwrap();
+    match net.infer(test.samples[0].image.clone()) {
+        Err(NetError::Remote { kind: WireErrorKind::UnknownModel, message }) => {
+            assert!(message.contains("cnn1/float"), "menu missing cnn1/float: {message}");
+            assert!(message.contains("cnn2/float"), "menu missing cnn2/float: {message}");
+        }
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    drop(net);
+
+    let report = metrics.report();
+    assert_eq!(report.requests, 2 * PER_MODEL as u64);
+    let names: Vec<&str> = report.models.iter().map(|m| m.model.as_str()).collect();
+    assert_eq!(names, vec!["cnn1/float", "cnn2/float"]);
+    for m in &report.models {
+        assert_eq!(m.requests, PER_MODEL as u64, "{}: per-model attribution", m.model);
+    }
+    teardown_registry(registry, frontend);
+}
+
+/// The stale-read fix, end to end over the wire: a cached pre-swap
+/// entry is never served post-swap (the epoch is part of the cache
+/// key), post-swap responses match a fresh engine built from the new
+/// weights bit-for-bit, and `odin swap`'s wire path reports the new
+/// epoch.
+#[test]
+fn hot_swap_advances_epoch_and_retires_cached_entries() {
+    let specs = vec![
+        ModelSpec::synthetic("cnn1", "float", 50).with_artifacts(NO_ARTIFACTS),
+        ModelSpec::synthetic("cnn2", "float", 51).with_artifacts(NO_ARTIFACTS),
+    ];
+    let cfg = FrontendConfig { cache_capacity: 64, ..FrontendConfig::default() };
+    let (registry, frontend, metrics) = spawn_registry_stack(specs, cfg);
+    let addr = frontend.local_addr();
+    let net = NetClient::connect(addr, "cnn1", "float").unwrap();
+    let row = TestSet::synthetic(1, 9).samples[0].image.clone();
+
+    // Fill, then hit, on epoch 0.
+    let fresh = net.infer(row.clone()).unwrap();
+    assert!(!fresh.cached);
+    assert_eq!(fresh.epoch, 0);
+    let hit = net.infer(row.clone()).unwrap();
+    assert!(hit.cached, "second sight must hit the epoch-0 cache");
+    assert_eq!(hit.epoch, 0);
+    assert_eq!(hit.logits, fresh.logits);
+
+    // Swap cnn1 over the wire (the `odin swap` path).
+    const SWAP_SEED: u64 = 77;
+    let epoch = net.swap("cnn1", "float", SWAP_SEED).unwrap();
+    assert_eq!(epoch, 1);
+    // Swapping an unserved model is a typed error, and the other
+    // model's epoch is untouched.
+    assert!(matches!(
+        net.swap("cnn9", "float", 1),
+        Err(NetError::Remote { kind: WireErrorKind::UnknownModel, .. })
+    ));
+    assert_eq!(registry.epoch("cnn2", "float"), Some(0));
+
+    // The same row must MISS now — being served the pre-swap bytes here
+    // is exactly the stale-read bug this keying fixes.
+    let post = net.infer(row.clone()).unwrap();
+    assert!(!post.cached, "pre-swap cache entry served after the swap");
+    assert_eq!(post.epoch, 1, "post-swap work executes on the new epoch");
+    let new_weights = ModelWeights::synthetic("cnn1", SWAP_SEED).unwrap();
+    let reference = Engine::sim_from_weights_threads(&new_weights, "float", 1).unwrap();
+    let (direct, _) = reference.infer(&[row.as_slice()]).unwrap();
+    assert_eq!(post.logits, direct[0].logits, "post-swap scores must be the new weights'");
+    assert_ne!(post.logits, fresh.logits, "distinct weight generations must disagree");
+
+    // And the new epoch caches normally.
+    let rehit = net.infer(row.clone()).unwrap();
+    assert!(rehit.cached);
+    assert_eq!(rehit.epoch, 1);
+    assert_eq!(rehit.logits, post.logits);
+
+    // cnn2 was never swapped: its cached flow stays on epoch 0.
+    let net2 = NetClient::connect(addr, "cnn2", "float").unwrap();
+    assert_eq!(net2.infer(row.clone()).unwrap().epoch, 0);
+
+    drop(net);
+    drop(net2);
+    teardown_registry(registry, frontend);
+    let report = metrics.report();
+    let m = report.models.iter().find(|m| m.model == "cnn1/float").unwrap();
+    assert_eq!(m.swaps, 1);
+    assert_eq!(m.epoch, 1);
+    assert!(m.epochs.iter().any(|&(e, _)| e == 1), "epoch-1 traffic recorded");
+}
+
+/// Satellite regression: a saturated admission gate still serves cache
+/// hits (they never acquire a permit), sheds the cold misses, and the
+/// permit count drains to exactly zero afterwards — a burst of hits
+/// mixed with sheds can neither starve nor leak the gate.
+#[test]
+fn saturated_gate_still_serves_cache_hits_and_permits_drain_to_zero() {
+    let metrics = MetricsHub::new();
+    let weights = ModelWeights::synthetic("cnn1", 99).unwrap();
+    // One shard, long linger: an admitted lone request parks in the
+    // batcher for ~500 ms, holding the gate's single permit open — a
+    // window the burst below fits into with huge margin even on a
+    // loaded CI machine.
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+        1,
+        BatchPolicy { max_batch: 32, linger: Duration::from_millis(500) },
+        metrics.clone(),
+    )
+    .unwrap();
+    let cfg = FrontendConfig {
+        admission: AdmissionConfig {
+            policy: AdmissionPolicy::Shed,
+            queue_cap: 1,
+            retry_after_ms: 5,
+        },
+        cache_capacity: 64,
+        ..FrontendConfig::default()
+    };
+    let frontend =
+        Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics.clone())
+            .unwrap();
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let test = TestSet::synthetic(4, 21);
+    let hot = test.samples[0].image.clone();
+
+    // Prime the cache with the hot row.
+    assert!(!net.infer(hot.clone()).unwrap().cached);
+
+    // Saturate: one cold row takes the only permit and parks in the
+    // linger window (nothing else reaches the pool to fill its batch).
+    let rx_parked = net.submit(test.samples[1].image.clone());
+    // Burst while saturated: hits on the hot row plus two cold rows.
+    let rx_hits: Vec<_> = (0..5).map(|_| net.submit(hot.clone())).collect();
+    let rx_cold1 = net.submit(test.samples[2].image.clone());
+    let rx_cold2 = net.submit(test.samples[3].image.clone());
+
+    for (i, rx) in rx_hits.into_iter().enumerate() {
+        let r = NetClient::wait(rx).unwrap_or_else(|e| {
+            panic!("hit {i} must be served even with the gate saturated: {e}")
+        });
+        assert!(r.cached, "hit {i} must come from the cache, not the pool");
+    }
+    for rx in [rx_cold1, rx_cold2] {
+        match NetClient::wait(rx) {
+            Err(NetError::Overloaded { retry_after_ms }) => assert_eq!(retry_after_ms, 5),
+            other => panic!("cold row against a full gate must shed, got {other:?}"),
+        }
+    }
+    NetClient::wait(rx_parked).expect("the admitted request completes after its linger");
+
+    // Every permit released: the gate drained to zero (the parked
+    // request's permit drops before its response is written).
+    assert_eq!(frontend.admission_in_flight(), 0, "admission permits leaked");
+
+    let report = metrics.report();
+    assert_eq!(report.frontend.cache_hits, 5);
+    assert_eq!(report.frontend.shed, 2);
+    assert_eq!(report.frontend.admitted, 2, "primer + parked request only");
+
+    drop(net);
+    frontend.shutdown();
+    drop(client);
+    pool.shutdown();
 }
 
 /// Shutting the front-end down mid-conversation disconnects clients

@@ -1,0 +1,201 @@
+//! Property tests for hot-swap atomicity: N producers hammering two
+//! registry models across a swap must only ever observe *whole-epoch*
+//! responses — every response is bit-identical to a fresh single-epoch
+//! rerun of the epoch it reports, so a torn or mixed-epoch batch (whose
+//! scores would match neither epoch's engine) can never exist.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use odin::coordinator::{
+    BatchPolicy, Engine, MetricsHub, ModelRegistry, ModelSpec, ModelWeights, SimEngine,
+};
+use odin::dataset::TestSet;
+
+/// Force the synthetic weight generator so reference engines can be
+/// rebuilt from seeds alone.
+const NO_ARTIFACTS: &str = "/nonexistent-odin-test-artifacts";
+
+const SEED_CNN1: u64 = 61;
+const SEED_CNN2: u64 = 62;
+/// `swap_seed` with a missing artifacts dir resolves to synthetic
+/// weights from exactly this seed — the epoch-1 reference.
+const SEED_SWAP: u64 = 63;
+
+fn reference(arch: &str, seed: u64) -> SimEngine {
+    let weights = ModelWeights::synthetic(arch, seed).unwrap();
+    Engine::sim_from_weights_threads(&weights, "float", 1).unwrap()
+}
+
+#[test]
+fn producers_across_a_hot_swap_observe_only_whole_epoch_responses() {
+    const PRODUCERS: usize = 6;
+    const PER_PRODUCER: usize = 24;
+
+    let metrics = MetricsHub::new();
+    let registry = Arc::new(
+        ModelRegistry::spawn(
+            vec![
+                ModelSpec::synthetic("cnn1", "float", SEED_CNN1).with_artifacts(NO_ARTIFACTS),
+                ModelSpec::synthetic("cnn2", "float", SEED_CNN2).with_artifacts(NO_ARTIFACTS),
+            ],
+            // Small batches + a real linger so chunks keep forming while
+            // the swap lands mid-stream.
+            BatchPolicy { max_batch: 8, linger: Duration::from_micros(100) },
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+    let test = Arc::new(TestSet::synthetic(PER_PRODUCER, 17));
+
+    // (model, epoch, row index, logits) for every response observed.
+    let (results_tx, results_rx) = mpsc::channel::<(&'static str, u64, usize, [f32; 10])>();
+    // Producers raise this once a few responses are in, so the swap is
+    // guaranteed to land while epoch-0 traffic has been observed and
+    // load is still running.
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let arch: &'static str = if p % 2 == 0 { "cnn1" } else { "cnn2" };
+        let registry = Arc::clone(&registry);
+        let test = Arc::clone(&test);
+        let results = results_tx.clone();
+        let started = started_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let (client, _epoch) = registry.route(arch, "float").unwrap();
+            for (i, s) in test.samples.iter().enumerate() {
+                let resp = client.infer(s.image.clone()).unwrap();
+                let mut logits = [0f32; 10];
+                logits.copy_from_slice(&resp.prediction.logits);
+                results.send((arch, resp.epoch, i, logits)).unwrap();
+                if i == 2 {
+                    let _ = started.send(());
+                }
+            }
+        }));
+    }
+    drop(results_tx);
+    drop(started_tx);
+
+    // Swap cnn1 once every producer is demonstrably mid-stream.
+    for _ in 0..PRODUCERS {
+        started_rx.recv().unwrap();
+    }
+    let new_epoch = registry.swap_seed("cnn1", "float", SEED_SWAP).unwrap();
+    assert_eq!(new_epoch, 1);
+
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Single-epoch reruns to verify against, built once per (model,
+    // epoch) from the same seeds the registry used.
+    let mut refs: HashMap<(&str, u64), SimEngine> = HashMap::new();
+    refs.insert(("cnn1", 0), reference("cnn1", SEED_CNN1));
+    refs.insert(("cnn1", 1), reference("cnn1", SEED_SWAP));
+    refs.insert(("cnn2", 0), reference("cnn2", SEED_CNN2));
+
+    let mut count = 0usize;
+    let mut cnn1_epochs = [0usize; 2];
+    while let Ok((arch, epoch, i, logits)) = results_rx.recv() {
+        count += 1;
+        match arch {
+            "cnn2" => assert_eq!(epoch, 0, "cnn2 was never swapped"),
+            _ => {
+                assert!(epoch <= 1, "cnn1 can only ever serve epoch 0 or 1, saw {epoch}");
+                cnn1_epochs[epoch as usize] += 1;
+            }
+        }
+        let engine = refs
+            .get(&(arch, epoch))
+            .unwrap_or_else(|| panic!("{arch} reported unknown epoch {epoch}"));
+        let (direct, _) = engine.infer(&[test.samples[i].image.as_slice()]).unwrap();
+        assert_eq!(
+            logits, direct[0].logits,
+            "{arch} row {i}: response under epoch {epoch} is not bit-identical to a \
+             single-epoch rerun — a torn/mixed-epoch batch would fail exactly here"
+        );
+    }
+    assert_eq!(count, PRODUCERS * PER_PRODUCER, "every request answered exactly once");
+    assert!(cnn1_epochs[0] > 0, "the swap must have landed after some epoch-0 traffic");
+
+    // Workers converge: fresh post-load traffic runs on the new epoch,
+    // and both generations really disagree (the bit-identity above was
+    // not vacuous).
+    let (client, routed_epoch) = registry.route("cnn1", "float").unwrap();
+    assert_eq!(routed_epoch, 1);
+    let row = test.samples[0].image.clone();
+    let settled = client.infer(row.clone()).unwrap();
+    assert_eq!(settled.epoch, 1);
+    let (old, _) = refs[&("cnn1", 0)].infer(&[row.as_slice()]).unwrap();
+    let (new, _) = refs[&("cnn1", 1)].infer(&[row.as_slice()]).unwrap();
+    assert_ne!(old[0].logits, new[0].logits, "the two epochs must be distinguishable");
+    assert_eq!(settled.prediction.logits, new[0].logits);
+
+    drop(client);
+    match Arc::try_unwrap(registry) {
+        Ok(r) => r.shutdown(),
+        Err(strays) => drop(strays),
+    }
+
+    // Metrics carried the story: cnn1 served under both epochs.
+    let report = metrics.report();
+    let m = report.models.iter().find(|m| m.model == "cnn1/float").unwrap();
+    assert_eq!(m.swaps, 1);
+    assert_eq!(m.epoch, 1);
+    let per_epoch: HashMap<u64, u64> = m.epochs.iter().copied().collect();
+    assert_eq!(per_epoch.get(&0).copied().unwrap_or(0), cnn1_epochs[0] as u64);
+    // +1: the post-load "settled" request above also ran on epoch 1.
+    assert_eq!(per_epoch.get(&1).copied().unwrap_or(0), cnn1_epochs[1] as u64 + 1);
+}
+
+/// Back-to-back swaps under load stay serializable: epochs observed per
+/// model are monotonically plausible (each response's scores match its
+/// reported epoch's weights) and the final epoch equals the number of
+/// installed swaps.
+#[test]
+fn repeated_swaps_keep_responses_whole_epoch() {
+    const SWAPS: u64 = 3;
+
+    let registry = Arc::new(
+        ModelRegistry::spawn(
+            vec![ModelSpec::synthetic("cnn1", "float", SEED_CNN1).with_artifacts(NO_ARTIFACTS)],
+            BatchPolicy { max_batch: 4, linger: Duration::from_micros(50) },
+            MetricsHub::new(),
+        )
+        .unwrap(),
+    );
+    let test = TestSet::synthetic(8, 23);
+
+    // Seeds chosen so epoch e was loaded from SEED_SWAP + e.
+    let mut refs: HashMap<u64, SimEngine> = HashMap::new();
+    refs.insert(0, reference("cnn1", SEED_CNN1));
+    for e in 1..=SWAPS {
+        refs.insert(e, reference("cnn1", SEED_SWAP + e));
+    }
+
+    let (client, _) = registry.route("cnn1", "float").unwrap();
+    let mut seen = Vec::new();
+    for e in 1..=SWAPS {
+        for s in &test.samples {
+            let resp = client.infer(s.image.clone()).unwrap();
+            let engine = &refs[&resp.epoch];
+            let (direct, _) = engine.infer(&[s.image.as_slice()]).unwrap();
+            assert_eq!(resp.prediction.logits, direct[0].logits);
+            seen.push(resp.epoch);
+        }
+        assert_eq!(registry.swap_seed("cnn1", "float", SEED_SWAP + e).unwrap(), e);
+    }
+    // After the last swap the next chunk runs the final epoch.
+    let resp = client.infer(test.samples[0].image.clone()).unwrap();
+    assert_eq!(resp.epoch, SWAPS);
+    assert!(seen.windows(2).all(|w| w[0] <= w[1]), "epochs never regress: {seen:?}");
+
+    drop(client);
+    match Arc::try_unwrap(registry) {
+        Ok(r) => r.shutdown(),
+        Err(strays) => drop(strays),
+    }
+}
