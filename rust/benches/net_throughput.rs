@@ -1,20 +1,30 @@
 //! End-to-end requests/s through the L4 TCP front-end over loopback,
 //! against the same pool served in-process — what the network boundary
-//! (framing, syscalls, admission, cache) costs and buys.
+//! (framing, syscalls, fair queuing, admission, cache) costs and buys.
 //!
-//! Three measurements:
+//! Measurements:
 //! * closed loop, in-process — the PR-2 baseline (no network).
 //! * closed loop, TCP — 16 connections, one blocking request at a time
 //!   each, with and without the response cache on a duplicate-heavy
 //!   working set (64 distinct rows), so the cache's effect is visible.
-//! * open loop, TCP + `shed` admission — the whole request set
-//!   pipelined onto one connection against a small queue cap: reports
-//!   served vs shed and shows shedding never deadlocks.
+//! * closed loop, TCP through a two-model registry (+1 mid-run swap).
+//! * open loop, TCP + `shed` admission — the whole request set driven
+//!   through one connection's bounded-window [`Pipeline`] against a
+//!   small queue cap: reports served vs shed and shows shedding never
+//!   deadlocks.
 //!
 //! ```bash
-//! cargo bench --bench net_throughput
+//! cargo bench --bench net_throughput            # full run
+//! cargo bench --bench net_throughput -- --smoke --json BENCH_PR.json
 //! ```
+//!
+//! `--smoke` shrinks the workload for CI; `--json PATH` dumps
+//! `{"bench":"net_throughput","results":{...}}` including the
+//! machine-portable ratios (`tcp_per_inproc`, `cache_speedup`) the
+//! `bench-smoke` CI job gates against `BENCH_BASELINE.json` via
+//! `odin benchgate`.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -27,8 +37,8 @@ use odin::dataset::TestSet;
 use odin::frontend::{
     AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError,
 };
+use odin::util::json::Json;
 
-const REQUESTS: usize = 1024;
 const CONNECTIONS: usize = 16;
 const DISTINCT_ROWS: usize = 64;
 
@@ -66,7 +76,7 @@ fn run_in_process(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<f64> {
     let dt = t0.elapsed().as_secs_f64();
     drop(client);
     pool.shutdown();
-    Ok(REQUESTS as f64 / dt)
+    Ok(images.len() as f64 / dt)
 }
 
 /// Closed loop over TCP: `CONNECTIONS` blocking clients; returns
@@ -103,7 +113,7 @@ fn run_closed_tcp(weights: &ModelWeights, images: &[Vec<u8>], cache: usize) -> R
     drop(client);
     pool.shutdown();
     let hit_rate = metrics.report().frontend.cache_hit_rate();
-    Ok((REQUESTS as f64 / dt, hit_rate))
+    Ok((images.len() as f64 / dt, hit_rate))
 }
 
 /// Closed loop over TCP through a two-model `ModelRegistry`: half the
@@ -153,11 +163,14 @@ fn run_registry_tcp(images: &[Vec<u8>]) -> Result<f64> {
         Ok(r) => r.shutdown(),
         Err(strays) => drop(strays),
     }
-    Ok(REQUESTS as f64 / dt)
+    Ok(images.len() as f64 / dt)
 }
 
-/// Open loop over TCP with `shed` admission: pipeline everything onto
-/// one connection; returns (served, shed, completed requests/s).
+/// Open loop over TCP with `shed` admission, driven through one
+/// connection's bounded-window `Pipeline` (window 256); returns
+/// (served, shed, completed requests/s).  Exercises the async
+/// submit/reap pair at saturation: shedding never deadlocks and every
+/// request resolves with a typed outcome.
 fn run_open_shed(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<(usize, usize, f64)> {
     let (pool, client, metrics) = spawn_pool(weights)?;
     let frontend = Frontend::spawn(
@@ -175,19 +188,32 @@ fn run_open_shed(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<(usize, u
         },
         metrics.clone(),
     )?;
-    let net = NetClient::connect(frontend.local_addr(), "cnn1", "fast")?;
-    let t0 = Instant::now();
-    let receivers: Vec<_> = images.iter().map(|img| net.submit(img.clone())).collect();
-    let mut served = 0usize;
-    let mut shed = 0usize;
-    for rx in receivers {
-        match NetClient::wait(rx) {
-            Ok(_) => served += 1,
-            Err(NetError::Overloaded { .. }) => shed += 1,
+    fn tally(
+        outcome: Result<odin::frontend::NetResponse, NetError>,
+        served: &mut usize,
+        shed: &mut usize,
+    ) -> Result<()> {
+        match outcome {
+            Ok(_) => *served += 1,
+            Err(NetError::Overloaded { .. }) => *shed += 1,
             Err(e) => anyhow::bail!("unexpected outcome: {e}"),
         }
+        Ok(())
+    }
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "fast")?;
+    let mut pipe = net.pipeline(256);
+    let t0 = Instant::now();
+    let (mut served, mut shed) = (0usize, 0usize);
+    for img in images {
+        if let Some(outcome) = pipe.submit(img.clone()) {
+            tally(outcome, &mut served, &mut shed)?;
+        }
+    }
+    for outcome in pipe.drain() {
+        tally(outcome, &mut served, &mut shed)?;
     }
     let dt = t0.elapsed().as_secs_f64();
+    drop(pipe);
     drop(net);
     frontend.shutdown();
     drop(client);
@@ -196,17 +222,27 @@ fn run_open_shed(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<(usize, u
 }
 
 fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let requests = if smoke { 256 } else { 1024 };
+
     let weights = ModelWeights::synthetic("cnn1", SYNTHETIC_SEED)?;
-    // Duplicate-heavy working set: REQUESTS draws over DISTINCT_ROWS
-    // rows, so a response cache can actually earn hits.
+    // Duplicate-heavy working set: draws over DISTINCT_ROWS rows, so a
+    // response cache can actually earn hits.
     let test = TestSet::synthetic(DISTINCT_ROWS, SYNTHETIC_SEED);
     let images: Vec<Vec<u8>> =
-        (0..REQUESTS).map(|i| test.samples[i % DISTINCT_ROWS].image.clone()).collect();
+        (0..requests).map(|i| test.samples[i % DISTINCT_ROWS].image.clone()).collect();
     // Build the shared CNT16 table up front so no run pays for it.
     odin::runtime::sim::shared_cnt16();
 
     println!(
-        "== bench group: net_throughput ({REQUESTS} requests, {DISTINCT_ROWS} distinct rows, {CONNECTIONS} connections) =="
+        "== bench group: net_throughput ({requests} requests, {DISTINCT_ROWS} distinct rows, {CONNECTIONS} connections{}) ==",
+        if smoke { ", smoke" } else { "" }
     );
     let base = run_in_process(&weights, &images)?;
     println!("{:<52} {base:>10.0} req/s", "closed loop, in-process (baseline)");
@@ -225,12 +261,31 @@ fn main() -> Result<()> {
     let (served, shed, open_rps) = run_open_shed(&weights, &images)?;
     println!(
         "{:<52} {open_rps:>10.0} req/s",
-        format!("open loop, TCP, shed admission ({served} ok / {shed} shed)")
+        format!("open loop, TCP, pipelined window 256, shed ({served} ok / {shed} shed)")
     );
+    let tcp_per_inproc = tcp / base.max(1e-9);
+    let cache_speedup = tcp_cached / tcp.max(1e-9);
     println!(
         "network tax: {:.2}x vs in-process; cache speedup: {:.2}x",
         base / tcp.max(1e-9),
-        tcp_cached / tcp.max(1e-9),
+        cache_speedup,
     );
+
+    if let Some(path) = json_path {
+        let mut results = BTreeMap::new();
+        results.insert("in_process_rps".to_string(), Json::Num(base));
+        results.insert("tcp_rps".to_string(), Json::Num(tcp));
+        results.insert("tcp_cached_rps".to_string(), Json::Num(tcp_cached));
+        results.insert("registry_rps".to_string(), Json::Num(registry_rps));
+        results.insert("open_loop_rps".to_string(), Json::Num(open_rps));
+        results.insert("tcp_per_inproc".to_string(), Json::Num(tcp_per_inproc));
+        results.insert("cache_speedup".to_string(), Json::Num(cache_speedup));
+        let mut o = BTreeMap::new();
+        o.insert("bench".to_string(), Json::Str("net_throughput".to_string()));
+        o.insert("smoke".to_string(), Json::Bool(smoke));
+        o.insert("results".to_string(), Json::Obj(results));
+        std::fs::write(&path, Json::Obj(o).to_string())?;
+        println!("results json written to {path}");
+    }
     Ok(())
 }

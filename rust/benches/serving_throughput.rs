@@ -11,9 +11,16 @@
 //! measured by the shards=1, threads=auto row.
 //!
 //! ```bash
-//! cargo bench --bench serving_throughput
+//! cargo bench --bench serving_throughput        # full run
+//! cargo bench --bench serving_throughput -- --smoke --json BENCH_PR.json
 //! ```
+//!
+//! `--smoke` shrinks the workload for CI; `--json PATH` dumps
+//! `{"bench":"serving_throughput","results":{...}}` including the
+//! machine-portable `pooled_per_serial` ratio the `bench-smoke` CI job
+//! gates against `BENCH_BASELINE.json` via `odin benchgate`.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -21,13 +28,17 @@ use odin::coordinator::{
     BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
 };
 use odin::dataset::TestSet;
+use odin::util::json::Json;
 
-const REQUESTS: usize = 1024;
-
-/// Serve `REQUESTS` open-loop requests through a pool and return
+/// Serve `requests` open-loop requests through a pool and return
 /// requests/s.  `backend_threads` caps each shard's row parallelism
 /// (0 = auto).
-fn run(weights: &ModelWeights, shards: usize, backend_threads: usize) -> Result<f64> {
+fn run(
+    weights: &ModelWeights,
+    requests: usize,
+    shards: usize,
+    backend_threads: usize,
+) -> Result<f64> {
     let w = weights.clone();
     let (pool, client) = EnginePool::spawn(
         move |_shard| Engine::sim_from_weights_threads(&w, "fast", backend_threads),
@@ -37,7 +48,7 @@ fn run(weights: &ModelWeights, shards: usize, backend_threads: usize) -> Result<
     )?;
     let test = TestSet::synthetic(256, SYNTHETIC_SEED);
     let t0 = Instant::now();
-    let receivers: Vec<_> = (0..REQUESTS)
+    let receivers: Vec<_> = (0..requests)
         .map(|i| client.submit(test.samples[i % test.len()].image.clone()))
         .collect();
     for rx in receivers {
@@ -48,26 +59,53 @@ fn run(weights: &ModelWeights, shards: usize, backend_threads: usize) -> Result<
     let dt = t0.elapsed().as_secs_f64();
     drop(client);
     pool.shutdown();
-    Ok(REQUESTS as f64 / dt)
+    Ok(requests as f64 / dt)
 }
 
 fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let requests = if smoke { 256 } else { 1024 };
+
     let cores = EnginePool::auto_shards();
     let weights = ModelWeights::synthetic("cnn1", SYNTHETIC_SEED)?;
     // Build the shared CNT16 table up front so no run pays for it.
     odin::runtime::sim::shared_cnt16();
 
-    println!("== bench group: serving_throughput ({REQUESTS} open-loop requests, {cores} cores) ==");
-    let single = run(&weights, 1, 1)?;
+    println!(
+        "== bench group: serving_throughput ({requests} open-loop requests, {cores} cores{}) ==",
+        if smoke { ", smoke" } else { "" }
+    );
+    let single = run(&weights, requests, 1, 1)?;
     println!("{:<44} {single:>10.0} req/s", "shards=1 threads=1 (serial baseline)");
-    let single_rowpar = run(&weights, 1, 0)?;
+    let single_rowpar = run(&weights, requests, 1, 0)?;
     println!("{:<44} {single_rowpar:>10.0} req/s", "shards=1 threads=auto (row-parallel)");
-    let pooled = run(&weights, cores, 1)?;
+    let pooled = run(&weights, requests, cores, 1)?;
     println!("{:<44} {pooled:>10.0} req/s", format!("shards={cores} threads=1 (bank-parallel)"));
+    let pooled_per_serial = pooled / single.max(1e-9);
     println!(
         "scale-out speedup: {:.2}x from sharding, {:.2}x from row parallelism",
-        pooled / single,
-        single_rowpar / single,
+        pooled_per_serial,
+        single_rowpar / single.max(1e-9),
     );
+
+    if let Some(path) = json_path {
+        let mut results = BTreeMap::new();
+        results.insert("serial_rps".to_string(), Json::Num(single));
+        results.insert("rowpar_rps".to_string(), Json::Num(single_rowpar));
+        results.insert("pooled_rps".to_string(), Json::Num(pooled));
+        results.insert("pooled_per_serial".to_string(), Json::Num(pooled_per_serial));
+        let mut o = BTreeMap::new();
+        o.insert("bench".to_string(), Json::Str("serving_throughput".to_string()));
+        o.insert("smoke".to_string(), Json::Bool(smoke));
+        o.insert("results".to_string(), Json::Obj(results));
+        std::fs::write(&path, Json::Obj(o).to_string())?;
+        println!("results json written to {path}");
+    }
     Ok(())
 }

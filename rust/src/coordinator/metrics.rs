@@ -66,9 +66,64 @@ struct FrontendCounters {
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     cache_evictions: AtomicU64,
+    cache_stale_purged: AtomicU64,
     net_connections: AtomicU64,
     net_responses: AtomicU64,
+    conn_rejected: AtomicU64,
 }
+
+/// Lock-free per-client fairness counters, owned by the front-end's fair
+/// scheduler (one per connection, labelled by the client's `Hello` name
+/// or a generated `conn-N`).  Same pattern as the pool's depth gauges:
+/// the hub keeps a labelled handle and samples it at report time, so the
+/// scheduler's hot path never takes the hub mutex.
+#[derive(Debug, Default)]
+pub struct ClientCounters {
+    enqueued: AtomicU64,
+    dispatched: AtomicU64,
+    starved: AtomicU64,
+}
+
+impl ClientCounters {
+    /// Record one request entering this client's fairness queue.
+    pub fn record_enqueued(&self) {
+        self.enqueued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request leaving the queue for admission + the pool.
+    pub fn record_dispatched(&self) {
+        self.dispatched.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one starvation event: this client had runnable work but
+    /// was passed over beyond the scheduler's starvation threshold.
+    pub fn record_starved(&self) {
+        self.starved.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests dispatched so far (sampled; used by tests and demos).
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Requests enqueued so far (sampled; used by tests and demos).
+    pub fn enqueued(&self) -> u64 {
+        self.enqueued.load(Ordering::Relaxed)
+    }
+
+    /// Starvation events so far (sampled; used by tests and demos).
+    pub fn starved(&self) -> u64 {
+        self.starved.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper bound on distinct per-client metric slots; registrations past
+/// it aggregate under the `"(other)"` overflow slot so connection churn
+/// cannot grow the hub without bound.
+const CLIENT_SLOTS_MAX: usize = 1024;
+
+/// Name of the shared overflow slot (see `MetricsHub::register_client`).
+const CLIENT_OVERFLOW_SLOT: &str = "(other)";
 
 #[derive(Default)]
 struct Inner {
@@ -84,6 +139,11 @@ struct Inner {
     started: Option<Instant>,
     shards: Vec<ShardSlot>,
     models: BTreeMap<String, ModelSlot>,
+    /// Per-client fairness counter handles, appended at registration and
+    /// kept alive past disconnect so a post-teardown report still shows
+    /// every client the run served.  Two connections sharing a name are
+    /// summed at report time.
+    clients: Vec<(String, Arc<ClientCounters>)>,
 }
 
 impl Inner {
@@ -160,10 +220,16 @@ pub struct FrontendReport {
     pub cache_misses: u64,
     /// Entries evicted to stay within the cache capacity.
     pub cache_evictions: u64,
+    /// Entries purged eagerly because a hot swap outdated their epoch
+    /// (distinct from `cache_evictions`, which is LRU pressure).
+    pub cache_stale_purged: u64,
     /// TCP connections accepted.
     pub net_connections: u64,
     /// Response frames written back to clients.
     pub net_responses: u64,
+    /// Connections refused by the connection cap with a typed
+    /// `TooManyConnections` rejection.
+    pub conn_rejected: u64,
 }
 
 impl FrontendReport {
@@ -184,10 +250,30 @@ impl FrontendReport {
             + self.cache_hits
             + self.cache_misses
             + self.cache_evictions
+            + self.cache_stale_purged
             + self.net_connections
             + self.net_responses
+            + self.conn_rejected
             > 0
     }
+}
+
+/// Point-in-time aggregate over one front-end client (a connection, or
+/// several connections sharing a `Hello` name), as scheduled by the
+/// fair scheduler (see [`MetricsReport::clients`]).
+#[derive(Clone, Debug)]
+pub struct ClientReport {
+    /// The client's display name (`Hello`-supplied or generated
+    /// `conn-N`).
+    pub client: String,
+    /// Requests that entered this client's fairness queue (cache hits
+    /// and protocol rejections never do).
+    pub enqueued: u64,
+    /// Requests the scheduler dispatched into admission + the pool.
+    pub dispatched: u64,
+    /// Starvation events: the client had runnable work but was passed
+    /// over beyond the scheduler's threshold (always 0 under `drr`).
+    pub starved: u64,
 }
 
 /// Point-in-time aggregate over one served model (`"arch/mode"`),
@@ -248,6 +334,15 @@ pub struct MetricsReport {
     pub models: Vec<ModelReport>,
     /// Network front-end aggregates (all-zero for in-process serving).
     pub frontend: FrontendReport,
+    /// Per-client fairness breakdown, sorted by client name (empty when
+    /// no front-end scheduler registered clients).
+    pub clients: Vec<ClientReport>,
+    /// Jain's fairness index over the per-client `dispatched` counts of
+    /// clients that enqueued at least one request: `(Σx)² / (n·Σx²)`,
+    /// in `(0, 1]` — 1.0 means perfectly even service, `1/n` means one
+    /// client got everything.  Reported as 1.0 when fewer than two
+    /// clients have traffic.
+    pub fairness_index: f64,
 }
 
 impl MetricsHub {
@@ -383,6 +478,46 @@ impl MetricsHub {
         self.frontend.cache_evictions.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `n` cache entries purged eagerly after a hot swap outdated
+    /// their epoch.
+    pub fn record_cache_stale_purge(&self, n: u64) {
+        self.frontend.cache_stale_purged.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one connection refused by the connection cap (answered
+    /// with a typed `TooManyConnections` before closing).
+    pub fn record_conn_rejected(&self) {
+        self.frontend.conn_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Register a front-end client under `name` and hand back its
+    /// lock-free counter block (the fair scheduler bumps it; reports
+    /// sample it).  The handle outlives the connection so post-run
+    /// reports still list every client.  Registrations are **keyed by
+    /// name**: a reused name (a reconnecting client, or several
+    /// connections sharing an identity) shares one counter block, and
+    /// once 1024 distinct names exist, further new names share the
+    /// `"(other)"` overflow slot — a connection-churn flood of
+    /// generated `conn-N` names cannot grow server memory or report
+    /// cost without bound.
+    pub fn register_client(&self, name: &str) -> Arc<ClientCounters> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some((_, c)) = g.clients.iter().find(|(n, _)| n == name) {
+            return Arc::clone(c);
+        }
+        let slot_name = if g.clients.len() >= CLIENT_SLOTS_MAX {
+            CLIENT_OVERFLOW_SLOT
+        } else {
+            name
+        };
+        if let Some((_, c)) = g.clients.iter().find(|(n, _)| n == slot_name) {
+            return Arc::clone(c);
+        }
+        let counters = Arc::new(ClientCounters::default());
+        g.clients.push((slot_name.to_string(), Arc::clone(&counters)));
+        counters
+    }
+
     /// Record one accepted TCP connection.
     pub fn record_net_connection(&self) {
         self.frontend.net_connections.fetch_add(1, Ordering::Relaxed);
@@ -415,9 +550,30 @@ impl MetricsHub {
             cache_hits: f.cache_hits.load(Ordering::Relaxed),
             cache_misses: f.cache_misses.load(Ordering::Relaxed),
             cache_evictions: f.cache_evictions.load(Ordering::Relaxed),
+            cache_stale_purged: f.cache_stale_purged.load(Ordering::Relaxed),
             net_connections: f.net_connections.load(Ordering::Relaxed),
             net_responses: f.net_responses.load(Ordering::Relaxed),
+            conn_rejected: f.conn_rejected.load(Ordering::Relaxed),
         };
+        let mut by_client: BTreeMap<&str, (u64, u64, u64)> = BTreeMap::new();
+        for (name, c) in &g.clients {
+            let slot = by_client.entry(name).or_insert((0, 0, 0));
+            slot.0 += c.enqueued.load(Ordering::Relaxed);
+            slot.1 += c.dispatched.load(Ordering::Relaxed);
+            slot.2 += c.starved.load(Ordering::Relaxed);
+        }
+        let clients: Vec<ClientReport> = by_client
+            .into_iter()
+            .map(|(name, (enqueued, dispatched, starved))| ClientReport {
+                client: name.to_string(),
+                enqueued,
+                dispatched,
+                starved,
+            })
+            .collect();
+        let fairness_index = jain_index(
+            clients.iter().filter(|c| c.enqueued > 0).map(|c| c.dispatched as f64),
+        );
         let models = g
             .models
             .iter()
@@ -471,8 +627,28 @@ impl MetricsHub {
             shards,
             models,
             frontend,
+            clients,
+            fairness_index,
         }
     }
+}
+
+/// Jain's fairness index over a set of non-negative allocations:
+/// `(Σx)² / (n·Σx²)`, the standard measure of how evenly a shared
+/// resource is divided (1.0 = perfectly even, `1/n` = one flow got
+/// everything).  Fewer than two flows — or all-zero allocations — report
+/// 1.0: there is nobody to be unfair to.
+fn jain_index(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut n, mut sum, mut sum_sq) = (0usize, 0.0f64, 0.0f64);
+    for x in xs {
+        n += 1;
+        sum += x;
+        sum_sq += x * x;
+    }
+    if n < 2 || sum_sq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (n as f64 * sum_sq)
 }
 
 impl MetricsReport {
@@ -497,19 +673,35 @@ impl MetricsReport {
                 "admission           {} admitted, {} waited, {} shed",
                 f.admitted, f.block_waits, f.shed
             );
-            if f.cache_hits + f.cache_misses + f.cache_evictions > 0 {
+            if f.cache_hits + f.cache_misses + f.cache_evictions + f.cache_stale_purged > 0 {
                 println!(
-                    "cache               {} hits / {} misses ({:.1}% hit rate), {} evicted",
+                    "cache               {} hits / {} misses ({:.1}% hit rate), {} evicted, {} stale-purged",
                     f.cache_hits,
                     f.cache_misses,
                     100.0 * f.cache_hit_rate(),
-                    f.cache_evictions
+                    f.cache_evictions,
+                    f.cache_stale_purged
                 );
             }
             println!(
-                "network             {} connections, {} responses",
-                f.net_connections, f.net_responses
+                "network             {} connections, {} responses, {} refused (conn cap)",
+                f.net_connections, f.net_responses, f.conn_rejected
             );
+        }
+        if !self.clients.is_empty() {
+            println!(
+                "fairness index      {:.3} (Jain, over per-client dispatches)",
+                self.fairness_index
+            );
+            for c in &self.clients {
+                println!(
+                    "client {:<16} {:>7} enqueued  {:>7} dispatched  {:>3} starved",
+                    c.client.escape_debug().to_string(),
+                    c.enqueued,
+                    c.dispatched,
+                    c.starved,
+                );
+            }
         }
         for m in &self.models {
             let epochs: Vec<String> =
@@ -579,10 +771,27 @@ impl MetricsReport {
         fo.insert("cache_hits".to_string(), int(f.cache_hits));
         fo.insert("cache_misses".to_string(), int(f.cache_misses));
         fo.insert("cache_evictions".to_string(), int(f.cache_evictions));
+        fo.insert("cache_stale_purged".to_string(), int(f.cache_stale_purged));
         fo.insert("cache_hit_rate".to_string(), num(f.cache_hit_rate()));
         fo.insert("net_connections".to_string(), int(f.net_connections));
         fo.insert("net_responses".to_string(), int(f.net_responses));
+        fo.insert("conn_rejected".to_string(), int(f.conn_rejected));
         o.insert("frontend".to_string(), Json::Obj(fo));
+
+        o.insert("fairness_index".to_string(), num(self.fairness_index));
+        let clients = self
+            .clients
+            .iter()
+            .map(|c| {
+                let mut co = BTreeMap::new();
+                co.insert("client".to_string(), Json::Str(c.client.clone()));
+                co.insert("enqueued".to_string(), int(c.enqueued));
+                co.insert("dispatched".to_string(), int(c.dispatched));
+                co.insert("starved".to_string(), int(c.starved));
+                Json::Obj(co)
+            })
+            .collect();
+        o.insert("clients".to_string(), Json::Arr(clients));
 
         let shards = self
             .shards
@@ -776,6 +985,102 @@ mod tests {
         let shards = j.path(&["shards"]).unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
         assert_eq!(shards[1].get("requests").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn per_client_counters_fairness_index_and_json() {
+        let m = MetricsHub::new();
+        let hog = m.register_client("hog");
+        let polite = m.register_client("polite-1");
+        for _ in 0..30 {
+            hog.record_enqueued();
+        }
+        for _ in 0..10 {
+            hog.record_dispatched();
+        }
+        for _ in 0..10 {
+            polite.record_enqueued();
+            polite.record_dispatched();
+        }
+        polite.record_starved();
+        m.record_conn_rejected();
+        m.record_cache_stale_purge(4);
+        let r = m.report();
+        assert_eq!(r.clients.len(), 2);
+        let names: Vec<&str> = r.clients.iter().map(|c| c.client.as_str()).collect();
+        assert_eq!(names, vec!["hog", "polite-1"], "sorted by name");
+        assert_eq!(r.clients[0].enqueued, 30);
+        assert_eq!(r.clients[0].dispatched, 10);
+        assert_eq!(r.clients[0].starved, 0);
+        assert_eq!(r.clients[1].starved, 1);
+        // Equal dispatches -> perfectly fair.
+        assert!((r.fairness_index - 1.0).abs() < 1e-12);
+        assert_eq!(r.frontend.conn_rejected, 1);
+        assert_eq!(r.frontend.cache_stale_purged, 4);
+
+        // Same-name registrations are summed; traffic-free clients do
+        // not drag the index down.
+        let hog2 = m.register_client("hog");
+        for _ in 0..20 {
+            hog2.record_enqueued();
+            hog2.record_dispatched();
+        }
+        let idle = m.register_client("idle");
+        drop(idle);
+        let r = m.report();
+        assert_eq!(r.clients.len(), 3);
+        let h = r.clients.iter().find(|c| c.client == "hog").unwrap();
+        assert_eq!(h.dispatched, 30);
+        // Jain over (30, 10): 1600 / (2 * 1000) = 0.8.
+        assert!((r.fairness_index - 0.8).abs() < 1e-12, "index {}", r.fairness_index);
+
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        assert!((j.path(&["fairness_index"]).unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9);
+        let clients = j.path(&["clients"]).unwrap().as_arr().unwrap();
+        assert_eq!(clients.len(), 3);
+        let jc = clients
+            .iter()
+            .find(|c| c.get("client").unwrap().as_str() == Some("polite-1"))
+            .unwrap();
+        assert_eq!(jc.get("starved").unwrap().as_usize(), Some(1));
+        assert_eq!(j.path(&["frontend", "conn_rejected"]).unwrap().as_usize(), Some(1));
+        assert_eq!(
+            j.path(&["frontend", "cache_stale_purged"]).unwrap().as_usize(),
+            Some(4)
+        );
+    }
+
+    #[test]
+    fn client_slots_are_keyed_by_name_and_bounded() {
+        let m = MetricsHub::new();
+        let a1 = m.register_client("alice");
+        let a2 = m.register_client("alice");
+        assert!(Arc::ptr_eq(&a1, &a2), "a reused name shares one counter block");
+        // Fill the table past the cap: the overflow names collapse into
+        // one "(other)" slot instead of growing without bound.
+        for i in 0..(CLIENT_SLOTS_MAX + 50) {
+            let c = m.register_client(&format!("conn-{i}"));
+            c.record_enqueued();
+            c.record_dispatched();
+        }
+        let r = m.report();
+        assert!(
+            r.clients.len() <= CLIENT_SLOTS_MAX + 1,
+            "client table must stay bounded, got {}",
+            r.clients.len()
+        );
+        let other = r.clients.iter().find(|c| c.client == "(other)").unwrap();
+        assert!(other.dispatched >= 50, "overflow registrations aggregate: {other:?}");
+    }
+
+    #[test]
+    fn jain_index_edge_cases() {
+        assert_eq!(jain_index(std::iter::empty()), 1.0, "no flows");
+        assert_eq!(jain_index([5.0].into_iter()), 1.0, "one flow");
+        assert_eq!(jain_index([0.0, 0.0].into_iter()), 1.0, "no service yet");
+        // One flow got everything out of four: index = 1/4.
+        let skew = jain_index([8.0, 0.0, 0.0, 0.0].into_iter());
+        assert!((skew - 0.25).abs() < 1e-12, "index {skew}");
     }
 
     #[test]

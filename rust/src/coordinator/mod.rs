@@ -36,7 +36,10 @@ pub mod weights;
 
 pub use batcher::{BatchPolicy, Client, Response, ServeError, Server};
 pub use engine::{BatchExec, Engine, Prediction, SimEngine, SYNTHETIC_SEED};
-pub use metrics::{FrontendReport, MetricsHub, MetricsReport, ModelReport, ShardReport};
+pub use metrics::{
+    ClientCounters, ClientReport, FrontendReport, MetricsHub, MetricsReport, ModelReport,
+    ShardReport,
+};
 pub use pool::{EnginePool, SwapHandle};
 pub use registry::{ModelId, ModelRegistry, ModelSpec};
 pub use weights::ModelWeights;

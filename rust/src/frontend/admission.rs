@@ -19,10 +19,15 @@
 //!                                               ▼   → wire `Overloaded`
 //! ```
 //!
-//! Admission happens on the connection's *reader* thread while responses
-//! are written by a separate writer thread, so a blocked admit never
-//! stalls response delivery — permits keep draining and a `Block` gate
-//! always makes progress (no deadlock; pinned by the loopback tests).
+//! Admission happens on the front-end's *fair scheduler* thread at
+//! dispatch time (after a request wins its per-client queuing turn —
+//! see [`fairness`](super::fairness)) while responses are written by
+//! per-connection writer threads, so a blocked admit never stalls
+//! response delivery — permits keep draining and a `Block` gate always
+//! makes progress (no deadlock; pinned by the loopback tests).  Under
+//! `Shed` the structured `Overloaded` goes to the *fairly chosen*
+//! request: overload rejection is per the scheduler's choice, not
+//! arrival order.
 //! Response-cache **hits never touch the gate**: they are answered
 //! before admission and acquire no permit, so a saturated gate still
 //! serves the hot working set and a burst of hits cannot leak slots

@@ -74,6 +74,16 @@ impl CacheKey {
         self.epoch
     }
 
+    /// The topology name this key addresses.
+    pub fn arch(&self) -> &str {
+        &self.arch
+    }
+
+    /// The arithmetic mode this key addresses.
+    pub fn mode(&self) -> &str {
+        &self.mode
+    }
+
     /// The same key re-addressed to `epoch` (used when inserting: the
     /// entry must live under the epoch the response *executed* on,
     /// which may be newer than the epoch at admission time).
@@ -185,6 +195,30 @@ impl ResponseCache {
         }
     }
 
+    /// Eagerly drop every entry of `arch`/`mode` whose epoch is older
+    /// than `epoch`, returning how many were removed.
+    ///
+    /// Epoch keying already makes those entries *unreachable* the moment
+    /// a hot swap installs (correctness never needs this); what they
+    /// still consume until LRU pressure ages them out is **capacity** —
+    /// on a swap-heavy server a cache can be full of dead epochs while
+    /// the live epoch evicts its own fresh entries.  The server calls
+    /// this on every `Swapped{epoch}`, so the full configured capacity
+    /// is available to the new epoch immediately (regression-tested over
+    /// the wire).
+    pub fn purge_stale(&self, arch: &str, mode: &str, epoch: u64) -> usize {
+        let mut purged = 0usize;
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            let before = s.map.len();
+            s.map.retain(|k, _| {
+                !(k.arch() == arch && k.mode() == mode && k.epoch() < epoch)
+            });
+            purged += before - s.map.len();
+        }
+        purged
+    }
+
     /// Entries currently cached (across all shards).
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
@@ -252,6 +286,30 @@ mod tests {
         assert_eq!(c.get(&key_at(0, &row)), Some(scores(1.0)));
         assert_eq!(c.get(&key_at(1, &row)), Some(scores(2.0)));
         assert_eq!(key_at(0, &row).with_epoch(1), key_at(1, &row));
+    }
+
+    #[test]
+    fn purge_stale_drops_only_older_epochs_of_the_swapped_model() {
+        let c = ResponseCache::new(64, MetricsHub::new());
+        for i in 0..8u8 {
+            c.put(key_at(0, &[i]), scores(i as f32)); // stale after the swap
+            c.put(key_at(1, &[i]), scores(i as f32)); // the new epoch
+        }
+        // A different model at the old epoch must survive a cnn1 purge.
+        let other = CacheKey::new(Arc::from("cnn2"), Arc::from("fast"), 0, vec![9]);
+        c.put(other.clone(), scores(9.0));
+        let before = c.len();
+        assert_eq!(before, 17);
+        let purged = c.purge_stale("cnn1", "fast", 1);
+        assert_eq!(purged, 8, "exactly the epoch-0 cnn1 entries go");
+        assert_eq!(c.len(), 9);
+        for i in 0..8u8 {
+            assert_eq!(c.get(&key_at(0, &[i])), None, "stale entry {i} must be gone");
+            assert_eq!(c.get(&key_at(1, &[i])), Some(scores(i as f32)));
+        }
+        assert_eq!(c.get(&other), Some(scores(9.0)));
+        // Purging again is a no-op.
+        assert_eq!(c.purge_stale("cnn1", "fast", 1), 0);
     }
 
     #[test]

@@ -1,14 +1,21 @@
-//! Blocking, pipelining network client for the TCP front-end.
+//! Blocking and pipelining network clients for the TCP front-end.
 //!
 //! One [`NetClient`] owns one TCP connection.  [`NetClient::submit`]
 //! writes a request frame and returns immediately with a receiver, so
 //! any number of requests can be in flight on one connection (open
-//! loop); [`NetClient::infer`] is the blocking closed-loop convenience.
+//! loop); [`NetClient::infer`] is the blocking closed-loop convenience;
+//! [`NetClient::pipeline`] wraps the connection in a bounded-window
+//! submit/reap pair — the high-throughput open loop that can saturate a
+//! shard from one connection without unbounded client memory and
+//! without head-of-line blocking (responses reap in completion order).
+//!
 //! A background reader thread routes response frames to their waiting
-//! receivers by request id.  Dropping the client closes the socket and
-//! joins the reader; any still-pending receivers disconnect, which
-//! callers observe as [`NetError::Disconnected`] — a request is never
-//! silently dropped.
+//! receivers by request id.  **Every submitted request resolves**: when
+//! the connection dies, each still-pending receiver is answered with a
+//! synthesized outcome — the server's typed `TooManyConnections`
+//! rejection when one was received (the connection-cap path is typed
+//! end to end, never a bare hangup), otherwise
+//! [`NetError::Disconnected`].  A request is never silently dropped.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -19,7 +26,17 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireStatus, WireSwap};
+use super::wire::{
+    self, Frame, WireErrorKind, WireHello, WireRequest, WireResponse, WireStatus, WireSwap,
+};
+
+/// Client-local sentinel message: a synthesized response carrying this
+/// text (under the `Shutdown` error kind) marks a request whose
+/// connection died before the server answered.  Never sent on the wire;
+/// [`NetClient::wait`] folds it back into [`NetError::Disconnected`].
+/// The `odin-client:` prefix namespaces it so no plausible server-sent
+/// `Shutdown` message collides with the in-band marker.
+const DISCONNECTED_MSG: &str = "odin-client: connection closed before a response";
 
 /// A successful network inference.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -44,6 +61,13 @@ pub enum NetError {
         /// Suggested backoff before retrying (milliseconds).
         retry_after_ms: u32,
     },
+    /// Refused by the server's connection cap at accept time; reconnect
+    /// after the hint.  Every request submitted on the refused
+    /// connection resolves with this error.
+    TooManyConnections {
+        /// Suggested backoff before reconnecting (milliseconds).
+        retry_after_ms: u32,
+    },
     /// The server answered with a typed error.
     Remote {
         /// What went wrong server-side.
@@ -61,6 +85,9 @@ impl fmt::Display for NetError {
             NetError::Overloaded { retry_after_ms } => {
                 write!(f, "server overloaded; retry after {retry_after_ms} ms")
             }
+            NetError::TooManyConnections { retry_after_ms } => {
+                write!(f, "server connection cap reached; reconnect after {retry_after_ms} ms")
+            }
             NetError::Remote { kind, message } => write!(f, "server error ({kind:?}): {message}"),
             NetError::Disconnected => write!(f, "connection closed before a response"),
         }
@@ -74,9 +101,28 @@ struct Inner {
     writer: Mutex<TcpStream>,
     pending: Mutex<HashMap<u64, Sender<WireResponse>>>,
     closed: AtomicBool,
+    /// The server's typed connection-level rejection, when one arrived
+    /// (a `TooManyConnections` frame with id 0).  Synthesized into every
+    /// pending and later request so the rejection is typed end to end.
+    fate: Mutex<Option<u32>>,
     next_id: AtomicU64,
     arch: String,
     mode: String,
+}
+
+impl Inner {
+    /// The synthesized outcome for a request the server will never
+    /// answer: the stored connection fate, or the disconnect sentinel.
+    fn synthesized(&self, id: u64) -> WireResponse {
+        let status = match *self.fate.lock().unwrap() {
+            Some(retry_after_ms) => WireStatus::TooManyConnections { retry_after_ms },
+            None => WireStatus::Error {
+                kind: WireErrorKind::Shutdown,
+                message: DISCONNECTED_MSG.to_string(),
+            },
+        };
+        WireResponse { id, status }
+    }
 }
 
 /// Blocking, pipelining client over one front-end connection (see
@@ -92,6 +138,36 @@ impl NetClient {
     /// Names longer than the wire format's `u16` length fields are
     /// rejected here, so `submit` can never encode a corrupt frame.
     pub fn connect(addr: impl ToSocketAddrs, arch: &str, mode: &str) -> io::Result<NetClient> {
+        Self::connect_inner(addr, arch, mode, None)
+    }
+
+    /// Like [`NetClient::connect`], additionally introducing this
+    /// connection to the server under `name` (a `Hello` frame): the
+    /// server's per-client fairness counters and metrics JSON report it
+    /// under that name instead of a generated `conn-N`.  The name is
+    /// arbitrary UTF-8 — the server's JSON emitter escapes whatever
+    /// needs escaping.
+    pub fn connect_named(
+        addr: impl ToSocketAddrs,
+        arch: &str,
+        mode: &str,
+        name: &str,
+    ) -> io::Result<NetClient> {
+        if name.len() > u16::MAX as usize {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "client names are limited to 65535 bytes by the wire format",
+            ));
+        }
+        Self::connect_inner(addr, arch, mode, Some(name))
+    }
+
+    fn connect_inner(
+        addr: impl ToSocketAddrs,
+        arch: &str,
+        mode: &str,
+        name: Option<&str>,
+    ) -> io::Result<NetClient> {
         if arch.len() > u16::MAX as usize || mode.len() > u16::MAX as usize {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidInput,
@@ -107,10 +183,19 @@ impl NetClient {
             writer: Mutex::new(writer),
             pending: Mutex::new(HashMap::new()),
             closed: AtomicBool::new(false),
+            fate: Mutex::new(None),
             next_id: AtomicU64::new(1),
             arch: arch.to_string(),
             mode: mode.to_string(),
         });
+        if let Some(name) = name {
+            // Fire and forget: the server names this connection's
+            // fairness slot.  A failed write surfaces on the first
+            // request instead.
+            let hello = Frame::Hello(WireHello { id: 0, name: name.to_string() });
+            let mut w = inner.writer.lock().unwrap();
+            let _ = wire::write_frame(&mut *w, &hello);
+        }
         let reader = {
             let inner = Arc::clone(&inner);
             std::thread::Builder::new()
@@ -127,31 +212,56 @@ impl NetClient {
                     let waiter = inner.pending.lock().unwrap().remove(&resp.id);
                     if let Some(tx) = waiter {
                         let _ = tx.send(resp);
+                    } else if let WireStatus::TooManyConnections { retry_after_ms } = resp.status
+                    {
+                        // A connection-level rejection (id 0, never a
+                        // pending request): remember it so every pending
+                        // and later request resolves with the typed
+                        // error instead of a bare disconnect.
+                        *inner.fate.lock().unwrap() = Some(retry_after_ms);
                     }
                 }
-                // A server never sends requests or swap frames;
+                // A server never sends requests, swaps, or hellos;
                 // tolerate and move on.
-                Ok(Some(Frame::Request(_))) | Ok(Some(Frame::Swap(_))) => {}
+                Ok(Some(Frame::Request(_)))
+                | Ok(Some(Frame::Swap(_)))
+                | Ok(Some(Frame::Hello(_))) => {}
                 Ok(None) | Err(_) => break,
             }
         }
         // Mark closed *before* draining so a concurrent submit either
-        // lands before the drain (removed here) or sees the flag and
-        // removes itself — either way its receiver disconnects.
+        // lands before the drain (resolved here) or sees the flag and
+        // resolves itself — exactly one synthesized response each way.
         inner.closed.store(true, Ordering::SeqCst);
-        inner.pending.lock().unwrap().clear();
+        let drained: Vec<(u64, Sender<WireResponse>)> =
+            inner.pending.lock().unwrap().drain().collect();
+        for (id, tx) in drained {
+            let _ = tx.send(inner.synthesized(id));
+        }
     }
 
     /// Send one request without waiting (pipelining): the returned
-    /// receiver yields the response frame, or disconnects if the
-    /// connection dies first.  A row too large to fit one wire frame is
-    /// answered locally with a typed `BadRequest` — the connection (and
-    /// every other pipelined request on it) stays alive.
+    /// receiver yields the response frame — the server's, or a
+    /// synthesized typed outcome if the connection dies first; it never
+    /// hangs and is never silently dropped.  A row too large to fit one
+    /// wire frame is answered locally with a typed `BadRequest` — the
+    /// connection (and every other pipelined request on it) stays
+    /// alive.
     pub fn submit(&self, row: Vec<u8>) -> Receiver<WireResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with(row, tx);
+        rx
+    }
+
+    /// [`NetClient::submit`] with a caller-supplied response channel, so
+    /// many in-flight requests can share one receiver (what
+    /// [`Pipeline`] does to reap in completion order).  Returns the
+    /// request id.  Exactly one response per submission is eventually
+    /// sent into `tx`.
+    pub fn submit_with(&self, row: Vec<u8>, tx: Sender<WireResponse>) -> u64 {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let overhead = 64 + self.inner.arch.len() + self.inner.mode.len();
         if row.len() + overhead > wire::MAX_FRAME {
-            let (tx, rx) = mpsc::channel();
             let _ = tx.send(WireResponse {
                 id,
                 status: WireStatus::Error {
@@ -163,7 +273,7 @@ impl NetClient {
                     ),
                 },
             });
-            return rx;
+            return id;
         }
         let frame = Frame::Request(WireRequest {
             id,
@@ -171,51 +281,95 @@ impl NetClient {
             mode: self.inner.mode.clone(),
             row,
         });
-        self.send_frame(id, &frame)
+        self.send_frame(id, tx, &frame);
+        id
     }
 
-    /// Register `id` as pending, write `frame`, and hand back the
-    /// response receiver.  On a failed write — or a close racing the
-    /// write — the pending slot is removed so the receiver disconnects
-    /// instead of hanging (shared by [`NetClient::submit`] and
-    /// [`NetClient::swap`]).
-    fn send_frame(&self, id: u64, frame: &Frame) -> Receiver<WireResponse> {
-        let (tx, rx) = mpsc::channel();
+    /// Register `id` as pending and write `frame`.  The caller's
+    /// channel always resolves (shared by [`NetClient::submit_with`]
+    /// and [`NetClient::swap`]):
+    ///
+    /// * reader already closed — the drain may have passed, so resolve
+    ///   here with the synthesized outcome (the connection fate is
+    ///   final once `closed` is set).  Removal happens under the
+    ///   pending lock, so the drain and this path can never both answer
+    ///   one id.
+    /// * write failed but the reader is still running — leave the entry
+    ///   for the reader's drain.  A dead write means the socket is dead
+    ///   and the read side is about to find out, but the reader first
+    ///   processes everything the server managed to send — e.g. a typed
+    ///   `TooManyConnections` — so the eventual synthesized outcome
+    ///   carries the right fate instead of racing to a bare disconnect.
+    fn send_frame(&self, id: u64, tx: Sender<WireResponse>, frame: &Frame) {
         self.inner.pending.lock().unwrap().insert(id, tx);
-        let write_failed = {
+        let write_ok = {
             let mut w = self.inner.writer.lock().unwrap();
-            wire::write_frame(&mut *w, frame).is_err()
+            wire::write_frame(&mut *w, frame).is_ok()
         };
-        if write_failed || self.inner.closed.load(Ordering::SeqCst) {
-            self.inner.pending.lock().unwrap().remove(&id);
+        if !write_ok {
+            // A failed (possibly *partial*) write leaves the stream
+            // unusable — the server may be blocked mid-frame and would
+            // never answer or EOF.  Kill the socket so the reader exits
+            // promptly; its drain then resolves this entry (and every
+            // other pending one) with the connection's fate.  Nothing
+            // may hang.
+            let _ = self.inner.stream.shutdown(Shutdown::Both);
         }
-        rx
+        if self.inner.closed.load(Ordering::SeqCst) {
+            let taken = self.inner.pending.lock().unwrap().remove(&id);
+            if let Some(tx) = taken {
+                let _ = tx.send(self.inner.synthesized(id));
+            }
+        }
     }
 
     /// Resolve one submitted request into a typed outcome.
     pub fn wait(rx: Receiver<WireResponse>) -> Result<NetResponse, NetError> {
         match rx.recv() {
-            Ok(WireResponse {
-                status: WireStatus::Ok { shard, argmax, cached, epoch, logits },
-                ..
-            }) => Ok(NetResponse { logits, argmax, shard, epoch, cached }),
-            Ok(WireResponse { status: WireStatus::Error { kind, message }, .. }) => {
-                Err(NetError::Remote { kind, message })
+            Ok(resp) => Self::resolve(resp),
+            // Unreachable for requests submitted through this client
+            // (every pending id is answered or synthesized), kept as a
+            // defensive mapping for externally built channels.
+            Err(_) => Err(NetError::Disconnected),
+        }
+    }
+
+    /// Map one response frame to the typed client outcome.
+    fn resolve(resp: WireResponse) -> Result<NetResponse, NetError> {
+        match resp.status {
+            WireStatus::Ok { shard, argmax, cached, epoch, logits } => {
+                Ok(NetResponse { logits, argmax, shard, epoch, cached })
             }
-            Ok(WireResponse { status: WireStatus::Overloaded { retry_after_ms }, .. }) => {
+            WireStatus::Error { kind: WireErrorKind::Shutdown, message }
+                if message == DISCONNECTED_MSG =>
+            {
+                Err(NetError::Disconnected)
+            }
+            WireStatus::Error { kind, message } => Err(NetError::Remote { kind, message }),
+            WireStatus::Overloaded { retry_after_ms } => {
                 Err(NetError::Overloaded { retry_after_ms })
             }
-            Ok(WireResponse { status: WireStatus::Swapped { .. }, .. }) => Err(NetError::Remote {
+            WireStatus::TooManyConnections { retry_after_ms } => {
+                Err(NetError::TooManyConnections { retry_after_ms })
+            }
+            WireStatus::Swapped { .. } => Err(NetError::Remote {
                 kind: WireErrorKind::BadRequest,
                 message: "unexpected swap acknowledgement for an inference request".to_string(),
             }),
-            Err(_) => Err(NetError::Disconnected),
         }
     }
 
     /// Submit and block for the typed outcome (closed loop).
     pub fn infer(&self, row: Vec<u8>) -> Result<NetResponse, NetError> {
         Self::wait(self.submit(row))
+    }
+
+    /// Open a bounded-window pipelined view of this connection: up to
+    /// `window` requests in flight, reaped in completion order.  See
+    /// [`Pipeline`].
+    pub fn pipeline(&self, window: usize) -> Pipeline<'_> {
+        let (tx, rx) = mpsc::channel();
+        Pipeline { client: self, window: window.max(1), in_flight: 0, tx, rx }
     }
 
     /// Ask the server to hot-swap `arch`/`mode` to a new weight
@@ -242,16 +396,17 @@ impl NetClient {
             mode: mode.to_string(),
             seed,
         });
-        let rx = self.send_frame(id, &frame);
+        let (tx, rx) = mpsc::channel();
+        self.send_frame(id, tx, &frame);
         match rx.recv() {
             Ok(WireResponse { status: WireStatus::Swapped { epoch }, .. }) => Ok(epoch),
-            Ok(WireResponse { status: WireStatus::Error { kind, message }, .. }) => {
-                Err(NetError::Remote { kind, message })
-            }
-            Ok(_) => Err(NetError::Remote {
-                kind: WireErrorKind::BadRequest,
-                message: "unexpected response to a swap request".to_string(),
-            }),
+            Ok(resp) => match Self::resolve(resp) {
+                Err(e) => Err(e),
+                Ok(_) => Err(NetError::Remote {
+                    kind: WireErrorKind::BadRequest,
+                    message: "unexpected inference response to a swap request".to_string(),
+                }),
+            },
             Err(_) => Err(NetError::Disconnected),
         }
     }
@@ -263,5 +418,94 @@ impl Drop for NetClient {
         if let Some(h) = self.reader.take() {
             let _ = h.join();
         }
+    }
+}
+
+/// Bounded-window pipelined submit/reap over one [`NetClient`]
+/// connection — the genuinely asynchronous open loop:
+///
+/// * [`Pipeline::submit`] never waits for the submitted request; it
+///   blocks only when the window is full, and then exactly until *one*
+///   earlier response arrives (returned to the caller, so no result is
+///   ever dropped).  The window bounds client memory and keeps a single
+///   connection from buffering an unbounded flood.
+/// * [`Pipeline::reap`] / [`Pipeline::drain`] return outcomes in
+///   **completion order**, not submission order — a fast cache hit is
+///   reaped ahead of an earlier slow miss, so one stalled request never
+///   head-of-line-blocks the reaping side.  Callers that need
+///   correlation use the request id on the raw frame (`reap_frame`).
+///
+/// ```no_run
+/// use odin::frontend::NetClient;
+///
+/// let client = NetClient::connect("127.0.0.1:7000", "cnn1", "fast")?;
+/// let mut pipe = client.pipeline(64);
+/// let rows: Vec<Vec<u8>> = vec![vec![0u8; 784]; 1024];
+/// let mut ok = 0;
+/// for row in rows {
+///     if let Some(done) = pipe.submit(row) {
+///         ok += usize::from(done.is_ok());
+///     }
+/// }
+/// for done in pipe.drain() {
+///     ok += usize::from(done.is_ok());
+/// }
+/// println!("{ok} served");
+/// # Ok::<(), std::io::Error>(())
+/// ```
+pub struct Pipeline<'a> {
+    client: &'a NetClient,
+    window: usize,
+    in_flight: usize,
+    tx: Sender<WireResponse>,
+    rx: Receiver<WireResponse>,
+}
+
+impl Pipeline<'_> {
+    /// Submit one row.  Returns `None` while the window has room;
+    /// returns `Some(outcome)` — the completion-order-oldest in-flight
+    /// response — when the window was full and one had to be reaped to
+    /// make room.
+    pub fn submit(&mut self, row: Vec<u8>) -> Option<Result<NetResponse, NetError>> {
+        let reaped = if self.in_flight >= self.window { self.reap() } else { None };
+        self.client.submit_with(row, self.tx.clone());
+        self.in_flight += 1;
+        reaped
+    }
+
+    /// Block for the next completed response, in completion order.
+    /// `None` when nothing is in flight.  Never hangs: every submitted
+    /// request is answered by the server or synthesized on disconnect.
+    pub fn reap(&mut self) -> Option<Result<NetResponse, NetError>> {
+        self.reap_frame().map(|(_id, outcome)| outcome)
+    }
+
+    /// [`Pipeline::reap`] with the request id, for callers correlating
+    /// out-of-order completions to their submissions.
+    pub fn reap_frame(&mut self) -> Option<(u64, Result<NetResponse, NetError>)> {
+        if self.in_flight == 0 {
+            return None;
+        }
+        self.in_flight -= 1;
+        match self.rx.recv() {
+            Ok(resp) => Some((resp.id, NetClient::resolve(resp))),
+            // Defensive: the pipeline holds its own sender, so recv can
+            // only fail if this Pipeline was torn apart mid-call.
+            Err(_) => Some((0, Err(NetError::Disconnected))),
+        }
+    }
+
+    /// Reap every remaining in-flight response (completion order).
+    pub fn drain(&mut self) -> Vec<Result<NetResponse, NetError>> {
+        let mut out = Vec::with_capacity(self.in_flight);
+        while let Some(r) = self.reap() {
+            out.push(r);
+        }
+        out
+    }
+
+    /// Requests currently in flight (submitted, not yet reaped).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
     }
 }

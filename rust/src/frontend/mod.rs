@@ -18,19 +18,31 @@
 //!   [`Frontend::spawn`] serves one `(arch, mode)` pool;
 //!   [`Frontend::spawn_registry`] routes per request across every model
 //!   of a [`ModelRegistry`](crate::coordinator::ModelRegistry) and
-//!   honors hot-swap frames.
+//!   honors hot-swap frames.  Connections over
+//!   `FrontendConfig::max_connections` are refused with a typed
+//!   `TooManyConnections{retry_after}` frame, never a silent drop.
+//! * [`fairness`] — per-client fair queuing between the readers and the
+//!   pool: every connection owns a bounded queue (a hog backpressures
+//!   only itself) drained by one deficit-round-robin scheduler thread
+//!   (`--fairness drr|fifo`), with per-client dispatch/starvation
+//!   counters and a Jain fairness index in the metrics.
 //! * [`admission`] — bounded in-flight gate with a `block` (TCP
 //!   backpressure) or `shed` (structured `Overloaded{retry_after}`)
-//!   policy, so overload never stalls the pool dispatcher.  Cache hits
-//!   bypass the gate entirely.
+//!   policy, so overload never stalls the pool dispatcher.  The fair
+//!   scheduler admits at dispatch time; cache hits bypass the gate
+//!   entirely.
 //! * [`cache`] — sharded LRU response cache keyed by the full
 //!   `(arch, mode, epoch, row)` — bit-identical to uncached execution
 //!   because every backend is deterministic per weight generation, and
 //!   swap-safe because the epoch in the key makes pre-swap entries
 //!   unreachable the moment new weights install.
-//! * [`client`] — blocking, pipelining Rust client used by the tests,
-//!   `examples/mnist_serving.rs`, and `benches/net_throughput.rs`;
-//!   [`NetClient::swap`] drives wire-level hot swaps (`odin swap`).
+//! * [`client`] — blocking and pipelining Rust clients used by the
+//!   tests, `examples/mnist_serving.rs`, and
+//!   `benches/net_throughput.rs`; [`NetClient::pipeline`] is the
+//!   bounded-window async submit/reap pair (completion-order reaping,
+//!   no head-of-line blocking), [`NetClient::swap`] drives wire-level
+//!   hot swaps (`odin swap`), and [`NetClient::connect_named`] labels
+//!   the connection's fairness counters.
 //!
 //! End to end: `odin serve --listen 127.0.0.1:0 --model cnn1:fast
 //! --model cnn2:fast --cache 1024 --admission shed --queue-cap 256`
@@ -42,13 +54,16 @@
 pub mod admission;
 pub mod cache;
 pub mod client;
+pub mod fairness;
 pub mod server;
 pub mod wire;
 
 pub use admission::{AdmissionConfig, AdmissionGate, AdmissionPolicy, Permit};
 pub use cache::{CacheKey, CachedScores, ResponseCache};
-pub use client::{NetClient, NetError, NetResponse};
+pub use client::{NetClient, NetError, NetResponse, Pipeline};
+pub use fairness::{FairScheduler, FairnessConfig, FairnessPolicy};
 pub use server::{Frontend, FrontendConfig};
 pub use wire::{
-    Frame, WireErrorKind, WireRequest, WireResponse, WireStatus, WireSwap, WIRE_VERSION,
+    Frame, WireErrorKind, WireHello, WireRequest, WireResponse, WireStatus, WireSwap,
+    WIRE_VERSION,
 };

@@ -1,8 +1,10 @@
-//! The TCP front-end server: accept loop + per-connection reader/writer
-//! threads bridging [`wire`] frames into the engine pool.
+//! The TCP front-end server: accept loop, per-connection reader/writer
+//! threads, and a fair scheduler bridging [`wire`] frames into the
+//! engine pool.
 //!
 //! ```text
-//!              accept loop (one thread)
+//!              accept loop (one thread; over --max-conns ⇒ typed
+//!                    │       TooManyConnections{retry_after}, close)
 //!                    │ per connection
 //!        ┌───────────┴───────────┐
 //!        ▼                       ▼
@@ -10,45 +12,82 @@
 //!  read_frame ──▶ decode    drain FIFO of outcomes:
 //!   │ arch/mode check        • Immediate (cache hit, typed error,
 //!   │ cache lookup             Overloaded) — write now
-//!   │ admission gate         • Pending — wait for the pool response,
-//!   │ pool submit ──────────▶  insert into the cache, release the
-//!   ▼ next frame               admission permit, write
+//!   │ enqueue into this      • Pending — wait for the pool response,
+//!   ▼ client's fair queue      insert into the cache, release the
+//!                              admission permit, write
+//!        per-client queues (bounded; a full queue blocks only
+//!        its own reader ⇒ per-connection TCP backpressure)
+//!        └──▶ fair scheduler thread (DRR | FIFO):
+//!               pick client ─▶ admission gate ─▶ pool submit
+//!                               │ full + shed ⇒ Overloaded now
+//!                               ▼ full + block ⇒ wait for a permit
+//!                            hand Pending to that client's writer
 //! ```
 //!
 //! The reader never waits for a response before reading the next frame,
-//! so one connection pipelines arbitrarily many in-flight requests into
-//! the pool; the writer answers them in submission order (responses
-//! carry the request id, so clients may match them however they like).
-//! Because admission blocks only the reader while the writer keeps
-//! draining permits, a full `block` gate applies TCP backpressure to the
-//! client instead of deadlocking.  A peer that stops *reading* responses
-//! is torn down once a response write blocks for `WRITE_TIMEOUT` (30 s),
-//! which releases every admission permit its queue was holding — one
-//! bad client can degrade the shared gate only briefly, never wedge it.
+//! so one connection pipelines arbitrarily many in-flight requests; the
+//! writer answers with the request id, so clients match responses
+//! however they like.  **Requests no longer flow straight into the
+//! pool**: each connection's reader enqueues into its own bounded queue
+//! and one scheduler thread drains the queues fairly (deficit
+//! round-robin by default, global-FIFO as the measurable control — see
+//! [`fairness`](super::fairness)).  A hog pipelining an open-loop flood
+//! now queues behind *itself*: its queue fills, its reader blocks, TCP
+//! throttles it — while every other client's requests keep reaching the
+//! pool at their fair share (property-tested in `tests/fairness.rs`).
+//!
+//! Because cache hits and protocol rejections are answered by the
+//! reader directly (they cost no pool work), they can overtake queued
+//! requests of the same connection: responses are matched by id, not by
+//! order.  Pool-bound requests of one client always dispatch in their
+//! arrival order.
+//!
+//! The admission gate moved with the dispatch point: the *scheduler*
+//! admits, so a full `block` gate pauses dispatch (every queue keeps
+//! absorbing until its own bound) and `shed` rejects the fairly-chosen
+//! request with `Overloaded` at its dispatch turn.  A peer that stops
+//! *reading* responses wedges only itself: the scheduler hands a
+//! dispatch to a full writer queue via a non-blocking send, parks at
+//! most one outcome per connection, and skips that client until its
+//! writer drains — or until the writer's `WRITE_TIMEOUT` (30 s) tears
+//! the connection down, which releases every admission permit its queue
+//! was holding.  Disconnecting discards a client's undispatched backlog
+//! (a dead peer's work must not consume pool capacity).
+//!
+//! **Connection governance.**  `FrontendConfig::max_connections` caps
+//! concurrently open connections; one past the cap is answered with a
+//! single typed `TooManyConnections{retry_after}` frame (id 0) and
+//! closed — never a silent drop, never stream corruption.  Each
+//! connection may introduce itself with a `Hello` frame before its
+//! first request; the name labels its fairness counters in the metrics
+//! (else it reports as `conn-N`).
 //!
 //! **Routing.**  A front-end built with [`Frontend::spawn`] serves one
 //! `(arch, mode)` pair; one built with [`Frontend::spawn_registry`]
 //! routes each request by its `(arch, mode)` to the matching pool of a
 //! [`ModelRegistry`] — several models behind one listener, each with
 //! hot-swappable, epoch-versioned weights (swap frames are answered
-//! `Swapped{epoch}`).  Requests for an unserved model are answered with
-//! a typed `UnknownModel` error naming what *is* served.  Malformed
-//! rows are *not* rejected here: they flow to the pool, whose
+//! `Swapped{epoch}`, and a successful swap eagerly purges every cache
+//! entry the new epoch outdated).  Requests for an unserved model are
+//! answered with a typed `UnknownModel` error naming what *is* served.
+//! Malformed rows are *not* rejected here: they flow to the pool, whose
 //! per-request width validation answers them with `WrongRowWidth` — one
 //! validation path for local and network callers, regression-tested
 //! over the wire.
 //!
-//! **Admission and the cache-hit fast path.**  Cache lookups run
-//! *before* the admission gate and a hit is answered immediately — it
-//! never acquires a permit, so the hot working set keeps serving even
-//! while the gate is saturated, and a burst of hits can never leak gate
-//! slots (pinned by the loopback tests).  Only requests that actually
-//! reach the pool hold a permit, released when their response is
-//! written (or their connection dies).
+//! **Admission and the cache-hit fast path.**  Cache lookups run on the
+//! reader, *before* the fair queue and the admission gate, and a hit is
+//! answered immediately — it never takes a queue slot or a permit, so
+//! the hot working set keeps serving even while the gate is saturated,
+//! and a burst of hits can never leak gate slots (pinned by the
+//! loopback tests).  Only requests that actually reach the pool hold a
+//! permit, released when their response is written (or their connection
+//! dies).
 
+use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -60,6 +99,7 @@ use crate::coordinator::{Client, MetricsHub, Response, ServeError};
 
 use super::admission::{AdmissionConfig, AdmissionGate, Permit};
 use super::cache::{CacheKey, CachedScores, ResponseCache};
+use super::fairness::{ClientId, FairScheduler, FairnessConfig, Next};
 use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireStatus, WireSwap};
 
 /// Bound on each connection's queued-but-unwritten responses.  Immediate
@@ -67,7 +107,8 @@ use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireSta
 /// permit, so without this bound a client that sends requests but never
 /// reads responses would grow server memory without limit; a full queue
 /// instead blocks the reader, which stops reading frames and lets TCP
-/// backpressure throttle the peer.
+/// backpressure throttle the peer.  (The fair scheduler never blocks on
+/// it: it parks at most one outcome and skips the connection.)
 const WRITER_QUEUE: usize = 1024;
 
 /// How long one response write may block before the connection is
@@ -75,22 +116,33 @@ const WRITER_QUEUE: usize = 1024;
 /// mid-`write_frame` while admission permits sit in the queued `Pending`
 /// messages behind it; the timeout tears that connection down (dropping
 /// the queue releases every permit), so a single non-reading client can
-/// starve the shared gate for at most this long.
+/// hold gate slots for at most this long — and it never blocks the fair
+/// scheduler, which skips writer-full connections.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Front-end configuration: overload policy plus response caching.
+/// How long the scheduler waits per `next` call before re-checking
+/// parked outcomes (writer-full connections) and the stop flag.
+const SCHED_TICK: Duration = Duration::from_millis(25);
+
+/// Front-end configuration: overload policy, response caching, and
+/// connection governance.
 #[derive(Clone, Copy, Debug)]
 pub struct FrontendConfig {
     /// Admission gate configuration (policy, capacity, retry hint).
     pub admission: AdmissionConfig,
     /// Total response-cache capacity in entries; `0` disables caching.
     pub cache_capacity: usize,
-    /// Max concurrently open connections; further accepts are refused
-    /// (dropped) until one closes.  Each connection costs two OS
-    /// threads, so this — not the admission gate, which only bounds
-    /// in-flight *requests* — is what stops a connection flood from
-    /// exhausting the process.
+    /// Max concurrently open connections; one arriving past the cap is
+    /// answered with a typed `TooManyConnections{retry_after}` frame and
+    /// closed.  Each connection costs two OS threads, so this — not the
+    /// admission gate, which only bounds in-flight *requests* — is what
+    /// stops a connection flood from exhausting the process.
     pub max_connections: usize,
+    /// Backoff hint carried by `TooManyConnections` rejections (ms).
+    pub conn_retry_after_ms: u32,
+    /// Per-client fair-queuing configuration (policy, DRR quantum,
+    /// per-client queue bound).
+    pub fairness: FairnessConfig,
 }
 
 impl Default for FrontendConfig {
@@ -99,6 +151,8 @@ impl Default for FrontendConfig {
             admission: AdmissionConfig::default(),
             cache_capacity: 0,
             max_connections: 1024,
+            conn_retry_after_ms: 50,
+            fairness: FairnessConfig::default(),
         }
     }
 }
@@ -143,17 +197,31 @@ impl Router {
     }
 }
 
+/// One pool-bound request traveling through the fair scheduler: enough
+/// to admit, submit, and hand the outcome to the owning connection's
+/// writer.
+struct Job {
+    id: u64,
+    row: Vec<u8>,
+    pool: Client,
+    key: Option<CacheKey>,
+    wtx: SyncSender<WriterMsg>,
+}
+
 struct Shared {
     stop: AtomicBool,
     /// Read-half handles of live connections, kept weakly so a finished
     /// connection closes its socket immediately; `shutdown` upgrades
     /// whatever is still alive to unblock the readers.
     conns: Mutex<Vec<Weak<TcpStream>>>,
+    conn_seq: AtomicU64,
     metrics: MetricsHub,
     gate: AdmissionGate,
     cache: Option<ResponseCache>,
+    sched: FairScheduler<Job>,
     router: Router,
     max_connections: usize,
+    conn_retry_after_ms: u32,
 }
 
 /// A running TCP front-end over an engine pool (or several, via a
@@ -167,16 +235,22 @@ pub struct Frontend {
     addr: SocketAddr,
     shared: Arc<Shared>,
     accept: Option<JoinHandle<Vec<JoinHandle<()>>>>,
+    scheduler: Option<JoinHandle<()>>,
 }
 
 enum WriterMsg {
     /// Already-resolved response (cache hit, protocol error, shed).
     Immediate(WireResponse),
-    /// A pool submission to wait on, then answer.
+    /// A pool submission to wait on, then answer.  The permit is `None`
+    /// when the scheduler had to park this outcome for a writer-full
+    /// connection: a parked outcome releases its admission slot so the
+    /// scheduler can never block in `gate.admit()` waiting on a permit
+    /// it is itself holding (that was a deadlock with a small gate and
+    /// one wedged peer).
     Pending {
         id: u64,
         rx: Receiver<std::result::Result<Response, ServeError>>,
-        permit: Permit,
+        permit: Option<Permit>,
         key: Option<CacheKey>,
     },
 }
@@ -208,8 +282,10 @@ impl Frontend {
 
     /// Bind `listen` and serve every model of `registry`, routing each
     /// request by its `(arch, mode)`.  Swap frames are honored: the
-    /// registry reloads the model's weights and the response cache's
-    /// epoch keying retires all stale entries automatically.
+    /// registry reloads the model's weights, the response cache's epoch
+    /// keying retires all stale entries by construction, and the
+    /// front-end eagerly purges them so the capacity is immediately
+    /// available to the new epoch.
     pub fn spawn_registry(
         listen: &str,
         registry: Arc<ModelRegistry>,
@@ -230,13 +306,23 @@ impl Frontend {
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
+            conn_seq: AtomicU64::new(0),
             metrics: metrics.clone(),
             gate: AdmissionGate::new(cfg.admission, metrics.clone()),
             cache: (cfg.cache_capacity > 0)
                 .then(|| ResponseCache::new(cfg.cache_capacity, metrics)),
+            sched: FairScheduler::new(cfg.fairness),
             router,
             max_connections: cfg.max_connections.max(1),
+            conn_retry_after_ms: cfg.conn_retry_after_ms,
         });
+        let scheduler = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("odin-sched".into())
+                .spawn(move || Self::scheduler_loop(shared))
+                .context("spawning scheduler thread")?
+        };
         let accept = {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
@@ -244,7 +330,7 @@ impl Frontend {
                 .spawn(move || Self::accept_loop(listener, shared))
                 .context("spawning accept thread")?
         };
-        Ok(Frontend { addr, shared, accept: Some(accept) })
+        Ok(Frontend { addr, shared, accept: Some(accept), scheduler: Some(scheduler) })
     }
 
     /// The address the front-end actually bound (resolves `:0` ports).
@@ -258,6 +344,81 @@ impl Frontend {
     /// tests and operators can verify the gate never leaks slots.
     pub fn admission_in_flight(&self) -> usize {
         self.shared.gate.in_flight()
+    }
+
+    /// The fair scheduler: pull jobs by the configured policy, admit
+    /// them, submit to the pool, and hand the outcome to the owning
+    /// connection's writer.  A full writer queue never blocks this
+    /// thread: the outcome is parked (at most one per connection) and
+    /// the connection is skipped until its writer drains or dies.
+    fn scheduler_loop(shared: Arc<Shared>) {
+        let mut parked: HashMap<ClientId, (WriterMsg, SyncSender<WriterMsg>)> = HashMap::new();
+        loop {
+            // Retry parked outcomes first: a drained writer unblocks its
+            // connection; a dead one discards the outcome (dropping a
+            // parked Pending releases its permit) and its queue.
+            let mut still_parked = HashMap::new();
+            for (cid, (msg, wtx)) in parked.drain() {
+                match wtx.try_send(msg) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(msg)) => {
+                        still_parked.insert(cid, (msg, wtx));
+                    }
+                    Err(TrySendError::Disconnected(msg)) => {
+                        drop(msg);
+                        shared.sched.unregister(cid);
+                    }
+                }
+            }
+            parked = still_parked;
+            let blocked: Vec<ClientId> = parked.keys().copied().collect();
+            match shared.sched.next(&blocked, SCHED_TICK) {
+                Next::Stopped => break,
+                Next::TimedOut => continue,
+                Next::Job(cid, job) => {
+                    let (msg, wtx) = Self::dispatch(&shared, job);
+                    match wtx.try_send(msg) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(mut msg)) => {
+                            // Writer queue full (peer not reading): park
+                            // the outcome, skip this client until its
+                            // writer drains.  Never block: one wedged
+                            // peer must not stall everyone's dispatch.
+                            // Release the admission slot while parked —
+                            // the scheduler must never hold permits
+                            // across a blocking admit (deadlock).
+                            if let WriterMsg::Pending { permit, .. } = &mut msg {
+                                drop(permit.take());
+                            }
+                            parked.insert(cid, (msg, wtx));
+                        }
+                        Err(TrySendError::Disconnected(msg)) => {
+                            // Connection died mid-dispatch: discard (a
+                            // parked Pending's permit releases on drop)
+                            // and drop its remaining backlog.
+                            drop(msg);
+                            shared.sched.unregister(cid);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Admit one fairly-chosen job and turn it into the writer outcome.
+    fn dispatch(shared: &Shared, job: Job) -> (WriterMsg, SyncSender<WriterMsg>) {
+        let Job { id, row, pool, key, wtx } = job;
+        let msg = match shared.gate.admit() {
+            Err(retry_after_ms) => WriterMsg::Immediate(WireResponse {
+                id,
+                status: WireStatus::Overloaded { retry_after_ms },
+            }),
+            Ok(permit) => {
+                let rx = pool.submit(row);
+                WriterMsg::Pending { id, rx, permit: Some(permit), key }
+            }
+        };
+        (msg, wtx)
     }
 
     fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Vec<JoinHandle<()>> {
@@ -285,10 +446,12 @@ impl Frontend {
             // `handles.len()` counts live connections for the cap below.
             handles.retain(|h| !h.is_finished());
             if handles.len() >= shared.max_connections {
-                // Connection flood: refuse by dropping the socket — each
-                // connection costs two OS threads, so accepting past the
-                // cap would let idle connections exhaust the process.
-                drop(stream);
+                // Connection flood: refuse with one *typed* frame, then
+                // close — the peer learns why and when to retry, and its
+                // stream is never corrupted mid-frame.  Each connection
+                // costs two OS threads, so accepting past the cap would
+                // let idle connections exhaust the process.
+                Self::reject_connection(&shared, stream);
                 continue;
             }
             let _ = stream.set_nodelay(true);
@@ -310,6 +473,59 @@ impl Frontend {
         handles
     }
 
+    /// Answer an over-cap connection with one typed
+    /// `TooManyConnections{retry_after}` frame (id 0), then close it
+    /// *gently*: write the frame, FIN the write half, and briefly drain
+    /// the read half on a short-lived thread before dropping.  A hard
+    /// close here would race the peer: its next write (a `Hello` or a
+    /// pipelined request) hitting a fully-closed socket elicits an RST,
+    /// and an RST discards its unread receive buffer — the typed
+    /// rejection the peer was owed would vanish into a bare
+    /// `Disconnected`.  Draining until the peer half-closes (or a 2 s
+    /// timeout) keeps the frame deliverable; doing it off-thread keeps
+    /// a reject flood from wedging the accept loop.
+    fn reject_connection(shared: &Shared, stream: TcpStream) {
+        shared.metrics.record_conn_rejected();
+        let retry_after_ms = shared.conn_retry_after_ms;
+        let spawned = std::thread::Builder::new()
+            .name("odin-conn-reject".into())
+            .spawn(move || {
+                let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+                let resp = WireResponse {
+                    id: 0,
+                    status: WireStatus::TooManyConnections { retry_after_ms },
+                };
+                let mut w = &stream;
+                if wire::write_frame(&mut w, &Frame::Response(resp)).is_ok() {
+                    let _ = stream.shutdown(Shutdown::Write);
+                    // Drain with a *total* deadline, not just a
+                    // per-read timeout: a peer trickling one byte per
+                    // second must not pin this thread past 2 s (over-
+                    // cap peers cannot be allowed to hold the very
+                    // thread resource the cap protects).
+                    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+                    let mut sink = [0u8; 512];
+                    let mut r = &stream;
+                    while std::time::Instant::now() < deadline {
+                        match std::io::Read::read(&mut r, &mut sink) {
+                            Ok(0) => break,
+                            Ok(_) => continue,
+                            Err(e)
+                                if e.kind() == std::io::ErrorKind::WouldBlock
+                                    || e.kind() == std::io::ErrorKind::TimedOut =>
+                            {
+                                continue
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                }
+                let _ = stream.shutdown(Shutdown::Both);
+            });
+        drop(spawned);
+    }
+
     /// One connection: this thread reads and dispatches frames; a paired
     /// writer thread answers them (see module docs for the data flow).
     fn connection(read_half: Arc<TcpStream>, shared: Arc<Shared>) {
@@ -329,17 +545,40 @@ impl Frontend {
             Ok(h) => h,
             Err(_) => return,
         };
+        // Fairness identity, registered lazily at the first pool-bound
+        // request (or named by a preceding Hello frame).
+        let conn_no = shared.conn_seq.fetch_add(1, Ordering::Relaxed);
+        let mut fair: Option<ClientId> = None;
+        let mut hello_name: Option<String> = None;
         let mut reader = &*read_half;
         loop {
             match wire::read_frame(&mut reader) {
                 Ok(Some(Frame::Request(req))) => {
-                    if Self::handle_request(req, &wtx, &shared).is_err() {
-                        break; // writer gone (socket died)
+                    if Self::handle_request(
+                        req,
+                        &wtx,
+                        &shared,
+                        conn_no,
+                        &mut fair,
+                        &mut hello_name,
+                    )
+                    .is_err()
+                    {
+                        break; // writer gone (socket died) or scheduler stopped
                     }
                 }
                 Ok(Some(Frame::Swap(swap))) => {
                     if Self::handle_swap(swap, &wtx, &shared).is_err() {
                         break;
+                    }
+                }
+                Ok(Some(Frame::Hello(hello))) => {
+                    // Fire and forget: name the connection's fairness
+                    // slot.  After registration the name is frozen —
+                    // counters are keyed by it — so late Hellos are
+                    // ignored.
+                    if fair.is_none() {
+                        hello_name = Some(hello.name);
                     }
                 }
                 Ok(Some(Frame::Response(resp))) => {
@@ -360,18 +599,29 @@ impl Frontend {
             }
         }
         drop(wtx);
+        // Discard the undispatched backlog: a dead peer's queued work
+        // must not consume pool capacity (already-admitted requests
+        // complete and release their permits when the writer exits).
+        if let Some(cid) = fair {
+            shared.sched.unregister(cid);
+        }
         let _ = writer.join();
         let _ = read_half.shutdown(Shutdown::Both);
     }
 
-    /// Dispatch one decoded request; `Err` means the writer is gone.
-    /// Sends into the bounded writer queue, so a peer that stops reading
-    /// responses eventually blocks this reader (TCP backpressure) rather
-    /// than growing server memory.
+    /// Dispatch one decoded request; `Err` means the connection is done
+    /// (writer gone or scheduler stopped).  Cache hits and protocol
+    /// rejections are answered immediately through the bounded writer
+    /// queue (blocking this reader is per-connection backpressure);
+    /// pool-bound work is enqueued into this client's fair queue, whose
+    /// bound likewise blocks only this reader.
     fn handle_request(
         req: WireRequest,
         wtx: &SyncSender<WriterMsg>,
         shared: &Shared,
+        conn_no: u64,
+        fair: &mut Option<ClientId>,
+        hello_name: &mut Option<String>,
     ) -> std::result::Result<(), ()> {
         let (client, epoch) = match shared.router.route(&req.arch, &req.mode) {
             Some(route) => route,
@@ -391,12 +641,12 @@ impl Frontend {
                 return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
             }
         };
-        // Cache lookup comes before admission: a hit costs no pool work,
-        // so the hot working set keeps serving even under overload — and
-        // it must NOT acquire an admission permit (a saturated gate
-        // still serves hits; a burst of hits cannot leak slots).  The
-        // key carries the model's *current* epoch, so entries from
-        // before a hot swap can never be served after it.
+        // Cache lookup comes before fair queuing and admission: a hit
+        // costs no pool work, so it is answered even when the gate is
+        // full — and it must NOT acquire a queue slot or a permit (a
+        // saturated gate still serves hits; a burst of hits cannot leak
+        // slots).  The key carries the model's *current* epoch, so
+        // entries from before a hot swap can never be served after it.
         let (key, row) = match shared.cache.as_ref() {
             Some(cache) => {
                 // Single-model front-ends reuse their interned name Arcs
@@ -427,23 +677,29 @@ impl Frontend {
             }
             None => (None, req.row),
         };
-        let permit = match shared.gate.admit() {
-            Ok(p) => p,
-            Err(retry_after_ms) => {
-                let answer = WireResponse {
-                    id: req.id,
-                    status: WireStatus::Overloaded { retry_after_ms },
-                };
-                return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
+        // Register the fairness slot on first pool-bound work, under the
+        // Hello-chosen name when one arrived first.
+        let cid = match *fair {
+            Some(cid) => cid,
+            None => {
+                let name = hello_name.take().unwrap_or_else(|| format!("conn-{conn_no}"));
+                let counters = shared.metrics.register_client(&name);
+                let cid = shared.sched.register(counters);
+                *fair = Some(cid);
+                cid
             }
         };
-        let rx = client.submit(row);
-        wtx.send(WriterMsg::Pending { id: req.id, rx, permit, key }).map_err(|_| ())
+        let job = Job { id: req.id, row, pool: client, key, wtx: wtx.clone() };
+        shared.sched.enqueue(cid, 1, job).map_err(|_| ())
     }
 
     /// Handle one hot-swap frame.  Swaps are admin operations: they take
     /// no admission permit and are answered immediately (`Swapped` with
-    /// the new epoch, or a typed error).  `Err` means the writer is
+    /// the new epoch, or a typed error).  A successful swap eagerly
+    /// purges every response-cache entry of the model's older epochs —
+    /// they are already unreachable by construction (the epoch is in the
+    /// key), purging them returns the capacity to the new epoch *now*
+    /// instead of waiting for LRU pressure.  `Err` means the writer is
     /// gone.
     fn handle_swap(
         swap: WireSwap,
@@ -469,7 +725,14 @@ impl Frontend {
                     }
                 } else {
                     match registry.swap_seed(&swap.arch, &swap.mode, swap.seed) {
-                        Ok(epoch) => WireStatus::Swapped { epoch },
+                        Ok(epoch) => {
+                            if let Some(cache) = shared.cache.as_ref() {
+                                let purged =
+                                    cache.purge_stale(&swap.arch, &swap.mode, epoch);
+                                shared.metrics.record_cache_stale_purge(purged as u64);
+                            }
+                            WireStatus::Swapped { epoch }
+                        }
                         Err(e) => WireStatus::Error {
                             kind: WireErrorKind::Backend,
                             message: format!("swap failed: {e:#}"),
@@ -500,8 +763,19 @@ impl Frontend {
                                 // *executed* on — a swap may have landed
                                 // after admission, and an entry must
                                 // never sit under an epoch whose engine
-                                // did not produce its bytes.
-                                cache.put(k.with_epoch(resp.epoch), scores);
+                                // did not produce its bytes.  And only
+                                // if that epoch is still current: a
+                                // pre-swap straggler's entry would be
+                                // unreachable dead weight, re-occupying
+                                // capacity the eager purge reclaimed.
+                                let current = shared
+                                    .router
+                                    .route(k.arch(), k.mode())
+                                    .map(|(_, e)| e)
+                                    .unwrap_or(resp.epoch);
+                                if resp.epoch >= current {
+                                    cache.put(k.with_epoch(resp.epoch), scores);
+                                }
                             }
                             WireStatus::Ok {
                                 shard: scores.shard,
@@ -535,14 +809,18 @@ impl Frontend {
     }
 
     /// Stop accepting, close every live connection, and join every
-    /// front-end thread.  The engine pool is not owned and keeps
-    /// running; shut it down separately afterwards.
+    /// front-end thread (scheduler included; its undispatched queues are
+    /// dropped).  The engine pool is not owned and keeps running; shut
+    /// it down separately afterwards.
     pub fn shutdown(mut self) {
         self.stop_impl();
     }
 
     fn stop_impl(&mut self) {
         self.shared.stop.store(true, Ordering::SeqCst);
+        // Stop the scheduler first: readers blocked enqueueing wake with
+        // a closed error and fall out of their loops.
+        self.shared.sched.stop();
         // Wake the blocking accept with a throwaway connection (a
         // wildcard bind address is not connectable; use loopback).
         let mut wake = self.addr;
@@ -564,12 +842,15 @@ impl Frontend {
                 let _ = h.join();
             }
         }
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
     }
 }
 
 impl Drop for Frontend {
     fn drop(&mut self) {
-        if self.accept.is_some() {
+        if self.accept.is_some() || self.scheduler.is_some() {
             self.stop_impl();
         }
     }

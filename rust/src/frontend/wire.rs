@@ -11,18 +11,29 @@
 //!                [row u32+bytes]
 //! swap     body: [ver u8][kind=3][id u64][arch u16+bytes][mode u16+bytes]
 //!                [seed u64]
+//! hello    body: [ver u8][kind=4][id u64][name u16+bytes]
 //! response body: [ver u8][kind=2][id u64][status u8] ...
-//!   status 0 Ok:         [shard u32][argmax u8][cached u8][epoch u64]
-//!                        [10 x f32]
-//!   status 1 Error:      [kind u8][message u32+bytes]
-//!   status 2 Overloaded: [retry_after_ms u32]
-//!   status 3 Swapped:    [epoch u64]
+//!   status 0 Ok:             [shard u32][argmax u8][cached u8][epoch u64]
+//!                            [10 x f32]
+//!   status 1 Error:          [kind u8][message u32+bytes]
+//!   status 2 Overloaded:     [retry_after_ms u32]
+//!   status 3 Swapped:        [epoch u64]
+//!   status 4 TooManyConns:   [retry_after_ms u32]
 //! ```
 //!
 //! Version 2 added the weights *epoch* to `Ok` (which generation of the
 //! model produced the scores) and the swap surface (`kind 3` requests a
 //! hot weight swap; `Swapped` acknowledges it with the new epoch) — the
 //! `Ok` layout changed, hence the version bump.
+//!
+//! Version 3 added connection governance: the `Hello` frame (kind 4) —
+//! an optional, fire-and-forget self-identification a client may send
+//! before its first request so the server's per-client fairness metrics
+//! carry a human-chosen name instead of a generated `conn-N` — and the
+//! `TooManyConnections` status (4), written once (with id 0) to a
+//! connection refused by the server's connection cap before it is
+//! closed, so conn-limit rejection is *typed* on the wire rather than a
+//! silent drop.
 //!
 //! Decoding is strict: unknown versions, kinds, status/error codes,
 //! truncated bodies, trailing bytes, and frame lengths outside
@@ -34,7 +45,7 @@
 use std::io::{self, Read, Write};
 
 /// Protocol version byte carried by every frame.
-pub const WIRE_VERSION: u8 = 2;
+pub const WIRE_VERSION: u8 = 3;
 
 /// Upper bound on a frame body, guarding malformed/hostile length
 /// prefixes (a 784-byte MNIST row frame is ~850 bytes).
@@ -43,6 +54,7 @@ pub const MAX_FRAME: usize = 1 << 20;
 const KIND_REQUEST: u8 = 1;
 const KIND_RESPONSE: u8 = 2;
 const KIND_SWAP: u8 = 3;
+const KIND_HELLO: u8 = 4;
 
 /// Typed error kinds a response can carry — the wire mirror of
 /// [`crate::coordinator::ServeError`] plus protocol-level rejections.
@@ -113,6 +125,23 @@ pub struct WireSwap {
     pub seed: u64,
 }
 
+/// One client self-identification: an optional fire-and-forget frame a
+/// client may send before its first request so the server's per-client
+/// fairness accounting (queue share, starvation counters, the metrics
+/// JSON) reports a client-chosen name.  The server sends no reply; a
+/// `Hello` after the connection's fairness slot exists (i.e. after its
+/// first pool-bound request) is ignored.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireHello {
+    /// Client-chosen id (unused — `Hello` gets no response — but kept
+    /// so every frame shares the id-first layout).
+    pub id: u64,
+    /// The client's self-chosen display name.  Arbitrary UTF-8: the
+    /// metrics JSON emitter escapes control characters, which the
+    /// loopback tests pin end to end.
+    pub name: String,
+}
+
 /// Response payload: scores, a typed error, an overload rejection, or a
 /// swap acknowledgement.
 #[derive(Clone, Debug, PartialEq)]
@@ -150,6 +179,13 @@ pub enum WireStatus {
         /// The newly installed weights epoch.
         epoch: u64,
     },
+    /// The server's connection cap is reached: this connection was
+    /// refused.  Written once with id 0, then the server closes the
+    /// socket — reconnect after the hinted backoff.
+    TooManyConnections {
+        /// Suggested client backoff before reconnecting (milliseconds).
+        retry_after_ms: u32,
+    },
 }
 
 /// One response frame (the echo of a request id plus its status).
@@ -171,6 +207,8 @@ pub enum Frame {
     /// Client-to-server hot-swap request (answered with
     /// [`WireStatus::Swapped`] or a typed error).
     Swap(WireSwap),
+    /// Client-to-server self-identification (fire and forget).
+    Hello(WireHello),
 }
 
 fn bad(msg: String) -> io::Error {
@@ -290,6 +328,10 @@ impl Frame {
                         body.push(3);
                         put_u64(&mut body, *epoch);
                     }
+                    WireStatus::TooManyConnections { retry_after_ms } => {
+                        body.push(4);
+                        put_u32(&mut body, *retry_after_ms);
+                    }
                 }
             }
             Frame::Swap(s) => {
@@ -300,6 +342,12 @@ impl Frame {
                 put_u16(&mut body, s.mode.len() as u16);
                 body.extend_from_slice(s.mode.as_bytes());
                 put_u64(&mut body, s.seed);
+            }
+            Frame::Hello(h) => {
+                body.push(KIND_HELLO);
+                put_u64(&mut body, h.id);
+                put_u16(&mut body, h.name.len() as u16);
+                body.extend_from_slice(h.name.as_bytes());
             }
         }
         // Oversized bodies are rejected by `write_frame` (and by the
@@ -353,6 +401,7 @@ impl Frame {
                     }
                     2 => WireStatus::Overloaded { retry_after_ms: c.u32()? },
                     3 => WireStatus::Swapped { epoch: c.u64()? },
+                    4 => WireStatus::TooManyConnections { retry_after_ms: c.u32()? },
                     s => return Err(bad(format!("unknown response status {s}"))),
                 };
                 Frame::Response(WireResponse { id, status })
@@ -365,6 +414,12 @@ impl Frame {
                 let mode = c.string(mode_len)?;
                 let seed = c.u64()?;
                 Frame::Swap(WireSwap { id, arch, mode, seed })
+            }
+            KIND_HELLO => {
+                let id = c.u64()?;
+                let name_len = c.u16()? as usize;
+                let name = c.string(name_len)?;
+                Frame::Hello(WireHello { id, name })
             }
             k => return Err(bad(format!("unknown frame kind {k}"))),
         };
@@ -498,6 +553,28 @@ mod tests {
             id: 11,
             status: WireStatus::Swapped { epoch: 3 },
         }));
+        round_trip(Frame::Response(WireResponse {
+            id: 0,
+            status: WireStatus::TooManyConnections { retry_after_ms: 50 },
+        }));
+    }
+
+    #[test]
+    fn hello_frames_round_trip_including_control_characters() {
+        round_trip(Frame::Hello(WireHello { id: 0, name: String::new() }));
+        // Client names are arbitrary UTF-8 — control characters and
+        // non-ASCII must survive the wire untouched (the metrics JSON
+        // emitter, not the wire, is responsible for escaping them).
+        round_trip(Frame::Hello(WireHello {
+            id: 42,
+            name: "alice\u{1}\t\n\"\\Ω馬".to_string(),
+        }));
+        // Truncation strictness holds for the hello layout too.
+        let full = Frame::Hello(WireHello { id: 3, name: "bob".to_string() }).encode();
+        let body = &full[4..];
+        for cut in 0..body.len() {
+            assert!(Frame::decode_body(&body[..cut]).is_err(), "prefix {cut} decoded");
+        }
     }
 
     #[test]

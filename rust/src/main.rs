@@ -15,6 +15,7 @@
 //!            [--swap-mid ARCH:MODE]  (hot-swap that model mid-demo)
 //!            [--listen ADDR] [--cache N]
 //!            [--admission block|shed] [--queue-cap Q]
+//!            [--fairness drr|fifo] [--max-conns N] [--hog]
 //!            [--metrics-json PATH]
 //!                                sharded dynamic-batching serving demo +
 //!                                per-shard metrics; --listen exposes the
@@ -25,6 +26,9 @@
 //! odin swap  --addr HOST:PORT --model ARCH:MODE [--seed N]
 //!                                hot-swap a running front-end's model to
 //!                                a new weight generation (epoch++)
+//! odin benchgate --baseline PATH --pr PATH... [--tolerance 0.75]
+//!                                CI perf gate: compare bench --json dumps
+//!                                against the committed baseline floors
 //! odin ablation                  binary vs mux accumulation cost/error
 //! odin selftest                  hermetic cross-checks (+ golden/PJRT
 //!                                when artifacts / the pjrt feature exist)
@@ -48,7 +52,10 @@ use odin::coordinator::{
     SYNTHETIC_SEED,
 };
 use odin::dataset::TestSet;
-use odin::frontend::{AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient};
+use odin::frontend::{
+    AdmissionConfig, AdmissionPolicy, FairnessConfig, FairnessPolicy, Frontend, FrontendConfig,
+    NetClient, NetError,
+};
 use odin::harness::{fig6, headline, table1, table2, table3};
 use odin::mapper::{map_topology, ExecConfig};
 use odin::pim::AccumulateMode;
@@ -118,6 +125,9 @@ fn main() -> Result<()> {
             let admission_s = flag(&args, "--admission", "block");
             let admission = AdmissionPolicy::parse(&admission_s)
                 .ok_or_else(|| anyhow::anyhow!("unknown admission policy {admission_s}"))?;
+            let fairness_s = flag(&args, "--fairness", "drr");
+            let fairness = FairnessPolicy::parse(&fairness_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown fairness policy {fairness_s}"))?;
             let opts = ServeOpts {
                 arch,
                 requests,
@@ -130,8 +140,21 @@ fn main() -> Result<()> {
                 cache: flag(&args, "--cache", "0").parse()?,
                 admission,
                 queue_cap: flag(&args, "--queue-cap", "256").parse()?,
+                fairness,
+                max_conns: flag(&args, "--max-conns", "1024").parse()?,
+                hog: args.iter().any(|a| a == "--hog"),
                 metrics_json: opt_flag(&args, "--metrics-json"),
             };
+            if opts.hog {
+                ensure!(
+                    opts.listen.is_some(),
+                    "--hog is a network adversarial demo: pass --listen ADDR"
+                );
+                ensure!(
+                    opts.models.is_empty(),
+                    "--hog runs against the single-model front-end (drop --model)"
+                );
+            }
             if opts.models.is_empty() {
                 ensure!(
                     opts.swap_mid.is_none(),
@@ -141,6 +164,9 @@ fn main() -> Result<()> {
             } else {
                 cmd_serve_registry(&artifacts, &backend, &opts)?;
             }
+        }
+        "benchgate" => {
+            cmd_benchgate(&args)?;
         }
         "swap" => {
             let addr = opt_flag(&args, "--addr")
@@ -169,7 +195,8 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "odin — PCRAM PIM accelerator reproduction
-commands: table1 table2 table3 fig6 headline eval serve swap ablation selftest
+commands: table1 table2 table3 fig6 headline eval serve swap benchgate
+          ablation selftest
 common flags: --artifacts DIR --backend sim|pjrt
 eval:  --arch cnn1|cnn2 --mode fast|sc|mux|float --limit N
 serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
@@ -182,10 +209,19 @@ serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
                       network clients; default: in-process)
        --cache N (response-cache entries, 0 = off; keyed by weights epoch)
        --admission block|shed --queue-cap Q (overload policy + in-flight cap)
+       --fairness drr|fifo (per-client scheduling: deficit round-robin or
+                      global arrival order; per-client counters + a Jain
+                      fairness index land in the metrics)
+       --max-conns N (connection cap; one past it gets a typed
+                      TooManyConnections{retry_after} and is closed)
+       --hog (adversarial demo: a bursting hog vs polite clients; polite
+                      clients retry typed conn rejections)
        --metrics-json PATH (dump the MetricsReport snapshot as JSON,
-                      incl. per-model/per-epoch counters)
+                      incl. per-model/per-epoch + per-client counters)
 swap:  --addr HOST:PORT --model ARCH:MODE [--seed N] — hot-swap a running
        multi-model front-end's weights; prints the new epoch
+benchgate: --baseline PATH --pr PATH (repeatable) [--tolerance 0.75] —
+       fail if any bench metric drops below tolerance x baseline
 (`sim` is hermetic: synthetic weights/data unless artifacts exist;
  `pjrt` needs a build with --features pjrt and `make artifacts`)";
 
@@ -293,8 +329,33 @@ struct ServeOpts {
     cache: usize,
     admission: AdmissionPolicy,
     queue_cap: usize,
+    /// Per-client scheduling between connections (`drr` | `fifo`).
+    fairness: FairnessPolicy,
+    /// Connection cap; one past it gets a typed `TooManyConnections`.
+    max_conns: usize,
+    /// Adversarial demo: one hog connection bursts its whole quota
+    /// pipelined while polite clients trickle; prints per-client
+    /// fairness and exercises the connection cap's typed retry path.
+    hog: bool,
     /// Dump the final `MetricsReport` as JSON to this path.
     metrics_json: Option<String>,
+}
+
+impl ServeOpts {
+    /// The L4 front-end configuration these options describe.
+    fn frontend_config(&self) -> FrontendConfig {
+        FrontendConfig {
+            admission: AdmissionConfig {
+                policy: self.admission,
+                queue_cap: self.queue_cap,
+                ..AdmissionConfig::default()
+            },
+            cache_capacity: self.cache,
+            max_connections: self.max_conns,
+            fairness: FairnessConfig { policy: self.fairness, ..FairnessConfig::default() },
+            ..FrontendConfig::default()
+        }
+    }
 }
 
 /// Serving demo: spawn the sharded engine pool, hammer it from client
@@ -388,41 +449,44 @@ fn cmd_serve(artifacts: &str, backend: &str, opts: &ServeOpts) -> Result<()> {
             handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
         }
         Some(listen) => {
-            let cfg = FrontendConfig {
-                admission: AdmissionConfig {
-                    policy: opts.admission,
-                    queue_cap: opts.queue_cap,
-                    ..AdmissionConfig::default()
-                },
-                cache_capacity: opts.cache,
-                ..FrontendConfig::default()
-            };
-            let frontend =
-                Frontend::spawn(listen, client.clone(), arch, "fast", cfg, metrics.clone())?;
+            let frontend = Frontend::spawn(
+                listen,
+                client.clone(),
+                arch,
+                "fast",
+                opts.frontend_config(),
+                metrics.clone(),
+            )?;
             let addr = frontend.local_addr();
             println!(
-                "L4 front-end listening on {addr} (cache {}, admission {:?}, queue cap {})",
-                opts.cache, opts.admission, opts.queue_cap
+                "L4 front-end listening on {addr} (cache {}, admission {:?}, queue cap {}, \
+                 fairness {:?}, max conns {})",
+                opts.cache, opts.admission, opts.queue_cap, opts.fairness, opts.max_conns
             );
-            let mut handles = Vec::new();
-            for t in 0..concurrency {
-                let images = images_for(t);
-                let arch = arch.to_string();
-                handles.push(std::thread::spawn(move || -> Result<usize> {
-                    let net = NetClient::connect(addr, &arch, "fast")?;
-                    let mut ok = 0usize;
-                    for img in images {
-                        if net.infer(img).is_ok() {
-                            ok += 1;
+            let ok = if opts.hog {
+                run_hog_demo(addr, arch, opts, &test)?
+            } else {
+                let mut handles = Vec::new();
+                for t in 0..concurrency {
+                    let images = images_for(t);
+                    let arch = arch.to_string();
+                    handles.push(std::thread::spawn(move || -> Result<usize> {
+                        let net = NetClient::connect(addr, &arch, "fast")?;
+                        let mut ok = 0usize;
+                        for img in images {
+                            if net.infer(img).is_ok() {
+                                ok += 1;
+                            }
                         }
-                    }
-                    Ok(ok)
-                }));
-            }
-            let mut ok = 0usize;
-            for h in handles {
-                ok += h.join().unwrap()?;
-            }
+                        Ok(ok)
+                    }));
+                }
+                let mut ok = 0usize;
+                for h in handles {
+                    ok += h.join().unwrap()?;
+                }
+                ok
+            };
             frontend.shutdown();
             ok
         }
@@ -437,6 +501,191 @@ fn cmd_serve(artifacts: &str, backend: &str, opts: &ServeOpts) -> Result<()> {
             .with_context(|| format!("writing metrics json to {path}"))?;
         println!("metrics json written to {path}");
     }
+    Ok(())
+}
+
+/// The adversarial fairness demo behind `serve --listen ... --hog`: one
+/// hog connection bursts its entire quota pipelined (open loop, window
+/// 256) while `--concurrency` polite clients (clamped to 2..=8) trickle
+/// the same per-client quota through small windows.  Every client gets
+/// the *same demand*, so with a fair scheduler the final per-client
+/// dispatch counts come out even (fairness index near 1.0 in the
+/// metrics JSON) — what differs under `--fairness fifo` is who waits.
+/// Polite clients that hit the connection cap retry on the typed
+/// `TooManyConnections{retry_after}` rejection, which is how CI
+/// exercises `--max-conns`.
+fn run_hog_demo(
+    addr: std::net::SocketAddr,
+    arch: &str,
+    opts: &ServeOpts,
+    test: &TestSet,
+) -> Result<usize> {
+    let k = opts.concurrency.clamp(2, 8);
+    let per_client = (opts.requests / (k + 1)).max(1);
+    println!(
+        "hog demo [{:?}]: 1 hog bursting {per_client} pipelined requests vs {k} polite \
+         clients ({per_client} each, window 4), conn cap {}",
+        opts.fairness, opts.max_conns
+    );
+    let images: Vec<Vec<u8>> = (0..per_client)
+        .map(|i| test.samples[i % test.len()].image.clone())
+        .collect();
+
+    // The hog signals once connected (so polite clients provably race
+    // it for the remaining slots) and holds its connection until the
+    // polite clients finish (so the connection cap stays contended for
+    // the whole run, whatever the pool's speed).
+    let (hog_up_tx, hog_up_rx) = std::sync::mpsc::channel::<()>();
+    let polites_done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let hog = {
+        let arch = arch.to_string();
+        let images = images.clone();
+        let done = Arc::clone(&polites_done);
+        std::thread::spawn(move || -> Result<usize> {
+            let net = NetClient::connect_named(addr, &arch, "fast", "hog")?;
+            let _ = hog_up_tx.send(());
+            let mut pipe = net.pipeline(256);
+            let mut ok = 0usize;
+            for img in images {
+                if let Some(reaped) = pipe.submit(img) {
+                    ok += usize::from(reaped.is_ok());
+                }
+            }
+            for reaped in pipe.drain() {
+                ok += usize::from(reaped.is_ok());
+            }
+            while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Ok(ok)
+        })
+    };
+    hog_up_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("hog client died before connecting"))?;
+    // Head start: the hog's flood is queued before any polite client
+    // connects, so FIFO visibly privileges it and DRR visibly does not.
+    std::thread::sleep(Duration::from_millis(50));
+
+    let mut polite = Vec::new();
+    for p in 0..k {
+        let arch = arch.to_string();
+        let images = images.clone();
+        polite.push(std::thread::spawn(move || -> Result<(usize, usize)> {
+            let name = format!("polite-{p}");
+            let mut conn_rejects = 0usize;
+            for _attempt in 0..1000 {
+                let net = NetClient::connect_named(addr, &arch, "fast", &name)?;
+                match drive_polite(&net, &images) {
+                    Ok(ok) => return Ok((ok, conn_rejects)),
+                    Err(PoliteRetry::Rejected(retry_after_ms)) => {
+                        conn_rejects += 1;
+                        drop(net);
+                        std::thread::sleep(Duration::from_millis(retry_after_ms as u64 + 5));
+                    }
+                    Err(PoliteRetry::Disconnected) => {
+                        // The connection died without a typed verdict
+                        // (e.g. torn down mid-run); retry with a small
+                        // fixed backoff rather than silently reporting
+                        // a partial run.
+                        drop(net);
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+            bail!("polite client {p} never completed a full run");
+        }));
+    }
+
+    let mut total = 0usize;
+    let mut rejects = 0usize;
+    for (p, h) in polite.into_iter().enumerate() {
+        let (ok, r) = h.join().unwrap()?;
+        println!("  polite-{p}: {ok}/{per_client} ok after {r} typed conn rejections");
+        total += ok;
+        rejects += r;
+    }
+    polites_done.store(true, std::sync::atomic::Ordering::Relaxed);
+    let hog_ok = hog.join().unwrap()?;
+    println!("  hog: {hog_ok}/{per_client} ok");
+    println!(
+        "hog demo done: {} served, {rejects} polite reconnects after TooManyConnections",
+        total + hog_ok
+    );
+    Ok(total + hog_ok)
+}
+
+/// Why a polite client's run must be retried on a fresh connection.
+enum PoliteRetry {
+    /// The server refused the connection at the cap (typed
+    /// `TooManyConnections`): reconnect after the hint.
+    Rejected(u32),
+    /// The connection died without a typed verdict.
+    Disconnected,
+}
+
+/// One polite client's run over one connection.
+fn drive_polite(net: &NetClient, images: &[Vec<u8>]) -> std::result::Result<usize, PoliteRetry> {
+    fn count(
+        done: std::result::Result<odin::frontend::NetResponse, NetError>,
+        ok: &mut usize,
+    ) -> std::result::Result<(), PoliteRetry> {
+        match done {
+            Ok(_) => *ok += 1,
+            Err(NetError::TooManyConnections { retry_after_ms }) => {
+                return Err(PoliteRetry::Rejected(retry_after_ms))
+            }
+            Err(NetError::Disconnected) => return Err(PoliteRetry::Disconnected),
+            Err(_) => {}
+        }
+        Ok(())
+    }
+    let mut pipe = net.pipeline(4);
+    let mut ok = 0usize;
+    for img in images.iter().cloned() {
+        if let Some(done) = pipe.submit(img) {
+            count(done, &mut ok)?;
+        }
+    }
+    for done in pipe.drain() {
+        count(done, &mut ok)?;
+    }
+    Ok(ok)
+}
+
+/// `odin benchgate`: compare bench `--json` dumps against the committed
+/// baseline and fail (non-zero exit) on a drop past the tolerance —
+/// the CI `bench-smoke` job's verdict, kept in-repo so the comparison
+/// logic is unit-tested like everything else.
+fn cmd_benchgate(args: &[String]) -> Result<()> {
+    use odin::util::{benchgate, json};
+
+    let baseline_path = opt_flag(args, "--baseline")
+        .ok_or_else(|| anyhow::anyhow!("benchgate needs --baseline PATH"))?;
+    let pr_paths = multi_flag(args, "--pr");
+    ensure!(
+        !pr_paths.is_empty(),
+        "benchgate needs at least one --pr PATH (a bench --smoke --json dump)"
+    );
+    let tolerance: f64 = flag(args, "--tolerance", "0.75").parse()?;
+    let text = std::fs::read_to_string(&baseline_path)
+        .with_context(|| format!("reading {baseline_path}"))?;
+    let baseline = json::parse(&text).with_context(|| format!("parsing {baseline_path}"))?;
+    let mut runs = Vec::new();
+    for p in &pr_paths {
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        runs.push(json::parse(&text).with_context(|| format!("parsing {p}"))?);
+    }
+    let merged = benchgate::merge_runs(&runs)?;
+    let report = benchgate::compare(&baseline, &merged, tolerance)?;
+    print!("{}", report.table());
+    ensure!(
+        report.pass(),
+        "bench-smoke gate FAILED: a metric dropped below {:.0}% of the committed baseline \
+         ({baseline_path}); if the regression is intentional, refresh the baseline floors",
+        100.0 * tolerance
+    );
+    println!("bench-smoke gate OK (every metric >= {:.0}% of baseline)", 100.0 * tolerance);
     Ok(())
 }
 
@@ -513,22 +762,21 @@ fn cmd_serve_registry(artifacts: &str, backend: &str, opts: &ServeOpts) -> Resul
 
     let frontend = match &opts.listen {
         Some(listen) => {
-            let cfg = FrontendConfig {
-                admission: AdmissionConfig {
-                    policy: opts.admission,
-                    queue_cap: opts.queue_cap,
-                    ..AdmissionConfig::default()
-                },
-                cache_capacity: opts.cache,
-                ..FrontendConfig::default()
-            };
-            let f = Frontend::spawn_registry(listen, Arc::clone(&registry), cfg, metrics.clone())?;
+            let f = Frontend::spawn_registry(
+                listen,
+                Arc::clone(&registry),
+                opts.frontend_config(),
+                metrics.clone(),
+            )?;
             println!(
-                "L4 front-end listening on {} (cache {}, admission {:?}, queue cap {})",
+                "L4 front-end listening on {} (cache {}, admission {:?}, queue cap {}, \
+                 fairness {:?}, max conns {})",
                 f.local_addr(),
                 opts.cache,
                 opts.admission,
-                opts.queue_cap
+                opts.queue_cap,
+                opts.fairness,
+                opts.max_conns
             );
             Some(f)
         }

@@ -1,0 +1,204 @@
+//! The CI perf gate: compare a bench run's `--json` output against the
+//! committed baseline (`rust/BENCH_BASELINE.json`) and fail on
+//! regression.
+//!
+//! Raw requests/s is not portable across machines — a laptop, a CI
+//! runner, and a workstation disagree by integer factors — so the
+//! committed baseline stores **conservative floors for
+//! machine-portable metrics**: dimensionless ratios measured inside one
+//! run (pooled-vs-serial speedup, TCP-vs-in-process tax, cache
+//! speedup) plus deliberately low absolute floors that any supported
+//! machine clears.  The gate fails a metric when the current value
+//! drops below `tolerance × baseline` (default 0.75, i.e. a >25% drop
+//! against the committed number), and prints one comparison row per
+//! metric either way.
+//!
+//! Consumed by `odin benchgate --baseline BENCH_BASELINE.json --pr
+//! BENCH_PR_net.json --pr BENCH_PR_serving.json`, which the
+//! `bench-smoke` CI job runs after `cargo bench ... -- --smoke --json`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+/// One metric comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GateRow {
+    /// Bench the metric belongs to (`"net_throughput"`, ...).
+    pub bench: String,
+    /// Metric name within the bench's `results` object.
+    pub metric: String,
+    /// Committed baseline value.
+    pub baseline: f64,
+    /// Value measured by this run, `None` when the run did not report
+    /// the metric at all (always a failure).
+    pub current: Option<f64>,
+    /// Whether this metric clears `tolerance × baseline`.
+    pub pass: bool,
+}
+
+/// Outcome of one gate evaluation.
+#[derive(Clone, Debug)]
+pub struct GateReport {
+    /// Per-metric rows, in baseline (bench, metric) order.
+    pub rows: Vec<GateRow>,
+    /// Minimum current/baseline ratio a metric must clear.
+    pub tolerance: f64,
+}
+
+impl GateReport {
+    /// True when every baseline metric cleared the gate.
+    pub fn pass(&self) -> bool {
+        self.rows.iter().all(|r| r.pass)
+    }
+
+    /// The human-readable comparison table for the CI log.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<22} {:<22} {:>12} {:>12} {:>8}  gate (>= {:.0}% of baseline)\n",
+            "bench",
+            "metric",
+            "baseline",
+            "current",
+            "ratio",
+            100.0 * self.tolerance
+        ));
+        for r in &self.rows {
+            let (current, ratio) = match r.current {
+                Some(c) => {
+                    let ratio = if r.baseline != 0.0 { c / r.baseline } else { f64::INFINITY };
+                    (format!("{c:.3}"), format!("{ratio:.2}x"))
+                }
+                None => ("missing".to_string(), "-".to_string()),
+            };
+            out.push_str(&format!(
+                "{:<22} {:<22} {:>12.3} {:>12} {:>8}  {}\n",
+                r.bench,
+                r.metric,
+                r.baseline,
+                current,
+                ratio,
+                if r.pass { "ok" } else { "FAIL" },
+            ));
+        }
+        out
+    }
+}
+
+/// Evaluate the gate: every numeric metric in `baseline` (an object of
+/// `bench -> {metric -> floor}`) must appear in `current` (same shape)
+/// at `>= tolerance × floor`.  Metrics the run reports beyond the
+/// baseline are ignored — the baseline is the contract.
+pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<GateReport> {
+    let benches = match baseline.as_obj() {
+        Some(o) => o,
+        None => bail!("baseline must be a JSON object of bench -> metrics"),
+    };
+    let mut rows = Vec::new();
+    for (bench, metrics) in benches {
+        let metrics = metrics
+            .as_obj()
+            .with_context(|| format!("baseline entry {bench:?} must be an object"))?;
+        for (metric, floor) in metrics {
+            let floor = floor
+                .as_f64()
+                .with_context(|| format!("baseline {bench}.{metric} must be a number"))?;
+            let got = current.path(&[bench.as_str(), metric.as_str()]).and_then(Json::as_f64);
+            let pass = match got {
+                Some(c) => c >= tolerance * floor,
+                None => false,
+            };
+            rows.push(GateRow {
+                bench: bench.clone(),
+                metric: metric.clone(),
+                baseline: floor,
+                current: got,
+                pass,
+            });
+        }
+    }
+    Ok(GateReport { rows, tolerance })
+}
+
+/// Merge per-bench `--json` dumps (each `{"bench": name, "results":
+/// {...}}`) into the `bench -> results` shape [`compare`] wants.
+pub fn merge_runs(runs: &[Json]) -> Result<Json> {
+    let mut merged = BTreeMap::new();
+    for run in runs {
+        let name = run
+            .path(&["bench"])
+            .and_then(Json::as_str)
+            .context("bench dump is missing its \"bench\" name")?;
+        let results = run.path(&["results"]).context("bench dump is missing \"results\"")?;
+        merged.insert(name.to_string(), results.clone());
+    }
+    Ok(Json::Obj(merged))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn gate(baseline: &str, current: &str, tol: f64) -> GateReport {
+        compare(&parse(baseline).unwrap(), &parse(current).unwrap(), tol).unwrap()
+    }
+
+    #[test]
+    fn passes_at_and_above_tolerance_fails_below() {
+        let baseline = r#"{"serving":{"pooled_per_serial":2.0,"serial_rps":100}}"#;
+        // Exactly at tolerance: 1.5 == 0.75 * 2.0 passes.
+        let g = gate(baseline, r#"{"serving":{"pooled_per_serial":1.5,"serial_rps":400}}"#, 0.75);
+        assert!(g.pass(), "{}", g.table());
+        // A >25% drop on one metric fails the whole gate.
+        let g = gate(baseline, r#"{"serving":{"pooled_per_serial":1.49,"serial_rps":400}}"#, 0.75);
+        assert!(!g.pass());
+        let row = g.rows.iter().find(|r| r.metric == "pooled_per_serial").unwrap();
+        assert!(!row.pass);
+        assert!(g.rows.iter().find(|r| r.metric == "serial_rps").unwrap().pass);
+    }
+
+    #[test]
+    fn missing_metric_or_bench_fails() {
+        let baseline = r#"{"net":{"tcp_per_inproc":0.1},"serving":{"serial_rps":10}}"#;
+        let g = gate(baseline, r#"{"net":{"tcp_per_inproc":0.5}}"#, 0.75);
+        assert!(!g.pass(), "a bench the run never reported must fail its metrics");
+        let missing = g.rows.iter().find(|r| r.bench == "serving").unwrap();
+        assert_eq!(missing.current, None);
+        assert!(!missing.pass);
+        // Extra metrics in the run are ignored: the baseline is the contract.
+        let g = gate(
+            baseline,
+            r#"{"net":{"tcp_per_inproc":0.5,"bonus":0.0},"serving":{"serial_rps":10}}"#,
+            0.75,
+        );
+        assert!(g.pass());
+        assert_eq!(g.rows.len(), 2);
+    }
+
+    #[test]
+    fn merge_runs_combines_per_bench_dumps() {
+        let a = parse(r#"{"bench":"net","smoke":true,"results":{"x":1}}"#).unwrap();
+        let b = parse(r#"{"bench":"serving","results":{"y":2}}"#).unwrap();
+        let merged = merge_runs(&[a, b]).unwrap();
+        assert_eq!(merged.path(&["net", "x"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(merged.path(&["serving", "y"]).unwrap().as_f64(), Some(2.0));
+        assert!(merge_runs(&[parse(r#"{"results":{}}"#).unwrap()]).is_err());
+    }
+
+    #[test]
+    fn table_lists_every_row() {
+        let g = gate(
+            r#"{"net":{"a":1.0,"b":2.0}}"#,
+            r#"{"net":{"a":1.0,"b":0.1}}"#,
+            0.75,
+        );
+        let t = g.table();
+        assert!(t.contains("ok"), "{t}");
+        assert!(t.contains("FAIL"), "{t}");
+        assert_eq!(t.lines().count(), 3, "header + two rows:\n{t}");
+    }
+}

@@ -3,6 +3,7 @@
 //! property-testing kit (no proptest), and a deterministic RNG (no rand).
 
 pub mod bench;
+pub mod benchgate;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,466 @@
+//! Loopback tests for connection governance: per-client fair queuing
+//! under an adversarial hog, typed connection-cap rejection, the
+//! bounded-window pipelined client, and the per-client metrics (with
+//! hostile client names) — all against a real `EnginePool` over
+//! `127.0.0.1:0`, offline and hermetic.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use odin::coordinator::{BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelWeights};
+use odin::dataset::TestSet;
+use odin::frontend::{
+    AdmissionConfig, AdmissionPolicy, FairnessConfig, FairnessPolicy, Frontend, FrontendConfig,
+    NetClient, NetError,
+};
+
+/// Pool + front-end over an ephemeral loopback port, serving
+/// cnn1/float on single-threaded sim engines.
+fn spawn_stack(
+    shards: usize,
+    policy: BatchPolicy,
+    cfg: FrontendConfig,
+) -> (EnginePool, Client, Frontend, MetricsHub) {
+    let metrics = MetricsHub::new();
+    let weights = ModelWeights::synthetic("cnn1", 99).unwrap();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+        shards,
+        policy,
+        metrics.clone(),
+    )
+    .unwrap();
+    let frontend =
+        Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics.clone())
+            .unwrap();
+    (pool, client, frontend, metrics)
+}
+
+fn teardown(pool: EnginePool, client: Client, frontend: Frontend) {
+    frontend.shutdown();
+    drop(client);
+    pool.shutdown();
+}
+
+/// The acceptance property: 1 hog (continuously pipelining an open-loop
+/// flood) + 8 polite closed-loop clients on a saturated 1-shard pool.
+/// Every polite client completes its whole quota with clean typed
+/// outcomes, receives at least half its fair share of completed
+/// responses over the contention window, is never starved (DRR
+/// guarantee), and polite p99 latency stays within a small multiple of
+/// the pool's own batch execution time — i.e. independent of how deep
+/// the hog's backlog is.
+#[test]
+fn drr_keeps_polite_clients_at_fair_share_under_a_hog() {
+    const POLITE: usize = 8;
+    const PER_POLITE: usize = 12;
+
+    let policy = BatchPolicy { max_batch: 8, linger: Duration::from_micros(300) };
+    let cfg = FrontendConfig {
+        admission: AdmissionConfig {
+            policy: AdmissionPolicy::Block,
+            queue_cap: 4,
+            retry_after_ms: 1,
+        },
+        fairness: FairnessConfig {
+            policy: FairnessPolicy::Drr,
+            quantum: 1,
+            client_queue: 64,
+        },
+        ..FrontendConfig::default()
+    };
+    let (pool, client, frontend, metrics) = spawn_stack(1, policy, cfg);
+    let addr = frontend.local_addr();
+    let test = Arc::new(TestSet::synthetic(64, 7));
+
+    // The hog: one connection feeding an effectively endless pipelined
+    // flood until the polite clients finish (so its backlog can never
+    // drain early on a fast machine).  Its connection is dropped
+    // without reaping — the server must discard its undispatched
+    // backlog rather than burn pool capacity on a dead peer.
+    let stop_hog = Arc::new(AtomicBool::new(false));
+    let hog = {
+        let stop = Arc::clone(&stop_hog);
+        let test = Arc::clone(&test);
+        std::thread::spawn(move || {
+            let net = NetClient::connect_named(addr, "cnn1", "float", "hog").unwrap();
+            let mut pipe = net.pipeline(64);
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let row = test.samples[i % test.len()].image.clone();
+                let _ = pipe.submit(row);
+                i += 1;
+            }
+            // Return without draining: drop = disconnect mid-flood.
+        })
+    };
+    // Let the hog's flood reach the server before any polite client,
+    // then baseline its counters: the head start is uncontended (the
+    // hog rightly gets the whole pool), so the fairness claim below is
+    // about the *contention window* — deltas from here on.
+    std::thread::sleep(Duration::from_millis(100));
+    let pre = metrics.report();
+    let hog_pre = pre
+        .clients
+        .iter()
+        .find(|c| c.client == "hog")
+        .map(|c| c.dispatched)
+        .unwrap_or(0);
+
+    let mut polite = Vec::new();
+    for p in 0..POLITE {
+        let test = Arc::clone(&test);
+        polite.push(std::thread::spawn(move || -> Vec<Duration> {
+            let name = format!("polite-{p}");
+            let net = NetClient::connect_named(addr, "cnn1", "float", &name).unwrap();
+            let mut latencies = Vec::with_capacity(PER_POLITE);
+            for r in 0..PER_POLITE {
+                let row = test.samples[(p * PER_POLITE + r) % test.len()].image.clone();
+                let t0 = Instant::now();
+                net.infer(row).unwrap_or_else(|e| {
+                    panic!("polite-{p} request {r} must succeed under the hog: {e}")
+                });
+                latencies.push(t0.elapsed());
+            }
+            latencies
+        }));
+    }
+    let mut latencies: Vec<Duration> = Vec::new();
+    for h in polite {
+        latencies.extend(h.join().unwrap());
+    }
+    // Snapshot while the hog is still flooding: this is the contention
+    // window the fairness claim is about.
+    let report = metrics.report();
+    stop_hog.store(true, Ordering::Relaxed);
+    hog.join().unwrap();
+
+    let hog_stats = report.clients.iter().find(|c| c.client == "hog").unwrap();
+    let hog_delta = hog_stats.dispatched - hog_pre;
+    let total = (POLITE * PER_POLITE) as u64 + hog_delta;
+    let fair_share = total as f64 / report.clients.len() as f64;
+    for c in report.clients.iter().filter(|c| c.client.starts_with("polite-")) {
+        assert_eq!(
+            c.dispatched, PER_POLITE as u64,
+            "{}: every polite request reached the pool exactly once",
+            c.client
+        );
+        assert!(
+            (c.dispatched as f64) >= fair_share / 2.0,
+            "{}: dispatched {} but fair share is {fair_share:.1} of {total}",
+            c.client,
+            c.dispatched
+        );
+        assert_eq!(c.starved, 0, "{}: DRR must never starve a polite client", c.client);
+    }
+    // The hog may legitimately complete more than one client's share
+    // (it is the only always-backlogged flow), but DRR bounds it: per
+    // admission slot the scheduler hands out, every runnable polite
+    // client is served first.  ≥ 1/2 fair share for polites means the
+    // hog got at most 10 shares of the 18 "half-shares" — asserted
+    // above per client; here pin that the hog was served too (fair
+    // queuing is not an embargo).
+    assert!(hog_stats.dispatched > 0, "the hog still gets its fair share");
+    assert_eq!(hog_stats.starved, 0, "DRR starves nobody, hog included");
+    assert!(
+        hog_stats.enqueued > hog_stats.dispatched,
+        "the hog's flood must still be backlogged at snapshot time \
+         (enqueued {} vs dispatched {}) — otherwise this run measured no contention",
+        hog_stats.enqueued,
+        hog_stats.dispatched
+    );
+
+    // Latency: a polite request waits for at most a handful of
+    // fairly-scheduled admission slots, never for the hog's whole
+    // backlog.  Bound it by a generous multiple of the pool's own batch
+    // execution time (plus linger and a fixed slack for loaded CI
+    // machines) — the point is the bound does not scale with the hog's
+    // queue depth.
+    latencies.sort();
+    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+    let exec_p99 = Duration::from_micros(report.exec_us_p99.max(100.0) as u64);
+    let bound = exec_p99 * 30 + Duration::from_millis(500);
+    assert!(
+        p99 <= bound,
+        "polite p99 {p99:?} exceeds {bound:?} (exec p99 {exec_p99:?}) — \
+         polite latency must not scale with the hog backlog"
+    );
+
+    teardown(pool, client, frontend);
+}
+
+/// The FIFO control: the same hog-first shape under `--fairness fifo`
+/// records starvation for the polite clients (the counter CI greps to
+/// prove DRR is doing something), while typed outcomes stay clean.
+#[test]
+fn fifo_control_records_polite_starvation_behind_a_hog() {
+    const HOG_FLOOD: usize = 256;
+
+    let policy = BatchPolicy { max_batch: 8, linger: Duration::from_micros(300) };
+    let cfg = FrontendConfig {
+        // A small gate keeps the flood *in the fairness queues* (with
+        // the default 256-slot gate the whole backlog would sit in the
+        // pool batcher instead and the scheduler would have nothing to
+        // be unfair about).
+        admission: AdmissionConfig {
+            policy: AdmissionPolicy::Block,
+            queue_cap: 8,
+            retry_after_ms: 1,
+        },
+        fairness: FairnessConfig {
+            policy: FairnessPolicy::Fifo,
+            quantum: 1,
+            client_queue: 512,
+        },
+        ..FrontendConfig::default()
+    };
+    let (pool, client, frontend, metrics) = spawn_stack(1, policy, cfg);
+    let addr = frontend.local_addr();
+    let test = TestSet::synthetic(32, 9);
+
+    let hog_net = NetClient::connect_named(addr, "cnn1", "float", "hog").unwrap();
+    let mut hog_pipe = hog_net.pipeline(HOG_FLOOD);
+    for i in 0..HOG_FLOOD {
+        let _ = hog_pipe.submit(test.samples[i % test.len()].image.clone());
+    }
+    // Wait until the hog's backlog is observably deep server-side, so
+    // the polite requests below must queue behind a real flood.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let r = metrics.report();
+        let hog = r.clients.iter().find(|c| c.client == "hog");
+        if let Some(h) = hog {
+            if h.enqueued >= 64 && h.enqueued - h.dispatched >= 48 {
+                break;
+            }
+            if h.dispatched >= h.enqueued && h.enqueued as usize == HOG_FLOOD {
+                panic!("pool drained the whole flood before the backlog check — pool too fast");
+            }
+        }
+        assert!(Instant::now() < deadline, "hog backlog never built up");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let polite_net = NetClient::connect_named(addr, "cnn1", "float", "polite-0").unwrap();
+    for r in 0..2 {
+        polite_net
+            .infer(test.samples[r].image.clone())
+            .unwrap_or_else(|e| panic!("polite request {r}: {e}"));
+    }
+    for outcome in hog_pipe.drain() {
+        outcome.expect("hog responses stay clean under FIFO too");
+    }
+
+    let report = metrics.report();
+    let polite = report.clients.iter().find(|c| c.client == "polite-0").unwrap();
+    assert!(
+        polite.starved >= 1,
+        "FIFO behind a {HOG_FLOOD}-deep hog must trip the starvation counter \
+         (passes accrue per hog dispatch); got {}",
+        polite.starved
+    );
+    assert_eq!(polite.dispatched, 2, "starved is a latency symptom, not a drop");
+    assert!(report.fairness_index > 0.0 && report.fairness_index <= 1.0);
+
+    drop(hog_pipe);
+    drop(hog_net);
+    drop(polite_net);
+    teardown(pool, client, frontend);
+}
+
+/// Connection-cap governance: the over-cap connection is told
+/// `TooManyConnections{retry_after}` as a typed outcome on every one of
+/// its pipelined requests (never a bare hangup, never stream
+/// corruption), the rejection is counted, and a freed slot is reusable.
+#[test]
+fn conn_limit_rejects_are_typed_and_slots_recycle() {
+    let policy = BatchPolicy { max_batch: 8, linger: Duration::from_micros(200) };
+    let cfg = FrontendConfig {
+        max_connections: 2,
+        conn_retry_after_ms: 35,
+        ..FrontendConfig::default()
+    };
+    let (pool, client, frontend, metrics) = spawn_stack(1, policy, cfg);
+    let addr = frontend.local_addr();
+    let img = TestSet::synthetic(1, 3).samples[0].image.clone();
+
+    let c1 = NetClient::connect_named(addr, "cnn1", "float", "first").unwrap();
+    let c2 = NetClient::connect_named(addr, "cnn1", "float", "second").unwrap();
+    c1.infer(img.clone()).unwrap();
+    c2.infer(img.clone()).unwrap();
+
+    // Third connection: over the cap.  Every pipelined request on it
+    // resolves with the typed rejection carrying the configured hint.
+    let c3 = NetClient::connect(addr, "cnn1", "float").unwrap();
+    let receivers: Vec<_> = (0..3).map(|_| c3.submit(img.clone())).collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        match NetClient::wait(rx) {
+            Err(NetError::TooManyConnections { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, 35, "request {i}: hint comes from the config");
+            }
+            other => panic!("request {i}: expected typed TooManyConnections, got {other:?}"),
+        }
+    }
+    drop(c3);
+
+    // Free a slot; the accept loop reaps the finished connection on the
+    // next accept, so a retry (what a client obeying retry_after does)
+    // succeeds shortly.
+    drop(c1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let ok = loop {
+        let retry = NetClient::connect(addr, "cnn1", "float").unwrap();
+        match retry.infer(img.clone()) {
+            Ok(_) => break true,
+            Err(NetError::TooManyConnections { retry_after_ms }) => {
+                drop(retry);
+                std::thread::sleep(Duration::from_millis(retry_after_ms as u64));
+            }
+            Err(e) => panic!("retry must be served or typed-rejected, got {e}"),
+        }
+        if Instant::now() > deadline {
+            break false;
+        }
+    };
+    assert!(ok, "a freed connection slot must become reusable");
+
+    drop(c2);
+    teardown(pool, client, frontend);
+    let report = metrics.report();
+    assert!(
+        report.frontend.conn_rejected >= 1,
+        "typed rejections are counted ({} recorded)",
+        report.frontend.conn_rejected
+    );
+    // The served connections show up under their Hello names; the
+    // rejected one never became a client (no fairness slot, no phantom
+    // per-client entry beyond the accepted retries).
+    for name in ["first", "second"] {
+        let c = report.clients.iter().find(|c| c.client == name).unwrap();
+        assert!(c.dispatched >= 1, "{name} served traffic");
+    }
+}
+
+/// The rebuilt pipelined client: the window genuinely bounds in-flight
+/// requests, nothing is lost, and reaping is completion-order — a cache
+/// hit submitted *after* a slow cold miss is reaped *before* it (no
+/// head-of-line blocking on one stalled request).
+#[test]
+fn pipeline_bounds_window_and_reaps_completion_order() {
+    let policy = BatchPolicy { max_batch: 32, linger: Duration::from_millis(700) };
+    let cfg = FrontendConfig {
+        admission: AdmissionConfig {
+            policy: AdmissionPolicy::Block,
+            queue_cap: 1,
+            retry_after_ms: 1,
+        },
+        cache_capacity: 64,
+        ..FrontendConfig::default()
+    };
+    let (pool, client, frontend, _metrics) = spawn_stack(1, policy, cfg);
+    let addr = frontend.local_addr();
+    let test = TestSet::synthetic(4, 17);
+
+    let net = NetClient::connect(addr, "cnn1", "float").unwrap();
+    // Prime the cache with the hot row (pays one linger; the gate is
+    // empty so this admits immediately).
+    let hot = test.samples[0].image.clone();
+    net.infer(hot.clone()).unwrap();
+
+    // Saturate the single-permit gate from a *separate* connection: its
+    // cold request parks in the batcher for the long linger, holding
+    // the only permit, so nothing else can dispatch until it finishes.
+    let parker = NetClient::connect(addr, "cnn1", "float").unwrap();
+    let parked_rx = parker.submit(test.samples[1].image.clone());
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while frontend.admission_in_flight() == 0 {
+        assert!(Instant::now() < deadline, "parker never took the permit");
+        std::thread::yield_now();
+    }
+
+    // On the pipelined connection: a cold row (cannot dispatch — the
+    // permit is taken) followed by the hot row (cache hit, answered by
+    // the reader immediately).  Completion order must invert submission
+    // order: the hit is reaped first, deterministically — one stalled
+    // request never head-of-line-blocks the reaping side.
+    let mut pipe = net.pipeline(8);
+    assert!(pipe.submit(test.samples[2].image.clone()).is_none());
+    assert!(pipe.submit(hot.clone()).is_none());
+    assert_eq!(pipe.in_flight(), 2);
+    let (first, second) = (pipe.reap().unwrap().unwrap(), pipe.reap().unwrap().unwrap());
+    assert!(
+        first.cached && !second.cached,
+        "the cache hit must be reaped before the stalled cold miss \
+         (got cached={} then cached={})",
+        first.cached,
+        second.cached
+    );
+    assert_eq!(pipe.in_flight(), 0);
+    assert!(pipe.reap().is_none(), "reap on an empty window is None, not a hang");
+    NetClient::wait(parked_rx).expect("the parked request completes after its linger");
+    drop(parker);
+
+    // The window is a hard bound: submitting W+K rows keeps at most W
+    // in flight (submit reaps the overflow), and every row resolves.
+    let mut pipe = net.pipeline(4);
+    let mut done = 0usize;
+    for i in 0..12 {
+        assert!(pipe.in_flight() <= 4, "window exceeded at submit {i}");
+        if let Some(outcome) = pipe.submit(test.samples[i % test.len()].image.clone()) {
+            outcome.expect("pipelined request failed");
+            done += 1;
+        }
+    }
+    for outcome in pipe.drain() {
+        outcome.expect("drained request failed");
+        done += 1;
+    }
+    assert_eq!(done, 12, "every submitted row resolves exactly once");
+
+    drop(net);
+    teardown(pool, client, frontend);
+}
+
+/// Client-supplied names flow end to end: wire `Hello` → fairness slot
+/// → metrics JSON (control characters escaped by `util::json`) → parse
+/// → the exact original name.  This pins the JSON escape path against
+/// hostile bytes a network client can actually send.
+#[test]
+fn hostile_client_names_round_trip_through_metrics_json() {
+    let policy = BatchPolicy { max_batch: 8, linger: Duration::from_micros(200) };
+    let (pool, client, frontend, metrics) = spawn_stack(1, policy, FrontendConfig::default());
+    let addr = frontend.local_addr();
+    let img = TestSet::synthetic(1, 5).samples[0].image.clone();
+
+    let hostile = "alice\u{1}\t\n\"quote\"\\back\u{7f}Ω馬\u{1F984}";
+    let net = NetClient::connect_named(addr, "cnn1", "float", hostile).unwrap();
+    net.infer(img.clone()).unwrap();
+    net.infer(img).unwrap();
+    drop(net);
+    teardown(pool, client, frontend);
+
+    let report = metrics.report();
+    let mine = report
+        .clients
+        .iter()
+        .find(|c| c.client == hostile)
+        .expect("the Hello name labels the fairness slot");
+    assert_eq!(mine.dispatched, 2);
+    assert_eq!(mine.starved, 0);
+
+    let text = report.to_json();
+    // The emitter must escape the control characters (raw control bytes
+    // in a JSON string would be invalid), then parse back losslessly.
+    assert!(text.contains("\\u0001"), "control char must be escaped: {text}");
+    assert!(!text.contains('\u{1}'), "no raw control bytes in the JSON text");
+    let parsed = odin::util::json::parse(&text).unwrap();
+    let clients = parsed.path(&["clients"]).unwrap().as_arr().unwrap();
+    let me = clients
+        .iter()
+        .find(|c| c.get("client").unwrap().as_str() == Some(hostile))
+        .expect("hostile name must survive encode→serve→JSON→parse");
+    assert_eq!(me.get("dispatched").unwrap().as_usize(), Some(2));
+    assert_eq!(me.get("starved").unwrap().as_usize(), Some(0));
+    assert!(parsed.path(&["fairness_index"]).unwrap().as_f64().is_some());
+}

@@ -461,6 +461,54 @@ fn hot_swap_advances_epoch_and_retires_cached_entries() {
     assert!(m.epochs.iter().any(|&(e, _)| e == 1), "epoch-1 traffic recorded");
 }
 
+/// Satellite regression (ROADMAP leftover): a wire swap *eagerly*
+/// purges the swapped model's stale-epoch cache entries instead of
+/// waiting for LRU pressure, so the full capacity is available to the
+/// new epoch immediately.  Capacity 1 makes the old behavior
+/// observable: without the purge, the first post-swap insert must evict
+/// the stale entry (evictions = 1); with it, the slot is already free
+/// (evictions = 0, stale_purged = 1).
+#[test]
+fn swap_eagerly_purges_stale_epoch_cache_entries() {
+    let specs = vec![ModelSpec::synthetic("cnn1", "float", 60).with_artifacts(NO_ARTIFACTS)];
+    let cfg = FrontendConfig { cache_capacity: 1, ..FrontendConfig::default() };
+    let (registry, frontend, metrics) = spawn_registry_stack(specs, cfg);
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let row = TestSet::synthetic(1, 23).samples[0].image.clone();
+
+    assert!(!net.infer(row.clone()).unwrap().cached, "first sight fills the cache");
+    assert!(net.infer(row.clone()).unwrap().cached, "epoch-0 entry resident");
+
+    let epoch = net.swap("cnn1", "float", 61).unwrap();
+    assert_eq!(epoch, 1);
+    let after_swap = metrics.report();
+    assert_eq!(
+        after_swap.frontend.cache_stale_purged, 1,
+        "the swap must purge the epoch-0 entry eagerly"
+    );
+
+    // Refill under the new epoch: the slot must already be free, so
+    // this insert evicts nothing (pre-fix it evicted the stale entry).
+    let fresh = net.infer(row.clone()).unwrap();
+    assert!(!fresh.cached);
+    assert_eq!(fresh.epoch, 1);
+    assert!(net.infer(row).unwrap().cached, "epoch-1 entry resident after refill");
+    let report = metrics.report();
+    assert_eq!(
+        report.frontend.cache_evictions, 0,
+        "eager purge means the new epoch never pays LRU evictions for dead entries"
+    );
+    // And the counter is visible to CI through the JSON dump.
+    let json = odin::util::json::parse(&report.to_json()).unwrap();
+    assert_eq!(
+        json.path(&["frontend", "cache_stale_purged"]).unwrap().as_usize(),
+        Some(1)
+    );
+
+    drop(net);
+    teardown_registry(registry, frontend);
+}
+
 /// Satellite regression: a saturated admission gate still serves cache
 /// hits (they never acquire a permit), sheds the cold misses, and the
 /// permit count drains to exactly zero afterwards — a burst of hits
