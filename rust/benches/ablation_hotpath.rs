@@ -10,7 +10,12 @@ use odin::ann::topology::cnn1;
 use odin::coordinator::{Engine, ModelWeights, SYNTHETIC_SEED};
 use odin::dataset::TestSet;
 use odin::mapper::{map_topology, ExecConfig};
-use odin::stochastic::{encode_rotated_weight, luts::cnt16, mac::mac_binary_table, Stream256};
+use odin::stochastic::{
+    encode_rotated_weight,
+    luts::cnt16,
+    mac::{mac_binary, mac_binary_table},
+    ActPlanes, PackedLayer, Stream256,
+};
 use odin::util::bench::{black_box, Bench};
 use odin::util::rng::Rng;
 
@@ -49,6 +54,25 @@ fn main() {
     let (wp, wn) = odin::stochastic::rails(&wq);
     let mut b = Bench::new("software_mac");
     b.run("table_mac_784", || black_box(mac_binary_table(&table, &acts, &wp, &wn)));
+    b.run("bitwise_mac_784", || black_box(mac_binary(&acts, &wp, &wn)));
+    // the packed bit-plane path, split the way the serving loop pays it:
+    // weights pre-packed once (weight-stationary), activations packed
+    // per row (amortized over all neurons) or inside the closure
+    let packed = PackedLayer::from_rails(784, 1, &wp, &wn);
+    let mut planes = ActPlanes::default();
+    planes.pack(&acts);
+    b.run("planes_mac_784_prepacked", || {
+        let mut raw = [0i64; 1];
+        packed.mac_row(&planes, &mut raw);
+        black_box(raw[0])
+    });
+    b.run("planes_mac_784_with_pack", || {
+        let mut fresh = ActPlanes::default();
+        fresh.pack(&acts);
+        let mut raw = [0i64; 1];
+        packed.mac_row(&fresh, &mut raw);
+        black_box(raw[0])
+    });
     b.finish();
 
     // hermetic end-to-end inference on the sim backend

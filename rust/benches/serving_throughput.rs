@@ -32,16 +32,19 @@ use odin::util::json::Json;
 
 /// Serve `requests` open-loop requests through a pool and return
 /// requests/s.  `backend_threads` caps each shard's row parallelism
-/// (0 = auto).
+/// (0 = auto); `mode` picks the arithmetic path ("fast" = tiled CNT16,
+/// "sc" = packed bit-plane streams).
 fn run(
     weights: &ModelWeights,
     requests: usize,
     shards: usize,
     backend_threads: usize,
+    mode: &str,
 ) -> Result<f64> {
     let w = weights.clone();
+    let mode = mode.to_string();
     let (pool, client) = EnginePool::spawn(
-        move |_shard| Engine::sim_from_weights_threads(&w, "fast", backend_threads),
+        move |_shard| Engine::sim_from_weights_threads(&w, &mode, backend_threads),
         shards,
         BatchPolicy::default(),
         MetricsHub::new(),
@@ -81,11 +84,11 @@ fn main() -> Result<()> {
         "== bench group: serving_throughput ({requests} open-loop requests, {cores} cores{}) ==",
         if smoke { ", smoke" } else { "" }
     );
-    let single = run(&weights, requests, 1, 1)?;
+    let single = run(&weights, requests, 1, 1, "fast")?;
     println!("{:<44} {single:>10.0} req/s", "shards=1 threads=1 (serial baseline)");
-    let single_rowpar = run(&weights, requests, 1, 0)?;
+    let single_rowpar = run(&weights, requests, 1, 0, "fast")?;
     println!("{:<44} {single_rowpar:>10.0} req/s", "shards=1 threads=auto (row-parallel)");
-    let pooled = run(&weights, requests, cores, 1)?;
+    let pooled = run(&weights, requests, cores, 1, "fast")?;
     println!("{:<44} {pooled:>10.0} req/s", format!("shards={cores} threads=1 (bank-parallel)"));
     let pooled_per_serial = pooled / single.max(1e-9);
     println!(
@@ -93,6 +96,11 @@ fn main() -> Result<()> {
         pooled_per_serial,
         single_rowpar / single.max(1e-9),
     );
+    // The faithful bitwise path on the packed bit-plane engine — tracked
+    // in the results json (not a committed floor yet) so the per-stream
+    // vs bit-plane gap stays visible run to run.
+    let sc_serial = run(&weights, requests.min(64), 1, 1, "sc")?;
+    println!("{:<44} {sc_serial:>10.0} req/s", "shards=1 threads=1 mode=sc (bit-plane)");
 
     if let Some(path) = json_path {
         let mut results = BTreeMap::new();
@@ -100,6 +108,7 @@ fn main() -> Result<()> {
         results.insert("rowpar_rps".to_string(), Json::Num(single_rowpar));
         results.insert("pooled_rps".to_string(), Json::Num(pooled));
         results.insert("pooled_per_serial".to_string(), Json::Num(pooled_per_serial));
+        results.insert("sc_serial_rps".to_string(), Json::Num(sc_serial));
         let mut o = BTreeMap::new();
         o.insert("bench".to_string(), Json::Str("serving_throughput".to_string()));
         o.insert("smoke".to_string(), Json::Bool(smoke));

@@ -320,6 +320,11 @@ pub struct MetricsReport {
     pub exec_us_p50: f64,
     /// 99th-percentile backend execution time (us).
     pub exec_us_p99: f64,
+    /// Fastest backend execution time (us); 0.0 before any traffic (an
+    /// idle server must report finite numbers — see `Summary::min`).
+    pub exec_us_min: f64,
+    /// Slowest backend execution time (us); 0.0 before any traffic.
+    pub exec_us_max: f64,
     /// Mean simulated in-PCRAM latency attributed per request (us).
     pub sim_us_mean: f64,
     /// Total simulated in-PCRAM energy (mJ).
@@ -541,6 +546,8 @@ impl MetricsHub {
         let queue_us_p99 = g.queue_us.percentile(99.0);
         let exec_us_p50 = g.exec_us.percentile(50.0);
         let exec_us_p99 = g.exec_us.percentile(99.0);
+        let exec_us_min = g.exec_us.min();
+        let exec_us_max = g.exec_us.max();
         let (errors, batches, padded_rows) = (g.errors, g.batches, g.padded_rows);
         let f = &self.frontend;
         let frontend = FrontendReport {
@@ -622,6 +629,8 @@ impl MetricsHub {
             queue_us_p99,
             exec_us_p50,
             exec_us_p99,
+            exec_us_min,
+            exec_us_max,
             sim_us_mean,
             sim_mj_total,
             shards,
@@ -665,6 +674,7 @@ impl MetricsReport {
         println!("mean batch          {:.2}", self.mean_batch);
         println!("queue p50/p99       {:.1} / {:.1} us", self.queue_us_p50, self.queue_us_p99);
         println!("exec  p50/p99       {:.1} / {:.1} us", self.exec_us_p50, self.exec_us_p99);
+        println!("exec  min/max       {:.1} / {:.1} us", self.exec_us_min, self.exec_us_max);
         println!("sim ODIN latency    {:.2} us/inf", self.sim_us_mean);
         println!("sim ODIN energy     {:.4} mJ total", self.sim_mj_total);
         if self.frontend.any() {
@@ -760,6 +770,8 @@ impl MetricsReport {
         o.insert("queue_us_p99".to_string(), num(self.queue_us_p99));
         o.insert("exec_us_p50".to_string(), num(self.exec_us_p50));
         o.insert("exec_us_p99".to_string(), num(self.exec_us_p99));
+        o.insert("exec_us_min".to_string(), num(self.exec_us_min));
+        o.insert("exec_us_max".to_string(), num(self.exec_us_max));
         o.insert("sim_us_mean".to_string(), num(self.sim_us_mean));
         o.insert("sim_mj_total".to_string(), num(self.sim_mj_total));
 
@@ -888,6 +900,29 @@ mod tests {
         assert_eq!(r.requests, 0);
         assert_eq!(r.throughput_rps, 0.0);
         assert!(r.shards.is_empty());
+    }
+
+    #[test]
+    fn idle_report_json_round_trips() {
+        // regression: Summary::min()/max() over zero samples used to
+        // return ±inf, which Json::Num serializes as "null" — the text
+        // still parses, but the field silently stops being a number.
+        // Asserting as_f64() == Some(0.0) catches exactly that.
+        let r = MetricsHub::new().report();
+        assert_eq!(r.exec_us_min, 0.0);
+        assert_eq!(r.exec_us_max, 0.0);
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.path(&["requests"]).unwrap().as_usize(), Some(0));
+        assert_eq!(j.path(&["exec_us_min"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.path(&["exec_us_max"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.path(&["exec_us_p50"]).unwrap().as_f64(), Some(0.0));
+        // min/max track real traffic once batches are recorded
+        let m = MetricsHub::new();
+        m.record_batch(0, MODEL, 0, &exec(1, 2_000_000), &[resp(1, 2_000_000)]);
+        m.record_batch(0, MODEL, 0, &exec(1, 4_000_000), &[resp(1, 4_000_000)]);
+        let r = m.report();
+        assert!((r.exec_us_min - 2000.0).abs() < 1e-6);
+        assert!((r.exec_us_max - 4000.0).abs() < 1e-6);
     }
 
     #[test]

@@ -55,7 +55,7 @@ impl QuantLayer {
             let mut out = Vec::with_capacity(vals.len() * LANES);
             for i in 0..self.m {
                 for j in 0..self.n {
-                    out.extend_from_slice(encode_rotated_weight(vals[i * self.n + j], j).lanes());
+                    out.extend_from_slice(&encode_rotated_weight(vals[i * self.n + j], j).lanes());
                 }
             }
             out

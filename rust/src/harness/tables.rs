@@ -7,6 +7,15 @@ use crate::pim::addon::{total_area_mm2, ADDON_TABLE};
 use crate::pim::PimcCommand;
 
 /// Table 1: reads/writes/latency per PIMC command.
+///
+/// The latency column charges each stream op one PCRAM *line* op: the
+/// sense amplifiers touch all 256 bit positions of a stream at once, so
+/// the per-op cost is independent of stream length.  The software hot
+/// path mirrors the same claim — a `Stream256` op is 4 u64 word ops,
+/// and the bit-plane layout (`stochastic::plane`) turns one word op
+/// into 64 operand-pairs at a stream position — but none of that
+/// changes these numbers: the rows model the PCRAM fabric, not the host
+/// simulation (see `docs/ARCHITECTURE.md` §"Table 1 → word ops").
 #[derive(Clone, Debug)]
 pub struct Table1Row {
     pub name: &'static str,

@@ -222,6 +222,9 @@ swap:  --addr HOST:PORT --model ARCH:MODE [--seed N] — hot-swap a running
        multi-model front-end's weights; prints the new epoch
 benchgate: --baseline PATH --pr PATH (repeatable) [--tolerance 0.75] —
        fail if any bench metric drops below tolerance x baseline
+       --floors-old PATH --floors-new PATH — also (or instead) fail if
+       the new committed baseline lowers or drops any floor of the old
+       one (floors only move up; title a PR [relax-floors] to bypass)
 (`sim` is hermetic: synthetic weights/data unless artifacts exist;
  `pjrt` needs a build with --features pjrt and `make artifacts`)";
 
@@ -656,9 +659,43 @@ fn drive_polite(net: &NetClient, images: &[Vec<u8>]) -> std::result::Result<usiz
 /// `odin benchgate`: compare bench `--json` dumps against the committed
 /// baseline and fail (non-zero exit) on a drop past the tolerance —
 /// the CI `bench-smoke` job's verdict, kept in-repo so the comparison
-/// logic is unit-tested like everything else.
+/// logic is unit-tested like everything else.  With `--floors-old` /
+/// `--floors-new` it additionally (or instead) asserts the committed
+/// floors only move up between two baseline files.
 fn cmd_benchgate(args: &[String]) -> Result<()> {
     use odin::util::{benchgate, json};
+
+    let read_json = |path: &str| -> Result<json::Json> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        json::parse(&text).with_context(|| format!("parsing {path}"))
+    };
+
+    // Floors-monotonicity mode: old vs new committed baseline.
+    let floors_old = opt_flag(args, "--floors-old");
+    let floors_new = opt_flag(args, "--floors-new");
+    ensure!(
+        floors_old.is_some() == floors_new.is_some(),
+        "--floors-old and --floors-new must be given together"
+    );
+    if let (Some(old_path), Some(new_path)) = (&floors_old, &floors_new) {
+        let old_floors = read_json(old_path)?;
+        let new_floors = read_json(new_path)?;
+        let violations = benchgate::floors_monotonic(&old_floors, &new_floors)?;
+        for v in &violations {
+            println!("FLOOR LOWERED: {v}");
+        }
+        ensure!(
+            violations.is_empty(),
+            "floors gate FAILED: {} committed floor(s) in {new_path} moved down vs \
+             {old_path}; floors only move up — if lowering is deliberate, title the \
+             PR with [relax-floors]",
+            violations.len()
+        );
+        println!("floors gate OK (every committed floor in {new_path} >= {old_path})");
+        if opt_flag(args, "--baseline").is_none() {
+            return Ok(());
+        }
+    }
 
     let baseline_path = opt_flag(args, "--baseline")
         .ok_or_else(|| anyhow::anyhow!("benchgate needs --baseline PATH"))?;
@@ -668,13 +705,10 @@ fn cmd_benchgate(args: &[String]) -> Result<()> {
         "benchgate needs at least one --pr PATH (a bench --smoke --json dump)"
     );
     let tolerance: f64 = flag(args, "--tolerance", "0.75").parse()?;
-    let text = std::fs::read_to_string(&baseline_path)
-        .with_context(|| format!("reading {baseline_path}"))?;
-    let baseline = json::parse(&text).with_context(|| format!("parsing {baseline_path}"))?;
+    let baseline = read_json(&baseline_path)?;
     let mut runs = Vec::new();
     for p in &pr_paths {
-        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
-        runs.push(json::parse(&text).with_context(|| format!("parsing {p}"))?);
+        runs.push(read_json(p)?);
     }
     let merged = benchgate::merge_runs(&runs)?;
     let report = benchgate::compare(&baseline, &merged, tolerance)?;

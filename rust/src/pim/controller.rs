@@ -5,6 +5,12 @@
 //! The integration tests drive whole MAC layers through these flows and
 //! check the results against `stochastic::mac` — the proof that the
 //! command decomposition computes what the arithmetic says it should.
+//!
+//! Host-side, every line op here is word-parallel for free: `Stream256`
+//! stores a line as 4 u64 words, so the PINATUBO AND/OR/popcount
+//! primitives the flows invoke cost four word ops regardless of which
+//! bit positions are live — the software analogue of the one-line-op
+//! charge in Table 1.
 
 use super::commands::PimcCommand;
 use super::ledger::Ledger;

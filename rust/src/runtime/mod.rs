@@ -32,5 +32,5 @@ pub use backend::{Executor, TensorArg};
 #[cfg(feature = "pjrt")]
 pub use client::{Executable, PjrtExecutor, Runtime, StaticBuffer};
 pub use manifest::{ArtifactSpec, Manifest};
-pub use sim::{SimBackend, SimMode, SimModel};
+pub use sim::{BatchShapeError, SimBackend, SimMode, SimModel};
 pub use tensorfile::{Tensor, TensorData, TensorFile};

@@ -22,13 +22,49 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::ann::topology::{self, Layer, Topology};
 use crate::stochastic::luts::cnt16;
 use crate::stochastic::mac::{mac_binary, mac_binary_table, mac_mux, mux_chunk_layout};
-use crate::stochastic::N_ROT;
+use crate::stochastic::{ActPlanes, PackedLayer, N_ROT};
 use crate::util::rng::Rng;
 
 use super::backend::Executor;
 
 /// The CNT16 closed-form product table (see [`cnt16`]).
 pub type Cnt16 = [[[i32; 256]; 256]; N_ROT];
+
+/// Batch-shape violations [`Executor::forward`] rejects with a typed
+/// error instead of panicking on an out-of-bounds row slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchShapeError {
+    /// The byte buffer is not a whole number of input rows.
+    Ragged {
+        /// Total bytes passed.
+        len: usize,
+        /// Bytes per image the model expects.
+        input_len: usize,
+    },
+    /// The buffer holds whole rows, but not the claimed `batch` of them.
+    BatchMismatch {
+        /// Rows the caller claimed.
+        batch: usize,
+        /// Rows actually present.
+        rows: usize,
+    },
+}
+
+impl std::fmt::Display for BatchShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            BatchShapeError::Ragged { len, input_len } => write!(
+                f,
+                "ragged batch: {len} bytes is not a multiple of the {input_len}-byte input width"
+            ),
+            BatchShapeError::BatchMismatch { batch, rows } => {
+                write!(f, "batch mismatch: claimed {batch} rows, buffer holds {rows}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BatchShapeError {}
 
 /// One weighted (conv or fc) layer, in every representation the forward
 /// paths need.
@@ -497,6 +533,106 @@ pub fn shared_cnt16() -> &'static Cnt16 {
     TABLE.get_or_init(cnt16)
 }
 
+/// Neurons per weight-stationary tile of the table path: one CNT16 row
+/// (1 KiB) is reloaded once per (operand, tile) and then streamed over
+/// the tile's contiguous transposed weights, so the tile bounds the
+/// working set the row must stay cache-hot across.
+const NEURON_TILE: usize = 512;
+
+/// Per-layer precompute ceiling, in weight elements (`n * m`).  Layers
+/// above it (the VGGs) fall back to the bit-identical per-neuron
+/// reference instead of materializing transposed rails or packed
+/// planes.
+const PACK_BUDGET: usize = 64 * 1024 * 1024;
+
+/// Precomputed per-layer execution engine, built once per backend so the
+/// serving path never re-derives weight streams or layouts per row.
+enum LayerEngine {
+    /// Fast mode: dual rails transposed to operand-major `w[j * m + i]`
+    /// so the tiled CNT16 walk reads weights sequentially.
+    Table { wpos_t: Vec<u8>, wneg_t: Vec<u8> },
+    /// Sc mode: weights packed to bit planes at build time
+    /// (weight-stationary; only activations are packed per row).
+    Planes(PackedLayer),
+    /// Over-budget layer: per-neuron reference MACs.
+    Reference,
+}
+
+impl LayerEngine {
+    fn build(mode: SimMode, d: &DenseLayer) -> Option<LayerEngine> {
+        match mode {
+            SimMode::Fast => {
+                if d.n * d.m <= PACK_BUDGET {
+                    let mut wpos_t = vec![0u8; d.n * d.m];
+                    let mut wneg_t = vec![0u8; d.n * d.m];
+                    for i in 0..d.m {
+                        for j in 0..d.n {
+                            wpos_t[j * d.m + i] = d.wpos[i * d.n + j];
+                            wneg_t[j * d.m + i] = d.wneg[i * d.n + j];
+                        }
+                    }
+                    Some(LayerEngine::Table { wpos_t, wneg_t })
+                } else {
+                    Some(LayerEngine::Reference)
+                }
+            }
+            SimMode::Sc => {
+                if d.n * d.m <= PACK_BUDGET / 8 {
+                    Some(LayerEngine::Planes(PackedLayer::from_rails(d.n, d.m, &d.wpos, &d.wneg)))
+                } else {
+                    Some(LayerEngine::Reference)
+                }
+            }
+            SimMode::Mux | SimMode::Float => None,
+        }
+    }
+}
+
+/// Per-row reusable buffers: the packed activation planes and the raw
+/// accumulator row.  One per worker thread, reused across every row and
+/// layer that worker executes.
+#[derive(Default)]
+struct Scratch {
+    act: ActPlanes,
+    raw: Vec<i64>,
+}
+
+/// Weight-stationary tiled CNT16 MAC of one activation row against all
+/// `m` neurons: neurons are walked in [`NEURON_TILE`] tiles with the
+/// operand loop outside, so each operand's table row `CNT16[j % 16][a]`
+/// is fetched once per tile and the transposed rails stream
+/// sequentially.  Bit-identical to per-neuron
+/// [`mac_binary_table`]: each neuron's terms still accumulate in
+/// ascending-`j` i64 order, and `a == 0` rows are skipped because
+/// `CNT16[r][0][w] == 0` exactly.
+fn table_mac_row(
+    table: &Cnt16,
+    acts: &[u8],
+    wpos_t: &[u8],
+    wneg_t: &[u8],
+    m: usize,
+    raw: &mut [i64],
+) {
+    let out = &mut raw[..m];
+    out.fill(0);
+    let mut tile = 0;
+    while tile < m {
+        let t_end = (tile + NEURON_TILE).min(m);
+        for (j, &a) in acts.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let row = &table[j % N_ROT][a as usize];
+            let wp = &wpos_t[j * m + tile..j * m + t_end];
+            let wn = &wneg_t[j * m + tile..j * m + t_end];
+            for ((slot, &p), &q) in out[tile..t_end].iter_mut().zip(wp).zip(wn) {
+                *slot += (row[p as usize] - row[q as usize]) as i64;
+            }
+        }
+        tile = t_end;
+    }
+}
+
 /// Pure-Rust [`Executor`]: runs [`SimModel`] forward passes natively,
 /// parallelizing batches across rows (images are independent, so the
 /// batch loop fans out over scoped threads — one shard of an engine pool
@@ -513,19 +649,29 @@ pub struct SimBackend {
     model: SimModel,
     mode: SimMode,
     table: Option<&'static Cnt16>,
+    /// One precomputed engine per weighted layer (`None` for pool layers
+    /// and for modes that execute straight off the model).
+    engines: Vec<Option<LayerEngine>>,
     batch_sizes: Vec<usize>,
     threads: usize,
 }
 
 impl SimBackend {
     /// Wrap a model in the given arithmetic mode (fast mode builds /
-    /// reuses the process-wide CNT16 table).
+    /// reuses the process-wide CNT16 table; fast and sc modes precompute
+    /// per-layer weight-stationary engines).
     pub fn new(model: SimModel, mode: SimMode) -> Self {
         let table = matches!(mode, SimMode::Fast).then(shared_cnt16);
+        let engines = model
+            .dense
+            .iter()
+            .map(|d| d.as_ref().and_then(|d| LayerEngine::build(mode, d)))
+            .collect();
         SimBackend {
             model,
             mode,
             table,
+            engines,
             batch_sizes: DEFAULT_BATCH_SIZES.to_vec(),
             threads: 0,
         }
@@ -578,18 +724,126 @@ impl SimBackend {
 
     /// One image through the configured path.
     pub fn forward_one(&self, img: &[u8]) -> Result<Vec<f32>> {
+        self.forward_one_scoped(img, &mut Scratch::default())
+    }
+
+    /// One image, reusing a caller-held [`Scratch`] (the batch path
+    /// holds one per worker so per-row buffers amortize).
+    fn forward_one_scoped(&self, img: &[u8], scratch: &mut Scratch) -> Result<Vec<f32>> {
         match self.mode {
-            SimMode::Fast => {
-                let table = self.table.expect("fast mode builds the table");
-                self.model.forward_sc(img, |a, p, n| mac_binary_table(table, a, p, n), |_| 256.0)
-            }
-            SimMode::Sc => self.model.forward_sc(img, mac_binary, |_| 256.0),
+            SimMode::Fast | SimMode::Sc => self.forward_packed(img, scratch),
             SimMode::Mux => self.model.forward_sc(img, mac_mux, |n| {
                 let (_, nl, _) = mux_chunk_layout(n);
                 256.0 * nl as f64
             }),
             SimMode::Float => self.model.forward_float(img),
         }
+    }
+
+    /// Binary-accumulation forward over the precomputed per-layer
+    /// engines — the packed counterpart of [`SimModel::forward_sc`] with
+    /// the same layer walk and the same CMOS epilogue expressions, so
+    /// logits are bit-identical to the per-operand closures it replaces
+    /// (each engine computes the same per-neuron integer raw; see
+    /// [`table_mac_row`] and [`crate::stochastic::plane`]).
+    fn forward_packed(&self, img: &[u8], scratch: &mut Scratch) -> Result<Vec<f32>> {
+        let model = &self.model;
+        ensure!(img.len() == model.input_len(), "image {} bytes, want {}", img.len(),
+            model.input_len());
+        let mut act: Vec<u8> = img.to_vec();
+        let mut s_a = model.s_in;
+        let last = model.topo.layers.len() - 1;
+        for (idx, layer) in model.topo.layers.iter().enumerate() {
+            match *layer {
+                Layer::Pool { window, in_hw, ch } => {
+                    ensure!(act.len() == in_hw * in_hw * ch, "pool input mismatch");
+                    act = maxpool(&act, in_hw, ch, window);
+                }
+                Layer::Conv { k, in_ch, in_hw, same_pad, .. } => {
+                    let d = model.dense[idx].as_ref().context("conv layer missing weights")?;
+                    ensure!(act.len() == in_hw * in_hw * in_ch, "conv input mismatch");
+                    let (rows, _ohw) = im2col(&act, in_hw, in_ch, k, same_pad);
+                    let s_out = d.s_out.context("conv layer missing s_out")?;
+                    act = self.dense_packed_hidden(idx, d, &rows, s_a, s_out, scratch);
+                    s_a = s_out;
+                }
+                Layer::Fc { .. } => {
+                    let d = model.dense[idx].as_ref().context("fc layer missing weights")?;
+                    ensure!(act.len() == d.n, "fc input {} vs fan-in {}", act.len(), d.n);
+                    if idx == last {
+                        return Ok(self.dense_packed_logits(idx, d, &act, s_a, scratch));
+                    }
+                    let s_out = d.s_out.context("hidden fc missing s_out")?;
+                    act = self.dense_packed_hidden(idx, d, &act, s_a, s_out, scratch);
+                    s_a = s_out;
+                }
+            }
+        }
+        bail!("topology {} has no logits layer", model.topo.name)
+    }
+
+    /// Raw MACs of one activation row against every neuron of layer
+    /// `idx`, into `scratch.raw[..d.m]`, via the layer's engine.
+    fn engine_mac_row(&self, idx: usize, d: &DenseLayer, row: &[u8], scratch: &mut Scratch) {
+        scratch.raw.resize(d.m, 0);
+        match self.engines[idx].as_ref() {
+            Some(LayerEngine::Table { wpos_t, wneg_t }) => {
+                let table = self.table.expect("fast mode builds the table");
+                table_mac_row(table, row, wpos_t, wneg_t, d.m, &mut scratch.raw);
+            }
+            Some(LayerEngine::Planes(layer)) => {
+                scratch.act.pack(row);
+                layer.mac_row(&scratch.act, &mut scratch.raw[..d.m]);
+            }
+            Some(LayerEngine::Reference) | None => {
+                // over-budget layer: per-neuron reference, same integers
+                for i in 0..d.m {
+                    let wp = &d.wpos[i * d.n..(i + 1) * d.n];
+                    let wn = &d.wneg[i * d.n..(i + 1) * d.n];
+                    scratch.raw[i] = match self.table {
+                        Some(t) => mac_binary_table(t, row, wp, wn) as i64,
+                        None => mac_binary(row, wp, wn) as i64,
+                    };
+                }
+            }
+        }
+    }
+
+    fn dense_packed_hidden(
+        &self,
+        idx: usize,
+        d: &DenseLayer,
+        rows: &[u8],
+        s_a: f32,
+        s_out: f32,
+        scratch: &mut Scratch,
+    ) -> Vec<u8> {
+        let positions = rows.len() / d.n;
+        let factor = (256.0 * s_a as f64 * d.s_w as f64) as f32;
+        let mut out = Vec::with_capacity(positions * d.m);
+        for r in 0..positions {
+            let row = &rows[r * d.n..(r + 1) * d.n];
+            self.engine_mac_row(idx, d, row, scratch);
+            for i in 0..d.m {
+                let raw = scratch.raw[i] as i32;
+                let y = (raw as f32 * factor + d.bias[i]).max(0.0);
+                out.push(round_ties_even(y / s_out).clamp(0.0, 255.0) as u8);
+            }
+        }
+        out
+    }
+
+    fn dense_packed_logits(
+        &self,
+        idx: usize,
+        d: &DenseLayer,
+        row: &[u8],
+        s_a: f32,
+        scratch: &mut Scratch,
+    ) -> Vec<f32> {
+        let factor = (256.0 * s_a as f64 * d.s_w as f64) as f32;
+        self.engine_mac_row(idx, d, row, scratch);
+        (0..d.m).map(|i| scratch.raw[i] as i32 as f32 * factor + d.bias[i]).collect()
     }
 }
 
@@ -608,59 +862,57 @@ impl Executor for SimBackend {
 
     fn forward(&self, batch: usize, images: &[u8]) -> Result<Vec<f32>> {
         let il = self.model.input_len();
-        ensure!(images.len() == batch * il, "batch {batch}: got {} bytes, want {}",
-            images.len(), batch * il);
+        // Typed shape errors instead of the out-of-bounds slice panic a
+        // ragged buffer used to hit in the row loop.
+        if il == 0 || images.len() % il != 0 {
+            return Err(BatchShapeError::Ragged { len: images.len(), input_len: il }.into());
+        }
+        if images.len() / il != batch {
+            return Err(BatchShapeError::BatchMismatch { batch, rows: images.len() / il }.into());
+        }
         let ol = self.model.output_len();
         // The engine zero-pads partial batches up to a ladder size; the
         // backend is deterministic, so all-zero rows share one forward
         // pass instead of paying up to ladder-size redundant passes.
-        let any_zero_row =
-            (0..batch).any(|b| images[b * il..(b + 1) * il].iter().all(|&p| p == 0));
+        let is_zero = |b: usize| images[b * il..(b + 1) * il].iter().all(|&p| p == 0);
+        let any_zero_row = (0..batch).any(is_zero);
         let zero_logits: Option<Vec<f32>> = if any_zero_row {
             Some(self.forward_one(&vec![0u8; il])?)
         } else {
             None
         };
-        let workers = self.row_workers(batch);
-        if workers == 1 {
-            let mut out = Vec::with_capacity(batch * ol);
-            for b in 0..batch {
+        // One row loop for both the serial and row-parallel paths: fill
+        // a contiguous chunk of output rows starting at row `start`,
+        // with one per-caller Scratch reused across its rows.
+        let run_rows = |start: usize, out_chunk: &mut [f32]| -> Result<()> {
+            let mut scratch = Scratch::default();
+            for (i, dst) in out_chunk.chunks_mut(ol).enumerate() {
+                let b = start + i;
                 let img = &images[b * il..(b + 1) * il];
                 match (&zero_logits, img.iter().all(|&p| p == 0)) {
-                    (Some(z), true) => out.extend_from_slice(z),
-                    _ => out.extend(self.forward_one(img)?),
+                    (Some(z), true) => dst.copy_from_slice(z),
+                    _ => dst.copy_from_slice(&self.forward_one_scoped(img, &mut scratch)?),
                 }
             }
+            Ok(())
+        };
+        let workers = self.row_workers(batch);
+        let mut out = vec![0f32; batch * ol];
+        if workers == 1 {
+            run_rows(0, &mut out)?;
             return Ok(out);
         }
         // Row-parallel path: rows are independent, so fan the batch out
         // over scoped threads writing disjoint slices of the output.
         // Outputs are bit-identical to the serial path.
-        let mut out = vec![0f32; batch * ol];
-        let rows_per = (batch + workers - 1) / workers;
+        let rows_per = batch.div_ceil(workers);
+        let run_rows = &run_rows;
         let results: Vec<Result<()>> = std::thread::scope(|scope| {
             let mut tasks = Vec::with_capacity(workers);
             for (t, out_chunk) in out.chunks_mut(rows_per * ol).enumerate() {
-                let zero = zero_logits.as_deref();
-                tasks.push(scope.spawn(move || -> Result<()> {
-                    let rows = out_chunk.len() / ol;
-                    for i in 0..rows {
-                        let b = t * rows_per + i;
-                        let img = &images[b * il..(b + 1) * il];
-                        match (zero, img.iter().all(|&p| p == 0)) {
-                            (Some(z), true) => out_chunk[i * ol..(i + 1) * ol]
-                                .copy_from_slice(z),
-                            _ => out_chunk[i * ol..(i + 1) * ol]
-                                .copy_from_slice(&self.forward_one(img)?),
-                        }
-                    }
-                    Ok(())
-                }));
+                tasks.push(scope.spawn(move || run_rows(t * rows_per, out_chunk)));
             }
-            tasks
-                .into_iter()
-                .map(|h| h.join().expect("sim row worker panicked"))
-                .collect()
+            tasks.into_iter().map(|h| h.join().expect("sim row worker panicked")).collect()
         });
         for r in results {
             r?;
@@ -809,6 +1061,69 @@ mod tests {
         assert_eq!(a.len(), 80);
         assert_eq!(a, b, "threads=8 diverged from serial");
         assert_eq!(a, c, "threads=32 diverged from serial");
+    }
+
+    #[test]
+    fn ragged_batch_rejected_with_typed_error() {
+        // regression: a ragged buffer used to panic slicing
+        // images[b*il..(b+1)*il]; it must surface a typed error instead
+        let b = SimBackend::synthetic("cnn1", SimMode::Float, 3).unwrap();
+        let err = b.forward(1, &[0u8; 100]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<BatchShapeError>(),
+            Some(&BatchShapeError::Ragged { len: 100, input_len: 784 })
+        );
+        let err = b.forward(2, &[0u8; 784]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<BatchShapeError>(),
+            Some(&BatchShapeError::BatchMismatch { batch: 2, rows: 1 })
+        );
+        // the error formats without panicking and names both numbers
+        let msg = BatchShapeError::Ragged { len: 100, input_len: 784 }.to_string();
+        assert!(msg.contains("100") && msg.contains("784"), "{msg}");
+    }
+
+    #[test]
+    fn packed_engines_match_per_operand_closures() {
+        // The weight-stationary engines (tiled CNT16, bit-plane popcount)
+        // must reproduce the per-operand closure path they replaced,
+        // bit-for-bit, through a full conv+pool+fc model.
+        let model = SimModel::synthetic_by_name("cnn1", 17).unwrap();
+        let img = noise_image(4, 784);
+        let table = shared_cnt16();
+        let closure_path = model
+            .forward_sc(&img, |a, p, n| mac_binary_table(table, a, p, n), |_| 256.0)
+            .unwrap();
+        let bitwise_path = model.forward_sc(&img, mac_binary, |_| 256.0).unwrap();
+        let fast = SimBackend::new(model.clone(), SimMode::Fast).forward_one(&img).unwrap();
+        let sc = SimBackend::new(model, SimMode::Sc).forward_one(&img).unwrap();
+        assert_eq!(fast, closure_path, "tiled CNT16 engine diverged");
+        assert_eq!(sc, bitwise_path, "bit-plane engine diverged");
+        assert_eq!(fast, sc, "fast and sc engines must agree");
+    }
+
+    #[test]
+    fn packed_row_parallel_bit_identical_across_thread_counts() {
+        // The packed fast path under the row-parallel batch loop: thread
+        // counts {1, 8, 32} agree bit-for-bit, zero padding rows included.
+        let model = SimModel::synthetic_by_name("cnn1", 31).unwrap();
+        let mut data = Vec::with_capacity(8 * 784);
+        for i in 0..8u64 {
+            if i % 3 == 2 {
+                data.extend_from_slice(&[0u8; 784]); // padding row
+            } else {
+                data.extend_from_slice(&noise_image(200 + i, 784));
+            }
+        }
+        let serial = SimBackend::new(model.clone(), SimMode::Fast).with_threads(1);
+        let par = SimBackend::new(model.clone(), SimMode::Fast).with_threads(8);
+        let over = SimBackend::new(model, SimMode::Fast).with_threads(32);
+        let a = serial.forward(8, &data).unwrap();
+        let b = par.forward(8, &data).unwrap();
+        let c = over.forward(8, &data).unwrap();
+        assert_eq!(a.len(), 80);
+        assert_eq!(a, b, "threads=8 diverged from serial on the packed path");
+        assert_eq!(a, c, "threads=32 diverged from serial on the packed path");
     }
 
     #[test]

@@ -46,27 +46,33 @@ pub fn mux_select_masks() -> [Stream256; 8] {
     std::array::from_fn(|k| Stream256::from_fn(|i| (i >> k) & 1 == 1))
 }
 
+/// The 16 rotated weight-threshold tables: row `r`, entry `i` is the
+/// effective binary-mode threshold at stream position `i` after operand
+/// rotation `16 r`, i.e. `wgt_thresholds(8)[(i + 16 r) % 256]`.  The
+/// rotated stream of weight `v` for operand `j` is then one comparison
+/// pass over row `j % 16` (`bit i = row[i] < v`) instead of an encode
+/// plus a bit-by-bit rotation — the load-time fast path behind the
+/// packed weight planes, and the table [`cnt16`] integrates.
+pub fn rotated_wgt_thresholds() -> [[u8; STREAM_BITS]; N_ROT] {
+    let t_w = wgt_thresholds(8);
+    std::array::from_fn(|r| std::array::from_fn(|i| t_w[(i + ROT_STRIDE * r) % STREAM_BITS]))
+}
+
 /// CNT16\[r]\[a]\[w] = popcount(enc_act(a) & rotate(enc_wgt(w), 16r)) — the
 /// closed-form product-popcount table behind the optimized serve path.
 /// Boxed: 16 * 256 * 256 * 4 B = 4 MiB.
 pub fn cnt16() -> Box<[[[i32; 256]; 256]; N_ROT]> {
-    let t_w = wgt_thresholds(8);
+    let tabs = rotated_wgt_thresholds();
     let mut out: Box<[[[i32; 256]; 256]; N_ROT]> =
         vec![[[0i32; 256]; 256]; N_ROT].into_boxed_slice().try_into().unwrap();
     for r in 0..N_ROT {
-        // per-position effective weight threshold after rotation
-        let mut tw_rot = [0u8; STREAM_BITS];
-        for (i, v) in tw_rot.iter_mut().enumerate() {
-            *v = t_w[(i + ROT_STRIDE * r) % STREAM_BITS];
-        }
         for a in 0..256usize {
-            for (i, &tw) in tw_rot.iter().enumerate() {
+            for (i, &tw) in tabs[r].iter().enumerate() {
                 if i < a {
                     // activation bit set at position i (identity LUT)
                     let row = &mut out[r][a];
                     // increment all w where tw < w, i.e. w in (tw, 255]
-                    for (w, cell) in row.iter_mut().enumerate().skip(tw as usize + 1) {
-                        let _ = w;
+                    for cell in row.iter_mut().skip(tw as usize + 1) {
                         *cell += 1;
                     }
                 }
@@ -105,6 +111,21 @@ mod tests {
         let t = wgt_thresholds(8);
         for i in 0..STREAM_BITS {
             assert_eq!(t[i], bitrev8(i as u8));
+        }
+    }
+
+    #[test]
+    fn rotated_thresholds_reproduce_encode_rotated_weight() {
+        // Row r of the rotated tables must describe exactly the stream
+        // encode_rotated_weight produces for an operand in rotation
+        // class r: bit i = (row[i] < v).
+        let tabs = rotated_wgt_thresholds();
+        for r in 0..N_ROT {
+            for v in [0u8, 1, 17, 128, 137, 254, 255] {
+                let want = crate::stochastic::encode_rotated_weight(v, r);
+                let got = Stream256::from_fn(|i| tabs[r][i] < v);
+                assert_eq!(got, want, "r={r} v={v}");
+            }
         }
     }
 

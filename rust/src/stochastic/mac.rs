@@ -1,6 +1,9 @@
 //! Stochastic MAC reference implementations (both accumulation modes) plus
 //! the optimized table path — the same three-way agreement the Python side
 //! proves, used by the functional PCRAM simulator and the golden tests.
+//! The serving hot path lives in [`plane`](super::plane) (bit-plane u64
+//! packing); everything here is the per-operand reference it is pinned
+//! against.
 
 use super::encode::{encode, encode_act, encode_rotated_weight};
 use super::luts::{mux_select_masks, wgt_thresholds};
@@ -40,22 +43,33 @@ pub fn mac_binary_table(
 
 /// MUX-tree (paper-faithful) MAC over one chunk of NL = 2^depth operands.
 /// Returns the chunk's raw popcount difference; E = R * sum(a*w)/65536.
+///
+/// The tree reduces in place in one buffer shared by both rails: level k
+/// writes slot `p` from slots `2p`/`2p+1`, and `2p >= p` always, so each
+/// write only clobbers inputs that round already consumed.
 pub fn mac_mux_chunk(acts: &[u8], wpos: &[u8], wneg: &[u8], depth: u32) -> i32 {
     let nl = 1usize << depth;
     assert_eq!(acts.len(), nl);
+    assert_eq!(wpos.len(), nl);
+    assert_eq!(wneg.len(), nl);
     let t_w = wgt_thresholds(depth);
     let selects = mux_select_masks();
 
-    let tree = |weights: &[u8]| -> u32 {
-        let mut streams: Vec<Stream256> = (0..nl)
-            .map(|j| encode_act(acts[j]).and(&encode(weights[j], &t_w)))
-            .collect();
-        for (k, s) in selects.iter().enumerate().take(depth as usize) {
-            let _ = k;
-            streams = streams
-                .chunks(2)
-                .map(|pair| pair[0].mux(&pair[1], s))
-                .collect();
+    let mut streams: Vec<Stream256> = Vec::with_capacity(nl);
+    let mut tree = |weights: &[u8]| -> u32 {
+        streams.clear();
+        streams.extend(
+            acts.iter()
+                .zip(weights)
+                .map(|(&a, &w)| encode_act(a).and(&encode(w, &t_w))),
+        );
+        let mut width = nl;
+        for s in selects.iter().take(depth as usize) {
+            width /= 2;
+            for p in 0..width {
+                let merged = streams[2 * p].mux(&streams[2 * p + 1], s);
+                streams[p] = merged;
+            }
         }
         streams[0].popcount()
     };
@@ -63,25 +77,30 @@ pub fn mac_mux_chunk(acts: &[u8], wpos: &[u8], wneg: &[u8], depth: u32) -> i32 {
 }
 
 /// Full mux-mode MAC over an arbitrary-width layer using the Python-side
-/// chunking rule (mux_chunk_layout).
+/// chunking rule (mux_chunk_layout).  Only a ragged tail chunk is padded
+/// (zero-extension on the stack — NL never exceeds [`STREAM_BITS`]);
+/// full chunks slice the inputs directly.
 pub fn mac_mux(acts: &[u8], wpos: &[u8], wneg: &[u8]) -> i32 {
     let n = acts.len();
+    assert_eq!(wpos.len(), n);
+    assert_eq!(wneg.len(), n);
     let (chunks, nl, depth) = mux_chunk_layout(n);
     let mut raw = 0i32;
-    let mut a_pad = acts.to_vec();
-    let mut wp_pad = wpos.to_vec();
-    let mut wn_pad = wneg.to_vec();
-    a_pad.resize(chunks * nl, 0);
-    wp_pad.resize(chunks * nl, 0);
-    wn_pad.resize(chunks * nl, 0);
     for c in 0..chunks {
         let lo = c * nl;
-        raw += mac_mux_chunk(
-            &a_pad[lo..lo + nl],
-            &wp_pad[lo..lo + nl],
-            &wn_pad[lo..lo + nl],
-            depth,
-        );
+        let take = (n - lo).min(nl);
+        let hi = lo + take;
+        if take == nl {
+            raw += mac_mux_chunk(&acts[lo..hi], &wpos[lo..hi], &wneg[lo..hi], depth);
+        } else {
+            let mut a_pad = [0u8; STREAM_BITS];
+            let mut wp_pad = [0u8; STREAM_BITS];
+            let mut wn_pad = [0u8; STREAM_BITS];
+            a_pad[..take].copy_from_slice(&acts[lo..hi]);
+            wp_pad[..take].copy_from_slice(&wpos[lo..hi]);
+            wn_pad[..take].copy_from_slice(&wneg[lo..hi]);
+            raw += mac_mux_chunk(&a_pad[..nl], &wp_pad[..nl], &wn_pad[..nl], depth);
+        }
     }
     raw
 }

@@ -11,15 +11,20 @@
 pub mod encode;
 pub mod luts;
 pub mod mac;
+pub mod plane;
 pub mod stream;
 
 pub use encode::{encode, encode_rotated_weight, rails};
 pub use luts::{act_thresholds, cnt16, mux_select_masks, rot_amount, wgt_thresholds};
+pub use plane::{mac_binary_planes, ActPlanes, PackedLayer, WeightPlanes};
 pub use stream::Stream256;
 
 /// Stream geometry: one 256-bit PCRAM line per stochastic operand.
 pub const STREAM_BITS: usize = 256;
-/// 8 packed u32 lanes per stream.
+/// 4 packed u64 words per stream — the bit-parallel hot-path layout.
+pub const WORDS: usize = 4;
+/// 8 u32 lanes per stream in the tensor-interchange layout (PJRT
+/// artifacts, Python golden vectors); see [`Stream256::lanes`].
 pub const LANES: usize = 8;
 /// Rotation schedule (binary accumulation mode).
 pub const N_ROT: usize = 16;

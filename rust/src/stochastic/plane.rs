@@ -1,0 +1,404 @@
+//! Bit-plane packed stochastic streams — the u64 SIMD hot path behind
+//! the `sc` serving mode.
+//!
+//! The per-operand layout ([`Stream256`](super::Stream256)) keeps one
+//! operand's 256 stream bits together, so a MAC over a fan-in row walks
+//! the operands one at a time — software serializing what the PCRAM
+//! array does in parallel across lines.  This module stores the same
+//! bits *transposed*, as 256 **bit planes**:
+//!
+//! ```text
+//!                word 0                word 1           (tail word)
+//!              ┌───────────────────┬───────────────────┬──────────┐
+//!   plane i    │ bit i of operands │ bit i of operands │ ...0-pad │
+//!   (i=0..256) │       0..64       │      64..128      │  j >= n  │
+//!              └───────────────────┴───────────────────┴──────────┘
+//!   operand j  ->  word j / 64, bit j % 64 (LSB-first)
+//! ```
+//!
+//! One u64 AND + `count_ones` processes 64 operands at a stream
+//! position, and the raw binary-mode MAC becomes
+//! `sum_i popcount(act_plane[i] & wgt_plane[i])` — bit-identical to the
+//! per-operand reference ([`mac_binary`](super::mac::mac_binary))
+//! because both sum the same per-(operand, position) AND bits and
+//! integer addition is order-independent.
+//!
+//! Tail masking: packs are *additive* — only bits of operands that
+//! exist (`j < n`) are ever set — so the tail of the last word is
+//! all-zero by construction and contributes nothing to any popcount.
+//! The property tests below cover row widths straddling word
+//! boundaries (63/64/65, 784 = 12×64 + 16).
+//!
+//! Weight planes are packed **once per model load** ([`PackedLayer`])
+//! from the precomputed rotated threshold tables, so neither
+//! `encode_act` nor `encode_rotated_weight` is re-evaluated per neuron
+//! on the serving path.  The dual rails are fused: a rail pair
+//! `(wpos[j], wneg[j])` has at most one live side, so one *union* plane
+//! set holds the live rail's stream and a per-word sign mask marks the
+//! negative operands:
+//! `raw = sum popcount(A & W) - 2 * sum popcount(A & W & NEG)`.
+
+use super::luts::rotated_wgt_thresholds;
+use super::{N_ROT, STREAM_BITS};
+
+/// Operands packed per plane word.
+pub const LANE_OPS: usize = 64;
+
+/// `u64` words per plane for an `n`-operand row.
+pub fn plane_words(n: usize) -> usize {
+    n.div_ceil(LANE_OPS)
+}
+
+/// Packed activation planes for one fan-in row (identity LUT: plane
+/// `i`, operand `j` holds `i < acts[j]`), stored word-major —
+/// `planes[wd * 256 + i]` — so a MAC's inner loop over the 256 stream
+/// positions of one word column is a sequential scan.  Built per row
+/// and reused across every neuron of the layer.
+#[derive(Clone, Debug, Default)]
+pub struct ActPlanes {
+    n: usize,
+    words: usize,
+    planes: Vec<u64>,
+}
+
+impl ActPlanes {
+    /// Repack `acts` into bit planes, reusing this buffer's allocation.
+    ///
+    /// Exploits the identity LUT's monotone nesting (plane `i` is plane
+    /// `i+1` plus the operands with value exactly `i+1`): one
+    /// value-bucket pass over the operands, then one descending
+    /// prefix-union pass over the 256 planes — ~(n + 256) word ops per
+    /// 64-operand word instead of `n * mean(a)` bit scatters.
+    pub fn pack(&mut self, acts: &[u8]) {
+        let words = plane_words(acts.len());
+        self.n = acts.len();
+        self.words = words;
+        self.planes.clear();
+        self.planes.resize(words * STREAM_BITS, 0);
+        for (wd, chunk) in acts.chunks(LANE_OPS).enumerate() {
+            let mut bucket = [0u64; 256];
+            for (j, &a) in chunk.iter().enumerate() {
+                if a > 0 {
+                    bucket[a as usize] |= 1u64 << j;
+                }
+            }
+            let out = &mut self.planes[wd * STREAM_BITS..(wd + 1) * STREAM_BITS];
+            let mut cur = 0u64;
+            for i in (0..STREAM_BITS).rev() {
+                if i + 1 < STREAM_BITS {
+                    cur |= bucket[i + 1];
+                }
+                out[i] = cur;
+            }
+        }
+    }
+
+    /// Operands in the packed row.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Words per plane (`ceil(n / 64)`).
+    pub fn words(&self) -> usize {
+        self.words
+    }
+}
+
+/// One neuron's dual-rail weight row packed as bit planes with the
+/// rails fused (see the module docs), word-major like [`ActPlanes`].
+///
+/// Requires the dual-rail invariant (`wpos[j] == 0 || wneg[j] == 0`,
+/// which [`rails`](super::encode::rails) and
+/// `DenseLayer::rails_from_q` guarantee): the union plane then holds
+/// the live rail's stream unambiguously.
+#[derive(Clone, Debug)]
+pub struct WeightPlanes {
+    n: usize,
+    words: usize,
+    union: Vec<u64>,
+    neg: Vec<u64>,
+}
+
+impl WeightPlanes {
+    /// Encode one neuron's dual rails into packed planes (binary mode:
+    /// bit-reversal LUT + per-operand decorrelation rotation).
+    pub fn encode_binary(wpos: &[u8], wneg: &[u8]) -> WeightPlanes {
+        Self::encode_with(&rotated_wgt_thresholds(), wpos, wneg)
+    }
+
+    /// Like [`WeightPlanes::encode_binary`], with the caller supplying
+    /// the rotated threshold tables so a whole layer shares one build.
+    pub fn encode_with(
+        tabs: &[[u8; STREAM_BITS]; N_ROT],
+        wpos: &[u8],
+        wneg: &[u8],
+    ) -> WeightPlanes {
+        let n = wpos.len();
+        assert_eq!(wneg.len(), n, "rail length mismatch");
+        let words = plane_words(n);
+        let mut union = vec![0u64; words * STREAM_BITS];
+        let mut neg = vec![0u64; words];
+        for j in 0..n {
+            debug_assert!(
+                wpos[j] == 0 || wneg[j] == 0,
+                "dual-rail invariant violated at operand {j}"
+            );
+            let (v, negative) = if wneg[j] > 0 {
+                (wneg[j], true)
+            } else {
+                (wpos[j], false)
+            };
+            if v == 0 {
+                continue;
+            }
+            let (wd, bit) = (j / LANE_OPS, 1u64 << (j % LANE_OPS));
+            if negative {
+                neg[wd] |= bit;
+            }
+            let row = &tabs[j % N_ROT];
+            let out = &mut union[wd * STREAM_BITS..(wd + 1) * STREAM_BITS];
+            for (slot, &th) in out.iter_mut().zip(row.iter()) {
+                if th < v {
+                    *slot |= bit;
+                }
+            }
+        }
+        WeightPlanes { n, words, union, neg }
+    }
+
+    /// Raw binary-mode MAC against a packed activation row:
+    /// `sum_j popcount(A_j & Wpos_j) - popcount(A_j & Wneg_j)`,
+    /// bit-identical to [`mac_binary`](super::mac::mac_binary) on the
+    /// same row, 64 operands per word op.
+    pub fn mac(&self, acts: &ActPlanes) -> i32 {
+        assert_eq!(acts.n, self.n, "fan-in mismatch: {} vs {}", acts.n, self.n);
+        let mut all: i64 = 0;
+        let mut negs: i64 = 0;
+        for wd in 0..self.words {
+            let nmask = self.neg[wd];
+            let a = &acts.planes[wd * STREAM_BITS..(wd + 1) * STREAM_BITS];
+            let w = &self.union[wd * STREAM_BITS..(wd + 1) * STREAM_BITS];
+            // per-word position sums fit u32: 256 planes * <= 64 bits
+            let mut t_all = 0u32;
+            let mut t_neg = 0u32;
+            for (&ai, &wi) in a.iter().zip(w.iter()) {
+                let live = ai & wi;
+                t_all += live.count_ones();
+                t_neg += (live & nmask).count_ones();
+            }
+            all += t_all as i64;
+            negs += t_neg as i64;
+        }
+        // positive contributions once, negative ones flipped in sign
+        (all - 2 * negs) as i32
+    }
+}
+
+/// A whole dense layer's weight planes (one [`WeightPlanes`] per
+/// neuron), built once at model load — the weight-stationary operand of
+/// the packed forward path.
+#[derive(Clone, Debug)]
+pub struct PackedLayer {
+    neurons: Vec<WeightPlanes>,
+}
+
+impl PackedLayer {
+    /// Pack every neuron of an (m, n)-layout dual-rail weight matrix
+    /// (`wpos[i * n + j]`, the kernels' layout).
+    pub fn from_rails(n: usize, m: usize, wpos: &[u8], wneg: &[u8]) -> PackedLayer {
+        assert_eq!(wpos.len(), n * m, "wpos shape");
+        assert_eq!(wneg.len(), n * m, "wneg shape");
+        let tabs = rotated_wgt_thresholds();
+        let neurons = (0..m)
+            .map(|i| {
+                WeightPlanes::encode_with(
+                    &tabs,
+                    &wpos[i * n..(i + 1) * n],
+                    &wneg[i * n..(i + 1) * n],
+                )
+            })
+            .collect();
+        PackedLayer { neurons }
+    }
+
+    /// Neurons in the layer.
+    pub fn m(&self) -> usize {
+        self.neurons.len()
+    }
+
+    /// MAC one packed activation row against every neuron, writing the
+    /// raw popcount differences into `raw` (length `m()`).
+    pub fn mac_row(&self, acts: &ActPlanes, raw: &mut [i64]) {
+        assert_eq!(raw.len(), self.neurons.len(), "raw buffer length");
+        for (slot, w) in raw.iter_mut().zip(&self.neurons) {
+            *slot = w.mac(acts) as i64;
+        }
+    }
+}
+
+/// One-shot packed binary MAC over a single row — the bit-plane
+/// counterpart of [`mac_binary`](super::mac::mac_binary), which it
+/// matches bit-for-bit.  The serving path instead packs weights once
+/// ([`PackedLayer`]) and reuses one [`ActPlanes`] across all neurons.
+pub fn mac_binary_planes(acts: &[u8], wpos: &[u8], wneg: &[u8]) -> i32 {
+    let mut a = ActPlanes::default();
+    a.pack(acts);
+    WeightPlanes::encode_binary(wpos, wneg).mac(&a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::encode::{encode_act, rails};
+    use crate::stochastic::luts::cnt16;
+    use crate::stochastic::mac::{mac_binary, mac_binary_table};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn act_planes_match_per_operand_streams() {
+        let mut r = Rng::new(11);
+        let acts: Vec<u8> = (0..70).map(|_| r.u8()).collect();
+        let mut p = ActPlanes::default();
+        p.pack(&acts);
+        assert_eq!(p.words(), 2);
+        for (j, &a) in acts.iter().enumerate() {
+            let s = encode_act(a);
+            for i in 0..STREAM_BITS {
+                let got = ((p.planes[(j / 64) * STREAM_BITS + i] >> (j % 64)) & 1) == 1;
+                assert_eq!(got, s.bit(i), "operand {j} value {a} plane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tail_word_bits_stay_zero() {
+        // The classic bit-packing bug: operands j >= n leaking into the
+        // last word.  Packs are additive, so the tail must be all-zero
+        // even for a saturated row one bit past a word boundary.
+        let acts = vec![255u8; 65];
+        let mut p = ActPlanes::default();
+        p.pack(&acts);
+        let tail_mask = !0u64 << 1; // word 1 holds only operand 64 (bit 0)
+        for (i, &plane) in p.planes[STREAM_BITS..].iter().enumerate() {
+            assert_eq!(plane & tail_mask, 0, "plane {i} tail");
+        }
+        let w = WeightPlanes::encode_binary(&[255u8; 65], &[0u8; 65]);
+        for (i, &plane) in w.union[STREAM_BITS..].iter().enumerate() {
+            assert_eq!(plane & tail_mask, 0, "wgt plane {i} tail");
+        }
+        assert_eq!(w.neg[1] & tail_mask, 0);
+    }
+
+    #[test]
+    fn exhaustive_packed_vs_cnt16_per_rotation() {
+        // Every (a, w) u8 pair in every rotation class: the packed MAC
+        // must reproduce CNT16[r][a][w] exactly.  One live operand at
+        // index r (rotation class r) isolates a single product.
+        let table = cnt16();
+        for r in 0..N_ROT {
+            let n = r + 1;
+            // 256 single-weight neurons: neuron w has wpos[r] = w
+            let mut wpos = vec![0u8; n * 256];
+            let wneg = vec![0u8; n * 256];
+            for (w, row) in wpos.chunks_mut(n).enumerate() {
+                row[r] = w as u8;
+            }
+            let layer = PackedLayer::from_rails(n, 256, &wpos, &wneg);
+            let mut acts = vec![0u8; n];
+            let mut planes = ActPlanes::default();
+            let mut raw = vec![0i64; 256];
+            for a in 0..256usize {
+                acts[r] = a as u8;
+                planes.pack(&acts);
+                layer.mac_row(&planes, &mut raw);
+                for w in 0..256usize {
+                    assert_eq!(raw[w] as i32, table[r][a][w], "rotation {r}, a={a}, w={w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_negative_rail_per_rotation() {
+        // The sign-mask half of the fused-rail trick, all w per
+        // rotation at a fixed activation: raw must be -CNT16[r][a][w].
+        let table = cnt16();
+        let a = 137usize;
+        for r in 0..N_ROT {
+            let n = r + 1;
+            let mut acts = vec![0u8; n];
+            acts[r] = a as u8;
+            let mut planes = ActPlanes::default();
+            planes.pack(&acts);
+            for w in 0..256usize {
+                let mut wpos = vec![0u8; n];
+                let mut wneg = vec![0u8; n];
+                wneg[r] = w as u8;
+                let got = WeightPlanes::encode_binary(&wpos, &wneg).mac(&planes);
+                assert_eq!(got, -table[r][a][w], "rotation {r}, w={w} (negative)");
+                // and a mixed row: positive at r, padding zeros elsewhere
+                wneg[r] = 0;
+                wpos[r] = w as u8;
+                let got = WeightPlanes::encode_binary(&wpos, &wneg).mac(&planes);
+                assert_eq!(got, table[r][a][w], "rotation {r}, w={w} (positive)");
+            }
+        }
+    }
+
+    #[test]
+    fn random_rows_match_reference_at_word_straddling_widths() {
+        // Property test across row widths that straddle the 64-operand
+        // word boundary (the tail-masking cases) plus big real widths.
+        let table = cnt16();
+        let mut r = Rng::new(42);
+        let widths = [1usize, 3, 63, 64, 65, 127, 128, 129, 200, 300, 784];
+        for &n in &widths {
+            for _case in 0..3 {
+                let acts: Vec<u8> = (0..n).map(|_| r.u8()).collect();
+                let wq: Vec<i16> = (0..n).map(|_| r.range_i32(-255, 255) as i16).collect();
+                let (wp, wn) = rails(&wq);
+                let want = mac_binary(&acts, &wp, &wn);
+                assert_eq!(mac_binary_planes(&acts, &wp, &wn), want, "packed vs bitwise at n={n}");
+                assert_eq!(
+                    mac_binary_table(&table, &acts, &wp, &wn),
+                    want,
+                    "table vs bitwise at n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_layer_macs_whole_rows() {
+        let mut r = Rng::new(77);
+        let (n, m) = (130, 9);
+        let acts: Vec<u8> = (0..n).map(|_| r.u8()).collect();
+        let mut wpos = vec![0u8; n * m];
+        let mut wneg = vec![0u8; n * m];
+        for i in 0..m {
+            let wq: Vec<i16> = (0..n).map(|_| r.range_i32(-255, 255) as i16).collect();
+            let (wp, wn) = rails(&wq);
+            wpos[i * n..(i + 1) * n].copy_from_slice(&wp);
+            wneg[i * n..(i + 1) * n].copy_from_slice(&wn);
+        }
+        let layer = PackedLayer::from_rails(n, m, &wpos, &wneg);
+        assert_eq!(layer.m(), m);
+        let mut planes = ActPlanes::default();
+        planes.pack(&acts);
+        let mut raw = vec![0i64; m];
+        layer.mac_row(&planes, &mut raw);
+        for i in 0..m {
+            let want = mac_binary(&acts, &wpos[i * n..(i + 1) * n], &wneg[i * n..(i + 1) * n]);
+            assert_eq!(raw[i], want as i64, "neuron {i}");
+        }
+    }
+
+    #[test]
+    fn empty_row_macs_to_zero() {
+        let mut planes = ActPlanes::default();
+        planes.pack(&[]);
+        assert_eq!(planes.words(), 0);
+        assert_eq!(WeightPlanes::encode_binary(&[], &[]).mac(&planes), 0);
+        assert_eq!(mac_binary_planes(&[], &[], &[]), 0);
+    }
+}

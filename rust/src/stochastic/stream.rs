@@ -1,42 +1,55 @@
 //! `Stream256`: one 256-bit stochastic stream = one PCRAM memory line.
 //!
-//! Packing matches `sc_common.pack_bits_u32`: bit `i` lives in word
-//! `i / 32` at position `i % 32` (LSB-first).  The bit-parallel ops are the
-//! PINATUBO sense-amplifier primitives (AND/OR via simultaneous row
-//! activation, NOT via inverted reference) plus the pop counter.
+//! Internally the stream is packed into [`WORDS`] = 4 `u64` words — bit
+//! `i` lives in word `i / 64` at position `i % 64` (LSB-first) — so every
+//! bit-parallel op (AND/OR/NOT/MUX, popcount) is four word-wide
+//! instructions: the software realization of the paper's
+//! one-op-per-line Table 1 claim.  The PINATUBO sense-amplifier
+//! primitives (AND/OR via simultaneous row activation, NOT via inverted
+//! reference) plus the pop counter map 1:1 onto these word ops.
+//!
+//! Tensor interchange with the PJRT artifacts and the Python golden
+//! vectors still uses the legacy `sc_common.pack_bits_u32` layout — 8
+//! little-endian u32 lanes, bit `i` in lane `i / 32` — exposed by
+//! [`Stream256::lanes`].  The two layouts hold identical bits because
+//! both are LSB-first little-endian: u32 lane `2k` is the low half of
+//! u64 word `k` and lane `2k + 1` the high half.
 
-use super::{LANES, STREAM_BITS};
+use super::{LANES, STREAM_BITS, WORDS};
 
-/// A 256-bit stream packed into 8 little-endian u32 lanes.
+/// A 256-bit stream packed into 4 little-endian u64 words.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
-pub struct Stream256(pub [u32; LANES]);
+pub struct Stream256(pub [u64; WORDS]);
 
 impl Stream256 {
-    pub const ZERO: Stream256 = Stream256([0; LANES]);
-    pub const ONES: Stream256 = Stream256([u32::MAX; LANES]);
+    /// The empty stream (value 0).
+    pub const ZERO: Stream256 = Stream256([0; WORDS]);
+    /// The all-ones stream (value 256, one past the u8 range).
+    pub const ONES: Stream256 = Stream256([u64::MAX; WORDS]);
 
     /// Build from a bit closure (bit i = f(i)).
     pub fn from_fn(mut f: impl FnMut(usize) -> bool) -> Self {
-        let mut w = [0u32; LANES];
+        let mut w = [0u64; WORDS];
         for i in 0..STREAM_BITS {
             if f(i) {
-                w[i / 32] |= 1 << (i % 32);
+                w[i / 64] |= 1 << (i % 64);
             }
         }
         Stream256(w)
     }
 
+    /// Read bit `i` of the stream.
     #[inline]
     pub fn bit(&self, i: usize) -> bool {
         debug_assert!(i < STREAM_BITS);
-        (self.0[i / 32] >> (i % 32)) & 1 == 1
+        (self.0[i / 64] >> (i % 64)) & 1 == 1
     }
 
     /// PINATUBO bit-parallel AND (simultaneous row activation, high Vref).
     #[inline]
     pub fn and(&self, other: &Stream256) -> Stream256 {
-        let mut w = [0u32; LANES];
-        for k in 0..LANES {
+        let mut w = [0u64; WORDS];
+        for k in 0..WORDS {
             w[k] = self.0[k] & other.0[k];
         }
         Stream256(w)
@@ -45,8 +58,8 @@ impl Stream256 {
     /// PINATUBO bit-parallel OR (simultaneous row activation, low Vref).
     #[inline]
     pub fn or(&self, other: &Stream256) -> Stream256 {
-        let mut w = [0u32; LANES];
-        for k in 0..LANES {
+        let mut w = [0u64; WORDS];
+        for k in 0..WORDS {
             w[k] = self.0[k] | other.0[k];
         }
         Stream256(w)
@@ -55,8 +68,8 @@ impl Stream256 {
     /// Bit-parallel NOT (inverted sense).
     #[inline]
     pub fn not(&self) -> Stream256 {
-        let mut w = [0u32; LANES];
-        for k in 0..LANES {
+        let mut w = [0u64; WORDS];
+        for k in 0..WORDS {
             w[k] = !self.0[k];
         }
         Stream256(w)
@@ -66,8 +79,8 @@ impl Stream256 {
     /// select stream s; selects `b` where s = 1, else `a`.
     #[inline]
     pub fn mux(&self, b: &Stream256, s: &Stream256) -> Stream256 {
-        let mut w = [0u32; LANES];
-        for k in 0..LANES {
+        let mut w = [0u64; WORDS];
+        for k in 0..WORDS {
             w[k] = (s.0[k] & b.0[k]) | (!s.0[k] & self.0[k]);
         }
         Stream256(w)
@@ -84,15 +97,28 @@ impl Stream256 {
     }
 
     /// S_TO_B: pop counter (PISO + 8-bit level counter in hardware;
-    /// native popcount here).
+    /// native popcount here — one `count_ones` per word).
     #[inline]
     pub fn popcount(&self) -> u32 {
         self.0.iter().map(|w| w.count_ones()).sum()
     }
 
-    /// Expose raw lanes (tensor interchange with the PJRT runtime).
-    pub fn lanes(&self) -> &[u32; LANES] {
+    /// The packed u64 words (the hot-path layout).
+    #[inline]
+    pub fn words(&self) -> &[u64; WORDS] {
         &self.0
+    }
+
+    /// The stream as 8 little-endian u32 lanes — the tensor-interchange
+    /// layout the PJRT artifacts and Python golden vectors use (bit `i`
+    /// in lane `i / 32`); recomputed from the packed words.
+    pub fn lanes(&self) -> [u32; LANES] {
+        let mut out = [0u32; LANES];
+        for (k, &w) in self.0.iter().enumerate() {
+            out[2 * k] = w as u32;
+            out[2 * k + 1] = (w >> 32) as u32;
+        }
+        out
     }
 }
 
@@ -113,7 +139,26 @@ mod tests {
         let s = Stream256::from_fn(|i| i == 0);
         assert_eq!(s.0[0], 1);
         let s = Stream256::from_fn(|i| i == 33);
+        assert_eq!(s.0[0], 1u64 << 33);
+        let s = Stream256::from_fn(|i| i == 65);
         assert_eq!(s.0[1], 2);
+    }
+
+    #[test]
+    fn lanes_match_legacy_u32_layout() {
+        // The interchange layout is frozen by the Python golden vectors:
+        // bit i in u32 lane i/32 at position i%32, LSB-first.
+        let s = Stream256::from_fn(|i| (i * 7) % 13 < 4);
+        let mut want = [0u32; LANES];
+        for i in 0..STREAM_BITS {
+            if s.bit(i) {
+                want[i / 32] |= 1 << (i % 32);
+            }
+        }
+        assert_eq!(s.lanes(), want);
+        // spot values pinning endianness (bit 33 -> lane 1, bit 1)
+        assert_eq!(Stream256::from_fn(|i| i == 33).lanes()[1], 2);
+        assert_eq!(Stream256::from_fn(|i| i == 255).lanes()[7], 1 << 31);
     }
 
     #[test]

@@ -123,6 +123,40 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<GateRe
     Ok(GateReport { rows, tolerance })
 }
 
+/// Floors-monotonicity check: every `(bench, metric)` floor committed in
+/// `old` (the base branch's `BENCH_BASELINE.json`) must still exist in
+/// `new` (the PR's) at a value `>= old` — floors only move **up** with a
+/// perf change, never quietly down or away.  New metrics in `new` are
+/// fine (a PR may add floors).  Returns the violations, one line each;
+/// empty means the PR's baseline is acceptable.
+pub fn floors_monotonic(old: &Json, new: &Json) -> Result<Vec<String>> {
+    let benches = match old.as_obj() {
+        Some(o) => o,
+        None => bail!("old baseline must be a JSON object of bench -> metrics"),
+    };
+    let mut violations = Vec::new();
+    for (bench, metrics) in benches {
+        let metrics = metrics
+            .as_obj()
+            .with_context(|| format!("old baseline entry {bench:?} must be an object"))?;
+        for (metric, floor) in metrics {
+            let floor = floor
+                .as_f64()
+                .with_context(|| format!("old baseline {bench}.{metric} must be a number"))?;
+            match new.path(&[bench.as_str(), metric.as_str()]).and_then(Json::as_f64) {
+                None => violations
+                    .push(format!("{bench}.{metric}: floor {floor} dropped from the baseline")),
+                // small epsilon: a re-serialized float must not trip the gate
+                Some(v) if v < floor - 1e-12 => {
+                    violations.push(format!("{bench}.{metric}: floor lowered {floor} -> {v}"))
+                }
+                Some(_) => {}
+            }
+        }
+    }
+    Ok(violations)
+}
+
 /// Merge per-bench `--json` dumps (each `{"bench": name, "results":
 /// {...}}`) into the `bench -> results` shape [`compare`] wants.
 pub fn merge_runs(runs: &[Json]) -> Result<Json> {
@@ -187,6 +221,40 @@ mod tests {
         assert_eq!(merged.path(&["net", "x"]).unwrap().as_f64(), Some(1.0));
         assert_eq!(merged.path(&["serving", "y"]).unwrap().as_f64(), Some(2.0));
         assert!(merge_runs(&[parse(r#"{"results":{}}"#).unwrap()]).is_err());
+    }
+
+    #[test]
+    fn floors_only_move_up() {
+        let old = r#"{"serving":{"serial_rps":15.0,"pooled_per_serial":1.3}}"#;
+        // Raising one floor and keeping the other is fine; so is adding
+        // a brand-new metric or bench.
+        let ok = floors_monotonic(
+            &parse(old).unwrap(),
+            &parse(
+                r#"{"serving":{"serial_rps":30.0,"pooled_per_serial":1.3,"extra":1.0},
+                    "net":{"cache_speedup":0.8}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(ok.is_empty(), "{ok:?}");
+        // Lowering a floor is a violation.
+        let bad = floors_monotonic(
+            &parse(old).unwrap(),
+            &parse(r#"{"serving":{"serial_rps":10.0,"pooled_per_serial":1.3}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].contains("serial_rps"), "{bad:?}");
+        // Removing a floor is a violation too.
+        let gone = floors_monotonic(
+            &parse(old).unwrap(),
+            &parse(r#"{"serving":{"serial_rps":15.0}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(gone.len(), 1);
+        assert!(gone[0].contains("pooled_per_serial"), "{gone:?}");
+        assert!(gone[0].contains("dropped"), "{gone:?}");
     }
 
     #[test]

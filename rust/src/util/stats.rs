@@ -43,11 +43,20 @@ impl Summary {
         var.sqrt()
     }
 
+    /// Smallest sample; 0.0 on an empty set, like `mean` — never `+inf`,
+    /// which would poison JSON output downstream.
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; 0.0 on an empty set, like `mean` — never `-inf`.
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -77,6 +86,8 @@ mod tests {
         }
         assert!((s.mean() - 5.0).abs() < 1e-12);
         assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
     }
 
     #[test]
@@ -92,8 +103,12 @@ mod tests {
 
     #[test]
     fn empty_safe() {
+        // regression: min/max used to fold from ±inf over zero samples,
+        // leaking non-finite floats into the metrics JSON
         let mut s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
     }
 }

@@ -251,7 +251,7 @@ mod pjrt {
             for mi in 0..32 {
                 for j in 0..256 {
                     out.extend_from_slice(
-                        odin::stochastic::encode_rotated_weight(vals[mi * 256 + j], j).lanes(),
+                        &odin::stochastic::encode_rotated_weight(vals[mi * 256 + j], j).lanes(),
                     );
                 }
             }
