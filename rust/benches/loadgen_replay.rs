@@ -1,0 +1,73 @@
+//! Scenario-replay throughput through the `harness::loadgen` runner: a
+//! hermetic multi-client exact-scored replay, reported as completed
+//! requests/s plus the scenario's own latency percentiles — what the
+//! evaluation harness itself costs, so a slow harness never masquerades
+//! as a slow server.
+//!
+//! ```bash
+//! cargo bench --bench loadgen_replay              # full run
+//! cargo bench --bench loadgen_replay -- --smoke --json BENCH_PR.json
+//! ```
+//!
+//! `--smoke` shrinks the workload for CI; `--json PATH` dumps
+//! `{"bench":"loadgen_replay","results":{...}}` in the shape
+//! `odin benchgate` merges (no committed floors yet: replay rps is
+//! machine-bound, so the verdict gate — not a floor — is the contract).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use odin::harness::loadgen::{self, LoadgenConfig, Target};
+use odin::util::json::Json;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let requests = if smoke { 96 } else { 512 };
+
+    // Build the shared CNT16 table up front so the replay doesn't pay
+    // for it inside the timed window.
+    odin::runtime::sim::shared_cnt16();
+
+    let scenarios = loadgen::parse_scenarios(&format!(
+        concat!(
+            r#"{{"name":"replay-closed","model":"cnn1:fast","requests":{},"clients":4,"#,
+            r#""window":8,"score":{{"kind":"exact"}}}}"#,
+            "\n",
+            r#"{{"name":"replay-mix","model":"cnn1:fast","requests":{},"clients":3,"window":4,"#,
+            r#""mix":{{"hogs":1,"hog_window":32}},"score":{{"kind":"exact"}}}}"#
+        ),
+        requests, requests
+    ))?;
+
+    println!(
+        "== bench group: loadgen_replay ({requests} requests/scenario{}) ==",
+        if smoke { ", smoke" } else { "" }
+    );
+    let verdict =
+        loadgen::run_suite(&scenarios, &Target::Hermetic { shards: 2 }, &LoadgenConfig::default())?;
+    verdict.print();
+    anyhow::ensure!(verdict.pass, "the replay bench's own scenarios must pass");
+
+    let mut results = BTreeMap::new();
+    for sc in &verdict.scenarios {
+        results.insert(format!("{}_rps", sc.name), Json::Num(sc.rps));
+        results.insert(format!("{}_p99_ms", sc.name), Json::Num(sc.p99_ms));
+        results.insert(format!("{}_p999_ms", sc.name), Json::Num(sc.p999_ms));
+    }
+
+    if let Some(path) = json_path {
+        let mut o = BTreeMap::new();
+        o.insert("bench".to_string(), Json::Str("loadgen_replay".to_string()));
+        o.insert("smoke".to_string(), Json::Bool(smoke));
+        o.insert("results".to_string(), Json::Obj(results));
+        std::fs::write(&path, Json::Obj(o).to_string())?;
+        println!("results json written to {path}");
+    }
+    Ok(())
+}

@@ -316,10 +316,15 @@ pub struct MetricsReport {
     pub queue_us_p50: f64,
     /// 99th-percentile queue time (us).
     pub queue_us_p99: f64,
+    /// 99.9th-percentile queue time (us) — the tail quantile loadgen
+    /// verdicts also report, so both agree on definitions.
+    pub queue_us_p999: f64,
     /// Median backend execution time of the batch a request rode in (us).
     pub exec_us_p50: f64,
     /// 99th-percentile backend execution time (us).
     pub exec_us_p99: f64,
+    /// 99.9th-percentile backend execution time (us).
+    pub exec_us_p999: f64,
     /// Fastest backend execution time (us); 0.0 before any traffic (an
     /// idle server must report finite numbers — see `Summary::min`).
     pub exec_us_min: f64,
@@ -542,10 +547,12 @@ impl MetricsHub {
         let mean_batch = g.batches_seen.mean();
         let sim_us_mean = g.sim_us.mean();
         let sim_mj_total = g.sim_pj / 1e9;
-        let queue_us_p50 = g.queue_us.percentile(50.0);
-        let queue_us_p99 = g.queue_us.percentile(99.0);
-        let exec_us_p50 = g.exec_us.percentile(50.0);
-        let exec_us_p99 = g.exec_us.percentile(99.0);
+        let queue_us_p50 = g.queue_us.p50();
+        let queue_us_p99 = g.queue_us.p99();
+        let queue_us_p999 = g.queue_us.p999();
+        let exec_us_p50 = g.exec_us.p50();
+        let exec_us_p99 = g.exec_us.p99();
+        let exec_us_p999 = g.exec_us.p999();
         let exec_us_min = g.exec_us.min();
         let exec_us_max = g.exec_us.max();
         let (errors, batches, padded_rows) = (g.errors, g.batches, g.padded_rows);
@@ -627,8 +634,10 @@ impl MetricsHub {
             mean_batch,
             queue_us_p50,
             queue_us_p99,
+            queue_us_p999,
             exec_us_p50,
             exec_us_p99,
+            exec_us_p999,
             exec_us_min,
             exec_us_max,
             sim_us_mean,
@@ -672,8 +681,14 @@ impl MetricsReport {
         println!("throughput          {:.1} req/s", self.throughput_rps);
         println!("batches             {} ({} padded rows)", self.batches, self.padded_rows);
         println!("mean batch          {:.2}", self.mean_batch);
-        println!("queue p50/p99       {:.1} / {:.1} us", self.queue_us_p50, self.queue_us_p99);
-        println!("exec  p50/p99       {:.1} / {:.1} us", self.exec_us_p50, self.exec_us_p99);
+        println!(
+            "queue p50/p99/p999  {:.1} / {:.1} / {:.1} us",
+            self.queue_us_p50, self.queue_us_p99, self.queue_us_p999
+        );
+        println!(
+            "exec  p50/p99/p999  {:.1} / {:.1} / {:.1} us",
+            self.exec_us_p50, self.exec_us_p99, self.exec_us_p999
+        );
         println!("exec  min/max       {:.1} / {:.1} us", self.exec_us_min, self.exec_us_max);
         println!("sim ODIN latency    {:.2} us/inf", self.sim_us_mean);
         println!("sim ODIN energy     {:.4} mJ total", self.sim_mj_total);
@@ -768,8 +783,10 @@ impl MetricsReport {
         o.insert("mean_batch".to_string(), num(self.mean_batch));
         o.insert("queue_us_p50".to_string(), num(self.queue_us_p50));
         o.insert("queue_us_p99".to_string(), num(self.queue_us_p99));
+        o.insert("queue_us_p999".to_string(), num(self.queue_us_p999));
         o.insert("exec_us_p50".to_string(), num(self.exec_us_p50));
         o.insert("exec_us_p99".to_string(), num(self.exec_us_p99));
+        o.insert("exec_us_p999".to_string(), num(self.exec_us_p999));
         o.insert("exec_us_min".to_string(), num(self.exec_us_min));
         o.insert("exec_us_max".to_string(), num(self.exec_us_max));
         o.insert("sim_us_mean".to_string(), num(self.sim_us_mean));
@@ -1020,6 +1037,33 @@ mod tests {
         let shards = j.path(&["shards"]).unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
         assert_eq!(shards[1].get("requests").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn p999_is_reported_and_round_trips_through_json() {
+        // 1000 one-batch requests: 998 fast, 2 slow.  p99 must stay on
+        // the fast cluster while p999 lands on the slow tail — and both
+        // survive the JSON round trip as numbers.
+        let m = MetricsHub::new();
+        for _ in 0..998 {
+            m.record_batch(0, MODEL, 0, &exec(1, 1_000_000), &[resp(1, 1_000_000)]);
+        }
+        for _ in 0..2 {
+            m.record_batch(0, MODEL, 0, &exec(1, 50_000_000), &[resp(1, 50_000_000)]);
+        }
+        let r = m.report();
+        assert!((r.exec_us_p99 - 1_000.0).abs() < 1e-6, "p99 {}", r.exec_us_p99);
+        assert!((r.exec_us_p999 - 50_000.0).abs() < 1e-6, "p999 {}", r.exec_us_p999);
+        assert!(r.queue_us_p999 >= r.queue_us_p99);
+
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.path(&["exec_us_p999"]).unwrap().as_f64(), Some(r.exec_us_p999));
+        assert_eq!(j.path(&["queue_us_p999"]).unwrap().as_f64(), Some(r.queue_us_p999));
+        assert_eq!(j.path(&["exec_us_p99"]).unwrap().as_f64(), Some(r.exec_us_p99));
+        // An idle hub reports 0.0 for the new fields too (finite JSON).
+        let idle = crate::util::json::parse(&MetricsHub::new().report().to_json()).unwrap();
+        assert_eq!(idle.path(&["exec_us_p999"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(idle.path(&["queue_us_p999"]).unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

@@ -364,6 +364,18 @@ impl NetClient {
         Self::wait(self.submit(row))
     }
 
+    /// Tear the connection down from the client side (both directions).
+    /// Chaos tooling (`odin loadgen` disconnect scenarios) calls this
+    /// mid-window to exercise the disconnect guarantee: the reader
+    /// thread exits and every in-flight *and later* submission resolves
+    /// with a synthesized typed outcome — [`NetError::Disconnected`], or
+    /// the stored `TooManyConnections` fate when the server sent one.
+    /// Takes `&self` so it composes with an active [`Pipeline`] borrow;
+    /// idempotent (a second call is a no-op on a dead socket).
+    pub fn abort(&self) {
+        let _ = self.inner.stream.shutdown(Shutdown::Both);
+    }
+
     /// Open a bounded-window pipelined view of this connection: up to
     /// `window` requests in flight, reaped in completion order.  See
     /// [`Pipeline`].
@@ -467,10 +479,22 @@ impl Pipeline<'_> {
     /// response — when the window was full and one had to be reaped to
     /// make room.
     pub fn submit(&mut self, row: Vec<u8>) -> Option<Result<NetResponse, NetError>> {
-        let reaped = if self.in_flight >= self.window { self.reap() } else { None };
-        self.client.submit_with(row, self.tx.clone());
+        self.submit_frame(row).1.map(|(_id, outcome)| outcome)
+    }
+
+    /// [`Pipeline::submit`] with ids on both sides: returns the new
+    /// request's id plus the reaped `(id, outcome)` pair when the full
+    /// window forced a reap.  Callers correlating out-of-order
+    /// completions to their submissions (loadgen's per-request latency
+    /// clocks) need the id *at submit time*, not just on the reap side.
+    pub fn submit_frame(
+        &mut self,
+        row: Vec<u8>,
+    ) -> (u64, Option<(u64, Result<NetResponse, NetError>)>) {
+        let reaped = if self.in_flight >= self.window { self.reap_frame() } else { None };
+        let id = self.client.submit_with(row, self.tx.clone());
         self.in_flight += 1;
-        reaped
+        (id, reaped)
     }
 
     /// Block for the next completed response, in completion order.

@@ -1,0 +1,1327 @@
+//! `odin loadgen`: replay JSONL traffic scenarios against a serving
+//! endpoint and score the answers against golden `SimBackend` outputs.
+//!
+//! A scenario file is JSON-Lines: one scenario object per line, blank
+//! lines ignored.  Schema (unknown keys are rejected with the 1-based
+//! line number):
+//!
+//! ```text
+//! key          type    default   meaning
+//! ----------   ------  -------   ----------------------------------------
+//! name         str     required  unique scenario id (verdict key)
+//! model        str     required  "ARCH:MODE", e.g. "cnn1:fast"
+//! requests     int     required  total requests to replay (>= 1)
+//! clients      int     4         concurrent worker clients (>= 1)
+//! window       int     8         pipeline window per polite client
+//! arrival      obj     closed    {"kind":"closed"} or
+//!                                {"kind":"open","rps":400,"burst":8}
+//! mix          obj     none      {"hogs":1,"hog_window":64}
+//! chaos        obj     none      {"disconnects":1,
+//!                                 "swaps":[{"after":30,"seed":101}]}
+//! score        obj     exact     {"kind":"exact"} or
+//!                                {"kind":"accuracy","min":0.9}
+//! min_ok       num     1.0       min fraction of requests answered Ok
+//! golden_seed  int     0x0D1A    weight seed the golden engine uses
+//! ```
+//!
+//! Scoring: `exact` re-runs every sample through a single-threaded
+//! in-process [`Engine`] built from the same `(arch, mode, seed)` and
+//! requires bitwise-equal logits and argmax — sound because the
+//! `SimBackend` is bit-identical at any thread count or batch shape.
+//! Mid-run swaps are handled by mapping each observed response epoch to
+//! the weight seed installed at that epoch.  `accuracy` only compares
+//! argmax to the dataset label against a threshold.
+//!
+//! The suite emits a machine-readable verdict (`SuiteVerdict::to_json`)
+//! that `odin benchgate --verdict` gates, plus a human table.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::{
+    BatchPolicy, Engine, MetricsHub, ModelId, ModelRegistry, ModelSpec, ModelWeights, Prediction,
+    SYNTHETIC_SEED,
+};
+use crate::dataset::TestSet;
+use crate::frontend::{Frontend, FrontendConfig, NetClient, NetError};
+use crate::util::json::{self, Json};
+use crate::util::stats::Histogram;
+
+// ---------------------------------------------------------------------------
+// Scenario model
+// ---------------------------------------------------------------------------
+
+/// Arrival curve for one scenario.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Closed loop: each client keeps its pipeline window full.
+    Closed,
+    /// Open loop: the scenario targets `rps` requests/second overall,
+    /// released in groups of `burst`.
+    Open {
+        /// Target aggregate request rate across all clients.
+        rps: f64,
+        /// Requests released per pacing step.
+        burst: usize,
+    },
+}
+
+/// A mid-run weight swap: once `after` requests have completed, swap
+/// the scenario's model to weight seed `seed`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwapEvent {
+    /// Completed-request threshold that triggers the swap.
+    pub after: usize,
+    /// Weight seed to install.
+    pub seed: u64,
+}
+
+/// Scoring rule for one scenario.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Score {
+    /// Bitwise match against golden single-threaded engine outputs.
+    Exact,
+    /// Argmax-vs-label accuracy must reach `min`.
+    Accuracy {
+        /// Minimum accepted accuracy in [0, 1].
+        min: f64,
+    },
+}
+
+/// One parsed scenario line.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Unique scenario id; keys the verdict row.
+    pub name: String,
+    /// Model the clients connect for.
+    pub model: ModelId,
+    /// Total requests replayed across all clients.
+    pub requests: usize,
+    /// Concurrent worker clients.
+    pub clients: usize,
+    /// Pipeline window of a polite client.
+    pub window: usize,
+    /// Arrival curve.
+    pub arrival: Arrival,
+    /// First `hogs` clients use `hog_window` instead of `window`.
+    pub hogs: usize,
+    /// Pipeline window of a hog client.
+    pub hog_window: usize,
+    /// Last `disconnects` clients tear their connection down mid-run
+    /// and must recover via reconnect.
+    pub disconnects: usize,
+    /// Mid-run weight swaps, ascending by `after`.
+    pub swaps: Vec<SwapEvent>,
+    /// Scoring rule.
+    pub score: Score,
+    /// Minimum fraction of requests that must resolve Ok.
+    pub min_ok: f64,
+    /// Weight seed the golden engine (and the resync swap) uses.
+    pub golden_seed: u64,
+}
+
+/// Where the suite sends traffic.
+#[derive(Clone, Debug)]
+pub enum Target {
+    /// A live `odin serve` endpoint, e.g. `127.0.0.1:7411`.
+    Addr(String),
+    /// Spawn an in-process multi-model frontend on a loopback port.
+    Hermetic {
+        /// Shard count for every spawned model pool.
+        shards: usize,
+    },
+}
+
+/// Knobs that apply suite-wide rather than per scenario.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Artifact directory for weights/dataset (synthetic fallback).
+    pub artifacts: String,
+    /// Distinct dataset samples cycled through (request i uses sample
+    /// `i % samples`).
+    pub samples: usize,
+    /// Per-request retry budget for transient errors.
+    pub retry_limit: u32,
+    /// Reconnect budget per worker (chaos workers burn these).
+    pub max_segments: usize,
+    /// How long a worker keeps retrying the initial connect.
+    pub connect_timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            artifacts: "artifacts".to_string(),
+            samples: 64,
+            retry_limit: 64,
+            max_segments: 16,
+            connect_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------------
+
+fn want_obj<'a>(
+    line: usize,
+    j: &'a Json,
+    what: &str,
+) -> Result<&'a BTreeMap<String, Json>> {
+    match j {
+        Json::Obj(m) => Ok(m),
+        _ => bail!("line {line}: {what} must be a JSON object"),
+    }
+}
+
+fn known_keys(
+    line: usize,
+    obj: &BTreeMap<String, Json>,
+    what: &str,
+    known: &[&str],
+) -> Result<()> {
+    for k in obj.keys() {
+        ensure!(known.contains(&k.as_str()), "line {line}: unknown {what} key {k:?}");
+    }
+    Ok(())
+}
+
+fn usize_field(
+    line: usize,
+    obj: &BTreeMap<String, Json>,
+    key: &str,
+    default: Option<usize>,
+) -> Result<usize> {
+    match obj.get(key) {
+        Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 && *n < 9e15 => Ok(*n as usize),
+        Some(_) => bail!("line {line}: {key:?} must be a non-negative integer"),
+        None => default.with_context(|| format!("line {line}: missing required key {key:?}")),
+    }
+}
+
+fn u64_field(
+    line: usize,
+    obj: &BTreeMap<String, Json>,
+    key: &str,
+    default: Option<u64>,
+) -> Result<u64> {
+    match obj.get(key) {
+        Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 && *n < 9e15 => Ok(*n as u64),
+        Some(_) => bail!("line {line}: {key:?} must be a non-negative integer"),
+        None => default.with_context(|| format!("line {line}: missing required key {key:?}")),
+    }
+}
+
+fn num_field(
+    line: usize,
+    obj: &BTreeMap<String, Json>,
+    key: &str,
+    default: Option<f64>,
+) -> Result<f64> {
+    match obj.get(key) {
+        Some(Json::Num(n)) => Ok(*n),
+        Some(_) => bail!("line {line}: {key:?} must be a number"),
+        None => default.with_context(|| format!("line {line}: missing required key {key:?}")),
+    }
+}
+
+const SCENARIO_KEYS: &[&str] = &[
+    "name", "model", "requests", "clients", "window", "arrival", "mix", "chaos", "score",
+    "min_ok", "golden_seed",
+];
+
+fn parse_scenario(line: usize, j: &Json) -> Result<Scenario> {
+    let obj = want_obj(line, j, "a scenario")?;
+    known_keys(line, obj, "scenario", SCENARIO_KEYS)?;
+
+    let name = match obj.get("name") {
+        Some(Json::Str(s)) if !s.is_empty() => s.clone(),
+        Some(_) => bail!("line {line}: \"name\" must be a non-empty string"),
+        None => bail!("line {line}: missing required key \"name\""),
+    };
+    let model = match obj.get("model") {
+        Some(Json::Str(s)) => ModelId::parse(s)
+            .map_err(|e| anyhow::anyhow!("line {line}: bad \"model\": {e}"))?,
+        Some(_) => bail!("line {line}: \"model\" must be a string like \"cnn1:fast\""),
+        None => bail!("line {line}: missing required key \"model\""),
+    };
+    let requests = usize_field(line, obj, "requests", None)?;
+    ensure!(requests >= 1, "line {line}: \"requests\" must be >= 1");
+    let clients = usize_field(line, obj, "clients", Some(4))?;
+    ensure!(clients >= 1, "line {line}: \"clients\" must be >= 1");
+    let window = usize_field(line, obj, "window", Some(8))?;
+    ensure!(window >= 1, "line {line}: \"window\" must be >= 1");
+
+    let arrival = match obj.get("arrival") {
+        None => Arrival::Closed,
+        Some(a) => {
+            let a = want_obj(line, a, "\"arrival\"")?;
+            known_keys(line, a, "arrival", &["kind", "rps", "burst"])?;
+            match a.get("kind") {
+                Some(Json::Str(k)) if k == "closed" => Arrival::Closed,
+                Some(Json::Str(k)) if k == "open" => {
+                    let rps = num_field(line, a, "rps", None)?;
+                    ensure!(
+                        rps.is_finite() && rps > 0.0,
+                        "line {line}: open arrival needs \"rps\" > 0"
+                    );
+                    let burst = usize_field(line, a, "burst", Some(1))?;
+                    ensure!(burst >= 1, "line {line}: \"burst\" must be >= 1");
+                    Arrival::Open { rps, burst }
+                }
+                _ => bail!("line {line}: arrival \"kind\" must be \"closed\" or \"open\""),
+            }
+        }
+    };
+
+    let (hogs, hog_window) = match obj.get("mix") {
+        None => (0, 64),
+        Some(m) => {
+            let m = want_obj(line, m, "\"mix\"")?;
+            known_keys(line, m, "mix", &["hogs", "hog_window"])?;
+            let hogs = usize_field(line, m, "hogs", Some(0))?;
+            ensure!(hogs <= clients, "line {line}: \"hogs\" cannot exceed \"clients\"");
+            let hog_window = usize_field(line, m, "hog_window", Some(64))?;
+            ensure!(hog_window >= 1, "line {line}: \"hog_window\" must be >= 1");
+            (hogs, hog_window)
+        }
+    };
+
+    let (disconnects, swaps) = match obj.get("chaos") {
+        None => (0, Vec::new()),
+        Some(c) => {
+            let c = want_obj(line, c, "\"chaos\"")?;
+            known_keys(line, c, "chaos", &["disconnects", "swaps"])?;
+            let disconnects = usize_field(line, c, "disconnects", Some(0))?;
+            ensure!(
+                disconnects <= clients,
+                "line {line}: \"disconnects\" cannot exceed \"clients\""
+            );
+            let swaps = match c.get("swaps") {
+                None => Vec::new(),
+                Some(Json::Arr(evs)) => {
+                    let mut out = Vec::with_capacity(evs.len());
+                    for ev in evs {
+                        let ev = want_obj(line, ev, "a swap event")?;
+                        known_keys(line, ev, "swap", &["after", "seed"])?;
+                        let after = usize_field(line, ev, "after", None)?;
+                        ensure!(
+                            after >= 1 && after < requests,
+                            "line {line}: swap \"after\" must be in 1..requests"
+                        );
+                        let seed = u64_field(line, ev, "seed", None)?;
+                        out.push(SwapEvent { after, seed });
+                    }
+                    for w in out.windows(2) {
+                        ensure!(
+                            w[0].after < w[1].after,
+                            "line {line}: swap events must be ascending by \"after\""
+                        );
+                    }
+                    out
+                }
+                Some(_) => bail!("line {line}: \"swaps\" must be an array"),
+            };
+            (disconnects, swaps)
+        }
+    };
+    ensure!(
+        hogs + disconnects <= clients,
+        "line {line}: hogs + disconnects cannot exceed clients"
+    );
+
+    let score = match obj.get("score") {
+        None => Score::Exact,
+        Some(s) => {
+            let s = want_obj(line, s, "\"score\"")?;
+            known_keys(line, s, "score", &["kind", "min"])?;
+            match s.get("kind") {
+                Some(Json::Str(k)) if k == "exact" => Score::Exact,
+                Some(Json::Str(k)) if k == "accuracy" => {
+                    let min = num_field(line, s, "min", None)?;
+                    ensure!(
+                        (0.0..=1.0).contains(&min),
+                        "line {line}: accuracy \"min\" must be in [0, 1]"
+                    );
+                    Score::Accuracy { min }
+                }
+                _ => bail!("line {line}: score \"kind\" must be \"exact\" or \"accuracy\""),
+            }
+        }
+    };
+
+    let min_ok = num_field(line, obj, "min_ok", Some(1.0))?;
+    ensure!((0.0..=1.0).contains(&min_ok), "line {line}: \"min_ok\" must be in [0, 1]");
+    let golden_seed = u64_field(line, obj, "golden_seed", Some(SYNTHETIC_SEED))?;
+
+    Ok(Scenario {
+        name,
+        model,
+        requests,
+        clients,
+        window,
+        arrival,
+        hogs,
+        hog_window,
+        disconnects,
+        swaps,
+        score,
+        min_ok,
+        golden_seed,
+    })
+}
+
+/// Parse one scenario file (JSON-Lines).  Errors carry the 1-based
+/// line number of the offending line.
+pub fn parse_scenarios(text: &str) -> Result<Vec<Scenario>> {
+    let lines = json::parse_jsonl(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    ensure!(!lines.is_empty(), "scenario file has no scenarios");
+    let mut out = Vec::with_capacity(lines.len());
+    let mut names = HashSet::new();
+    for (line, j) in &lines {
+        let sc = parse_scenario(*line, j)?;
+        ensure!(
+            names.insert(sc.name.clone()),
+            "line {line}: duplicate scenario name {:?}",
+            sc.name
+        );
+        out.push(sc);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Golden outputs
+// ---------------------------------------------------------------------------
+
+/// Cache of golden predictions keyed by `(arch, mode, seed)` — scoring
+/// several scenarios against the same model reuses one engine run.
+pub(crate) type GoldenCache = HashMap<(String, String, u64), Arc<Vec<Prediction>>>;
+
+fn golden_for(
+    cache: &mut GoldenCache,
+    artifacts: &str,
+    samples: &TestSet,
+    arch: &str,
+    mode: &str,
+    seed: u64,
+) -> Result<Arc<Vec<Prediction>>> {
+    let key = (arch.to_string(), mode.to_string(), seed);
+    if let Some(p) = cache.get(&key) {
+        return Ok(Arc::clone(p));
+    }
+    let weights = ModelWeights::load_or_synthetic(artifacts, arch, seed)
+        .with_context(|| format!("golden weights for {arch}/{mode} seed {seed}"))?;
+    // Single-threaded reference engine: the SimBackend is bit-identical
+    // at any thread count, so one thread is the cheapest sound oracle.
+    let engine = Engine::sim_from_weights_threads(&weights, mode, 1)
+        .with_context(|| format!("golden engine for {arch}/{mode}"))?;
+    let chunk = engine.max_batch().max(1);
+    let mut preds = Vec::with_capacity(samples.len());
+    for batch in samples.samples.chunks(chunk) {
+        let rows: Vec<&[u8]> = batch.iter().map(|s| s.image.as_slice()).collect();
+        let (mut p, _exec) = engine
+            .infer(&rows)
+            .with_context(|| format!("golden inference for {arch}/{mode}"))?;
+        preds.append(&mut p);
+    }
+    let preds = Arc::new(preds);
+    cache.insert(key, Arc::clone(&preds));
+    Ok(preds)
+}
+
+// ---------------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------------
+
+/// Everything a worker thread needs, fixed at spawn time.
+struct WorkerCfg {
+    addr: String,
+    arch: String,
+    mode: String,
+    name: String,
+    window: usize,
+    chaotic: bool,
+    assigned: Vec<usize>,
+    per_rps: f64,
+    burst: usize,
+    used: usize,
+    retry_limit: u32,
+    max_segments: usize,
+    connect_timeout: Duration,
+}
+
+/// Per-request outcome a worker reports back.
+#[derive(Clone, Debug)]
+enum WorkOutcome {
+    Ok { epoch: u64, logits: [f32; 10], argmax: u8 },
+    Failed(String),
+}
+
+#[derive(Default)]
+struct WorkerOut {
+    outcomes: Vec<(usize, WorkOutcome)>,
+    hist: Histogram,
+    retries: usize,
+    chaos_disconnects: usize,
+}
+
+struct Worker {
+    cfg: WorkerCfg,
+    samples: Arc<TestSet>,
+    completed: Arc<AtomicUsize>,
+    out: WorkerOut,
+    todo: VecDeque<usize>,
+    retries: HashMap<usize, u32>,
+    aborted: bool,
+    submitted: usize,
+    start: Instant,
+    backoff_ms: u64,
+}
+
+/// Keep dialing `addr` until it answers or `timeout` elapses — loadgen
+/// has to tolerate a `serve` process that is still binding its socket.
+fn connect_retry(
+    addr: &str,
+    arch: &str,
+    mode: &str,
+    name: &str,
+    timeout: Duration,
+) -> std::io::Result<NetClient> {
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(25);
+    loop {
+        match NetClient::connect_named(addr, arch, mode, name) {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                if Instant::now() + backoff >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+impl Worker {
+    fn run(mut self) -> WorkerOut {
+        self.todo = self.cfg.assigned.iter().copied().collect();
+        self.start = Instant::now();
+        let mut segments = 0usize;
+        while !self.todo.is_empty() {
+            segments += 1;
+            if segments > self.cfg.max_segments {
+                self.fail_rest("reconnect budget exhausted");
+                break;
+            }
+            if self.backoff_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.backoff_ms));
+                self.backoff_ms = 0;
+            }
+            let net = match connect_retry(
+                &self.cfg.addr,
+                &self.cfg.arch,
+                &self.cfg.mode,
+                &self.cfg.name,
+                self.cfg.connect_timeout,
+            ) {
+                Ok(net) => net,
+                Err(e) => {
+                    self.fail_rest(&format!("connect failed: {e}"));
+                    break;
+                }
+            };
+            self.segment(&net);
+        }
+        self.out
+    }
+
+    /// One connection's worth of work: submit until the todo list
+    /// drains or the connection dies, then drain the pipeline.
+    fn segment(&mut self, net: &NetClient) {
+        let quota = self.cfg.assigned.len();
+        let mut pipe = net.pipeline(self.cfg.window);
+        let mut pending: HashMap<u64, (usize, Instant)> = HashMap::new();
+        let mut dead = false;
+        while !dead {
+            let Some(i) = self.todo.pop_front() else { break };
+            if self.cfg.per_rps > 0.0 && self.submitted % self.cfg.burst == 0 {
+                let due = Duration::from_secs_f64(self.submitted as f64 / self.cfg.per_rps);
+                let elapsed = self.start.elapsed();
+                if due > elapsed {
+                    std::thread::sleep(due - elapsed);
+                }
+            }
+            let row = self.samples.samples[i % self.cfg.used].image.clone();
+            let (id, reaped) = pipe.submit_frame(row);
+            pending.insert(id, (i, Instant::now()));
+            self.submitted += 1;
+            // Chaos client: halfway through its quota, rip the socket
+            // out from under the pipeline and recover on a fresh
+            // connection.  Every pending submission must still resolve.
+            if self.cfg.chaotic && !self.aborted && self.submitted * 2 >= quota {
+                net.abort();
+                self.aborted = true;
+                self.out.chaos_disconnects += 1;
+            }
+            if let Some((rid, res)) = reaped {
+                dead = self.handle(rid, res, &mut pending);
+            }
+        }
+        while let Some((rid, res)) = pipe.reap_frame() {
+            // Keep reaping even after a fatal outcome: the disconnect
+            // guarantee says every submission resolves typed.
+            let d = self.handle(rid, res, &mut pending);
+            dead = dead || d;
+        }
+    }
+
+    /// Record one reaped outcome.  Returns true when the connection is
+    /// no longer usable and the worker should reconnect.
+    fn handle(
+        &mut self,
+        rid: u64,
+        res: Result<crate::frontend::NetResponse, NetError>,
+        pending: &mut HashMap<u64, (usize, Instant)>,
+    ) -> bool {
+        let Some((i, t0)) = pending.remove(&rid) else { return false };
+        match res {
+            Ok(resp) => {
+                self.out.hist.push(t0.elapsed().as_secs_f64() * 1e6);
+                self.out.outcomes.push((
+                    i,
+                    WorkOutcome::Ok {
+                        epoch: resp.epoch,
+                        logits: resp.logits,
+                        argmax: resp.argmax,
+                    },
+                ));
+                self.completed.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+            Err(e) => {
+                let transient = matches!(
+                    e,
+                    NetError::Overloaded { .. }
+                        | NetError::TooManyConnections { .. }
+                        | NetError::Disconnected
+                );
+                let tried = self.retries.get(&i).copied().unwrap_or(0);
+                if !transient || tried >= self.cfg.retry_limit {
+                    self.out.outcomes.push((i, WorkOutcome::Failed(e.to_string())));
+                    self.completed.fetch_add(1, Ordering::Relaxed);
+                    return matches!(
+                        e,
+                        NetError::TooManyConnections { .. } | NetError::Disconnected
+                    );
+                }
+                self.retries.insert(i, tried + 1);
+                self.out.retries += 1;
+                self.todo.push_back(i);
+                match e {
+                    NetError::Overloaded { retry_after_ms } => {
+                        std::thread::sleep(Duration::from_millis(u64::from(retry_after_ms)));
+                        false
+                    }
+                    NetError::TooManyConnections { retry_after_ms } => {
+                        self.backoff_ms = u64::from(retry_after_ms).max(1);
+                        true
+                    }
+                    _ => {
+                        self.backoff_ms = self.backoff_ms.max(10);
+                        true
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mark every remaining assigned request failed with `why`.
+    fn fail_rest(&mut self, why: &str) {
+        while let Some(i) = self.todo.pop_front() {
+            self.out.outcomes.push((i, WorkOutcome::Failed(why.to_string())));
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario runner
+// ---------------------------------------------------------------------------
+
+/// Per-scenario verdict row (also serialized into the suite JSON).
+#[derive(Clone, Debug)]
+pub struct ScenarioVerdict {
+    /// Scenario name.
+    pub name: String,
+    /// Model as `arch/mode`.
+    pub model: String,
+    /// Did the scenario pass its scoring rule?
+    pub pass: bool,
+    /// Human-readable reasons when failing (empty when passing).
+    pub reason: String,
+    /// Requests replayed.
+    pub requests: usize,
+    /// Requests that resolved Ok.
+    pub ok: usize,
+    /// Requests that resolved with an error (post-retry).
+    pub failed: usize,
+    /// Exact-score mismatches against the golden outputs.
+    pub mismatches: usize,
+    /// Argmax-equals-label count over Ok responses.
+    pub correct: usize,
+    /// Transient-error retries performed.
+    pub retries: usize,
+    /// Chaos disconnects injected.
+    pub chaos_disconnects: usize,
+    /// Swap events executed.
+    pub swaps: usize,
+    /// FNV-1a over all Ok logits in request order; only stable (and
+    /// only emitted) when every request succeeded with no swaps.
+    pub checksum: Option<String>,
+    /// Median request latency, milliseconds.
+    pub p50_ms: f64,
+    /// 99th percentile latency, milliseconds.
+    pub p99_ms: f64,
+    /// 99.9th percentile latency, milliseconds.
+    pub p999_ms: f64,
+    /// Max latency, milliseconds.
+    pub max_ms: f64,
+    /// Mean latency, milliseconds.
+    pub mean_ms: f64,
+    /// Wall-clock seconds for the scenario.
+    pub wall_s: f64,
+    /// Completed requests per wall-clock second.
+    pub rps: f64,
+}
+
+/// Poll one inference through `ctl` to learn the currently-installed
+/// epoch (the pool may briefly answer Overloaded right after spawn).
+fn probe_epoch(ctl: &NetClient, image: &[u8]) -> Result<u64> {
+    for _ in 0..100 {
+        match ctl.infer(image.to_vec()) {
+            Ok(resp) => return Ok(resp.epoch),
+            Err(NetError::Overloaded { retry_after_ms }) => {
+                std::thread::sleep(Duration::from_millis(u64::from(retry_after_ms).max(1)));
+            }
+            Err(e) => bail!("probe request failed: {e}"),
+        }
+    }
+    bail!("probe request failed: still overloaded after 100 attempts")
+}
+
+fn run_scenario(
+    sc: &Scenario,
+    addr: &str,
+    samples: &Arc<TestSet>,
+    seed_state: &mut HashMap<ModelId, u64>,
+    golden: &mut GoldenCache,
+    cfg: &LoadgenConfig,
+) -> Result<ScenarioVerdict> {
+    let used = samples.len().max(1);
+    let ctl = connect_retry(
+        addr,
+        &sc.model.arch,
+        &sc.model.mode,
+        &format!("lg-ctl-{}", sc.name),
+        cfg.connect_timeout,
+    )
+    .with_context(|| format!("scenario {:?}: control connect to {addr}", sc.name))?;
+
+    // epoch -> weight seed installed at that epoch, for exact scoring.
+    let mut epoch_map: HashMap<u64, u64> = HashMap::new();
+
+    // Resync: if a previous scenario left different weights installed,
+    // swap back to this scenario's golden seed before replaying.
+    let known = seed_state.get(&sc.model).copied();
+    if known.is_some() && known != Some(sc.golden_seed) {
+        let e = ctl
+            .swap(&sc.model.arch, &sc.model.mode, sc.golden_seed)
+            .map_err(|e| anyhow::anyhow!("scenario {:?}: resync swap failed: {e}", sc.name))?;
+        epoch_map.insert(e, sc.golden_seed);
+    }
+    seed_state.insert(sc.model.clone(), sc.golden_seed);
+    // Whatever epoch is serving right now carries the golden seed —
+    // either it always did, or the resync swap above installed it.
+    let probe = probe_epoch(&ctl, &samples.samples[0].image)
+        .with_context(|| format!("scenario {:?}", sc.name))?;
+    epoch_map.entry(probe).or_insert(sc.golden_seed);
+
+    let completed = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(sc.clients);
+    for c in 0..sc.clients {
+        let window = if c < sc.hogs { sc.hog_window } else { sc.window };
+        let chaotic = c >= sc.clients - sc.disconnects;
+        let assigned: Vec<usize> = (c..sc.requests).step_by(sc.clients).collect();
+        let per_rps = match sc.arrival {
+            Arrival::Closed => 0.0,
+            Arrival::Open { rps, .. } => rps / sc.clients as f64,
+        };
+        let burst = match sc.arrival {
+            Arrival::Closed => 1,
+            Arrival::Open { burst, .. } => burst,
+        };
+        let worker = Worker {
+            cfg: WorkerCfg {
+                addr: addr.to_string(),
+                arch: sc.model.arch.clone(),
+                mode: sc.model.mode.clone(),
+                name: format!("lg-{}-{c}", sc.name),
+                window,
+                chaotic,
+                assigned,
+                per_rps,
+                burst,
+                used,
+                retry_limit: cfg.retry_limit,
+                max_segments: cfg.max_segments,
+                connect_timeout: cfg.connect_timeout,
+            },
+            samples: Arc::clone(samples),
+            completed: Arc::clone(&completed),
+            out: WorkerOut::default(),
+            todo: VecDeque::new(),
+            retries: HashMap::new(),
+            aborted: false,
+            submitted: 0,
+            start: Instant::now(),
+            backoff_ms: 0,
+        };
+        let h = std::thread::Builder::new()
+            .name(format!("lg-{}-{c}", sc.name))
+            .spawn(move || worker.run())
+            .with_context(|| format!("scenario {:?}: spawn worker {c}", sc.name))?;
+        handles.push(h);
+    }
+
+    // Swap controller: fire each event once `after` requests completed.
+    let mut swaps_done = 0usize;
+    let mut swap_err = String::new();
+    for ev in &sc.swaps {
+        while completed.load(Ordering::Relaxed) < ev.after {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        match ctl.swap(&sc.model.arch, &sc.model.mode, ev.seed) {
+            Ok(e) => {
+                epoch_map.insert(e, ev.seed);
+                seed_state.insert(sc.model.clone(), ev.seed);
+                swaps_done += 1;
+            }
+            Err(e) => {
+                swap_err = format!("swap after {} failed: {e}", ev.after);
+                break;
+            }
+        }
+    }
+
+    let mut hist = Histogram::new();
+    let mut retries = 0usize;
+    let mut chaos_disconnects = 0usize;
+    let mut panicked = 0usize;
+    let mut slots: Vec<Option<WorkOutcome>> = (0..sc.requests).map(|_| None).collect();
+    for h in handles {
+        match h.join() {
+            Ok(out) => {
+                hist.merge(&out.hist);
+                retries += out.retries;
+                chaos_disconnects += out.chaos_disconnects;
+                for (i, o) in out.outcomes {
+                    slots[i] = Some(o);
+                }
+            }
+            Err(_) => panicked += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Score.
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    let mut mismatches = 0usize;
+    let mut correct = 0usize;
+    let mut first_fail = String::new();
+    let mut fnv: u64 = 0xcbf29ce484222325;
+    for (i, slot) in slots.iter().enumerate() {
+        match slot {
+            Some(WorkOutcome::Ok { epoch, logits, argmax }) => {
+                ok += 1;
+                for l in logits {
+                    for b in l.to_bits().to_le_bytes() {
+                        fnv ^= u64::from(b);
+                        fnv = fnv.wrapping_mul(0x100000001b3);
+                    }
+                }
+                let sample = &samples.samples[i % used];
+                match sc.score {
+                    Score::Accuracy { .. } => {
+                        if *argmax == sample.label {
+                            correct += 1;
+                        }
+                    }
+                    Score::Exact => {
+                        if *argmax == sample.label {
+                            correct += 1;
+                        }
+                        let Some(seed) = epoch_map.get(epoch).copied() else {
+                            mismatches += 1;
+                            if first_fail.is_empty() {
+                                first_fail = format!(
+                                    "request {i} ran under epoch {epoch} this run never installed"
+                                );
+                            }
+                            continue;
+                        };
+                        let preds = golden_for(
+                            golden,
+                            &cfg.artifacts,
+                            samples,
+                            &sc.model.arch,
+                            &sc.model.mode,
+                            seed,
+                        )?;
+                        let want = &preds[i % used];
+                        let bitsame = want.argmax == *argmax
+                            && want
+                                .logits
+                                .iter()
+                                .zip(logits.iter())
+                                .all(|(a, b)| a.to_bits() == b.to_bits());
+                        if !bitsame {
+                            mismatches += 1;
+                            if first_fail.is_empty() {
+                                first_fail = format!(
+                                    "request {i} (sample {}, epoch {epoch}, seed {seed}): got argmax {} want {}",
+                                    i % used,
+                                    argmax,
+                                    want.argmax
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            Some(WorkOutcome::Failed(why)) => {
+                failed += 1;
+                if first_fail.is_empty() {
+                    first_fail = format!("request {i} failed: {why}");
+                }
+            }
+            None => {
+                failed += 1;
+                if first_fail.is_empty() {
+                    first_fail = format!("request {i} was never resolved");
+                }
+            }
+        }
+    }
+
+    let ok_frac = ok as f64 / sc.requests as f64;
+    let acc = if ok == 0 { 0.0 } else { correct as f64 / ok as f64 };
+    let mut reasons = Vec::new();
+    if ok_frac + 1e-9 < sc.min_ok {
+        reasons.push(format!("ok fraction {ok_frac:.4} below min_ok {}", sc.min_ok));
+    }
+    match sc.score {
+        Score::Exact => {
+            if mismatches > 0 {
+                reasons.push(format!("{mismatches} golden-output mismatches"));
+            }
+        }
+        Score::Accuracy { min } => {
+            if acc + 1e-9 < min {
+                reasons.push(format!("accuracy {acc:.4} below min {min}"));
+            }
+        }
+    }
+    if !swap_err.is_empty() {
+        reasons.push(swap_err);
+    }
+    if panicked > 0 {
+        reasons.push(format!("{panicked} worker threads panicked"));
+    }
+    if !reasons.is_empty() && !first_fail.is_empty() {
+        reasons.push(format!("first failure: {first_fail}"));
+    }
+    let pass = reasons.is_empty();
+
+    let checksum = if sc.swaps.is_empty() && failed == 0 && ok == sc.requests {
+        Some(format!("{fnv:016x}"))
+    } else {
+        None
+    };
+
+    Ok(ScenarioVerdict {
+        name: sc.name.clone(),
+        model: sc.model.to_string(),
+        pass,
+        reason: reasons.join("; "),
+        requests: sc.requests,
+        ok,
+        failed,
+        mismatches,
+        correct,
+        retries,
+        chaos_disconnects,
+        swaps: swaps_done,
+        checksum,
+        p50_ms: hist.p50() / 1e3,
+        p99_ms: hist.p99() / 1e3,
+        p999_ms: hist.p999() / 1e3,
+        max_ms: hist.max() / 1e3,
+        mean_ms: hist.mean() / 1e3,
+        wall_s,
+        rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Suite runner
+// ---------------------------------------------------------------------------
+
+/// Aggregate verdict over every scenario in a run.
+#[derive(Clone, Debug)]
+pub struct SuiteVerdict {
+    /// True iff every scenario passed.
+    pub pass: bool,
+    /// Per-scenario rows, in replay order.
+    pub scenarios: Vec<ScenarioVerdict>,
+}
+
+impl SuiteVerdict {
+    /// Machine-readable verdict, the contract `odin benchgate
+    /// --verdict` gates: `{"loadgen":1,"pass":bool,"scenarios":[...]}`.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<Json> = self
+            .scenarios
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("name".into(), Json::Str(s.name.clone()));
+                m.insert("model".into(), Json::Str(s.model.clone()));
+                m.insert("pass".into(), Json::Bool(s.pass));
+                m.insert("reason".into(), Json::Str(s.reason.clone()));
+                m.insert("requests".into(), Json::Num(s.requests as f64));
+                m.insert("ok".into(), Json::Num(s.ok as f64));
+                m.insert("failed".into(), Json::Num(s.failed as f64));
+                m.insert("mismatches".into(), Json::Num(s.mismatches as f64));
+                m.insert("correct".into(), Json::Num(s.correct as f64));
+                m.insert("retries".into(), Json::Num(s.retries as f64));
+                m.insert(
+                    "chaos_disconnects".into(),
+                    Json::Num(s.chaos_disconnects as f64),
+                );
+                m.insert("swaps".into(), Json::Num(s.swaps as f64));
+                match &s.checksum {
+                    Some(c) => m.insert("checksum".into(), Json::Str(c.clone())),
+                    None => m.insert("checksum".into(), Json::Null),
+                };
+                m.insert("p50_ms".into(), Json::Num(s.p50_ms));
+                m.insert("p99_ms".into(), Json::Num(s.p99_ms));
+                m.insert("p999_ms".into(), Json::Num(s.p999_ms));
+                m.insert("max_ms".into(), Json::Num(s.max_ms));
+                m.insert("mean_ms".into(), Json::Num(s.mean_ms));
+                m.insert("wall_s".into(), Json::Num(s.wall_s));
+                m.insert("rps".into(), Json::Num(s.rps));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("loadgen".into(), Json::Num(1.0));
+        top.insert("pass".into(), Json::Bool(self.pass));
+        top.insert("scenarios".into(), Json::Arr(rows));
+        Json::Obj(top).to_string()
+    }
+
+    /// Only the fields that are deterministic across thread counts and
+    /// machines (no latencies, no wall-clock): what the golden fixture
+    /// test byte-compares.
+    pub fn deterministic_json(&self) -> String {
+        let rows: Vec<Json> = self
+            .scenarios
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("name".into(), Json::Str(s.name.clone()));
+                m.insert("model".into(), Json::Str(s.model.clone()));
+                m.insert("pass".into(), Json::Bool(s.pass));
+                m.insert("requests".into(), Json::Num(s.requests as f64));
+                m.insert("ok".into(), Json::Num(s.ok as f64));
+                m.insert("failed".into(), Json::Num(s.failed as f64));
+                m.insert("mismatches".into(), Json::Num(s.mismatches as f64));
+                match &s.checksum {
+                    Some(c) => m.insert("checksum".into(), Json::Str(c.clone())),
+                    None => m.insert("checksum".into(), Json::Null),
+                };
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("loadgen".into(), Json::Num(1.0));
+        top.insert("pass".into(), Json::Bool(self.pass));
+        top.insert("scenarios".into(), Json::Arr(rows));
+        Json::Obj(top).to_string()
+    }
+
+    /// Human-readable per-scenario table plus the suite line.
+    pub fn print(&self) {
+        println!(
+            "{:<24} {:>5} {:>6} {:>6} {:>5} {:>9} {:>9} {:>9} {:>8}  verdict",
+            "scenario", "req", "ok", "fail", "mism", "p50_ms", "p99_ms", "p999_ms", "rps"
+        );
+        for s in &self.scenarios {
+            println!(
+                "{:<24} {:>5} {:>6} {:>6} {:>5} {:>9.3} {:>9.3} {:>9.3} {:>8.1}  {}{}",
+                s.name,
+                s.requests,
+                s.ok,
+                s.failed,
+                s.mismatches,
+                s.p50_ms,
+                s.p99_ms,
+                s.p999_ms,
+                s.rps,
+                if s.pass { "PASS" } else { "FAIL" },
+                if s.reason.is_empty() {
+                    String::new()
+                } else {
+                    format!(" ({})", s.reason)
+                },
+            );
+        }
+        println!("suite: {}", if self.pass { "PASS" } else { "FAIL" });
+    }
+}
+
+/// Replay every scenario against `target` and score the results.
+///
+/// Scenarios run sequentially (each gets the endpoint to itself, so
+/// latency numbers are attributable).  With [`Target::Hermetic`] a
+/// multi-model frontend is spawned on a loopback port, one pool per
+/// distinct `(arch, mode)` in the suite, and torn down afterwards.
+pub fn run_suite(
+    scenarios: &[Scenario],
+    target: &Target,
+    cfg: &LoadgenConfig,
+) -> Result<SuiteVerdict> {
+    ensure!(!scenarios.is_empty(), "no scenarios to run");
+    let mut names = HashSet::new();
+    for sc in scenarios {
+        ensure!(
+            names.insert(sc.name.clone()),
+            "duplicate scenario name {:?} across files",
+            sc.name
+        );
+    }
+
+    let mut test = TestSet::load_or_synthetic(&cfg.artifacts, cfg.samples.max(1), SYNTHETIC_SEED)
+        .context("loading dataset for loadgen")?;
+    test.samples.truncate(cfg.samples.max(1));
+    ensure!(!test.samples.is_empty(), "dataset is empty");
+    let samples = Arc::new(test);
+
+    // seed_state tracks which weight seed each model currently serves,
+    // so scenario N+1 can resync after scenario N's swap storm.
+    let mut seed_state: HashMap<ModelId, u64> = HashMap::new();
+    let mut hermetic: Option<(Frontend, Arc<ModelRegistry>)> = None;
+    let addr = match target {
+        Target::Addr(a) => a.clone(),
+        Target::Hermetic { shards } => {
+            let mut specs: Vec<ModelSpec> = Vec::new();
+            let mut seen: HashSet<ModelId> = HashSet::new();
+            for sc in scenarios {
+                if seen.insert(sc.model.clone()) {
+                    specs.push(
+                        ModelSpec::synthetic(&sc.model.arch, &sc.model.mode, sc.golden_seed)
+                            .with_artifacts(&cfg.artifacts)
+                            .with_shards(*shards),
+                    );
+                    seed_state.insert(sc.model.clone(), sc.golden_seed);
+                }
+            }
+            let registry = Arc::new(
+                ModelRegistry::spawn(specs, BatchPolicy::default(), MetricsHub::new())
+                    .context("spawning hermetic registry")?,
+            );
+            let fe = Frontend::spawn_registry(
+                "127.0.0.1:0",
+                Arc::clone(&registry),
+                FrontendConfig::default(),
+                MetricsHub::new(),
+            )
+            .context("spawning hermetic frontend")?;
+            let addr = fe.local_addr().to_string();
+            hermetic = Some((fe, registry));
+            addr
+        }
+    };
+
+    let mut golden: GoldenCache = GoldenCache::new();
+    let mut verdicts = Vec::with_capacity(scenarios.len());
+    let mut run_err: Option<anyhow::Error> = None;
+    for sc in scenarios {
+        println!(
+            "loadgen: scenario {:?} ({} requests, {} clients) ...",
+            sc.name, sc.requests, sc.clients
+        );
+        match run_scenario(sc, &addr, &samples, &mut seed_state, &mut golden, cfg) {
+            Ok(v) => verdicts.push(v),
+            Err(e) => {
+                run_err = Some(e);
+                break;
+            }
+        }
+    }
+
+    if let Some((fe, registry)) = hermetic {
+        fe.shutdown();
+        if let Ok(reg) = Arc::try_unwrap(registry) {
+            reg.shutdown();
+        }
+    }
+    if let Some(e) = run_err {
+        return Err(e);
+    }
+
+    let pass = verdicts.iter().all(|v| v.pass);
+    Ok(SuiteVerdict { pass, scenarios: verdicts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(line: &str) -> Result<Vec<Scenario>> {
+        parse_scenarios(line)
+    }
+
+    #[test]
+    fn parses_minimal_scenario_with_defaults() {
+        let scs =
+            one(r#"{"name":"a","model":"cnn1:fast","requests":10}"#).expect("minimal parses");
+        assert_eq!(scs.len(), 1);
+        let sc = &scs[0];
+        assert_eq!(sc.name, "a");
+        assert_eq!(sc.model.arch, "cnn1");
+        assert_eq!(sc.model.mode, "fast");
+        assert_eq!(sc.requests, 10);
+        assert_eq!(sc.clients, 4);
+        assert_eq!(sc.window, 8);
+        assert_eq!(sc.arrival, Arrival::Closed);
+        assert_eq!(sc.hogs, 0);
+        assert_eq!(sc.disconnects, 0);
+        assert!(sc.swaps.is_empty());
+        assert_eq!(sc.score, Score::Exact);
+        assert_eq!(sc.min_ok, 1.0);
+        assert_eq!(sc.golden_seed, SYNTHETIC_SEED);
+    }
+
+    #[test]
+    fn parses_full_scenario() {
+        let scs = one(concat!(
+            r#"{"name":"full","model":"cnn2:float","requests":100,"clients":5,"window":2,"#,
+            r#""arrival":{"kind":"open","rps":250.5,"burst":4},"#,
+            r#""mix":{"hogs":1,"hog_window":32},"#,
+            r#""chaos":{"disconnects":2,"swaps":[{"after":10,"seed":7},{"after":20,"seed":8}]},"#,
+            r#""score":{"kind":"accuracy","min":0.5},"min_ok":0.9,"golden_seed":42}"#
+        ))
+        .expect("full parses");
+        let sc = &scs[0];
+        assert_eq!(sc.arrival, Arrival::Open { rps: 250.5, burst: 4 });
+        assert_eq!(sc.hogs, 1);
+        assert_eq!(sc.hog_window, 32);
+        assert_eq!(sc.disconnects, 2);
+        assert_eq!(sc.swaps, vec![SwapEvent { after: 10, seed: 7 }, SwapEvent {
+            after: 20,
+            seed: 8
+        }]);
+        assert_eq!(sc.score, Score::Accuracy { min: 0.5 });
+        assert_eq!(sc.min_ok, 0.9);
+        assert_eq!(sc.golden_seed, 42);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_with_line_number() {
+        let err = one("{\"name\":\"a\",\"model\":\"cnn1:fast\",\"requests\":1}\n{\"name\":\"b\",\"model\":\"cnn1:fast\",\"requests\":1,\"bogus\":1}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "got: {err}");
+        assert!(err.contains("bogus"), "got: {err}");
+    }
+
+    #[test]
+    fn rejects_bad_swap_and_mix_bounds() {
+        let err = one(r#"{"name":"a","model":"cnn1:fast","requests":10,"chaos":{"swaps":[{"after":10,"seed":1}]}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("1..requests"), "got: {err}");
+        let err = one(r#"{"name":"a","model":"cnn1:fast","requests":10,"clients":2,"mix":{"hogs":3}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("hogs"), "got: {err}");
+        let err = one(r#"{"name":"a","model":"cnn1:fast","requests":10,"clients":2,"mix":{"hogs":1},"chaos":{"disconnects":2}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("hogs + disconnects"), "got: {err}");
+        let err = one(r#"{"name":"a","model":"cnn1:fast","requests":10,"chaos":{"swaps":[{"after":5,"seed":1},{"after":3,"seed":2}]}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ascending"), "got: {err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let err = one("{\"name\":\"a\",\"model\":\"cnn1:fast\",\"requests\":1}\n{\"name\":\"a\",\"model\":\"cnn1:fast\",\"requests\":1}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate scenario name"), "got: {err}");
+    }
+
+    #[test]
+    fn verdict_json_shape() {
+        let v = SuiteVerdict {
+            pass: true,
+            scenarios: vec![ScenarioVerdict {
+                name: "t".into(),
+                model: "cnn1/fast".into(),
+                pass: true,
+                reason: String::new(),
+                requests: 8,
+                ok: 8,
+                failed: 0,
+                mismatches: 0,
+                correct: 8,
+                retries: 0,
+                chaos_disconnects: 0,
+                swaps: 0,
+                checksum: Some("00ff".into()),
+                p50_ms: 1.5,
+                p99_ms: 2.0,
+                p999_ms: 2.5,
+                max_ms: 3.0,
+                mean_ms: 1.6,
+                wall_s: 0.5,
+                rps: 16.0,
+            }],
+        };
+        let j = json::parse(&v.to_json()).expect("verdict JSON parses");
+        assert_eq!(j.path(&["loadgen"]).and_then(Json::as_f64), Some(1.0));
+        assert!(matches!(j.path(&["pass"]), Some(Json::Bool(true))));
+        let rows = j.path(&["scenarios"]).and_then(Json::as_arr).expect("scenarios array");
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].path(&["name"]).and_then(Json::as_str), Some("t"));
+        assert_eq!(rows[0].path(&["p999_ms"]).and_then(Json::as_f64), Some(2.5));
+        assert_eq!(rows[0].path(&["checksum"]).and_then(Json::as_str), Some("00ff"));
+        // deterministic_json drops latency fields but keeps scoring
+        let d = json::parse(&v.deterministic_json()).expect("det JSON parses");
+        let drows = d.path(&["scenarios"]).and_then(Json::as_arr).expect("rows");
+        assert!(drows[0].path(&["p999_ms"]).is_none());
+        assert_eq!(drows[0].path(&["ok"]).and_then(Json::as_f64), Some(8.0));
+    }
+}

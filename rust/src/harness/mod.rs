@@ -1,10 +1,13 @@
 //! Evaluation harness: regenerates every table and figure of the paper
 //! (Table 1-3, Fig. 6a/6b, headline claims) plus the design-space
-//! ablations.  Each function both prints the artifact and returns the
-//! numbers so tests and benches can assert on them.
+//! ablations, and replays committed traffic scenarios against the
+//! serving stack ([`loadgen`]).  Each function both prints the artifact
+//! and returns the numbers so tests and benches can assert on them.
 
 pub mod fig6;
+pub mod loadgen;
 pub mod tables;
 
 pub use fig6::{fig6, headline, Fig6Cell, Fig6Data};
+pub use loadgen::{LoadgenConfig, Scenario, SuiteVerdict, Target};
 pub use tables::{table1, table2, table3, Table1Row, Table2Row};

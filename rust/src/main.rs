@@ -26,9 +26,17 @@
 //! odin swap  --addr HOST:PORT --model ARCH:MODE [--seed N]
 //!                                hot-swap a running front-end's model to
 //!                                a new weight generation (epoch++)
+//! odin loadgen --scenario PATH... [--addr HOST:PORT | --shards N]
+//!              [--verdict-json PATH] [--samples N]
+//!                                replay JSONL traffic scenarios against a
+//!                                live front-end (or a hermetic in-process
+//!                                one), score against golden outputs, and
+//!                                emit a machine-readable verdict
 //! odin benchgate --baseline PATH --pr PATH... [--tolerance 0.75]
+//!                [--verdict PATH]
 //!                                CI perf gate: compare bench --json dumps
 //!                                against the committed baseline floors
+//!                                and/or gate a loadgen verdict JSON
 //! odin ablation                  binary vs mux accumulation cost/error
 //! odin selftest                  hermetic cross-checks (+ golden/PJRT
 //!                                when artifacts / the pjrt feature exist)
@@ -143,8 +151,20 @@ fn main() -> Result<()> {
                 fairness,
                 max_conns: flag(&args, "--max-conns", "1024").parse()?,
                 hog: args.iter().any(|a| a == "--hog"),
+                hold: args.iter().any(|a| a == "--hold"),
                 metrics_json: opt_flag(&args, "--metrics-json"),
             };
+            if opts.hold {
+                ensure!(
+                    opts.listen.is_some(),
+                    "--hold keeps a network front-end up for external clients: pass --listen ADDR"
+                );
+                ensure!(!opts.hog, "--hold and --hog are mutually exclusive");
+                ensure!(
+                    opts.swap_mid.is_none(),
+                    "--hold serves external traffic; drop --swap-mid (use `odin swap` instead)"
+                );
+            }
             if opts.hog {
                 ensure!(
                     opts.listen.is_some(),
@@ -167,6 +187,9 @@ fn main() -> Result<()> {
         }
         "benchgate" => {
             cmd_benchgate(&args)?;
+        }
+        "loadgen" => {
+            cmd_loadgen(&args)?;
         }
         "swap" => {
             let addr = opt_flag(&args, "--addr")
@@ -195,8 +218,8 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "odin — PCRAM PIM accelerator reproduction
-commands: table1 table2 table3 fig6 headline eval serve swap benchgate
-          ablation selftest
+commands: table1 table2 table3 fig6 headline eval serve swap loadgen
+          benchgate ablation selftest
 common flags: --artifacts DIR --backend sim|pjrt
 eval:  --arch cnn1|cnn2 --mode fast|sc|mux|float --limit N
 serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
@@ -218,13 +241,24 @@ serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
                       clients retry typed conn rejections)
        --metrics-json PATH (dump the MetricsReport snapshot as JSON,
                       incl. per-model/per-epoch + per-client counters)
+       --hold (with --listen: keep the front-end up with no built-in
+                      load until killed — the target for an external
+                      `odin loadgen --addr`)
 swap:  --addr HOST:PORT --model ARCH:MODE [--seed N] — hot-swap a running
        multi-model front-end's weights; prints the new epoch
+loadgen: --scenario PATH (repeatable JSONL scenario files; see
+       rust/scenarios/*.jsonl) [--addr HOST:PORT] (target a live serve;
+       default: spawn a hermetic in-process front-end, --shards N per
+       pool) [--verdict-json PATH] (machine-readable verdict for
+       benchgate) [--samples N] (distinct dataset rows cycled) — exits
+       non-zero when any scenario fails its scoring rule
 benchgate: --baseline PATH --pr PATH (repeatable) [--tolerance 0.75] —
        fail if any bench metric drops below tolerance x baseline
        --floors-old PATH --floors-new PATH — also (or instead) fail if
        the new committed baseline lowers or drops any floor of the old
        one (floors only move up; title a PR [relax-floors] to bypass)
+       --verdict PATH — also (or instead) gate a loadgen verdict JSON:
+       fail unless every scenario in it passed
 (`sim` is hermetic: synthetic weights/data unless artifacts exist;
  `pjrt` needs a build with --features pjrt and `make artifacts`)";
 
@@ -340,6 +374,10 @@ struct ServeOpts {
     /// pipelined while polite clients trickle; prints per-client
     /// fairness and exercises the connection cap's typed retry path.
     hog: bool,
+    /// Keep the `--listen` front-end up (no built-in load, no exit)
+    /// until the process is killed — how CI runs `odin serve` as the
+    /// target for an external `odin loadgen`.
+    hold: bool,
     /// Dump the final `MetricsReport` as JSON to this path.
     metrics_json: Option<String>,
 }
@@ -466,6 +504,12 @@ fn cmd_serve(artifacts: &str, backend: &str, opts: &ServeOpts) -> Result<()> {
                  fairness {:?}, max conns {})",
                 opts.cache, opts.admission, opts.queue_cap, opts.fairness, opts.max_conns
             );
+            if opts.hold {
+                println!("--hold: serving until killed (drive it with `odin loadgen --addr {addr}`)");
+                loop {
+                    std::thread::sleep(Duration::from_secs(3600));
+                }
+            }
             let ok = if opts.hog {
                 run_hog_demo(addr, arch, opts, &test)?
             } else {
@@ -670,6 +714,22 @@ fn cmd_benchgate(args: &[String]) -> Result<()> {
         json::parse(&text).with_context(|| format!("parsing {path}"))
     };
 
+    // Loadgen-verdict mode: gate a scenario suite's verdict JSON.
+    if let Some(verdict_path) = opt_flag(args, "--verdict") {
+        let verdict = read_json(&verdict_path)?;
+        let report = benchgate::verdict_gate(&verdict)
+            .with_context(|| format!("gating {verdict_path}"))?;
+        print!("{}", report.table());
+        ensure!(
+            report.pass(),
+            "loadgen gate FAILED: a scenario in {verdict_path} failed its scoring rule"
+        );
+        println!("loadgen gate OK (every scenario in {verdict_path} passed)");
+        if opt_flag(args, "--baseline").is_none() && opt_flag(args, "--floors-old").is_none() {
+            return Ok(());
+        }
+    }
+
     // Floors-monotonicity mode: old vs new committed baseline.
     let floors_old = opt_flag(args, "--floors-old");
     let floors_new = opt_flag(args, "--floors-new");
@@ -720,6 +780,43 @@ fn cmd_benchgate(args: &[String]) -> Result<()> {
         100.0 * tolerance
     );
     println!("bench-smoke gate OK (every metric >= {:.0}% of baseline)", 100.0 * tolerance);
+    Ok(())
+}
+
+/// `odin loadgen`: replay JSONL scenario files against a live front-end
+/// (`--addr`) or a hermetic in-process one, score against golden
+/// `SimBackend` outputs, print the verdict table, optionally dump the
+/// machine-readable verdict (`--verdict-json`, what `odin benchgate
+/// --verdict` gates), and exit non-zero on any scoring failure.
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    use odin::harness::loadgen::{self, LoadgenConfig, Target};
+
+    let paths = multi_flag(args, "--scenario");
+    ensure!(!paths.is_empty(), "loadgen needs at least one --scenario PATH (a JSONL file)");
+    let mut scenarios = Vec::new();
+    for p in &paths {
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        let mut scs =
+            loadgen::parse_scenarios(&text).with_context(|| format!("parsing {p}"))?;
+        scenarios.append(&mut scs);
+    }
+    let target = match opt_flag(args, "--addr") {
+        Some(a) => Target::Addr(a),
+        None => Target::Hermetic { shards: flag(args, "--shards", "2").parse()? },
+    };
+    let cfg = LoadgenConfig {
+        artifacts: flag(args, "--artifacts", "artifacts"),
+        samples: flag(args, "--samples", "64").parse()?,
+        ..LoadgenConfig::default()
+    };
+    let verdict = loadgen::run_suite(&scenarios, &target, &cfg)?;
+    verdict.print();
+    if let Some(path) = opt_flag(args, "--verdict-json") {
+        std::fs::write(&path, verdict.to_json())
+            .with_context(|| format!("writing verdict json to {path}"))?;
+        println!("verdict json written to {path}");
+    }
+    ensure!(verdict.pass, "loadgen suite FAILED (see the verdict table above)");
     Ok(())
 }
 
@@ -817,6 +914,13 @@ fn cmd_serve_registry(artifacts: &str, backend: &str, opts: &ServeOpts) -> Resul
         None => None,
     };
     let addr = frontend.as_ref().map(|f| f.local_addr());
+    if opts.hold {
+        let a = addr.expect("--hold was validated to require --listen");
+        println!("--hold: serving until killed (drive it with `odin loadgen --addr {a}`)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
 
     let total_ok = {
         // One load phase: every client thread hammers its model (clients

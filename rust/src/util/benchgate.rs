@@ -157,6 +157,102 @@ pub fn floors_monotonic(old: &Json, new: &Json) -> Result<Vec<String>> {
     Ok(violations)
 }
 
+/// One scenario row from a loadgen verdict.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerdictRow {
+    /// Scenario name.
+    pub scenario: String,
+    /// Did the scenario pass its scoring rule?
+    pub pass: bool,
+    /// Compact context line for the CI log (counts, tail latency,
+    /// failure reason).
+    pub detail: String,
+}
+
+/// Outcome of gating a loadgen verdict JSON.
+#[derive(Clone, Debug)]
+pub struct VerdictReport {
+    /// Per-scenario rows, in verdict order.
+    pub rows: Vec<VerdictRow>,
+    /// The verdict's own aggregate `pass` flag.
+    pub suite_pass: bool,
+}
+
+impl VerdictReport {
+    /// True when the suite flag and every scenario row pass — and the
+    /// verdict actually contained scenarios (an empty suite is a broken
+    /// run, not a green one).
+    pub fn pass(&self) -> bool {
+        self.suite_pass && !self.rows.is_empty() && self.rows.iter().all(|r| r.pass)
+    }
+
+    /// The human-readable table for the CI log.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{:<24} {:>6}  detail\n", "scenario", "gate"));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<24} {:>6}  {}\n",
+                r.scenario,
+                if r.pass { "ok" } else { "FAIL" },
+                r.detail,
+            ));
+        }
+        out.push_str(&format!("suite: {}\n", if self.pass() { "PASS" } else { "FAIL" }));
+        out
+    }
+}
+
+/// Gate a `odin loadgen --verdict-json` dump: it must carry the
+/// `"loadgen": 1` marker, a boolean aggregate `"pass"`, and a non-empty
+/// `"scenarios"` array in which every entry names itself and reports a
+/// boolean `"pass"`.  Structural problems are hard errors (a malformed
+/// verdict must never gate green); scoring failures come back as
+/// failing rows so the CI log shows the whole table.
+pub fn verdict_gate(verdict: &Json) -> Result<VerdictReport> {
+    match verdict.path(&["loadgen"]).and_then(Json::as_f64) {
+        Some(v) if v == 1.0 => {}
+        _ => bail!("not a loadgen verdict: missing \"loadgen\": 1 marker"),
+    }
+    let suite_pass = match verdict.path(&["pass"]) {
+        Some(Json::Bool(b)) => *b,
+        _ => bail!("verdict is missing its boolean \"pass\""),
+    };
+    let scenarios = verdict
+        .path(&["scenarios"])
+        .and_then(Json::as_arr)
+        .context("verdict is missing its \"scenarios\" array")?;
+    if scenarios.is_empty() {
+        bail!("verdict has an empty \"scenarios\" array — nothing was replayed");
+    }
+    let mut rows = Vec::with_capacity(scenarios.len());
+    for (i, sc) in scenarios.iter().enumerate() {
+        let name = sc
+            .path(&["name"])
+            .and_then(Json::as_str)
+            .with_context(|| format!("scenario {i} is missing its \"name\""))?;
+        let pass = match sc.path(&["pass"]) {
+            Some(Json::Bool(b)) => *b,
+            _ => bail!("scenario {name:?} is missing its boolean \"pass\""),
+        };
+        let num = |key: &str| sc.path(&[key]).and_then(Json::as_f64).unwrap_or(0.0);
+        let mut detail = format!(
+            "ok {}/{} mism {} p99 {:.3}ms",
+            num("ok"),
+            num("requests"),
+            num("mismatches"),
+            num("p99_ms"),
+        );
+        if let Some(reason) = sc.path(&["reason"]).and_then(Json::as_str) {
+            if !reason.is_empty() {
+                detail.push_str(&format!(" — {reason}"));
+            }
+        }
+        rows.push(VerdictRow { scenario: name.to_string(), pass, detail });
+    }
+    Ok(VerdictReport { rows, suite_pass })
+}
+
 /// Merge per-bench `--json` dumps (each `{"bench": name, "results":
 /// {...}}`) into the `bench -> results` shape [`compare`] wants.
 pub fn merge_runs(runs: &[Json]) -> Result<Json> {
@@ -255,6 +351,54 @@ mod tests {
         assert_eq!(gone.len(), 1);
         assert!(gone[0].contains("pooled_per_serial"), "{gone:?}");
         assert!(gone[0].contains("dropped"), "{gone:?}");
+    }
+
+    #[test]
+    fn verdict_gate_passes_and_fails() {
+        let good = parse(concat!(
+            r#"{"loadgen":1,"pass":true,"scenarios":["#,
+            r#"{"name":"steady","pass":true,"ok":96,"requests":96,"mismatches":0,"p99_ms":1.25,"reason":""},"#,
+            r#"{"name":"hog","pass":true,"ok":120,"requests":120,"mismatches":0,"p99_ms":3.5,"reason":""}]}"#
+        ))
+        .unwrap();
+        let g = verdict_gate(&good).unwrap();
+        assert!(g.pass(), "{}", g.table());
+        assert_eq!(g.rows.len(), 2);
+        assert!(g.table().contains("steady"), "{}", g.table());
+
+        let bad = parse(concat!(
+            r#"{"loadgen":1,"pass":false,"scenarios":["#,
+            r#"{"name":"steady","pass":false,"ok":90,"requests":96,"mismatches":6,"p99_ms":1.25,"#,
+            r#""reason":"6 golden-output mismatches"}]}"#
+        ))
+        .unwrap();
+        let g = verdict_gate(&bad).unwrap();
+        assert!(!g.pass());
+        assert!(g.table().contains("golden-output"), "{}", g.table());
+        // A lying aggregate flag still fails the gate.
+        let lying = parse(
+            r#"{"loadgen":1,"pass":false,"scenarios":[{"name":"a","pass":true}]}"#,
+        )
+        .unwrap();
+        assert!(!verdict_gate(&lying).unwrap().pass());
+    }
+
+    #[test]
+    fn verdict_gate_rejects_malformed() {
+        // not a verdict at all
+        assert!(verdict_gate(&parse(r#"{"pass":true,"scenarios":[]}"#).unwrap()).is_err());
+        // missing aggregate pass
+        assert!(verdict_gate(&parse(r#"{"loadgen":1,"scenarios":[]}"#).unwrap()).is_err());
+        // empty scenarios must not gate green
+        assert!(verdict_gate(&parse(r#"{"loadgen":1,"pass":true,"scenarios":[]}"#).unwrap())
+            .is_err());
+        // a scenario without a boolean pass is structural, not a FAIL row
+        let e = verdict_gate(
+            &parse(r#"{"loadgen":1,"pass":true,"scenarios":[{"name":"x","pass":1}]}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains('x'), "{e}");
     }
 
     #[test]

@@ -149,6 +149,53 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// A parse failure inside a JSONL stream, carrying the **1-based** line
+/// number of the offending line (what an editor shows, so a scenario
+/// author can jump straight to it) and the in-line parse error.
+#[derive(Debug)]
+pub struct JsonlError {
+    /// 1-based line number of the malformed line.
+    pub line: usize,
+    /// The underlying single-line parse error (`offset` is within the
+    /// line, not the file).
+    pub inner: JsonError,
+}
+
+impl fmt::Display for JsonlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.inner)
+    }
+}
+
+impl std::error::Error for JsonlError {}
+
+/// Parse JSONL (one JSON value per line): returns `(line, value)` pairs
+/// with **1-based** line numbers.  Blank and whitespace-only lines are
+/// skipped (not errors), a trailing `\r` is stripped so CRLF files
+/// parse (git on Windows, curl dumps), and a trailing newline after the
+/// last record is fine.  The first malformed line aborts the whole
+/// parse with its line number — a scenario file with a typo in the
+/// middle must fail loudly, not silently run half a suite.
+///
+/// Duplicate keys within one line's object are **last-wins** (the
+/// underlying object parser inserts into a map in source order), same
+/// as Python's `json.loads` — documented and pinned by test because
+/// scenario files are hand-edited.
+pub fn parse_jsonl(text: &str) -> Result<Vec<(usize, Json)>, JsonlError> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        // `str::lines` already strips the `\r` of a CRLF terminator.
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse(line) {
+            Ok(v) => out.push((i + 1, v)),
+            Err(inner) => return Err(JsonlError { line: i + 1, inner }),
+        }
+    }
+    Ok(out)
+}
+
 pub fn parse(text: &str) -> Result<Json, JsonError> {
     let mut p = Parser { b: text.as_bytes(), i: 0 };
     p.skip_ws();
@@ -503,5 +550,67 @@ mod tests {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
         assert_eq!(parse(&Json::Num(f64::NAN).to_string()).unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn jsonl_basic_records_with_line_numbers() {
+        let text = "{\"a\":1}\n{\"a\":2}\n{\"a\":3}";
+        let rows = parse_jsonl(text).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].0, 1, "line numbers are 1-based");
+        assert_eq!(rows[2].0, 3);
+        assert_eq!(rows[1].1.get("a").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn jsonl_trailing_newline_and_blank_lines_are_skipped() {
+        // Trailing newline (the normal committed-file case), interior
+        // blank lines, and whitespace-only lines are all tolerated; the
+        // surviving records keep their *file* line numbers.
+        let text = "{\"a\":1}\n\n   \n\t\n{\"a\":2}\n\n";
+        let rows = parse_jsonl(text).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, 1);
+        assert_eq!(rows[1].0, 5, "blank lines still count toward line numbers");
+        assert!(parse_jsonl("").unwrap().is_empty());
+        assert!(parse_jsonl("\n\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn jsonl_crlf_lines_parse() {
+        let text = "{\"a\":1}\r\n{\"b\":\"x\"}\r\n";
+        let rows = parse_jsonl(text).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].1.get("b").unwrap().as_str(), Some("x"));
+        // A \r *inside* a line is plain JSON whitespace, not a terminator.
+        let rows = parse_jsonl("{\"a\":\r 1}\n").unwrap();
+        assert_eq!(rows[0].1.get("a").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn jsonl_duplicate_keys_are_last_wins() {
+        // Pinned behavior (matches Python's json.loads): a hand-edited
+        // scenario line that repeats a key silently keeps the last
+        // value — the parser must not error or keep the first.
+        let rows = parse_jsonl("{\"n\":1,\"n\":2,\"n\":3}\n").unwrap();
+        assert_eq!(rows[0].1.get("n").unwrap().as_f64(), Some(3.0));
+        let j = parse(r#"{"k":"first","k":"last"}"#).unwrap();
+        assert_eq!(j.get("k").unwrap().as_str(), Some("last"));
+    }
+
+    #[test]
+    fn jsonl_malformed_line_mid_file_reports_its_line_number() {
+        let text = "{\"ok\":1}\n\n{\"broken\": }\n{\"never\":\"reached\"}\n";
+        let err = parse_jsonl(text).unwrap_err();
+        assert_eq!(err.line, 3, "1-based line number of the malformed line");
+        let shown = err.to_string();
+        assert!(shown.starts_with("line 3:"), "{shown}");
+        // First bad line wins even when later lines are also bad.
+        let err = parse_jsonl("{\"a\":1}\nnot json\n{{{\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        // A malformed *first* line reports line 1, not 0.
+        assert_eq!(parse_jsonl("[1,").unwrap_err().line, 1);
+        // Two values on one line are a malformed line, not two records.
+        assert!(parse_jsonl("{\"a\":1} {\"b\":2}\n").is_err());
     }
 }

@@ -72,6 +72,183 @@ impl Summary {
         let rank = ((q / 100.0) * (self.samples.len() - 1) as f64).round() as usize;
         self.samples[rank.min(self.samples.len() - 1)]
     }
+
+    /// Median (`percentile(50)`), named so callers agree on definitions.
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// `percentile(99)`.
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// `percentile(99.9)` — the tail quantile loadgen verdicts and the
+    /// serving metrics both report, so the two agree on what "p999"
+    /// means.
+    pub fn p999(&mut self) -> f64 {
+        self.percentile(99.9)
+    }
+}
+
+/// Number of sub-64 "exact" buckets (and the per-group bucket count) of
+/// [`Histogram`].
+const HIST_GROUP: usize = 64;
+/// Bucket groups: group 0 is exact 0..64, groups 1..=58 cover one
+/// power-of-two range each up to `u64::MAX`.
+const HIST_GROUPS: usize = 59;
+
+/// Mergeable log-bucketed histogram for latency-style measurements —
+/// the reusable percentile instrument behind loadgen's per-scenario
+/// p50/p99/p999.
+///
+/// Unlike [`Summary`] (which keeps every sample), a `Histogram` is
+/// fixed-size: values are truncated to `u64` and land in HDR-style
+/// buckets — exact below 64, then 64 buckets per power-of-two range —
+/// so percentiles carry at most ~1.6% relative error while a million
+/// recorded samples cost the same memory as ten.  Per-worker histograms
+/// [`Histogram::merge`] into one without re-sorting anything, which is
+/// what a multi-client load generator needs.  Exact `min`/`max`/`mean`
+/// are tracked separately (0.0 when empty, matching `Summary`).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; HIST_GROUP * HIST_GROUPS],
+            count: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Bucket index of a value (negative values clamp to bucket 0).
+    fn bucket(v: f64) -> usize {
+        let n = if v.is_finite() && v > 0.0 { v as u64 } else { 0 };
+        if n < HIST_GROUP as u64 {
+            return n as usize;
+        }
+        // n in [2^k, 2^(k+1)), k >= 6: 64 buckets of width 2^(k-6).
+        let k = 63 - n.leading_zeros() as usize;
+        let mantissa = (n >> (k - 6)) as usize - HIST_GROUP;
+        (k - 5) * HIST_GROUP + mantissa
+    }
+
+    /// Midpoint of a bucket's value range (what percentiles report).
+    fn representative(idx: usize) -> f64 {
+        let (group, m) = (idx / HIST_GROUP, idx % HIST_GROUP);
+        if group == 0 {
+            return m as f64;
+        }
+        let width = 1u64 << (group - 1);
+        let lo = (HIST_GROUP as u64 + m as u64) << (group - 1);
+        lo as f64 + width as f64 / 2.0
+    }
+
+    /// Record one value.
+    pub fn push(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        self.counts[Self::bucket(v)] += 1;
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact smallest recorded value (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact largest recorded value (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Exact mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Nearest-rank percentile over the buckets (q in [0, 100]); 0.0
+    /// when empty.  Exact below 64, within one bucket width (~1.6%
+    /// relative) above; the extremes are clamped to the exact tracked
+    /// `min`/`max` so `percentile(0)`/`percentile(100)` never drift.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::representative(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.percentile(99.9)
+    }
 }
 
 #[cfg(test)]
@@ -110,5 +287,97 @@ mod tests {
         assert_eq!(s.percentile(50.0), 0.0);
         assert_eq!(s.min(), 0.0);
         assert_eq!(s.max(), 0.0);
+    }
+
+    #[test]
+    fn named_percentiles_agree_with_percentile() {
+        let mut s = Summary::new();
+        for v in 1..=1000 {
+            s.push(v as f64);
+        }
+        assert_eq!(s.p50(), s.percentile(50.0));
+        assert_eq!(s.p99(), s.percentile(99.0));
+        assert_eq!(s.p999(), s.percentile(99.9));
+        assert!(s.p999() >= s.p99() && s.p99() >= s.p50());
+    }
+
+    #[test]
+    fn histogram_small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in 1..=63 {
+            h.push(v as f64);
+        }
+        assert_eq!(h.count(), 63);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 63.0);
+        assert_eq!(h.percentile(50.0), 32.0);
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(100.0), 63.0);
+    }
+
+    #[test]
+    fn histogram_large_values_within_bucket_error() {
+        let mut h = Histogram::new();
+        // 0.2% of samples at 1_000_000, the rest at 1_000: p999 must
+        // land on the tail within one bucket width (~1.6% relative).
+        for _ in 0..998 {
+            h.push(1_000.0);
+        }
+        h.push(1_000_000.0);
+        h.push(1_000_000.0);
+        let p999 = h.p999();
+        assert!(
+            (p999 - 1_000_000.0).abs() / 1_000_000.0 < 0.016,
+            "p999 {p999} not within 1.6% of 1e6"
+        );
+        let p50 = h.p50();
+        assert!((p50 - 1_000.0).abs() / 1_000.0 < 0.016, "p50 {p50} not within 1.6% of 1e3");
+        // mean/min/max are tracked exactly, not bucketed
+        assert_eq!(h.max(), 1_000_000.0);
+        assert_eq!(h.min(), 1_000.0);
+        assert!((h.mean() - 2998.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut both = Histogram::new();
+        for i in 0..500 {
+            let v = (i * i % 7919) as f64;
+            a.push(v);
+            both.push(v);
+        }
+        for i in 0..300 {
+            let v = (i * 31 % 104729) as f64 * 17.0;
+            b.push(v);
+            both.push(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(a.percentile(q), both.percentile(q), "q={q}");
+        }
+        // merging an empty histogram is a no-op
+        let snapshot = a.percentile(50.0);
+        a.merge(&Histogram::new());
+        assert_eq!(a.percentile(50.0), snapshot);
+    }
+
+    #[test]
+    fn histogram_empty_and_degenerate_safe() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        let mut h = Histogram::new();
+        h.push(-5.0); // negative values clamp to bucket 0
+        h.push(f64::INFINITY); // non-finite values clamp too
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(50.0).is_finite());
     }
 }

@@ -1,0 +1,201 @@
+//! Disconnect-path tests for the network client — the guarantees the
+//! `odin loadgen` chaos scenarios lean on: every pipelined submission
+//! resolves with a typed outcome when the connection dies mid-window
+//! (server-side close, or a client-side `abort`), and a client refused
+//! by the connection cap gets the typed `TooManyConnections` hint and
+//! can reconnect after honoring it.
+
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use odin::coordinator::{BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights};
+use odin::dataset::TestSet;
+use odin::frontend::{Frontend, FrontendConfig, NetClient, NetError};
+use odin::util::testkit::forall_ok;
+
+/// Run `f` on a helper thread and panic if it has not finished within
+/// `secs` — a hung reap is exactly the bug these tests exist to catch,
+/// and it must fail the suite instead of wedging it.
+fn with_deadline<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs)).expect("test deadline exceeded: a reap hung")
+}
+
+/// Property: whatever the pipeline window and submission count, when
+/// the server reads a few bytes and slams the connection, **every**
+/// submission still reaps exactly one typed outcome — nothing hangs,
+/// nothing is silently dropped.
+#[test]
+fn every_submission_resolves_when_server_closes_mid_window() {
+    forall_ok(
+        12,
+        |rng| {
+            let window = 1 + (rng.u8() as usize % 8);
+            let count = 1 + (rng.u8() as usize % 24);
+            let read_bytes = rng.u8() as usize % 512;
+            (window, count, read_bytes)
+        },
+        |&(window, count, read_bytes)| {
+            with_deadline(30, move || {
+                let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+                let addr = listener.local_addr().map_err(|e| e.to_string())?;
+                let server = std::thread::spawn(move || {
+                    use std::io::Read;
+                    let (mut conn, _) = listener.accept().unwrap();
+                    let mut sink = vec![0u8; read_bytes.max(1)];
+                    if read_bytes > 0 {
+                        let _ = conn.read_exact(&mut sink);
+                    }
+                    // drop(conn): RST/FIN mid-window
+                });
+                let net = NetClient::connect(addr, "cnn1", "fast")
+                    .map_err(|e| format!("connect: {e}"))?;
+                let mut pipe = net.pipeline(window);
+                let mut reaped = 0usize;
+                for i in 0..count {
+                    let row = vec![(i % 251) as u8; 784];
+                    // typed Ok or typed Err — both count as resolved
+                    if pipe.submit(row).is_some() {
+                        reaped += 1;
+                    }
+                }
+                for _outcome in pipe.drain() {
+                    reaped += 1;
+                }
+                server.join().unwrap();
+                if reaped != count {
+                    return Err(format!(
+                        "window {window}, {count} submissions, server read {read_bytes}B: \
+                         only {reaped} outcomes reaped"
+                    ));
+                }
+                Ok(())
+            })
+        },
+    );
+}
+
+/// Client-side `abort` mid-window (what loadgen's disconnect-chaos
+/// clients do): the in-flight tail resolves typed as `Disconnected`,
+/// and the count still balances.
+#[test]
+fn abort_mid_window_resolves_the_tail_typed() {
+    with_deadline(30, || {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // A silent server: accepts, then holds the socket open without
+        // answering, so every outcome must come from the abort path.
+        let server = std::thread::spawn(move || {
+            use std::io::Read;
+            let (mut conn, _) = listener.accept().unwrap();
+            let mut sink = [0u8; 4096];
+            while let Ok(n) = conn.read(&mut sink) {
+                if n == 0 {
+                    break;
+                }
+            }
+        });
+        let net = NetClient::connect(addr, "cnn1", "fast").unwrap();
+        let mut pipe = net.pipeline(4);
+        let mut outcomes = Vec::new();
+        for i in 0..10usize {
+            if i == 5 {
+                net.abort();
+            }
+            if let Some(o) = pipe.submit(vec![0u8; 784]) {
+                outcomes.push(o);
+            }
+        }
+        outcomes.extend(pipe.drain());
+        assert_eq!(outcomes.len(), 10, "every submission must reap exactly once");
+        for o in &outcomes {
+            assert_eq!(
+                o.as_ref().err(),
+                Some(&NetError::Disconnected),
+                "a silent aborted connection synthesizes Disconnected"
+            );
+        }
+        // abort is idempotent on a dead socket
+        net.abort();
+        server.join().unwrap();
+    });
+}
+
+/// Reconnect-after-`TooManyConnections` honors `retry_after`: the
+/// refused client's requests all resolve with the typed rejection
+/// carrying the server's configured hint, and a reconnect after the
+/// first slot frees succeeds.
+#[test]
+fn too_many_connections_is_typed_and_reconnectable() {
+    with_deadline(60, || {
+        let metrics = MetricsHub::new();
+        let weights = ModelWeights::synthetic("cnn1", 99).unwrap();
+        let policy = BatchPolicy { max_batch: 8, linger: Duration::from_micros(200) };
+        let (pool, client) = EnginePool::spawn(
+            move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+            1,
+            policy,
+            metrics.clone(),
+        )
+        .unwrap();
+        let cfg = FrontendConfig {
+            max_connections: 2,
+            conn_retry_after_ms: 35,
+            ..FrontendConfig::default()
+        };
+        let frontend =
+            Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics)
+                .unwrap();
+        let addr = frontend.local_addr();
+        let img = TestSet::synthetic(1, 7).samples[0].image.clone();
+
+        // Fill both slots with clients that stay connected.
+        let a = NetClient::connect_named(addr, "cnn1", "float", "holder-a").unwrap();
+        let b = NetClient::connect_named(addr, "cnn1", "float", "holder-b").unwrap();
+        a.infer(img.clone()).unwrap();
+        b.infer(img.clone()).unwrap();
+
+        // The third connection is refused with the configured hint.
+        let refused = NetClient::connect_named(addr, "cnn1", "float", "refused").unwrap();
+        let hint = match refused.infer(img.clone()) {
+            Err(NetError::TooManyConnections { retry_after_ms }) => retry_after_ms,
+            other => panic!("expected a typed TooManyConnections, got {other:?}"),
+        };
+        assert_eq!(hint, 35, "the rejection carries the server's configured hint");
+        // Every further request on the refused connection gets the same
+        // typed fate — never a bare disconnect.
+        assert!(matches!(
+            refused.infer(img.clone()),
+            Err(NetError::TooManyConnections { retry_after_ms: 35 })
+        ));
+
+        // Free one slot, honor the hint, reconnect: now it works.
+        drop(a);
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(u64::from(hint)));
+        let retry = (0..100)
+            .find_map(|_| {
+                let c = NetClient::connect_named(addr, "cnn1", "float", "retry").ok()?;
+                match c.infer(img.clone()) {
+                    Ok(resp) => Some(resp),
+                    Err(_) => {
+                        // the freed slot may take a beat to be reaped
+                        std::thread::sleep(Duration::from_millis(10));
+                        None
+                    }
+                }
+            })
+            .expect("reconnect after honoring retry_after must eventually succeed");
+        assert!(t0.elapsed() >= Duration::from_millis(u64::from(hint)), "hint was honored");
+        assert!(usize::from(retry.argmax) < 10);
+
+        drop(b);
+        frontend.shutdown();
+        drop(client);
+        pool.shutdown();
+    });
+}

@@ -1,0 +1,204 @@
+//! End-to-end tests for the `odin loadgen` scenario harness: the
+//! committed scenario files parse, a hermetic replay of the committed
+//! tiny fixture reproduces its committed verdict byte-for-byte across
+//! shard counts (the serving-side face of the backend's bit-identity
+//! guarantee), exact scoring actually catches wrong weights, chaos and
+//! swap scenarios pass end to end, and the emitted verdict JSON gates
+//! through `benchgate::verdict_gate`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use odin::coordinator::{
+    BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
+};
+use odin::frontend::{Frontend, FrontendConfig};
+use odin::harness::loadgen::{self, LoadgenConfig, Target};
+use odin::util::benchgate;
+use odin::util::json::{self, Json};
+
+fn scenario_path(name: &str) -> String {
+    format!("{}/scenarios/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn read_scenarios(name: &str) -> Vec<loadgen::Scenario> {
+    let text = std::fs::read_to_string(scenario_path(name)).unwrap();
+    loadgen::parse_scenarios(&text).unwrap()
+}
+
+/// Small suite-wide config: few samples, tight budgets, test-local
+/// artifacts dir (absent, so everything is synthetic and hermetic).
+fn test_cfg() -> LoadgenConfig {
+    LoadgenConfig { samples: 16, ..LoadgenConfig::default() }
+}
+
+#[test]
+fn committed_scenario_files_parse() {
+    for f in ["steady-mix.jsonl", "hog-vs-polite.jsonl", "swap-storm.jsonl"] {
+        let scs = read_scenarios(f);
+        assert!(!scs.is_empty(), "{f} parsed to zero scenarios");
+        for sc in &scs {
+            assert!(sc.requests >= 1 && sc.clients >= 1, "{f}: degenerate scenario");
+        }
+    }
+    assert_eq!(read_scenarios("fixtures/tiny.jsonl").len(), 1);
+}
+
+/// Strip the per-scenario `checksum` (a run-level invariant asserted
+/// separately, not committed: it depends on the synthetic weight
+/// generator's exact bits, which the fixture must not pin).
+fn strip_checksums(j: &mut Json) {
+    if let Json::Obj(top) = j {
+        if let Some(Json::Arr(rows)) = top.get_mut("scenarios") {
+            for row in rows {
+                if let Json::Obj(m) = row {
+                    m.remove("checksum");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_fixture_verdict_is_byte_stable_across_shard_counts() {
+    let scs = read_scenarios("fixtures/tiny.jsonl");
+    let cfg = test_cfg();
+    let one = loadgen::run_suite(&scs, &Target::Hermetic { shards: 1 }, &cfg).unwrap();
+    let two = loadgen::run_suite(&scs, &Target::Hermetic { shards: 2 }, &cfg).unwrap();
+    assert!(one.pass, "shards=1 run failed: {}", one.to_json());
+    // Byte-stable across thread counts, including the logits checksum:
+    // PR 6's bit-identity guarantee, observed through the whole L4 stack.
+    assert_eq!(
+        one.deterministic_json(),
+        two.deterministic_json(),
+        "deterministic verdict diverged between shard counts"
+    );
+    assert!(
+        one.scenarios[0].checksum.is_some(),
+        "a fully-Ok swap-free scenario must emit its checksum"
+    );
+
+    // And the deterministic fields match the committed expectation.
+    let mut got = json::parse(&one.deterministic_json()).unwrap();
+    strip_checksums(&mut got);
+    let want_text =
+        std::fs::read_to_string(scenario_path("fixtures/tiny.expect.json")).unwrap();
+    let want = json::parse(&want_text).unwrap();
+    assert_eq!(got, want, "verdict does not match the committed fixture");
+}
+
+/// Exact scoring must actually catch wrong weights: serve seed 1234 but
+/// score against the default golden seed — every response mismatches.
+#[test]
+fn exact_scoring_fails_against_wrong_weights() {
+    let metrics = MetricsHub::new();
+    let weights = ModelWeights::synthetic("cnn1", 1234).unwrap();
+    let policy = BatchPolicy { max_batch: 8, linger: Duration::from_micros(200) };
+    let (pool, client): (EnginePool, Client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+        1,
+        policy,
+        metrics.clone(),
+    )
+    .unwrap();
+    let frontend = Frontend::spawn(
+        "127.0.0.1:0",
+        client.clone(),
+        "cnn1",
+        "float",
+        FrontendConfig::default(),
+        metrics,
+    )
+    .unwrap();
+    let addr = frontend.local_addr().to_string();
+
+    let scs = loadgen::parse_scenarios(
+        r#"{"name":"wrong-seed","model":"cnn1:float","requests":8,"clients":2,"window":4}"#,
+    )
+    .unwrap();
+    assert_eq!(scs[0].golden_seed, SYNTHETIC_SEED, "default golden seed");
+    let verdict = loadgen::run_suite(&scs, &Target::Addr(addr), &test_cfg()).unwrap();
+    frontend.shutdown();
+    drop(client);
+    pool.shutdown();
+
+    assert!(!verdict.pass, "wrong weights must fail exact scoring");
+    let row = &verdict.scenarios[0];
+    assert_eq!(row.ok, 8, "the server itself answered fine");
+    assert!(row.mismatches > 0, "mismatches must be counted: {}", verdict.to_json());
+    assert!(row.reason.contains("mismatch"), "reason names the failure: {}", row.reason);
+    assert!(row.checksum.is_none(), "a failing scenario must not emit a checksum");
+}
+
+/// Mid-run swaps: every response scores against the weights its epoch
+/// actually served, so a swap scenario still passes exact scoring.
+#[test]
+fn swap_scenario_scores_per_epoch_and_passes() {
+    let scs = loadgen::parse_scenarios(concat!(
+        r#"{"name":"swap-mini","model":"cnn1:fast","requests":40,"clients":2,"window":4,"#,
+        r#""chaos":{"swaps":[{"after":10,"seed":77}]}}"#
+    ))
+    .unwrap();
+    let verdict =
+        loadgen::run_suite(&scs, &Target::Hermetic { shards: 2 }, &test_cfg()).unwrap();
+    let row = &verdict.scenarios[0];
+    assert!(verdict.pass, "swap scenario failed: {}", verdict.to_json());
+    assert_eq!(row.swaps, 1, "the swap event must have fired");
+    assert_eq!(row.ok, 40);
+    assert!(row.checksum.is_none(), "swap scenarios have no stable checksum");
+}
+
+/// Hog + disconnect chaos: the chaotic client tears its socket down
+/// mid-window, retries on a fresh connection, and the scenario still
+/// completes every request with bit-exact answers.
+#[test]
+fn chaos_scenario_recovers_and_passes() {
+    let scs = loadgen::parse_scenarios(concat!(
+        r#"{"name":"chaos-mini","model":"cnn1:fast","requests":48,"clients":3,"window":4,"#,
+        r#""mix":{"hogs":1,"hog_window":16},"chaos":{"disconnects":1}}"#
+    ))
+    .unwrap();
+    let verdict =
+        loadgen::run_suite(&scs, &Target::Hermetic { shards: 1 }, &test_cfg()).unwrap();
+    let row = &verdict.scenarios[0];
+    assert!(verdict.pass, "chaos scenario failed: {}", verdict.to_json());
+    assert!(row.chaos_disconnects >= 1, "the chaos client must have disconnected");
+    assert_eq!(row.ok, 48, "every request must still resolve Ok after reconnects");
+}
+
+/// The emitted verdict JSON round-trips through the benchgate gate, and
+/// a doctored failing verdict fails it.
+#[test]
+fn verdict_json_gates_through_benchgate() {
+    let scs = read_scenarios("fixtures/tiny.jsonl");
+    let verdict =
+        loadgen::run_suite(&scs, &Target::Hermetic { shards: 1 }, &test_cfg()).unwrap();
+    let j = json::parse(&verdict.to_json()).unwrap();
+    let report = benchgate::verdict_gate(&j).unwrap();
+    assert!(report.pass(), "{}", report.table());
+
+    // Doctor the aggregate flag: the gate must not trust rows alone.
+    let mut doctored = j.clone();
+    if let Json::Obj(top) = &mut doctored {
+        top.insert("pass".to_string(), Json::Bool(false));
+    }
+    assert!(!benchgate::verdict_gate(&doctored).unwrap().pass());
+}
+
+/// Parse errors carry the 1-based line number of the offending line —
+/// the property CI logs depend on to be actionable.
+#[test]
+fn parse_errors_name_their_line() {
+    let err = loadgen::parse_scenarios(concat!(
+        "{\"name\":\"a\",\"model\":\"cnn1:fast\",\"requests\":4}\n",
+        "\n",
+        "{\"name\":\"b\",\"model\":\"cnn1:fast\"}\n"
+    ))
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("line 3"), "blank lines must not shift numbering: {err}");
+    assert!(err.contains("requests"), "{err}");
+
+    let err = loadgen::parse_scenarios("{\"name\":\"a\"\n").unwrap_err().to_string();
+    assert!(err.contains("line 1"), "malformed JSON errors carry the line too: {err}");
+}
