@@ -7,6 +7,10 @@
 //! * closed loop, TCP — 16 connections, one blocking request at a time
 //!   each, with and without the response cache on a duplicate-heavy
 //!   working set (64 distinct rows), so the cache's effect is visible.
+//! * closed loop, TCP, with the span tracer enabled at full sampling —
+//!   the worst-case observability overhead, gated as `traced_per_plain`
+//!   so an accidentally always-on (or accidentally expensive) recorder
+//!   fails the bench gate.
 //! * closed loop, TCP through a two-model registry (+1 mid-run swap).
 //! * open loop, TCP + `shed` admission — the whole request set driven
 //!   through one connection's bounded-window [`Pipeline`] against a
@@ -20,9 +24,9 @@
 //!
 //! `--smoke` shrinks the workload for CI; `--json PATH` dumps
 //! `{"bench":"net_throughput","results":{...}}` including the
-//! machine-portable ratios (`tcp_per_inproc`, `cache_speedup`) the
-//! `bench-smoke` CI job gates against `BENCH_BASELINE.json` via
-//! `odin benchgate`.
+//! machine-portable ratios (`tcp_per_inproc`, `cache_speedup`,
+//! `traced_per_plain`) the `bench-smoke` CI job gates against
+//! `BENCH_BASELINE.json` via `odin benchgate`.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -38,12 +42,17 @@ use odin::frontend::{
     AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError,
 };
 use odin::util::json::Json;
+use odin::util::trace::Tracer;
 
 const CONNECTIONS: usize = 16;
 const DISTINCT_ROWS: usize = 64;
+/// Span ring capacity for the tracing-overhead run: big enough that the
+/// smoke run never fills it, so the measured cost is recording spans,
+/// not dropping them.
+const TRACE_RING_SPANS: usize = 1 << 16;
 
-fn spawn_pool(weights: &ModelWeights) -> Result<(EnginePool, Client, MetricsHub)> {
-    let metrics = MetricsHub::new();
+fn spawn_pool(weights: &ModelWeights, tracer: Tracer) -> Result<(EnginePool, Client, MetricsHub)> {
+    let metrics = MetricsHub::new().with_tracer(tracer);
     let w = weights.clone();
     let (pool, client) = EnginePool::spawn(
         move |_shard| Engine::sim_from_weights_threads(&w, "fast", 1),
@@ -56,7 +65,7 @@ fn spawn_pool(weights: &ModelWeights) -> Result<(EnginePool, Client, MetricsHub)
 
 /// Closed loop, in-process: the no-network baseline.
 fn run_in_process(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<f64> {
-    let (pool, client, _metrics) = spawn_pool(weights)?;
+    let (pool, client, _metrics) = spawn_pool(weights, Tracer::disabled())?;
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for t in 0..CONNECTIONS {
@@ -80,9 +89,15 @@ fn run_in_process(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<f64> {
 }
 
 /// Closed loop over TCP: `CONNECTIONS` blocking clients; returns
-/// (requests/s, cache hit rate).
-fn run_closed_tcp(weights: &ModelWeights, images: &[Vec<u8>], cache: usize) -> Result<(f64, f64)> {
-    let (pool, client, metrics) = spawn_pool(weights)?;
+/// (requests/s, cache hit rate).  `tracer` is what the tracing-overhead
+/// row varies: [`Tracer::disabled`] everywhere else.
+fn run_closed_tcp(
+    weights: &ModelWeights,
+    images: &[Vec<u8>],
+    cache: usize,
+    tracer: Tracer,
+) -> Result<(f64, f64)> {
+    let (pool, client, metrics) = spawn_pool(weights, tracer)?;
     let frontend = Frontend::spawn(
         "127.0.0.1:0",
         client.clone(),
@@ -172,7 +187,7 @@ fn run_registry_tcp(images: &[Vec<u8>]) -> Result<f64> {
 /// submit/reap pair at saturation: shedding never deadlocks and every
 /// request resolves with a typed outcome.
 fn run_open_shed(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<(usize, usize, f64)> {
-    let (pool, client, metrics) = spawn_pool(weights)?;
+    let (pool, client, metrics) = spawn_pool(weights, Tracer::disabled())?;
     let frontend = Frontend::spawn(
         "127.0.0.1:0",
         client.clone(),
@@ -246,13 +261,18 @@ fn main() -> Result<()> {
     );
     let base = run_in_process(&weights, &images)?;
     println!("{:<52} {base:>10.0} req/s", "closed loop, in-process (baseline)");
-    let (tcp, _) = run_closed_tcp(&weights, &images, 0)?;
+    let (tcp, _) = run_closed_tcp(&weights, &images, 0, Tracer::disabled())?;
     println!("{:<52} {tcp:>10.0} req/s", "closed loop, TCP, cache off");
-    let (tcp_cached, hit_rate) = run_closed_tcp(&weights, &images, 4096)?;
+    let (tcp_cached, hit_rate) = run_closed_tcp(&weights, &images, 4096, Tracer::disabled())?;
     println!(
         "{:<52} {tcp_cached:>10.0} req/s",
         format!("closed loop, TCP, cache on ({:.0}% hits)", 100.0 * hit_rate)
     );
+    // Same closed-TCP run with every request traced (sample 1): the
+    // worst-case cost of the span recorder on the serving path.
+    let (tcp_traced, _) =
+        run_closed_tcp(&weights, &images, 0, Tracer::enabled(TRACE_RING_SPANS, 1))?;
+    println!("{:<52} {tcp_traced:>10.0} req/s", "closed loop, TCP, tracing on (sample 1)");
     let registry_rps = run_registry_tcp(&images)?;
     println!(
         "{:<52} {registry_rps:>10.0} req/s",
@@ -265,10 +285,12 @@ fn main() -> Result<()> {
     );
     let tcp_per_inproc = tcp / base.max(1e-9);
     let cache_speedup = tcp_cached / tcp.max(1e-9);
+    let traced_per_plain = tcp_traced / tcp.max(1e-9);
     println!(
-        "network tax: {:.2}x vs in-process; cache speedup: {:.2}x",
+        "network tax: {:.2}x vs in-process; cache speedup: {:.2}x; tracing tax: {:.2}x",
         base / tcp.max(1e-9),
         cache_speedup,
+        traced_per_plain,
     );
 
     if let Some(path) = json_path {
@@ -276,10 +298,12 @@ fn main() -> Result<()> {
         results.insert("in_process_rps".to_string(), Json::Num(base));
         results.insert("tcp_rps".to_string(), Json::Num(tcp));
         results.insert("tcp_cached_rps".to_string(), Json::Num(tcp_cached));
+        results.insert("tcp_traced_rps".to_string(), Json::Num(tcp_traced));
         results.insert("registry_rps".to_string(), Json::Num(registry_rps));
         results.insert("open_loop_rps".to_string(), Json::Num(open_rps));
         results.insert("tcp_per_inproc".to_string(), Json::Num(tcp_per_inproc));
         results.insert("cache_speedup".to_string(), Json::Num(cache_speedup));
+        results.insert("traced_per_plain".to_string(), Json::Num(traced_per_plain));
         let mut o = BTreeMap::new();
         o.insert("bench".to_string(), Json::Str("net_throughput".to_string()));
         o.insert("smoke".to_string(), Json::Bool(smoke));

@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::runtime::Executor;
+use crate::util::trace::TraceCtx;
 
 use super::engine::{Engine, Prediction};
 use super::metrics::MetricsHub;
@@ -36,6 +37,14 @@ use super::pool::EnginePool;
 pub(crate) struct Request {
     pub(crate) image: Vec<u8>,
     pub(crate) enqueued: Instant,
+    /// Stamped by the pool dispatcher when the request's chunk is routed
+    /// to a shard; the window `enqueued → routed` is the dispatch span,
+    /// `routed → exec start` is batch formation.  `None` until routed.
+    pub(crate) routed: Option<Instant>,
+    /// Trace identity carried from the L4 reader (disabled for direct
+    /// [`Client::submit`] callers), so shard workers can attribute
+    /// dispatch/batch/exec spans to the originating request.
+    pub(crate) trace: TraceCtx,
     pub(crate) respond: Sender<std::result::Result<Response, ServeError>>,
 }
 
@@ -132,8 +141,21 @@ impl Client {
 
     /// Submit one image; returns a receiver for the response.
     pub fn submit(&self, image: Vec<u8>) -> Receiver<std::result::Result<Response, ServeError>> {
+        self.submit_traced(image, TraceCtx::disabled())
+    }
+
+    /// Submit one image carrying a trace context, so the pool's
+    /// dispatch/batch/exec spans attach to the request's trace id.  The
+    /// network front-end stamps the context at the reader; plain
+    /// [`Client::submit`] callers get a disabled context and record
+    /// nothing.
+    pub fn submit_traced(
+        &self,
+        image: Vec<u8>,
+        trace: TraceCtx,
+    ) -> Receiver<std::result::Result<Response, ServeError>> {
         let (tx, rx) = mpsc::channel();
-        let req = Request { image, enqueued: Instant::now(), respond: tx };
+        let req = Request { image, enqueued: Instant::now(), routed: None, trace, respond: tx };
         // If the server is gone the receiver will see a disconnect.
         let _ = self.tx.send(req);
         rx

@@ -20,6 +20,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
+use crate::util::trace::{Stage, Tracer};
 
 use super::batcher::Response;
 use super::engine::BatchExec;
@@ -144,6 +145,12 @@ struct Inner {
     /// every client the run served.  Two connections sharing a name are
     /// summed at report time.
     clients: Vec<(String, Arc<ClientCounters>)>,
+    /// Per-stage latency summaries (queue, admission, dispatch, batch,
+    /// exec, write, request), recorded for *every* request — sampling
+    /// only affects span recording, never these aggregates — and
+    /// drainable (`report_with_stage_reset`) so a wire scraper can
+    /// attribute stage latencies to its own window.
+    stages: BTreeMap<Stage, Summary>,
 }
 
 impl Inner {
@@ -178,6 +185,12 @@ impl Inner {
 pub struct MetricsHub {
     inner: Arc<Mutex<Inner>>,
     frontend: Arc<FrontendCounters>,
+    /// Span recorder, [`Tracer::disabled`] (completely inert) unless the
+    /// hub was built with [`MetricsHub::with_tracer`].  Riding in the
+    /// hub means every layer that already records metrics — front-end,
+    /// dispatcher, shard workers, writer — can emit spans without any
+    /// new plumbing.
+    tracer: Tracer,
 }
 
 /// Point-in-time aggregate over one shard (see [`MetricsReport::shards`]).
@@ -201,6 +214,29 @@ pub struct ShardReport {
     pub exec_us_p50: f64,
     /// 99th-percentile per-batch execution time (us).
     pub exec_us_p99: f64,
+}
+
+/// Point-in-time latency summary for one pipeline stage (see
+/// [`MetricsReport::stages`]).  Counts and percentiles cover *every*
+/// request that passed the stage since the hub was created (or since the
+/// last stage reset) — trace sampling never thins these aggregates.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    /// Stage name (`"queue"`, `"admission"`, `"dispatch"`, `"batch"`,
+    /// `"exec"`, `"write"`, `"request"`).
+    pub stage: &'static str,
+    /// Requests that passed this stage.
+    pub count: u64,
+    /// Median stage latency (us).
+    pub p50_us: f64,
+    /// 99th-percentile stage latency (us).
+    pub p99_us: f64,
+    /// 99.9th-percentile stage latency (us).
+    pub p999_us: f64,
+    /// Fastest recorded stage latency (us); 0.0 with no traffic.
+    pub min_us: f64,
+    /// Slowest recorded stage latency (us); 0.0 with no traffic.
+    pub max_us: f64,
 }
 
 /// Point-in-time aggregate over the network front-end (admission gate,
@@ -319,6 +355,11 @@ pub struct MetricsReport {
     /// 99.9th-percentile queue time (us) — the tail quantile loadgen
     /// verdicts also report, so both agree on definitions.
     pub queue_us_p999: f64,
+    /// Shortest queue time (us); 0.0 before any traffic (an idle server
+    /// must report finite numbers — see `Summary::min`).
+    pub queue_us_min: f64,
+    /// Longest queue time (us); 0.0 before any traffic.
+    pub queue_us_max: f64,
     /// Median backend execution time of the batch a request rode in (us).
     pub exec_us_p50: f64,
     /// 99th-percentile backend execution time (us).
@@ -353,12 +394,51 @@ pub struct MetricsReport {
     /// client got everything.  Reported as 1.0 when fewer than two
     /// clients have traffic.
     pub fairness_index: f64,
+    /// Per-stage latency summaries in pipeline order (queue → admission
+    /// → dispatch → batch → exec → write, plus the whole-request root),
+    /// empty until a stage records traffic.  `request` counts *every*
+    /// answered request — cache hits and typed rejections included — so
+    /// its count equals the front-end's `net_responses` plus the typed
+    /// connection-cap rejections.
+    pub stages: Vec<StageReport>,
 }
 
 impl MetricsHub {
-    /// Fresh, empty hub.
+    /// Fresh, empty hub (tracing disabled).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach a span recorder to this hub.  Must be called **before**
+    /// the hub is cloned into the pool/front-end — clones made earlier
+    /// keep the previous (usually disabled) tracer.
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = tracer;
+        self
+    }
+
+    /// The hub's span recorder ([`Tracer::disabled`] by default).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Record one stage latency sample (microseconds).
+    pub fn record_stage(&self, stage: Stage, us: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.stages.entry(stage).or_default().push(us);
+    }
+
+    /// Record several stage latency samples under a single lock
+    /// acquisition (what the shard worker does for a whole batch's
+    /// dispatch/batch/exec rows).
+    pub fn record_stage_samples(&self, samples: &[(Stage, f64)]) {
+        if samples.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for &(stage, us) in samples {
+            g.stages.entry(stage).or_default().push(us);
+        }
     }
 
     /// Pre-size the per-shard table so a report lists every shard of a
@@ -541,6 +621,15 @@ impl MetricsHub {
     /// Consistent snapshot of the pooled and per-shard aggregates (the
     /// lock-free front-end counters are sampled at snapshot time).
     pub fn report(&self) -> MetricsReport {
+        self.report_with_stage_reset(false)
+    }
+
+    /// [`MetricsHub::report`], optionally draining the per-stage
+    /// summaries after the snapshot — the wire `Stats { reset }` path,
+    /// which lets a scraper (loadgen's per-scenario breakdown) measure
+    /// stage latencies over its own window.  Everything else in the
+    /// report keeps accumulating; only `stages` resets.
+    pub fn report_with_stage_reset(&self, reset_stages: bool) -> MetricsReport {
         let mut g = self.inner.lock().unwrap();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         let requests = g.requests;
@@ -550,12 +639,32 @@ impl MetricsHub {
         let queue_us_p50 = g.queue_us.p50();
         let queue_us_p99 = g.queue_us.p99();
         let queue_us_p999 = g.queue_us.p999();
+        let queue_us_min = g.queue_us.min();
+        let queue_us_max = g.queue_us.max();
         let exec_us_p50 = g.exec_us.p50();
         let exec_us_p99 = g.exec_us.p99();
         let exec_us_p999 = g.exec_us.p999();
         let exec_us_min = g.exec_us.min();
         let exec_us_max = g.exec_us.max();
         let (errors, batches, padded_rows) = (g.errors, g.batches, g.padded_rows);
+        let stages: Vec<StageReport> = Stage::ALL
+            .iter()
+            .filter_map(|&stage| {
+                let s = g.stages.get_mut(&stage)?;
+                Some(StageReport {
+                    stage: stage.name(),
+                    count: s.len() as u64,
+                    p50_us: s.p50(),
+                    p99_us: s.p99(),
+                    p999_us: s.p999(),
+                    min_us: s.min(),
+                    max_us: s.max(),
+                })
+            })
+            .collect();
+        if reset_stages {
+            g.stages.clear();
+        }
         let f = &self.frontend;
         let frontend = FrontendReport {
             admitted: f.admitted.load(Ordering::Relaxed),
@@ -635,6 +744,8 @@ impl MetricsHub {
             queue_us_p50,
             queue_us_p99,
             queue_us_p999,
+            queue_us_min,
+            queue_us_max,
             exec_us_p50,
             exec_us_p99,
             exec_us_p999,
@@ -647,6 +758,7 @@ impl MetricsHub {
             frontend,
             clients,
             fairness_index,
+            stages,
         }
     }
 }
@@ -685,11 +797,18 @@ impl MetricsReport {
             "queue p50/p99/p999  {:.1} / {:.1} / {:.1} us",
             self.queue_us_p50, self.queue_us_p99, self.queue_us_p999
         );
+        println!("queue min/max       {:.1} / {:.1} us", self.queue_us_min, self.queue_us_max);
         println!(
             "exec  p50/p99/p999  {:.1} / {:.1} / {:.1} us",
             self.exec_us_p50, self.exec_us_p99, self.exec_us_p999
         );
         println!("exec  min/max       {:.1} / {:.1} us", self.exec_us_min, self.exec_us_max);
+        for s in &self.stages {
+            println!(
+                "stage {:<10} {:>8} req  p50/p99/p999 {:.1} / {:.1} / {:.1} us  min/max {:.1} / {:.1} us",
+                s.stage, s.count, s.p50_us, s.p99_us, s.p999_us, s.min_us, s.max_us,
+            );
+        }
         println!("sim ODIN latency    {:.2} us/inf", self.sim_us_mean);
         println!("sim ODIN energy     {:.4} mJ total", self.sim_mj_total);
         if self.frontend.any() {
@@ -784,6 +903,8 @@ impl MetricsReport {
         o.insert("queue_us_p50".to_string(), num(self.queue_us_p50));
         o.insert("queue_us_p99".to_string(), num(self.queue_us_p99));
         o.insert("queue_us_p999".to_string(), num(self.queue_us_p999));
+        o.insert("queue_us_min".to_string(), num(self.queue_us_min));
+        o.insert("queue_us_max".to_string(), num(self.queue_us_max));
         o.insert("exec_us_p50".to_string(), num(self.exec_us_p50));
         o.insert("exec_us_p99".to_string(), num(self.exec_us_p99));
         o.insert("exec_us_p999".to_string(), num(self.exec_us_p999));
@@ -791,6 +912,22 @@ impl MetricsReport {
         o.insert("exec_us_max".to_string(), num(self.exec_us_max));
         o.insert("sim_us_mean".to_string(), num(self.sim_us_mean));
         o.insert("sim_mj_total".to_string(), num(self.sim_mj_total));
+
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                let mut so = BTreeMap::new();
+                so.insert("count".to_string(), int(s.count));
+                so.insert("p50_us".to_string(), num(s.p50_us));
+                so.insert("p99_us".to_string(), num(s.p99_us));
+                so.insert("p999_us".to_string(), num(s.p999_us));
+                so.insert("min_us".to_string(), num(s.min_us));
+                so.insert("max_us".to_string(), num(s.max_us));
+                (s.stage.to_string(), Json::Obj(so))
+            })
+            .collect::<BTreeMap<String, Json>>();
+        o.insert("stages".to_string(), Json::Obj(stages));
 
         let f = &self.frontend;
         let mut fo = BTreeMap::new();
@@ -928,11 +1065,22 @@ mod tests {
         let r = MetricsHub::new().report();
         assert_eq!(r.exec_us_min, 0.0);
         assert_eq!(r.exec_us_max, 0.0);
+        assert_eq!(r.queue_us_min, 0.0);
+        assert_eq!(r.queue_us_max, 0.0);
         let j = crate::util::json::parse(&r.to_json()).unwrap();
         assert_eq!(j.path(&["requests"]).unwrap().as_usize(), Some(0));
         assert_eq!(j.path(&["exec_us_min"]).unwrap().as_f64(), Some(0.0));
         assert_eq!(j.path(&["exec_us_max"]).unwrap().as_f64(), Some(0.0));
         assert_eq!(j.path(&["exec_us_p50"]).unwrap().as_f64(), Some(0.0));
+        // queue_us grew the same min/max fields exec_us has; an idle
+        // report must round-trip them as finite numbers too.
+        assert_eq!(j.path(&["queue_us_min"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.path(&["queue_us_max"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.path(&["queue_us_p50"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.path(&["queue_us_p999"]).unwrap().as_f64(), Some(0.0));
+        // An idle hub has no stage traffic: "stages" is an empty object,
+        // not missing and not null.
+        assert_eq!(j.path(&["stages"]).unwrap().as_obj().map(|o| o.len()), Some(0));
         // min/max track real traffic once batches are recorded
         let m = MetricsHub::new();
         m.record_batch(0, MODEL, 0, &exec(1, 2_000_000), &[resp(1, 2_000_000)]);
@@ -940,6 +1088,67 @@ mod tests {
         let r = m.report();
         assert!((r.exec_us_min - 2000.0).abs() < 1e-6);
         assert!((r.exec_us_max - 4000.0).abs() < 1e-6);
+        // resp() queues every request for 1000 ns = 1 us
+        assert!((r.queue_us_min - 1.0).abs() < 1e-9);
+        assert!((r.queue_us_max - 1.0).abs() < 1e-9);
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.path(&["queue_us_min"]).unwrap().as_f64(), Some(r.queue_us_min));
+        assert_eq!(j.path(&["queue_us_max"]).unwrap().as_f64(), Some(r.queue_us_max));
+    }
+
+    #[test]
+    fn stage_summaries_record_report_and_reset() {
+        use crate::util::trace::Stage;
+        let m = MetricsHub::new();
+        for us in [10.0, 20.0, 30.0] {
+            m.record_stage(Stage::Queue, us);
+        }
+        m.record_stage_samples(&[
+            (Stage::Exec, 100.0),
+            (Stage::Exec, 300.0),
+            (Stage::Request, 500.0),
+        ]);
+        let r = m.report();
+        assert_eq!(r.stages.len(), 3);
+        // Pipeline order, not alphabetical: queue before exec before request.
+        let names: Vec<&str> = r.stages.iter().map(|s| s.stage).collect();
+        assert_eq!(names, vec!["queue", "exec", "request"]);
+        let queue = &r.stages[0];
+        assert_eq!(queue.count, 3);
+        assert_eq!(queue.p50_us, 20.0);
+        assert_eq!(queue.min_us, 10.0);
+        assert_eq!(queue.max_us, 30.0);
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.path(&["stages", "queue", "count"]).unwrap().as_usize(), Some(3));
+        assert_eq!(j.path(&["stages", "exec", "max_us"]).unwrap().as_f64(), Some(300.0));
+        assert_eq!(j.path(&["stages", "request", "p50_us"]).unwrap().as_f64(), Some(500.0));
+
+        // A plain report leaves the summaries accumulating...
+        assert_eq!(m.report().stages[0].count, 3);
+        // ...a reset snapshot drains them (and only them)...
+        let drained = m.report_with_stage_reset(true);
+        assert_eq!(drained.stages[0].count, 3, "the reset snapshot still carries the data");
+        assert!(m.report().stages.is_empty(), "stages drained after the reset snapshot");
+        // ...so the next window starts from zero.
+        m.record_stage(Stage::Queue, 7.0);
+        let next = m.report();
+        assert_eq!(next.stages.len(), 1);
+        assert_eq!(next.stages[0].count, 1);
+        assert_eq!(next.stages[0].max_us, 7.0);
+    }
+
+    #[test]
+    fn hub_tracer_rides_along_and_clones_share_it() {
+        use crate::util::trace::{Stage, Tracer};
+        let plain = MetricsHub::new();
+        assert!(!plain.tracer().is_enabled(), "default hub traces nothing");
+        let hub = MetricsHub::new().with_tracer(Tracer::enabled(16, 1));
+        let clone = hub.clone();
+        let ctx = hub.tracer().start_trace();
+        assert!(ctx.sampled);
+        let now = Instant::now();
+        clone.tracer().span(ctx, Stage::Exec, now, now, 1);
+        assert_eq!(hub.tracer().recorded(), 1, "clones share one ring");
     }
 
     #[test]

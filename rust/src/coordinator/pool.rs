@@ -50,13 +50,14 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::runtime::Executor;
+use crate::util::trace::Stage;
 
 use super::batcher::{BatchPolicy, Client, Request, Response, ServeError};
 use super::engine::Engine;
@@ -336,7 +337,14 @@ impl EnginePool {
             let mut rest = batch;
             while !rest.is_empty() {
                 let take = rest.len().min(per_shard);
-                let chunk: Vec<Request> = rest.drain(..take).collect();
+                let mut chunk: Vec<Request> = rest.drain(..take).collect();
+                // The routing instant closes the dispatch span (enqueued →
+                // routed) and opens batch formation (routed → exec start);
+                // one stamp covers the whole chunk.
+                let routed = Instant::now();
+                for req in &mut chunk {
+                    req.routed = Some(routed);
+                }
                 let target = Self::pick_shard(&shards, &mut rr);
                 shards[target].depth.fetch_add(chunk.len(), Ordering::Relaxed);
                 if shards[target].tx.send(chunk).is_err() {
@@ -423,11 +431,23 @@ impl EnginePool {
         metrics: &MetricsHub,
         batch: Vec<Request>,
     ) {
+        let us = |from: Instant, to: Instant| to.saturating_duration_since(from).as_secs_f64() * 1e6;
         let want = engine.input_len();
         let (batch, bad): (Vec<Request>, Vec<Request>) =
             batch.into_iter().partition(|r| r.image.len() == want);
         if !bad.is_empty() {
             metrics.record_failures(shard, model, bad.len());
+            // A rejected request still closes its dispatch span and counts
+            // in the per-stage totals — typed rejections must not vanish
+            // from the breakdown (its root `request` span closes at the
+            // writer like any other answered request).
+            let mut stages = Vec::with_capacity(bad.len());
+            for req in &bad {
+                let routed = req.routed.unwrap_or(req.enqueued);
+                metrics.tracer().span(req.trace, Stage::Dispatch, req.enqueued, routed, shard);
+                stages.push((Stage::Dispatch, us(req.enqueued, routed)));
+            }
+            metrics.record_stage_samples(&stages);
             for req in bad {
                 let got = req.image.len();
                 let _ = req.respond.send(Err(ServeError::WrongRowWidth { got, want }));
@@ -437,14 +457,24 @@ impl EnginePool {
             return;
         }
         let images: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        let exec_start = Instant::now();
         match engine.infer(&images) {
             Ok((preds, exec)) => {
+                let exec_end = Instant::now();
                 let per_req_sim_ns = exec.sim_ns / batch.len() as f64;
                 let per_req_sim_pj = exec.sim_pj / batch.len() as f64;
                 let mut senders = Vec::with_capacity(batch.len());
                 let mut responses = Vec::with_capacity(batch.len());
+                let mut stages = Vec::with_capacity(batch.len() * 3);
                 for (req, pred) in batch.into_iter().zip(preds) {
                     let waited = req.enqueued.elapsed().as_nanos() as u64;
+                    let routed = req.routed.unwrap_or(req.enqueued);
+                    metrics.tracer().span(req.trace, Stage::Dispatch, req.enqueued, routed, shard);
+                    metrics.tracer().span(req.trace, Stage::Batch, routed, exec_start, shard);
+                    metrics.tracer().span(req.trace, Stage::Exec, exec_start, exec_end, shard);
+                    stages.push((Stage::Dispatch, us(req.enqueued, routed)));
+                    stages.push((Stage::Batch, us(routed, exec_start)));
+                    stages.push((Stage::Exec, us(exec_start, exec_end)));
                     senders.push(req.respond);
                     responses.push(Response {
                         prediction: pred,
@@ -458,15 +488,30 @@ impl EnginePool {
                     });
                 }
                 // The whole batch is recorded under one lock before any
-                // response is released (see metrics.rs on why).
+                // response is released (see metrics.rs on why); the stage
+                // samples ride the same ordering so a scrape that has seen
+                // a response has also seen its stage contribution.
                 metrics.record_batch(shard, model, epoch, &exec, &responses);
+                metrics.record_stage_samples(&stages);
                 for (tx, resp) in senders.into_iter().zip(responses) {
                     let _ = tx.send(Ok(resp));
                 }
             }
             Err(e) => {
+                let exec_end = Instant::now();
                 let err = ServeError::Backend(format!("inference failed: {e:#}"));
                 metrics.record_failures(shard, model, batch.len());
+                let mut stages = Vec::with_capacity(batch.len() * 3);
+                for req in &batch {
+                    let routed = req.routed.unwrap_or(req.enqueued);
+                    metrics.tracer().span(req.trace, Stage::Dispatch, req.enqueued, routed, shard);
+                    metrics.tracer().span(req.trace, Stage::Batch, routed, exec_start, shard);
+                    metrics.tracer().span(req.trace, Stage::Exec, exec_start, exec_end, shard);
+                    stages.push((Stage::Dispatch, us(req.enqueued, routed)));
+                    stages.push((Stage::Batch, us(routed, exec_start)));
+                    stages.push((Stage::Exec, us(exec_start, exec_end)));
+                }
+                metrics.record_stage_samples(&stages);
                 for req in batch {
                     let _ = req.respond.send(Err(err.clone()));
                 }

@@ -27,7 +27,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::wire::{
-    self, Frame, WireErrorKind, WireHello, WireRequest, WireResponse, WireStatus, WireSwap,
+    self, Frame, WireErrorKind, WireHello, WireRequest, WireResponse, WireStats, WireStatus,
+    WireSwap,
 };
 
 /// Client-local sentinel message: a synthesized response carrying this
@@ -221,11 +222,12 @@ impl NetClient {
                         *inner.fate.lock().unwrap() = Some(retry_after_ms);
                     }
                 }
-                // A server never sends requests, swaps, or hellos;
-                // tolerate and move on.
+                // A server never sends requests, swaps, hellos, or stats
+                // queries; tolerate and move on.
                 Ok(Some(Frame::Request(_)))
                 | Ok(Some(Frame::Swap(_)))
-                | Ok(Some(Frame::Hello(_))) => {}
+                | Ok(Some(Frame::Hello(_)))
+                | Ok(Some(Frame::Stats(_))) => {}
                 Ok(None) | Err(_) => break,
             }
         }
@@ -356,6 +358,10 @@ impl NetClient {
                 kind: WireErrorKind::BadRequest,
                 message: "unexpected swap acknowledgement for an inference request".to_string(),
             }),
+            WireStatus::Stats { .. } => Err(NetError::Remote {
+                kind: WireErrorKind::BadRequest,
+                message: "unexpected stats report for an inference request".to_string(),
+            }),
         }
     }
 
@@ -417,6 +423,30 @@ impl NetClient {
                 Ok(_) => Err(NetError::Remote {
                     kind: WireErrorKind::BadRequest,
                     message: "unexpected inference response to a swap request".to_string(),
+                }),
+            },
+            Err(_) => Err(NetError::Disconnected),
+        }
+    }
+
+    /// Scrape the server's live `MetricsReport` as a JSON string
+    /// (aggregate counters, percentiles, and the per-stage breakdown)
+    /// without disturbing it — the observability path behind `odin stats
+    /// --addr`.  With `reset`, the server drains its per-stage summaries
+    /// *after* the snapshot, so consecutive scrapes measure disjoint
+    /// windows.  Blocks for the answer.  Requires wire v4 on the server.
+    pub fn stats(&self, reset: bool) -> Result<String, NetError> {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = Frame::Stats(WireStats { id, reset });
+        let (tx, rx) = mpsc::channel();
+        self.send_frame(id, tx, &frame);
+        match rx.recv() {
+            Ok(WireResponse { status: WireStatus::Stats { json }, .. }) => Ok(json),
+            Ok(resp) => match Self::resolve(resp) {
+                Err(e) => Err(e),
+                Ok(_) => Err(NetError::Remote {
+                    kind: WireErrorKind::BadRequest,
+                    message: "unexpected inference response to a stats request".to_string(),
                 }),
             },
             Err(_) => Err(NetError::Disconnected),

@@ -12,7 +12,9 @@
 //! * [`wire`] — versioned, length-prefixed binary protocol; strict
 //!   decoding, exhaustive round-trip tests.  Version 2 carries the
 //!   weights epoch on every `Ok` and a hot-swap surface
-//!   (`Swap` → `Swapped{epoch}` / `UnknownModel`).
+//!   (`Swap` → `Swapped{epoch}` / `UnknownModel`); version 4 adds the
+//!   observability surface (`Stats` → `Stats{json}`), so a live server
+//!   is scraped over the wire instead of killed for its report.
 //! * [`server`] — `TcpListener` accept loop; per-connection reader and
 //!   writer threads pipeline many in-flight requests per connection.
 //!   [`Frontend::spawn`] serves one `(arch, mode)` pool;
@@ -64,6 +66,6 @@ pub use client::{NetClient, NetError, NetResponse, Pipeline};
 pub use fairness::{FairScheduler, FairnessConfig, FairnessPolicy};
 pub use server::{Frontend, FrontendConfig};
 pub use wire::{
-    Frame, WireErrorKind, WireHello, WireRequest, WireResponse, WireStatus, WireSwap,
+    Frame, WireErrorKind, WireHello, WireRequest, WireResponse, WireStats, WireStatus, WireSwap,
     WIRE_VERSION,
 };

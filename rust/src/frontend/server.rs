@@ -90,17 +90,20 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::{Client, MetricsHub, Response, ServeError};
+use crate::util::trace::{Stage, TraceCtx};
 
 use super::admission::{AdmissionConfig, AdmissionGate, Permit};
 use super::cache::{CacheKey, CachedScores, ResponseCache};
 use super::fairness::{ClientId, FairScheduler, FairnessConfig, Next};
-use super::wire::{self, Frame, WireErrorKind, WireRequest, WireResponse, WireStatus, WireSwap};
+use super::wire::{
+    self, Frame, WireErrorKind, WireRequest, WireResponse, WireStats, WireStatus, WireSwap,
+};
 
 /// Bound on each connection's queued-but-unwritten responses.  Immediate
 /// responses (cache hits, typed errors, `Overloaded`) take no admission
@@ -206,6 +209,13 @@ struct Job {
     pool: Client,
     key: Option<CacheKey>,
     wtx: SyncSender<WriterMsg>,
+    /// Trace identity stamped at the reader; carried through the fair
+    /// queue, the pool, and the writer so every stage span shares it.
+    ctx: TraceCtx,
+    /// When the reader decoded the frame: opens the `queue` span (closed
+    /// at the scheduler pop) and the root `request` span (closed when the
+    /// response frame is written).
+    arrival: Instant,
 }
 
 struct Shared {
@@ -239,8 +249,15 @@ pub struct Frontend {
 }
 
 enum WriterMsg {
-    /// Already-resolved response (cache hit, protocol error, shed).
-    Immediate(WireResponse),
+    /// Already-resolved response (cache hit, protocol error, shed, stats
+    /// scrape).  Carries the trace context and arrival instant so the
+    /// writer can close the root `request` span — answered-immediately
+    /// requests must not vanish from the per-stage totals.
+    Immediate {
+        resp: WireResponse,
+        ctx: TraceCtx,
+        arrival: Instant,
+    },
     /// A pool submission to wait on, then answer.  The permit is `None`
     /// when the scheduler had to park this outcome for a writer-full
     /// connection: a parked outcome releases its admission slot so the
@@ -252,6 +269,8 @@ enum WriterMsg {
         rx: Receiver<std::result::Result<Response, ServeError>>,
         permit: Option<Permit>,
         key: Option<CacheKey>,
+        ctx: TraceCtx,
+        arrival: Instant,
     },
 }
 
@@ -406,16 +425,37 @@ impl Frontend {
     }
 
     /// Admit one fairly-chosen job and turn it into the writer outcome.
+    /// The scheduler pop closes the job's `queue` span (fair-queue
+    /// residency) and the admit call is timed as the `admission` span —
+    /// on the shed path too, so rejected requests count in the
+    /// breakdown instead of vanishing.
     fn dispatch(shared: &Shared, job: Job) -> (WriterMsg, SyncSender<WriterMsg>) {
-        let Job { id, row, pool, key, wtx } = job;
+        let Job { id, row, pool, key, wtx, ctx, arrival } = job;
+        let popped = Instant::now();
+        shared.metrics.tracer().span(ctx, Stage::Queue, arrival, popped, 0);
         let msg = match shared.gate.admit() {
-            Err(retry_after_ms) => WriterMsg::Immediate(WireResponse {
-                id,
-                status: WireStatus::Overloaded { retry_after_ms },
-            }),
+            Err(retry_after_ms) => {
+                let denied = Instant::now();
+                shared.metrics.tracer().span(ctx, Stage::Admission, popped, denied, 0);
+                shared.metrics.record_stage_samples(&[
+                    (Stage::Queue, stage_us(arrival, popped)),
+                    (Stage::Admission, stage_us(popped, denied)),
+                ]);
+                WriterMsg::Immediate {
+                    resp: WireResponse { id, status: WireStatus::Overloaded { retry_after_ms } },
+                    ctx,
+                    arrival,
+                }
+            }
             Ok(permit) => {
-                let rx = pool.submit(row);
-                WriterMsg::Pending { id, rx, permit: Some(permit), key }
+                let admitted = Instant::now();
+                shared.metrics.tracer().span(ctx, Stage::Admission, popped, admitted, 0);
+                shared.metrics.record_stage_samples(&[
+                    (Stage::Queue, stage_us(arrival, popped)),
+                    (Stage::Admission, stage_us(popped, admitted)),
+                ]);
+                let rx = pool.submit_traced(row, ctx);
+                WriterMsg::Pending { id, rx, permit: Some(permit), key, ctx, arrival }
             }
         };
         (msg, wtx)
@@ -486,6 +526,12 @@ impl Frontend {
     /// a reject flood from wedging the accept loop.
     fn reject_connection(shared: &Shared, stream: TcpStream) {
         shared.metrics.record_conn_rejected();
+        // An over-cap connection never reaches a reader, so no trace id
+        // was stamped and no span is open — but the rejection still
+        // counts in the per-stage totals (its `request` lifetime is the
+        // accept-to-reject turnaround, effectively zero), so the
+        // breakdown's request count stays `net_responses` plus these.
+        shared.metrics.record_stage(Stage::Request, 0.0);
         let retry_after_ms = shared.conn_retry_after_ms;
         let spawned = std::thread::Builder::new()
             .name("odin-conn-reject".into())
@@ -572,6 +618,11 @@ impl Frontend {
                         break;
                     }
                 }
+                Ok(Some(Frame::Stats(stats))) => {
+                    if Self::handle_stats(stats, &wtx, &shared).is_err() {
+                        break;
+                    }
+                }
                 Ok(Some(Frame::Hello(hello))) => {
                     // Fire and forget: name the connection's fairness
                     // slot.  After registration the name is frozen —
@@ -582,6 +633,8 @@ impl Frontend {
                     }
                 }
                 Ok(Some(Frame::Response(resp))) => {
+                    let arrival = Instant::now();
+                    let ctx = shared.metrics.tracer().start_trace();
                     let answer = WireResponse {
                         id: resp.id,
                         status: WireStatus::Error {
@@ -589,7 +642,7 @@ impl Frontend {
                             message: "unexpected response frame from client".to_string(),
                         },
                     };
-                    if wtx.send(WriterMsg::Immediate(answer)).is_err() {
+                    if wtx.send(WriterMsg::Immediate { resp: answer, ctx, arrival }).is_err() {
                         break;
                     }
                 }
@@ -623,6 +676,13 @@ impl Frontend {
         fair: &mut Option<ClientId>,
         hello_name: &mut Option<String>,
     ) -> std::result::Result<(), ()> {
+        // The trace identity is stamped here, at the L4 reader — every
+        // span this request produces (queue, admission, dispatch, batch,
+        // exec, write, and the root request span) shares this id, and the
+        // id decides sampling once for the whole trace.  With tracing
+        // disabled `start_trace` touches no atomics at all.
+        let arrival = Instant::now();
+        let ctx = shared.metrics.tracer().start_trace();
         let (client, epoch) = match shared.router.route(&req.arch, &req.mode) {
             Some(route) => route,
             None => {
@@ -638,7 +698,7 @@ impl Frontend {
                         ),
                     },
                 };
-                return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
+                return wtx.send(WriterMsg::Immediate { resp: answer, ctx, arrival }).map_err(|_| ());
             }
         };
         // Cache lookup comes before fair queuing and admission: a hit
@@ -660,6 +720,9 @@ impl Frontend {
                 };
                 let k = CacheKey::new(arch, mode, epoch, req.row);
                 if let Some(hit) = cache.get(&k) {
+                    // A cache hit skips queue/admission/pool entirely,
+                    // but its root `request` span still closes at the
+                    // writer — hits must not vanish from the totals.
                     let answer = WireResponse {
                         id: req.id,
                         status: WireStatus::Ok {
@@ -670,7 +733,7 @@ impl Frontend {
                             logits: hit.logits,
                         },
                     };
-                    return wtx.send(WriterMsg::Immediate(answer)).map_err(|_| ());
+                    return wtx.send(WriterMsg::Immediate { resp: answer, ctx, arrival }).map_err(|_| ());
                 }
                 let row = k.row().to_vec();
                 (Some(k), row)
@@ -689,7 +752,7 @@ impl Frontend {
                 cid
             }
         };
-        let job = Job { id: req.id, row, pool: client, key, wtx: wtx.clone() };
+        let job = Job { id: req.id, row, pool: client, key, wtx: wtx.clone(), ctx, arrival };
         shared.sched.enqueue(cid, 1, job).map_err(|_| ())
     }
 
@@ -706,6 +769,8 @@ impl Frontend {
         wtx: &SyncSender<WriterMsg>,
         shared: &Shared,
     ) -> std::result::Result<(), ()> {
+        let arrival = Instant::now();
+        let ctx = shared.metrics.tracer().start_trace();
         let status = match &shared.router {
             Router::Single { .. } => WireStatus::Error {
                 kind: WireErrorKind::BadRequest,
@@ -741,15 +806,41 @@ impl Frontend {
                 }
             }
         };
-        wtx.send(WriterMsg::Immediate(WireResponse { id: swap.id, status })).map_err(|_| ())
+        let resp = WireResponse { id: swap.id, status };
+        wtx.send(WriterMsg::Immediate { resp, ctx, arrival }).map_err(|_| ())
+    }
+
+    /// Handle one stats frame: snapshot the hub's [`MetricsReport`]
+    /// (per-stage percentiles included) and answer it as JSON — a live
+    /// server is scraped over the wire without being restarted.  With
+    /// `reset`, the per-stage summaries are drained *after* the snapshot,
+    /// so consecutive scrapes see disjoint windows (how `loadgen`
+    /// attributes stages per scenario).  Stats frames are admin
+    /// operations like swaps: no admission permit, answered immediately.
+    /// `Err` means the writer is gone.
+    fn handle_stats(
+        stats: WireStats,
+        wtx: &SyncSender<WriterMsg>,
+        shared: &Shared,
+    ) -> std::result::Result<(), ()> {
+        let arrival = Instant::now();
+        let ctx = shared.metrics.tracer().start_trace();
+        let json = shared.metrics.report_with_stage_reset(stats.reset).to_json();
+        let resp = WireResponse { id: stats.id, status: WireStatus::Stats { json } };
+        wtx.send(WriterMsg::Immediate { resp, ctx, arrival }).map_err(|_| ())
     }
 
     /// Writer loop: resolve each queued outcome in order and write it.
+    /// Every outcome closes its `write` span (serialize + syscall) and
+    /// its root `request` span here, right where the frame leaves the
+    /// process — so cache hits, typed rejections, and pool responses all
+    /// count once in the per-stage totals, exactly when they count in
+    /// `net_responses`.
     fn writer(mut stream: TcpStream, wrx: Receiver<WriterMsg>, shared: Arc<Shared>) {
         while let Ok(msg) = wrx.recv() {
-            let resp = match msg {
-                WriterMsg::Immediate(r) => r,
-                WriterMsg::Pending { id, rx, permit, key } => {
+            let (resp, ctx, arrival) = match msg {
+                WriterMsg::Immediate { resp, ctx, arrival } => (resp, ctx, arrival),
+                WriterMsg::Pending { id, rx, permit, key, ctx, arrival } => {
                     let status = match rx.recv() {
                         Ok(Ok(resp)) => {
                             let scores = CachedScores {
@@ -795,14 +886,22 @@ impl Frontend {
                         },
                     };
                     drop(permit);
-                    WireResponse { id, status }
+                    (WireResponse { id, status }, ctx, arrival)
                 }
             };
+            let wstart = Instant::now();
             if wire::write_frame(&mut stream, &Frame::Response(resp)).is_err() {
                 // Dead socket: exiting drops the queued messages, whose
                 // permits release on drop — admission never leaks slots.
                 break;
             }
+            let done = Instant::now();
+            shared.metrics.tracer().span(ctx, Stage::Write, wstart, done, 0);
+            shared.metrics.tracer().span(ctx, Stage::Request, arrival, done, 0);
+            shared.metrics.record_stage_samples(&[
+                (Stage::Write, stage_us(wstart, done)),
+                (Stage::Request, stage_us(arrival, done)),
+            ]);
             shared.metrics.record_net_response();
         }
         let _ = stream.shutdown(Shutdown::Both);
@@ -854,6 +953,12 @@ impl Drop for Frontend {
             self.stop_impl();
         }
     }
+}
+
+/// Span duration in microseconds, clamped to zero if the clock reads
+/// backwards across threads.
+fn stage_us(from: Instant, to: Instant) -> f64 {
+    to.saturating_duration_since(from).as_secs_f64() * 1e6
 }
 
 fn error_kind(e: &ServeError) -> WireErrorKind {

@@ -12,6 +12,7 @@
 //! swap     body: [ver u8][kind=3][id u64][arch u16+bytes][mode u16+bytes]
 //!                [seed u64]
 //! hello    body: [ver u8][kind=4][id u64][name u16+bytes]
+//! stats    body: [ver u8][kind=5][id u64][reset u8]
 //! response body: [ver u8][kind=2][id u64][status u8] ...
 //!   status 0 Ok:             [shard u32][argmax u8][cached u8][epoch u64]
 //!                            [10 x f32]
@@ -19,6 +20,7 @@
 //!   status 2 Overloaded:     [retry_after_ms u32]
 //!   status 3 Swapped:        [epoch u64]
 //!   status 4 TooManyConns:   [retry_after_ms u32]
+//!   status 5 Stats:          [json u32+bytes]
 //! ```
 //!
 //! Version 2 added the weights *epoch* to `Ok` (which generation of the
@@ -35,6 +37,14 @@
 //! closed, so conn-limit rejection is *typed* on the wire rather than a
 //! silent drop.
 //!
+//! Version 4 added the observability surface: the `Stats` frame (kind
+//! 5) asks a live server for its current `MetricsReport` — per-stage
+//! latency summaries included — without disturbing serving; the
+//! matching `Stats` status (5) carries the report back as a JSON string
+//! (the same document `serve --metrics-json` writes).  `reset` drains
+//! the per-stage summaries after the snapshot, so a scraper (e.g.
+//! `odin loadgen`) can attribute stage latencies to its own window.
+//!
 //! Decoding is strict: unknown versions, kinds, status/error codes,
 //! truncated bodies, trailing bytes, and frame lengths outside
 //! `1..=`[`MAX_FRAME`] are all `InvalidData` errors — a malformed or
@@ -45,7 +55,7 @@
 use std::io::{self, Read, Write};
 
 /// Protocol version byte carried by every frame.
-pub const WIRE_VERSION: u8 = 3;
+pub const WIRE_VERSION: u8 = 4;
 
 /// Upper bound on a frame body, guarding malformed/hostile length
 /// prefixes (a 784-byte MNIST row frame is ~850 bytes).
@@ -55,6 +65,7 @@ const KIND_REQUEST: u8 = 1;
 const KIND_RESPONSE: u8 = 2;
 const KIND_SWAP: u8 = 3;
 const KIND_HELLO: u8 = 4;
+const KIND_STATS: u8 = 5;
 
 /// Typed error kinds a response can carry — the wire mirror of
 /// [`crate::coordinator::ServeError`] plus protocol-level rejections.
@@ -142,8 +153,21 @@ pub struct WireHello {
     pub name: String,
 }
 
-/// Response payload: scores, a typed error, an overload rejection, or a
-/// swap acknowledgement.
+/// One live-stats request: ask the server for its current metrics
+/// report (answered with [`WireStatus::Stats`]).  With `reset` set, the
+/// server drains its per-stage latency summaries after the snapshot so
+/// the next scrape covers only the window since this one — how
+/// `odin loadgen` gets true per-scenario stage breakdowns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireStats {
+    /// Client-chosen id echoed back in the response.
+    pub id: u64,
+    /// Drain the per-stage summaries after snapshotting.
+    pub reset: bool,
+}
+
+/// Response payload: scores, a typed error, an overload rejection, a
+/// swap acknowledgement, or a stats report.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireStatus {
     /// Successful inference.
@@ -186,6 +210,13 @@ pub enum WireStatus {
         /// Suggested client backoff before reconnecting (milliseconds).
         retry_after_ms: u32,
     },
+    /// The server's live metrics report (the answer to a
+    /// [`WireStats`] request).
+    Stats {
+        /// The `MetricsReport` as a JSON document — the same shape
+        /// `serve --metrics-json` writes, per-stage summaries included.
+        json: String,
+    },
 }
 
 /// One response frame (the echo of a request id plus its status).
@@ -209,6 +240,9 @@ pub enum Frame {
     Swap(WireSwap),
     /// Client-to-server self-identification (fire and forget).
     Hello(WireHello),
+    /// Client-to-server live-stats request (answered with
+    /// [`WireStatus::Stats`]).
+    Stats(WireStats),
 }
 
 fn bad(msg: String) -> io::Error {
@@ -332,6 +366,11 @@ impl Frame {
                         body.push(4);
                         put_u32(&mut body, *retry_after_ms);
                     }
+                    WireStatus::Stats { json } => {
+                        body.push(5);
+                        put_u32(&mut body, json.len() as u32);
+                        body.extend_from_slice(json.as_bytes());
+                    }
                 }
             }
             Frame::Swap(s) => {
@@ -348,6 +387,11 @@ impl Frame {
                 put_u64(&mut body, h.id);
                 put_u16(&mut body, h.name.len() as u16);
                 body.extend_from_slice(h.name.as_bytes());
+            }
+            Frame::Stats(s) => {
+                body.push(KIND_STATS);
+                put_u64(&mut body, s.id);
+                body.push(u8::from(s.reset));
             }
         }
         // Oversized bodies are rejected by `write_frame` (and by the
@@ -402,6 +446,10 @@ impl Frame {
                     2 => WireStatus::Overloaded { retry_after_ms: c.u32()? },
                     3 => WireStatus::Swapped { epoch: c.u64()? },
                     4 => WireStatus::TooManyConnections { retry_after_ms: c.u32()? },
+                    5 => {
+                        let json_len = c.u32()? as usize;
+                        WireStatus::Stats { json: c.string(json_len)? }
+                    }
                     s => return Err(bad(format!("unknown response status {s}"))),
                 };
                 Frame::Response(WireResponse { id, status })
@@ -420,6 +468,11 @@ impl Frame {
                 let name_len = c.u16()? as usize;
                 let name = c.string(name_len)?;
                 Frame::Hello(WireHello { id, name })
+            }
+            KIND_STATS => {
+                let id = c.u64()?;
+                let reset = c.u8()? != 0;
+                Frame::Stats(WireStats { id, reset })
             }
             k => return Err(bad(format!("unknown frame kind {k}"))),
         };
@@ -602,6 +655,38 @@ mod tests {
         let body = &full[4..];
         for cut in 0..body.len() {
             assert!(Frame::decode_body(&body[..cut]).is_err(), "prefix {cut} decoded");
+        }
+    }
+
+    #[test]
+    fn stats_frames_round_trip() {
+        round_trip(Frame::Stats(WireStats { id: 0, reset: false }));
+        round_trip(Frame::Stats(WireStats { id: u64::MAX, reset: true }));
+        // The stats *response* carries an arbitrary JSON string,
+        // non-ASCII included (model names key the report).
+        round_trip(Frame::Response(WireResponse {
+            id: 12,
+            status: WireStatus::Stats { json: String::new() },
+        }));
+        round_trip(Frame::Response(WireResponse {
+            id: 13,
+            status: WireStatus::Stats {
+                json: "{\"requests\":42,\"models\":[{\"model\":\"モデル/fast\"}]}".to_string(),
+            },
+        }));
+        // Truncation strictness holds for both new layouts.
+        for frame in [
+            Frame::Stats(WireStats { id: 3, reset: true }),
+            Frame::Response(WireResponse {
+                id: 4,
+                status: WireStatus::Stats { json: "{\"requests\":1}".to_string() },
+            }),
+        ] {
+            let full = frame.encode();
+            let body = &full[4..];
+            for cut in 0..body.len() {
+                assert!(Frame::decode_body(&body[..cut]).is_err(), "prefix {cut} decoded");
+            }
         }
     }
 

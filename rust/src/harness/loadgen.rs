@@ -50,6 +50,7 @@ use crate::dataset::TestSet;
 use crate::frontend::{Frontend, FrontendConfig, NetClient, NetError};
 use crate::util::json::{self, Json};
 use crate::util::stats::Histogram;
+use crate::util::trace::{Stage, Tracer};
 
 // ---------------------------------------------------------------------------
 // Scenario model
@@ -150,6 +151,13 @@ pub struct LoadgenConfig {
     pub max_segments: usize,
     /// How long a worker keeps retrying the initial connect.
     pub connect_timeout: Duration,
+    /// Export a Chrome trace-event JSON of the run to this path.
+    /// Hermetic targets only: the span ring lives in the serving
+    /// process, so a remote `--addr` target is profiled with
+    /// `odin stats` instead.
+    pub trace_out: Option<String>,
+    /// Trace 1 of every N requests when `trace_out` is set (1 = all).
+    pub trace_sample: u64,
 }
 
 impl Default for LoadgenConfig {
@@ -160,9 +168,16 @@ impl Default for LoadgenConfig {
             retry_limit: 64,
             max_segments: 16,
             connect_timeout: Duration::from_secs(30),
+            trace_out: None,
+            trace_sample: 1,
         }
     }
 }
+
+/// Span capacity of the hermetic suite's trace ring: enough for every
+/// stage of a few hundred thousand requests, bounded so a runaway
+/// scenario costs a fixed buffer (overflow is counted, not grown).
+const TRACE_RING_SPANS: usize = 1 << 18;
 
 // ---------------------------------------------------------------------------
 // Parsing
@@ -655,6 +670,22 @@ impl Worker {
 // Scenario runner
 // ---------------------------------------------------------------------------
 
+/// One pipeline stage's latency brief, scraped from the server's
+/// per-stage summaries over the wire (`Stats { reset: true }`) at
+/// scenario end — the server-side complement to the client-side
+/// latency histogram, so a latency regression localizes to a stage.
+#[derive(Clone, Debug)]
+pub struct StageBrief {
+    /// Stage name in pipeline order (`queue`, `admission`, ...).
+    pub stage: String,
+    /// Samples the stage recorded inside this scenario's window.
+    pub count: u64,
+    /// Median stage latency, microseconds.
+    pub p50_us: f64,
+    /// 99th-percentile stage latency, microseconds.
+    pub p99_us: f64,
+}
+
 /// Per-scenario verdict row (also serialized into the suite JSON).
 #[derive(Clone, Debug)]
 pub struct ScenarioVerdict {
@@ -699,6 +730,37 @@ pub struct ScenarioVerdict {
     pub wall_s: f64,
     /// Completed requests per wall-clock second.
     pub rps: f64,
+    /// Server-side per-stage latency breakdown for this scenario's
+    /// window, in pipeline order.  Empty when the target predates wire
+    /// v4 or the scrape failed (the breakdown is best-effort; it never
+    /// fails a scenario).
+    pub stages: Vec<StageBrief>,
+}
+
+/// Scrape the server's per-stage latency summaries over the wire,
+/// without resetting them — the window was opened by the reset-drain
+/// before the scenario's workers spawned, and leaving the summaries in
+/// place lets a later `odin stats` scrape still see the traffic.  Best
+/// effort: any scrape or parse failure yields an empty breakdown.
+fn scrape_stages(ctl: &NetClient) -> Vec<StageBrief> {
+    let Ok(text) = ctl.stats(false) else { return Vec::new() };
+    let Ok(j) = json::parse(&text) else { return Vec::new() };
+    let mut out = Vec::new();
+    for stage in Stage::ALL {
+        let name = stage.name();
+        let count = j.path(&["stages", name, "count"]).and_then(Json::as_f64);
+        let p50 = j.path(&["stages", name, "p50_us"]).and_then(Json::as_f64);
+        let p99 = j.path(&["stages", name, "p99_us"]).and_then(Json::as_f64);
+        if let (Some(count), Some(p50_us), Some(p99_us)) = (count, p50, p99) {
+            out.push(StageBrief {
+                stage: name.to_string(),
+                count: count as u64,
+                p50_us,
+                p99_us,
+            });
+        }
+    }
+    out
 }
 
 /// Poll one inference through `ctl` to learn the currently-installed
@@ -752,6 +814,11 @@ fn run_scenario(
     let probe = probe_epoch(&ctl, &samples.samples[0].image)
         .with_context(|| format!("scenario {:?}", sc.name))?;
     epoch_map.entry(probe).or_insert(sc.golden_seed);
+    // Open a fresh per-stage window for this scenario: the reset-scrape
+    // discards whatever the resync swap and the probe contributed (and
+    // whatever earlier scenarios left behind).  Best effort — a pre-v4
+    // target just skips the breakdown.
+    let _ = ctl.stats(true);
 
     let completed = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
@@ -840,6 +907,11 @@ fn run_scenario(
         }
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    // Read the window: the server-side stage breakdown for the traffic
+    // this scenario generated (workers are joined, so all their
+    // responses are on the wire; the next scenario's opening drain
+    // starts the next window).
+    let stages = scrape_stages(&ctl);
 
     // Score.
     let mut ok = 0usize;
@@ -978,6 +1050,7 @@ fn run_scenario(
         mean_ms: hist.mean() / 1e3,
         wall_s,
         rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
+        stages,
     })
 }
 
@@ -1029,6 +1102,18 @@ impl SuiteVerdict {
                 m.insert("mean_ms".into(), Json::Num(s.mean_ms));
                 m.insert("wall_s".into(), Json::Num(s.wall_s));
                 m.insert("rps".into(), Json::Num(s.rps));
+                let stages = s
+                    .stages
+                    .iter()
+                    .map(|b| {
+                        let mut so = BTreeMap::new();
+                        so.insert("count".into(), Json::Num(b.count as f64));
+                        so.insert("p50_us".into(), Json::Num(b.p50_us));
+                        so.insert("p99_us".into(), Json::Num(b.p99_us));
+                        (b.stage.clone(), Json::Obj(so))
+                    })
+                    .collect::<BTreeMap<String, Json>>();
+                m.insert("stages".into(), Json::Obj(stages));
                 Json::Obj(m)
             })
             .collect();
@@ -1040,8 +1125,8 @@ impl SuiteVerdict {
     }
 
     /// Only the fields that are deterministic across thread counts and
-    /// machines (no latencies, no wall-clock): what the golden fixture
-    /// test byte-compares.
+    /// machines (no latencies, no wall-clock, no stage breakdown):
+    /// what the golden fixture test byte-compares.
     pub fn deterministic_json(&self) -> String {
         let rows: Vec<Json> = self
             .scenarios
@@ -1094,6 +1179,17 @@ impl SuiteVerdict {
                     format!(" ({})", s.reason)
                 },
             );
+            // Server-side stage breakdown, headline stages only (the
+            // full set is in the JSON verdict).
+            let brief: Vec<String> = s
+                .stages
+                .iter()
+                .filter(|b| matches!(b.stage.as_str(), "queue" | "admission" | "exec"))
+                .map(|b| format!("{} p50 {:.0}/p99 {:.0}us", b.stage, b.p50_us, b.p99_us))
+                .collect();
+            if !brief.is_empty() {
+                println!("{:<24}   stages: {}", "", brief.join("  "));
+            }
         }
         println!("suite: {}", if self.pass { "PASS" } else { "FAIL" });
     }
@@ -1130,8 +1226,16 @@ pub fn run_suite(
     // so scenario N+1 can resync after scenario N's swap storm.
     let mut seed_state: HashMap<ModelId, u64> = HashMap::new();
     let mut hermetic: Option<(Frontend, Arc<ModelRegistry>)> = None;
+    let mut trace: Option<(Tracer, String)> = None;
     let addr = match target {
-        Target::Addr(a) => a.clone(),
+        Target::Addr(a) => {
+            ensure!(
+                cfg.trace_out.is_none(),
+                "--trace-out needs the hermetic target: the span ring lives inside the \
+                 serving process (profile a live server with `odin stats --addr` instead)"
+            );
+            a.clone()
+        }
         Target::Hermetic { shards } => {
             let mut specs: Vec<ModelSpec> = Vec::new();
             let mut seen: HashSet<ModelId> = HashSet::new();
@@ -1145,15 +1249,25 @@ pub fn run_suite(
                     seed_state.insert(sc.model.clone(), sc.golden_seed);
                 }
             }
+            // One hub shared by the registry pools and the front-end —
+            // the same wiring as `odin serve` — so a stats scrape sees
+            // every pipeline stage and an enabled tracer sees the whole
+            // request path (queue at L4 through exec at the shards).
+            let mut hub = MetricsHub::new();
+            if let Some(path) = &cfg.trace_out {
+                let tracer = Tracer::enabled(TRACE_RING_SPANS, cfg.trace_sample);
+                trace = Some((tracer.clone(), path.clone()));
+                hub = hub.with_tracer(tracer);
+            }
             let registry = Arc::new(
-                ModelRegistry::spawn(specs, BatchPolicy::default(), MetricsHub::new())
+                ModelRegistry::spawn(specs, BatchPolicy::default(), hub.clone())
                     .context("spawning hermetic registry")?,
             );
             let fe = Frontend::spawn_registry(
                 "127.0.0.1:0",
                 Arc::clone(&registry),
                 FrontendConfig::default(),
-                MetricsHub::new(),
+                hub,
             )
             .context("spawning hermetic frontend")?;
             let addr = fe.local_addr().to_string();
@@ -1184,6 +1298,17 @@ pub fn run_suite(
         if let Ok(reg) = Arc::try_unwrap(registry) {
             reg.shutdown();
         }
+    }
+    // Export after teardown so every in-flight span has been recorded.
+    if let Some((tracer, path)) = trace {
+        tracer
+            .write_chrome_json(std::path::Path::new(&path))
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!(
+            "trace written to {path} ({} spans, {} dropped)",
+            tracer.recorded(),
+            tracer.dropped()
+        );
     }
     if let Some(e) = run_err {
         return Err(e);
@@ -1308,6 +1433,20 @@ mod tests {
                 mean_ms: 1.6,
                 wall_s: 0.5,
                 rps: 16.0,
+                stages: vec![
+                    StageBrief {
+                        stage: "queue".into(),
+                        count: 8,
+                        p50_us: 12.0,
+                        p99_us: 40.0,
+                    },
+                    StageBrief {
+                        stage: "exec".into(),
+                        count: 8,
+                        p50_us: 900.0,
+                        p99_us: 1500.0,
+                    },
+                ],
             }],
         };
         let j = json::parse(&v.to_json()).expect("verdict JSON parses");
@@ -1318,10 +1457,21 @@ mod tests {
         assert_eq!(rows[0].path(&["name"]).and_then(Json::as_str), Some("t"));
         assert_eq!(rows[0].path(&["p999_ms"]).and_then(Json::as_f64), Some(2.5));
         assert_eq!(rows[0].path(&["checksum"]).and_then(Json::as_str), Some("00ff"));
-        // deterministic_json drops latency fields but keeps scoring
+        // The per-stage breakdown rides in the full verdict...
+        assert_eq!(
+            rows[0].path(&["stages", "queue", "p50_us"]).and_then(Json::as_f64),
+            Some(12.0)
+        );
+        assert_eq!(
+            rows[0].path(&["stages", "exec", "count"]).and_then(Json::as_f64),
+            Some(8.0)
+        );
+        // deterministic_json drops latency fields (and the stage
+        // breakdown — it is wall-clock derived) but keeps scoring
         let d = json::parse(&v.deterministic_json()).expect("det JSON parses");
         let drows = d.path(&["scenarios"]).and_then(Json::as_arr).expect("rows");
         assert!(drows[0].path(&["p999_ms"]).is_none());
+        assert!(drows[0].path(&["stages"]).is_none());
         assert_eq!(drows[0].path(&["ok"]).and_then(Json::as_f64), Some(8.0));
     }
 }

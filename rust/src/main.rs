@@ -16,7 +16,7 @@
 //!            [--listen ADDR] [--cache N]
 //!            [--admission block|shed] [--queue-cap Q]
 //!            [--fairness drr|fifo] [--max-conns N] [--hog]
-//!            [--metrics-json PATH]
+//!            [--metrics-json PATH] [--trace-out PATH [--trace-sample N]]
 //!                                sharded dynamic-batching serving demo +
 //!                                per-shard metrics; --listen exposes the
 //!                                pool over TCP (the L4 front-end) and
@@ -26,6 +26,13 @@
 //! odin swap  --addr HOST:PORT --model ARCH:MODE [--seed N]
 //!                                hot-swap a running front-end's model to
 //!                                a new weight generation (epoch++)
+//! odin stats --addr HOST:PORT [--reset]
+//!                                scrape a live front-end's metrics
+//!                                (incl. per-stage latency percentiles)
+//!                                over wire v4; --reset drains the
+//!                                per-stage window for interval scrapes
+//! odin tracecheck PATH           validate a --trace-out export: trace-
+//!                                event JSON covering every stage
 //! odin loadgen --scenario PATH... [--addr HOST:PORT | --shards N]
 //!              [--verdict-json PATH] [--samples N]
 //!                                replay JSONL traffic scenarios against a
@@ -67,7 +74,12 @@ use odin::frontend::{
 use odin::harness::{fig6, headline, table1, table2, table3};
 use odin::mapper::{map_topology, ExecConfig};
 use odin::pim::AccumulateMode;
+use odin::util::trace::{check_trace, Stage, Tracer};
 use odin::util::{fmt_ns, fmt_pj};
+
+/// Span capacity of a `serve --trace-out` ring: bounded memory for a
+/// long run; overflow is counted in the export's `dropped`, not grown.
+const TRACE_RING_SPANS: usize = 1 << 18;
 
 fn flag(args: &[String], name: &str, default: &str) -> String {
     opt_flag(args, name).unwrap_or_else(|| default.to_string())
@@ -153,6 +165,8 @@ fn main() -> Result<()> {
                 hog: args.iter().any(|a| a == "--hog"),
                 hold: args.iter().any(|a| a == "--hold"),
                 metrics_json: opt_flag(&args, "--metrics-json"),
+                trace_out: opt_flag(&args, "--trace-out"),
+                trace_sample: flag(&args, "--trace-sample", "1").parse()?,
             };
             if opts.hold {
                 ensure!(
@@ -163,6 +177,11 @@ fn main() -> Result<()> {
                 ensure!(
                     opts.swap_mid.is_none(),
                     "--hold serves external traffic; drop --swap-mid (use `odin swap` instead)"
+                );
+                ensure!(
+                    opts.trace_out.is_none(),
+                    "--hold never exits, so there is no shutdown to export the trace at; \
+                     scrape a held server with `odin stats --addr` instead"
                 );
             }
             if opts.hog {
@@ -191,6 +210,41 @@ fn main() -> Result<()> {
         "loadgen" => {
             cmd_loadgen(&args)?;
         }
+        "stats" => {
+            // Scrape a live front-end's MetricsReport over wire v4 —
+            // per-stage latency percentiles included — without touching
+            // the server.  `--reset` also drains the per-stage window,
+            // so repeated scrapes measure disjoint intervals.
+            let addr = opt_flag(&args, "--addr")
+                .ok_or_else(|| anyhow::anyhow!("stats needs --addr HOST:PORT"))?;
+            let reset = args.iter().any(|a| a == "--reset");
+            let client = NetClient::connect_named(addr.as_str(), "cnn1", "fast", "stats-cli")
+                .with_context(|| format!("connecting to {addr}"))?;
+            let json = client.stats(reset).map_err(anyhow::Error::new)?;
+            println!("{json}");
+        }
+        "tracecheck" => {
+            // Validate a --trace-out export: trace-event JSON with at
+            // least one span per pipeline stage.  What the CI loadgen
+            // smoke runs (no jq in the container).
+            let path = args
+                .get(1)
+                .filter(|a| !a.starts_with("--"))
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("tracecheck needs a trace PATH (a --trace-out file)"))?;
+            let text =
+                std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+            let counts =
+                check_trace(&text, &Stage::ALL).with_context(|| format!("validating {path}"))?;
+            for stage in Stage::ALL {
+                println!(
+                    "{:<10} {:>8} spans",
+                    stage.name(),
+                    counts.get(stage.name()).copied().unwrap_or(0)
+                );
+            }
+            println!("tracecheck OK: {path} covers every pipeline stage");
+        }
         "swap" => {
             let addr = opt_flag(&args, "--addr")
                 .ok_or_else(|| anyhow::anyhow!("swap needs --addr HOST:PORT"))?;
@@ -218,8 +272,8 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "odin — PCRAM PIM accelerator reproduction
-commands: table1 table2 table3 fig6 headline eval serve swap loadgen
-          benchgate ablation selftest
+commands: table1 table2 table3 fig6 headline eval serve swap stats
+          tracecheck loadgen benchgate ablation selftest
 common flags: --artifacts DIR --backend sim|pjrt
 eval:  --arch cnn1|cnn2 --mode fast|sc|mux|float --limit N
 serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
@@ -241,17 +295,29 @@ serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
                       clients retry typed conn rejections)
        --metrics-json PATH (dump the MetricsReport snapshot as JSON,
                       incl. per-model/per-epoch + per-client counters)
+       --trace-out PATH (export a Chrome trace-event JSON of the run at
+                      shutdown — load it in Perfetto / chrome://tracing;
+                      per-request spans for queue, admission, dispatch,
+                      batch, exec, write) [--trace-sample N] (trace 1/N
+                      requests; default 1 = all)
        --hold (with --listen: keep the front-end up with no built-in
                       load until killed — the target for an external
-                      `odin loadgen --addr`)
+                      `odin loadgen --addr`; scrape it with `odin stats`)
 swap:  --addr HOST:PORT --model ARCH:MODE [--seed N] — hot-swap a running
        multi-model front-end's weights; prints the new epoch
+stats: --addr HOST:PORT [--reset] — print a live front-end's metrics
+       JSON (per-stage latency percentiles included) over wire v4;
+       --reset drains the per-stage window so scrapes cover intervals
+tracecheck: PATH — validate a --trace-out export (trace-event JSON with
+       spans for every pipeline stage); non-zero exit on a bad trace
 loadgen: --scenario PATH (repeatable JSONL scenario files; see
        rust/scenarios/*.jsonl) [--addr HOST:PORT] (target a live serve;
        default: spawn a hermetic in-process front-end, --shards N per
        pool) [--verdict-json PATH] (machine-readable verdict for
-       benchgate) [--samples N] (distinct dataset rows cycled) — exits
-       non-zero when any scenario fails its scoring rule
+       benchgate) [--samples N] (distinct dataset rows cycled)
+       [--trace-out PATH [--trace-sample N]] (hermetic only: export a
+       Perfetto trace of the whole suite) — exits non-zero when any
+       scenario fails its scoring rule
 benchgate: --baseline PATH --pr PATH (repeatable) [--tolerance 0.75] —
        fail if any bench metric drops below tolerance x baseline
        --floors-old PATH --floors-new PATH — also (or instead) fail if
@@ -380,6 +446,38 @@ struct ServeOpts {
     hold: bool,
     /// Dump the final `MetricsReport` as JSON to this path.
     metrics_json: Option<String>,
+    /// Export a Chrome trace-event JSON (Perfetto-loadable) of the run
+    /// to this path at shutdown.
+    trace_out: Option<String>,
+    /// Trace 1 of every N requests when `--trace-out` is set (1 = all).
+    trace_sample: u64,
+}
+
+impl ServeOpts {
+    /// When `--trace-out` is set: an enabled tracer plus the export
+    /// path.  The tracer clone attached to the hub shares the ring, so
+    /// the handle kept here exports everything the stack recorded.
+    fn tracer(&self) -> Option<(Tracer, String)> {
+        self.trace_out
+            .as_ref()
+            .map(|p| (Tracer::enabled(TRACE_RING_SPANS, self.trace_sample), p.clone()))
+    }
+}
+
+/// Export the trace ring to `path` and say so (the `--trace-out`
+/// shutdown step shared by both serve flavors).
+fn export_trace(trace: Option<(Tracer, String)>) -> Result<()> {
+    if let Some((tracer, path)) = trace {
+        tracer
+            .write_chrome_json(std::path::Path::new(&path))
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!(
+            "trace written to {path} ({} spans, {} dropped)",
+            tracer.recorded(),
+            tracer.dropped()
+        );
+    }
+    Ok(())
 }
 
 impl ServeOpts {
@@ -403,7 +501,11 @@ impl ServeOpts {
 /// threads — in-process by default, over loopback TCP with `--listen` —
 /// then dump pooled + per-shard (+ front-end) metrics.
 fn cmd_serve(artifacts: &str, backend: &str, opts: &ServeOpts) -> Result<()> {
-    let metrics = MetricsHub::new();
+    let trace = opts.tracer();
+    let mut metrics = MetricsHub::new();
+    if let Some((tracer, _)) = &trace {
+        metrics = metrics.with_tracer(tracer.clone());
+    }
     let (arch, policy) = (opts.arch.as_str(), opts.policy);
     // `auto` means one sim shard per core; PJRT engines compile every
     // batch variant and hold their own executables, so auto stays at one
@@ -548,6 +650,7 @@ fn cmd_serve(artifacts: &str, backend: &str, opts: &ServeOpts) -> Result<()> {
             .with_context(|| format!("writing metrics json to {path}"))?;
         println!("metrics json written to {path}");
     }
+    export_trace(trace)?;
     Ok(())
 }
 
@@ -807,6 +910,8 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     let cfg = LoadgenConfig {
         artifacts: flag(args, "--artifacts", "artifacts"),
         samples: flag(args, "--samples", "64").parse()?,
+        trace_out: opt_flag(args, "--trace-out"),
+        trace_sample: flag(args, "--trace-sample", "1").parse()?,
         ..LoadgenConfig::default()
     };
     let verdict = loadgen::run_suite(&scenarios, &target, &cfg)?;
@@ -852,7 +957,11 @@ fn cmd_serve_registry(artifacts: &str, backend: &str, opts: &ServeOpts) -> Resul
         "multi-model serving (--model) runs on the hermetic sim backend; \
          pjrt serving stays single-model"
     );
-    let metrics = MetricsHub::new();
+    let trace = opts.tracer();
+    let mut metrics = MetricsHub::new();
+    if let Some((tracer, _)) = &trace {
+        metrics = metrics.with_tracer(tracer.clone());
+    }
     let mut specs = Vec::new();
     for m in &opts.models {
         specs.push(parse_model_spec(artifacts, m)?.with_shards(opts.shards));
@@ -1014,6 +1123,7 @@ fn cmd_serve_registry(artifacts: &str, backend: &str, opts: &ServeOpts) -> Resul
             .with_context(|| format!("writing metrics json to {path}"))?;
         println!("metrics json written to {path}");
     }
+    export_trace(trace)?;
     Ok(())
 }
 

@@ -91,7 +91,10 @@ impl GateReport {
 /// Evaluate the gate: every numeric metric in `baseline` (an object of
 /// `bench -> {metric -> floor}`) must appear in `current` (same shape)
 /// at `>= tolerance × floor`.  Metrics the run reports beyond the
-/// baseline are ignored — the baseline is the contract.
+/// baseline are ignored — the baseline is the contract.  String-valued
+/// baseline entries are *notes* (provenance for the committed floors,
+/// e.g. the measured tracing overhead a floor was derived from) and are
+/// skipped, not compared.
 pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<GateReport> {
     let benches = match baseline.as_obj() {
         Some(o) => o,
@@ -103,6 +106,9 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<GateRe
             .as_obj()
             .with_context(|| format!("baseline entry {bench:?} must be an object"))?;
         for (metric, floor) in metrics {
+            if matches!(floor, Json::Str(_)) {
+                continue; // a note, not a floor
+            }
             let floor = floor
                 .as_f64()
                 .with_context(|| format!("baseline {bench}.{metric} must be a number"))?;
@@ -127,8 +133,10 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<GateRe
 /// `old` (the base branch's `BENCH_BASELINE.json`) must still exist in
 /// `new` (the PR's) at a value `>= old` — floors only move **up** with a
 /// perf change, never quietly down or away.  New metrics in `new` are
-/// fine (a PR may add floors).  Returns the violations, one line each;
-/// empty means the PR's baseline is acceptable.
+/// fine (a PR may add floors).  String-valued entries in `old` are notes
+/// (see [`compare`]) — free to change or disappear, never a violation.
+/// Returns the violations, one line each; empty means the PR's baseline
+/// is acceptable.
 pub fn floors_monotonic(old: &Json, new: &Json) -> Result<Vec<String>> {
     let benches = match old.as_obj() {
         Some(o) => o,
@@ -140,6 +148,9 @@ pub fn floors_monotonic(old: &Json, new: &Json) -> Result<Vec<String>> {
             .as_obj()
             .with_context(|| format!("old baseline entry {bench:?} must be an object"))?;
         for (metric, floor) in metrics {
+            if matches!(floor, Json::Str(_)) {
+                continue; // a note, not a floor
+            }
             let floor = floor
                 .as_f64()
                 .with_context(|| format!("old baseline {bench}.{metric} must be a number"))?;
@@ -307,6 +318,28 @@ mod tests {
         );
         assert!(g.pass());
         assert_eq!(g.rows.len(), 2);
+    }
+
+    #[test]
+    fn string_valued_baseline_entries_are_notes_not_floors() {
+        // A "notes" string in the baseline documents where a floor came
+        // from; it must neither be compared nor required in the run.
+        let baseline = r#"{"net":{"tcp_per_inproc":0.1,
+            "notes":"traced_per_plain floor from 2026-08 runs: ~0.97 observed"}}"#;
+        let g = gate(baseline, r#"{"net":{"tcp_per_inproc":0.5}}"#, 0.75);
+        assert!(g.pass(), "{}", g.table());
+        assert_eq!(g.rows.len(), 1, "the note must not produce a row");
+        // Non-string, non-numeric values are still malformed baselines.
+        let bad = compare(
+            &parse(r#"{"net":{"tcp_per_inproc":[1]}}"#).unwrap(),
+            &parse(r#"{"net":{"tcp_per_inproc":0.5}}"#).unwrap(),
+            0.75,
+        );
+        assert!(bad.is_err());
+        // Notes are free to change or vanish across baselines.
+        let old = parse(r#"{"net":{"tcp_per_inproc":0.1,"notes":"old text"}}"#).unwrap();
+        let new = parse(r#"{"net":{"tcp_per_inproc":0.1}}"#).unwrap();
+        assert!(floors_monotonic(&old, &new).unwrap().is_empty());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Small self-contained substrates the offline environment forces us to
 //! own: a JSON parser (no serde), a micro-bench harness (no criterion), a
-//! property-testing kit (no proptest), and a deterministic RNG (no rand).
+//! property-testing kit (no proptest), a deterministic RNG (no rand),
+//! and a span tracer with Perfetto export (no tracing crate).
 
 pub mod bench;
 pub mod benchgate;
@@ -8,6 +9,7 @@ pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod testkit;
+pub mod trace;
 
 /// Format a nanosecond quantity with an adaptive unit.
 pub fn fmt_ns(ns: f64) -> String {

@@ -1,0 +1,510 @@
+//! End-to-end request tracing: a lock-free, bounded span recorder plus a
+//! Chrome trace-event exporter (loadable in Perfetto / `chrome://tracing`).
+//!
+//! A [`Tracer`] is cheap to clone and rides inside the serving stack's
+//! `MetricsHub`, so every layer that already has metrics access — the L4
+//! front-end, the pool dispatcher, the shard workers, the response writer
+//! — can record [`Span`]s without new plumbing.  The L4 reader stamps
+//! each request with a [`TraceCtx`] (trace id + sampling decision) at
+//! arrival; every downstream stage closes a span against that id, so one
+//! request's journey (queue → admission → dispatch → batch → exec →
+//! write) reconstructs as one lane-aligned row group in Perfetto.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when disabled.**  A disabled tracer holds *no ring at
+//!    all* (`Option<Arc<Ring>>::None`), so the span fast path is a
+//!    single branch on an owned enum — no atomic loads, no allocation,
+//!    nothing shared to contend on.  This is pinned by test.
+//! 2. **Never block the serving path.**  Recording reserves a slot with
+//!    one relaxed `fetch_add`; when the ring is full the span is counted
+//!    in [`Tracer::dropped`] and discarded.  No writer ever waits on
+//!    another writer.
+//! 3. **Bounded memory.**  The ring's capacity is fixed at creation;
+//!    tracing a long `serve` run costs a fixed-size buffer plus one
+//!    counter, never an unbounded `Vec`.
+//!
+//! Each slot is a `Mutex<Option<Span>>`, but the mutexes are
+//! *uncontended by construction*: the atomic cursor hands each writer a
+//! distinct slot index, so a slot lock is only ever taken by the one
+//! writer that reserved it — and by [`Tracer::snapshot`], which runs
+//! off the hot path.  That keeps the recorder safe Rust with the
+//! concurrency cost of an atomic increment.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::json::Json;
+
+/// Pipeline stage a span measures.  One request produces at most one
+/// span per stage (plus the enclosing [`Stage::Request`] root).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Residency in the per-client fairness queue (L4 enqueue → scheduler
+    /// pop).
+    Queue,
+    /// Admission-gate wait (`block` mode can park here; `shed` resolves
+    /// instantly either way).
+    Admission,
+    /// Pool dispatch: engine-pool submit → the dispatcher routes the
+    /// formed chunk to a shard.
+    Dispatch,
+    /// Batch handoff: chunk routed → the shard worker starts executing
+    /// (covers the shard's input queue and per-request validation).
+    Batch,
+    /// Engine execution of the batch this request rode in.
+    Exec,
+    /// Writer handoff: response resolved → response frame on the wire.
+    Write,
+    /// The whole request, arrival → response written.  Closed for every
+    /// answered request, including cache hits and typed rejections.
+    Request,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order (the order `tracecheck` and the
+    /// metrics JSON report them).
+    pub const ALL: [Stage; 7] = [
+        Stage::Queue,
+        Stage::Admission,
+        Stage::Dispatch,
+        Stage::Batch,
+        Stage::Exec,
+        Stage::Write,
+        Stage::Request,
+    ];
+
+    /// Stable lowercase name (span `name` in the exported trace, key in
+    /// the metrics JSON `stages` object).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Admission => "admission",
+            Stage::Dispatch => "dispatch",
+            Stage::Batch => "batch",
+            Stage::Exec => "exec",
+            Stage::Write => "write",
+            Stage::Request => "request",
+        }
+    }
+
+    /// Perfetto lane (`tid`) the stage's spans render on.  Each stage
+    /// gets its own lane so the trace reads as a pipeline; `Exec` spans
+    /// add the shard id so shards fan out into separate rows.
+    fn lane(self) -> u64 {
+        match self {
+            Stage::Request => 0,
+            Stage::Queue => 1,
+            Stage::Admission => 2,
+            Stage::Dispatch => 3,
+            Stage::Batch => 4,
+            Stage::Exec => 100,
+            Stage::Write => 5,
+        }
+    }
+}
+
+/// Per-request trace context, stamped once at the L4 reader and carried
+/// through the pool alongside the request.  `Copy` so it travels inside
+/// request/writer structs for free.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Request-unique trace id (0 when tracing is disabled).
+    pub id: u64,
+    /// Whether this request was selected by `--trace-sample`; stages
+    /// skip span recording (but not stage *metrics*) when false.
+    pub sampled: bool,
+}
+
+impl TraceCtx {
+    /// The context of an untraced request: id 0, never sampled.
+    pub fn disabled() -> TraceCtx {
+        TraceCtx::default()
+    }
+}
+
+/// One recorded stage measurement.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    /// The request's trace id ([`TraceCtx::id`]).
+    pub trace_id: u64,
+    /// Which pipeline stage this span measures.
+    pub stage: Stage,
+    /// Start, microseconds since the tracer's epoch.
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Shard id for [`Stage::Exec`] spans; 0 elsewhere.
+    pub shard: u64,
+}
+
+/// The shared recording state of an *enabled* tracer.  A disabled
+/// tracer has none, which is what makes the disabled fast path free.
+struct Ring {
+    /// Zero point of every span timestamp in this trace.
+    epoch: Instant,
+    /// Fixed slot pool; each slot is written by exactly one reserving
+    /// thread (see module docs), so the per-slot mutex never contends
+    /// on the hot path.
+    slots: Vec<Mutex<Option<Span>>>,
+    /// Next free slot; indices past `slots.len()` mean the ring is full.
+    cursor: AtomicUsize,
+    /// Spans discarded because the ring was full.
+    dropped: AtomicU64,
+    /// Trace-id source (`fetch_add`, so ids are unique per tracer).
+    next_id: AtomicU64,
+    /// Sample 1 of every N requests (1 = every request).
+    sample: u64,
+}
+
+/// Handle to the span recorder (see module docs).  Cheap to clone; all
+/// clones share one ring.  [`Tracer::disabled`] is the default and is
+/// completely inert.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    ring: Option<Arc<Ring>>,
+}
+
+impl Tracer {
+    /// A tracer that records nothing and touches no shared state: the
+    /// span fast path is one branch on a `None`, with zero atomics.
+    pub fn disabled() -> Tracer {
+        Tracer { ring: None }
+    }
+
+    /// An enabled tracer with room for `capacity` spans, sampling 1 of
+    /// every `sample` requests (`0` is treated as `1`: sample all).
+    pub fn enabled(capacity: usize, sample: u64) -> Tracer {
+        let slots = (0..capacity.max(1)).map(|_| Mutex::new(None)).collect();
+        Tracer {
+            ring: Some(Arc::new(Ring {
+                epoch: Instant::now(),
+                slots,
+                cursor: AtomicUsize::new(0),
+                dropped: AtomicU64::new(0),
+                next_id: AtomicU64::new(0),
+                sample: sample.max(1),
+            })),
+        }
+    }
+
+    /// Whether span recording is on.
+    pub fn is_enabled(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    /// Stamp a new request: a fresh trace id plus this request's
+    /// sampling decision.  Disabled tracers return
+    /// [`TraceCtx::disabled`] without touching any shared state.
+    pub fn start_trace(&self) -> TraceCtx {
+        let Some(ring) = &self.ring else {
+            return TraceCtx::disabled();
+        };
+        let id = ring.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        TraceCtx { id, sampled: id % ring.sample == 0 }
+    }
+
+    /// Microseconds from the tracer's epoch to `t` (clamped to 0 for
+    /// instants predating the epoch; disabled tracers report 0).
+    fn us_since_epoch(ring: &Ring, t: Instant) -> u64 {
+        t.checked_duration_since(ring.epoch).map(|d| d.as_micros() as u64).unwrap_or(0)
+    }
+
+    /// Record one stage span for a sampled request, measured by two
+    /// `Instant`s.  A no-op when tracing is disabled or the request was
+    /// not sampled; counts a drop (and discards the span) when the ring
+    /// is full.  Never blocks.
+    pub fn span(&self, ctx: TraceCtx, stage: Stage, start: Instant, end: Instant, shard: usize) {
+        let Some(ring) = &self.ring else { return };
+        if !ctx.sampled {
+            return;
+        }
+        let start_us = Self::us_since_epoch(ring, start);
+        let end_us = Self::us_since_epoch(ring, end);
+        let span = Span {
+            trace_id: ctx.id,
+            stage,
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+            shard: shard as u64,
+        };
+        let idx = ring.cursor.fetch_add(1, Ordering::Relaxed);
+        match ring.slots.get(idx) {
+            Some(slot) => *slot.lock().unwrap() = Some(span),
+            None => {
+                ring.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Spans discarded because the ring was full (0 when disabled).
+    pub fn dropped(&self) -> u64 {
+        self.ring.as_ref().map_or(0, |r| r.dropped.load(Ordering::Relaxed))
+    }
+
+    /// Spans currently recorded (0 when disabled).
+    pub fn recorded(&self) -> usize {
+        self.ring
+            .as_ref()
+            .map_or(0, |r| r.cursor.load(Ordering::Acquire).min(r.slots.len()))
+    }
+
+    /// Copy out every recorded span, in reservation order.  Slots
+    /// reserved but not yet written by a racing recorder are skipped —
+    /// a snapshot never blocks on an in-flight writer beyond its one
+    /// slot lock.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let Some(ring) = &self.ring else {
+            return Vec::new();
+        };
+        let n = ring.cursor.load(Ordering::Acquire).min(ring.slots.len());
+        ring.slots[..n].iter().filter_map(|s| *s.lock().unwrap()).collect()
+    }
+
+    /// Render the recorded spans as Chrome trace-event JSON (the
+    /// `traceEvents` array format), loadable in Perfetto or
+    /// `chrome://tracing`.  Every event is a complete (`"ph":"X"`) span:
+    /// stage name, microsecond `ts`/`dur`, one `tid` lane per stage
+    /// (exec lanes fan out per shard), and the trace id in `args` so
+    /// one request's spans correlate across lanes.  The top-level
+    /// object also reports `dropped` so a truncated trace is visible.
+    pub fn export_chrome_json(&self) -> String {
+        let spans = self.snapshot();
+        let events: Vec<Json> = spans
+            .iter()
+            .map(|s| {
+                let mut ev = std::collections::BTreeMap::new();
+                ev.insert("name".to_string(), Json::Str(s.stage.name().to_string()));
+                ev.insert("cat".to_string(), Json::Str("odin".to_string()));
+                ev.insert("ph".to_string(), Json::Str("X".to_string()));
+                ev.insert("ts".to_string(), Json::Num(s.start_us as f64));
+                ev.insert("dur".to_string(), Json::Num(s.dur_us as f64));
+                ev.insert("pid".to_string(), Json::Num(1.0));
+                ev.insert("tid".to_string(), Json::Num((s.stage.lane() + s.shard) as f64));
+                let mut args = std::collections::BTreeMap::new();
+                args.insert("trace_id".to_string(), Json::Num(s.trace_id as f64));
+                if s.stage == Stage::Exec {
+                    args.insert("shard".to_string(), Json::Num(s.shard as f64));
+                }
+                ev.insert("args".to_string(), Json::Obj(args));
+                Json::Obj(ev)
+            })
+            .collect();
+        let mut top = std::collections::BTreeMap::new();
+        top.insert("traceEvents".to_string(), Json::Arr(events));
+        top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        top.insert("dropped".to_string(), Json::Num(self.dropped() as f64));
+        Json::Obj(top).to_string()
+    }
+
+    /// Export the trace to `path` (see [`Tracer::export_chrome_json`]).
+    pub fn write_chrome_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.export_chrome_json())
+    }
+}
+
+/// Validate an exported trace file's content: it must parse as
+/// trace-event JSON, and every stage in `required` must appear on at
+/// least one span.  Returns the per-stage span counts (by stage name)
+/// on success; used by `odin tracecheck` and the loadgen CI smoke.
+pub fn check_trace(
+    text: &str,
+    required: &[Stage],
+) -> anyhow::Result<std::collections::BTreeMap<String, usize>> {
+    let parsed = super::json::parse(text)
+        .map_err(|e| anyhow::anyhow!("trace is not valid JSON: {e}"))?;
+    let events = parsed
+        .path(&["traceEvents"])
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("trace has no \"traceEvents\" array"))?;
+    let mut counts: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .path(&["name"])
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no \"name\""))?;
+        for key in ["ts", "dur", "pid", "tid"] {
+            if ev.path(&[key]).and_then(Json::as_f64).is_none() {
+                anyhow::bail!("event {i} ({name}) is missing numeric {key:?}");
+            }
+        }
+        if ev.path(&["ph"]).and_then(Json::as_str) != Some("X") {
+            anyhow::bail!("event {i} ({name}) is not a complete (\"ph\":\"X\") span");
+        }
+        *counts.entry(name.to_string()).or_insert(0) += 1;
+    }
+    for stage in required {
+        if counts.get(stage.name()).copied().unwrap_or(0) == 0 {
+            anyhow::bail!(
+                "trace has no {:?} spans (stages present: {:?})",
+                stage.name(),
+                counts.keys().collect::<Vec<_>>()
+            );
+        }
+    }
+    Ok(counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn ctx(id: u64) -> TraceCtx {
+        TraceCtx { id, sampled: true }
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert_zero_events_zero_atomics() {
+        // Pinned: a disabled tracer holds no ring at all, so the span
+        // fast path cannot touch an atomic — there is none to touch.
+        let t = Tracer::disabled();
+        assert!(t.ring.is_none(), "disabled tracer must own no shared state");
+        assert!(!t.is_enabled());
+        let now = Instant::now();
+        t.span(ctx(1), Stage::Exec, now, now, 0);
+        assert_eq!(t.start_trace(), TraceCtx::disabled());
+        assert_eq!(t.recorded(), 0);
+        assert_eq!(t.dropped(), 0);
+        assert!(t.snapshot().is_empty());
+        let exported = crate::util::json::parse(&t.export_chrome_json()).unwrap();
+        assert_eq!(
+            exported.path(&["traceEvents"]).unwrap().as_arr().unwrap().len(),
+            0,
+            "disabled tracing must export zero events"
+        );
+        // Clones of a disabled tracer share nothing either.
+        assert!(t.clone().ring.is_none());
+    }
+
+    #[test]
+    fn spans_record_and_export_round_trips() {
+        let t = Tracer::enabled(16, 1);
+        let base = Instant::now();
+        t.span(ctx(7), Stage::Queue, base, base + Duration::from_micros(40), 0);
+        t.span(ctx(7), Stage::Exec, base, base + Duration::from_micros(90), 2);
+        assert_eq!(t.recorded(), 2);
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].stage, Stage::Queue);
+        assert!(spans[0].dur_us >= 40);
+        assert_eq!(spans[1].shard, 2);
+        let parsed = crate::util::json::parse(&t.export_chrome_json()).unwrap();
+        let events = parsed.path(&["traceEvents"]).unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].path(&["name"]).unwrap().as_str(), Some("queue"));
+        assert_eq!(events[0].path(&["args", "trace_id"]).unwrap().as_f64(), Some(7.0));
+        assert_eq!(events[1].path(&["args", "shard"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(parsed.path(&["dropped"]).unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn sampling_selects_one_in_n() {
+        let t = Tracer::enabled(64, 4);
+        let sampled =
+            (0..100).map(|_| t.start_trace()).filter(|c| c.sampled).count();
+        assert_eq!(sampled, 25, "1/4 sampling over 100 ids");
+        // Unsampled contexts never reach the ring.
+        let now = Instant::now();
+        t.span(TraceCtx { id: 3, sampled: false }, Stage::Queue, now, now, 0);
+        assert_eq!(t.recorded(), 0);
+        // sample=0 is clamped to "sample everything".
+        let every = Tracer::enabled(4, 0);
+        assert!(every.start_trace().sampled);
+    }
+
+    #[test]
+    fn full_ring_counts_drops_and_keeps_serving() {
+        let t = Tracer::enabled(4, 1);
+        let now = Instant::now();
+        for i in 0..10 {
+            t.span(ctx(i), Stage::Write, now, now, 0);
+        }
+        assert_eq!(t.recorded(), 4);
+        assert_eq!(t.dropped(), 6);
+        assert_eq!(t.snapshot().len(), 4);
+        let parsed = crate::util::json::parse(&t.export_chrome_json()).unwrap();
+        assert_eq!(parsed.path(&["dropped"]).unwrap().as_f64(), Some(6.0));
+    }
+
+    #[test]
+    fn multi_producer_full_ring_never_blocks_or_corrupts() {
+        // Property test: 8 threads race 2000 spans into a 256-slot
+        // ring.  Every span is either recorded intact or counted as
+        // dropped; the export of the survivors parses cleanly.
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 250;
+        const CAP: usize = 256;
+        let t = Tracer::enabled(CAP, 1);
+        let base = Instant::now();
+        let handles: Vec<_> = (0..THREADS)
+            .map(|n| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER_THREAD {
+                        let id = n * PER_THREAD + i + 1;
+                        t.span(
+                            ctx(id),
+                            Stage::ALL[(id % 7) as usize],
+                            base,
+                            base + Duration::from_micros(id),
+                            (id % 3) as usize,
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = THREADS * PER_THREAD;
+        assert_eq!(t.recorded() as u64 + t.dropped(), total, "no span vanishes uncounted");
+        assert_eq!(t.recorded(), CAP, "the ring filled exactly");
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), CAP, "every reserved slot was written");
+        for s in &spans {
+            assert!(s.trace_id >= 1 && s.trace_id <= total, "corrupt trace id {}", s.trace_id);
+            assert_eq!(s.dur_us, s.trace_id, "span payload must survive the race intact");
+            assert_eq!(s.stage, Stage::ALL[(s.trace_id % 7) as usize]);
+        }
+        // The surviving spans export as valid trace-event JSON.
+        let counts = check_trace(&t.export_chrome_json(), &[]).unwrap();
+        assert_eq!(counts.values().sum::<usize>(), CAP);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_across_clones() {
+        let t = Tracer::enabled(4, 1);
+        let c = t.clone();
+        let mut ids: Vec<u64> = (0..50)
+            .map(|i| if i % 2 == 0 { t.start_trace().id } else { c.start_trace().id })
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 50);
+    }
+
+    #[test]
+    fn check_trace_validates_structure_and_required_stages() {
+        let t = Tracer::enabled(8, 1);
+        let now = Instant::now();
+        t.span(ctx(1), Stage::Queue, now, now, 0);
+        t.span(ctx(1), Stage::Exec, now, now, 1);
+        let text = t.export_chrome_json();
+        let counts = check_trace(&text, &[Stage::Queue, Stage::Exec]).unwrap();
+        assert_eq!(counts["queue"], 1);
+        assert_eq!(counts["exec"], 1);
+        // A required stage with no spans fails, naming the stage.
+        let err = check_trace(&text, &[Stage::Write]).unwrap_err().to_string();
+        assert!(err.contains("write"), "{err}");
+        // Garbage and structurally wrong documents fail.
+        assert!(check_trace("not json", &[]).is_err());
+        assert!(check_trace("{\"events\":[]}", &[]).is_err());
+        assert!(check_trace(
+            "{\"traceEvents\":[{\"name\":\"queue\",\"ph\":\"B\",\"ts\":1,\"dur\":1,\"pid\":1,\"tid\":1}]}",
+            &[]
+        )
+        .is_err());
+    }
+}

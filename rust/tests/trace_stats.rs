@@ -1,0 +1,271 @@
+//! End-to-end observability tests: per-stage accounting under mixed
+//! outcomes (served, cache hit, shed), the wire v4 `Stats` scrape, and
+//! the Perfetto trace export — all against a real pool + front-end over
+//! `127.0.0.1:0`, hermetic and offline.
+
+use std::time::Duration;
+
+use odin::coordinator::{BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelWeights};
+use odin::dataset::TestSet;
+use odin::frontend::{
+    AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError,
+};
+use odin::util::trace::{check_trace, Stage, Tracer};
+
+/// Pool + front-end over an ephemeral loopback port, serving
+/// cnn1/float on single-threaded sim engines, with the caller's hub
+/// (so tests can pre-arm a tracer via `MetricsHub::with_tracer`).
+fn spawn_stack(
+    shards: usize,
+    cfg: FrontendConfig,
+    metrics: MetricsHub,
+) -> (EnginePool, Client, Frontend) {
+    let weights = ModelWeights::synthetic("cnn1", 99).unwrap();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+        shards,
+        BatchPolicy { max_batch: 32, linger: Duration::from_micros(200) },
+        metrics.clone(),
+    )
+    .unwrap();
+    let frontend =
+        Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics).unwrap();
+    (pool, client, frontend)
+}
+
+fn teardown(pool: EnginePool, client: Client, frontend: Frontend) {
+    frontend.shutdown();
+    drop(client);
+    pool.shutdown();
+}
+
+fn stage_count(report: &odin::coordinator::MetricsReport, name: &str) -> u64 {
+    report
+        .stages
+        .iter()
+        .find(|s| s.stage == name)
+        .map(|s| s.count)
+        .unwrap_or_else(|| panic!("report has no {name:?} stage"))
+}
+
+/// The accounting invariant the whole breakdown rests on: every written
+/// response — pool-served, cache hit, or typed shed rejection — closes
+/// exactly one `request` stage, so the `request` count equals
+/// `net_responses` even under a saturated gate with mixed outcomes.
+/// Nothing double-counts, nothing vanishes.
+#[test]
+fn request_stage_count_equals_responses_under_mixed_outcomes() {
+    const COLD: usize = 128;
+    const HITS: usize = 64;
+
+    let cfg = FrontendConfig {
+        admission: AdmissionConfig {
+            policy: AdmissionPolicy::Shed,
+            queue_cap: 2,
+            retry_after_ms: 7,
+        },
+        cache_capacity: 256,
+        ..FrontendConfig::default()
+    };
+    let metrics = MetricsHub::new();
+    let (pool, client, frontend) = spawn_stack(1, cfg, metrics.clone());
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let test = TestSet::synthetic(COLD + 1, 31);
+    let hot = test.samples[0].image.clone();
+
+    // Prime the cache with the hot row (one admitted pool request).
+    assert!(!net.infer(hot.clone()).unwrap().cached);
+
+    // Open-loop blast: unique cold rows (mostly shed by the cap-2 gate)
+    // interleaved with hot-row hits (served from the cache regardless).
+    let rx_cold: Vec<_> =
+        test.samples[1..].iter().map(|s| net.submit(s.image.clone())).collect();
+    let rx_hits: Vec<_> = (0..HITS).map(|_| net.submit(hot.clone())).collect();
+
+    let (mut served, mut shed) = (0usize, 0usize);
+    for rx in rx_cold {
+        match NetClient::wait(rx) {
+            Ok(r) => {
+                assert!(!r.cached, "cold rows are unique; they cannot hit");
+                served += 1;
+            }
+            Err(NetError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("unexpected outcome: {e}"),
+        }
+    }
+    for rx in rx_hits {
+        let r = NetClient::wait(rx).expect("hits are served even at a full gate");
+        assert!(r.cached);
+    }
+    assert_eq!(served + shed, COLD, "every cold request answered exactly once");
+    assert!(shed > 0, "a saturating open loop against cap=2 must shed");
+
+    drop(net);
+    teardown(pool, client, frontend);
+    let report = metrics.report();
+    let total = (1 + COLD + HITS) as u64;
+    assert_eq!(report.frontend.net_responses, total, "every submission answered");
+
+    // The invariant: one closed `request` stage per written response.
+    assert_eq!(stage_count(&report, "request"), total);
+    assert_eq!(stage_count(&report, "write"), total);
+    // Hits bypass the fair queue and the gate; everything else — served
+    // or shed — passes both exactly once.
+    assert_eq!(stage_count(&report, "queue"), (1 + COLD) as u64);
+    assert_eq!(stage_count(&report, "admission"), (1 + COLD) as u64);
+    // Only admitted requests reach the pool: one exec sample each.
+    assert_eq!(stage_count(&report, "exec"), report.frontend.admitted);
+    assert_eq!(report.frontend.admitted, (1 + served) as u64);
+    assert_eq!(report.frontend.shed, shed as u64);
+
+    // And the JSON dump carries the same numbers for scrapers.
+    let json = odin::util::json::parse(&report.to_json()).unwrap();
+    assert_eq!(
+        json.path(&["stages", "request", "count"]).unwrap().as_usize(),
+        Some(total as usize)
+    );
+    assert!(json.path(&["stages", "queue", "p99_us"]).unwrap().as_f64().is_some());
+}
+
+/// The wire v4 `Stats` frame end to end: a client scrapes a live
+/// server's full report (per-stage percentiles included) without
+/// stopping it, and a `reset` scrape opens a fresh stage window while
+/// leaving the cumulative counters alone.
+#[test]
+fn stats_frame_scrapes_live_stage_percentiles_and_reset_windows() {
+    const REQUESTS: usize = 32;
+
+    let (pool, client, frontend) = spawn_stack(2, FrontendConfig::default(), MetricsHub::new());
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let test = TestSet::synthetic(REQUESTS, 17);
+    for s in &test.samples {
+        net.infer(s.image.clone()).unwrap();
+    }
+
+    // Non-destructive scrape: the full report over the wire, with every
+    // request's stage samples in it.  The server keeps serving.
+    let text = net.stats(false).expect("stats frame answered");
+    let json = odin::util::json::parse(&text).expect("stats payload is the report JSON");
+    assert_eq!(
+        json.path(&["stages", "queue", "count"]).unwrap().as_usize(),
+        Some(REQUESTS),
+        "every request passed the fair queue exactly once"
+    );
+    assert_eq!(json.path(&["stages", "exec", "count"]).unwrap().as_usize(), Some(REQUESTS));
+    let p50 = json.path(&["stages", "queue", "p50_us"]).unwrap().as_f64().unwrap();
+    let p99 = json.path(&["stages", "queue", "p99_us"]).unwrap().as_f64().unwrap();
+    assert!(p50 <= p99, "percentiles must be ordered: p50 {p50} > p99 {p99}");
+    assert!(
+        json.path(&["requests"]).unwrap().as_usize().unwrap() >= REQUESTS,
+        "the scrape carries the whole MetricsReport, not just stages"
+    );
+
+    // Reset scrape: returns the window it closes, then drains the stage
+    // summaries only — interval scrapers get disjoint windows.
+    let drained = net.stats(true).expect("reset scrape answered");
+    let dj = odin::util::json::parse(&drained).unwrap();
+    assert_eq!(dj.path(&["stages", "queue", "count"]).unwrap().as_usize(), Some(REQUESTS));
+
+    // The next window starts empty for the pipeline stages: drained
+    // stages vanish from the report until new traffic refills them (the
+    // reset scrape's own response closes a write/request pair after the
+    // drain, but it never touches the queue or the pool).  The
+    // cumulative counters survived the reset untouched.
+    let after = net.stats(false).expect("post-reset scrape answered");
+    let aj = odin::util::json::parse(&after).unwrap();
+    assert!(aj.path(&["stages", "queue"]).is_none(), "queue window must be fresh");
+    assert!(aj.path(&["stages", "exec"]).is_none(), "exec window must be fresh");
+    assert!(aj.path(&["requests"]).unwrap().as_usize().unwrap() >= REQUESTS);
+
+    // And the server still serves inference after three scrapes.
+    net.infer(test.samples[0].image.clone()).expect("server survives being profiled");
+
+    drop(net);
+    teardown(pool, client, frontend);
+}
+
+/// The tentpole end to end: a full-sampling tracer armed on the hub
+/// records every pipeline stage across reader → scheduler → pool →
+/// shard → writer, the Chrome-JSON export validates, and the ring
+/// dropped nothing at this load.
+#[test]
+fn trace_export_covers_every_stage_and_validates() {
+    const REQUESTS: usize = 24;
+
+    let tracer = Tracer::enabled(1 << 14, 1);
+    let metrics = MetricsHub::new().with_tracer(tracer.clone());
+    let (pool, client, frontend) = spawn_stack(2, FrontendConfig::default(), metrics);
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let test = TestSet::synthetic(REQUESTS, 5);
+    for s in &test.samples {
+        net.infer(s.image.clone()).unwrap();
+    }
+    drop(net);
+    teardown(pool, client, frontend);
+
+    assert_eq!(tracer.dropped(), 0, "a 16k ring cannot overflow on 24 requests");
+    let text = tracer.export_chrome_json();
+    let counts = check_trace(&text, &Stage::ALL).expect("export must pass its own validator");
+    for stage in Stage::ALL {
+        let n = counts.get(stage.name()).copied().unwrap_or(0);
+        assert!(
+            n >= REQUESTS,
+            "stage {:?}: {n} spans for {REQUESTS} requests",
+            stage.name()
+        );
+    }
+    // Spans correlate by trace id across lanes: every request span's id
+    // shows up again on at least one exec-lane span.
+    let parsed = odin::util::json::parse(&text).unwrap();
+    let arr = parsed
+        .path(&["traceEvents"])
+        .and_then(odin::util::json::Json::as_arr)
+        .expect("traceEvents must be an array");
+    let id_of = |ev: &odin::util::json::Json| {
+        ev.path(&["args", "trace_id"]).and_then(|j| j.as_f64()).map(|f| f as u64)
+    };
+    let request_ids: Vec<u64> = arr
+        .iter()
+        .filter(|ev| ev.path(&["name"]).and_then(|j| j.as_str()) == Some("request"))
+        .filter_map(id_of)
+        .collect();
+    assert_eq!(request_ids.len(), REQUESTS);
+    for id in &request_ids {
+        assert!(
+            arr.iter().any(|ev| {
+                ev.path(&["name"]).and_then(|j| j.as_str()) == Some("exec")
+                    && id_of(ev) == Some(*id)
+            }),
+            "request {id} has no exec span to correlate with"
+        );
+    }
+}
+
+/// Sampling thins spans without touching the always-on stage summaries:
+/// a 1-in-N tracer records ~1/N of the traces, while the metrics report
+/// still counts every request in every stage.
+#[test]
+fn sampling_thins_spans_but_never_the_stage_summaries() {
+    const REQUESTS: usize = 64;
+    const SAMPLE: u64 = 8;
+
+    let tracer = Tracer::enabled(1 << 14, SAMPLE);
+    let hub = MetricsHub::new().with_tracer(tracer.clone());
+    let (pool, client, frontend) = spawn_stack(1, FrontendConfig::default(), hub.clone());
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let test = TestSet::synthetic(REQUESTS, 41);
+    for s in &test.samples {
+        net.infer(s.image.clone()).unwrap();
+    }
+    drop(net);
+    teardown(pool, client, frontend);
+
+    let spans = tracer.snapshot();
+    let roots = spans.iter().filter(|s| s.stage == Stage::Request).count();
+    assert_eq!(roots, REQUESTS / SAMPLE as usize, "deterministic 1-in-N trace sampling");
+
+    // The summaries saw everything: sampling only ever thins the ring.
+    let report = hub.report();
+    assert_eq!(stage_count(&report, "request"), REQUESTS as u64);
+    assert_eq!(stage_count(&report, "exec"), REQUESTS as u64);
+}
