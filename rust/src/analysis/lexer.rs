@@ -1,0 +1,450 @@
+//! Line-oriented lexer for the `odin check` token scanner.
+//!
+//! This is deliberately **not** a Rust parser (no syn — the crate owns
+//! its substrates, see `util`): it splits a source file into per-line
+//! `code` and `comment` halves with string/char-literal *contents*
+//! blanked to spaces, then tokenizes the code half into words and
+//! punctuation.  That is enough for every lint in [`crate::analysis`]:
+//! the rules match short token sequences (`.unwrap(`, `Ordering::
+//! Relaxed`, `field.load(...)`) and never need types or name
+//! resolution.  Blanking — rather than deleting — literal contents
+//! keeps every byte on its original line, so findings carry exact
+//! 1-based line numbers.
+//!
+//! Handled literal forms: `//` line comments (kept, they carry the
+//! justification markers), nested `/* */` block comments, `"…"` and
+//! `b"…"` strings with escapes, raw strings `r"…"`/`r#"…"#`/`br#"…"#`,
+//! char literals (including `'\''`) distinguished from lifetimes by
+//! lookahead.
+
+/// One source line, split into its code and comment halves.
+pub struct Line {
+    /// Code text with comments removed and literal contents blanked.
+    pub code: String,
+    /// The `//…` comment on this line, if any (text includes the `//`).
+    pub comment: String,
+}
+
+enum Mode {
+    Code,
+    /// Inside `/* */`, tracking nesting depth (Rust block comments nest).
+    Block(u32),
+    /// Inside a `"…"` string (escapes honored).
+    Str,
+    /// Inside a raw string, closed by `"` followed by this many `#`s.
+    RawStr(usize),
+}
+
+/// Split `text` into lines with comments stripped and literals blanked.
+pub fn split_lines(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Block(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // Skip the escaped character — unless it is a
+                    // newline (multi-line string continuation), which
+                    // must still terminate the line above.
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    mode = Mode::Code;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                let closes = c == '"'
+                    && chars[i + 1..].len() >= hashes
+                    && chars[i + 1..i + 1 + hashes].iter().all(|&h| h == '#');
+                if closes {
+                    mode = Mode::Code;
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    i += 1 + hashes;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    while i < n && chars[i] != '\n' {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Str;
+                    code.push('"');
+                    i += 1;
+                } else if let Some(h) = raw_string_at(&chars, i) {
+                    // push the prefix (`r`, `br`, hashes, quote) as-is
+                    let quote = i + (if chars[i] == 'b' { 2 } else { 1 }) + h;
+                    for &p in &chars[i..=quote] {
+                        code.push(p);
+                    }
+                    mode = Mode::RawStr(h);
+                    i = quote + 1;
+                } else if c == '\'' {
+                    // Char literal vs lifetime, by lookahead.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // '\x' escape form: skip to the closing quote.
+                        code.push_str("' '");
+                        let mut j = i + 2;
+                        while j < n && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        i = j + 1;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        code.push_str("' '");
+                        i += 3;
+                    } else {
+                        // A lifetime: keep the quote, the name tokenizes
+                        // as a word after it.
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(Line { code, comment });
+    lines
+}
+
+/// If a raw string literal starts at `chars[i]`, return its hash count.
+fn raw_string_at(chars: &[char], i: usize) -> Option<usize> {
+    // Must not be the tail of an identifier (`attr"…"` is not raw).
+    if i > 0 && is_word_char(chars[i - 1]) {
+        return None;
+    }
+    let start = match chars[i] {
+        'r' => i + 1,
+        'b' if chars.get(i + 1) == Some(&'r') => i + 2,
+        _ => return None,
+    };
+    let mut j = start;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(j - start)
+    } else {
+        None
+    }
+}
+
+pub fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// One token of a code line: a word (`[A-Za-z0-9_]+`) or a single
+/// punctuation character.  Whitespace is dropped.
+pub enum Tok {
+    Word(String),
+    Punct(char),
+}
+
+/// A token with the 0-based index of the line it sits on.
+pub struct SpannedTok {
+    pub line: usize,
+    pub tok: Tok,
+}
+
+impl SpannedTok {
+    pub fn word(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Word(w) => Some(w),
+            Tok::Punct(_) => None,
+        }
+    }
+
+    pub fn punct(&self) -> Option<char> {
+        match &self.tok {
+            Tok::Word(_) => None,
+            Tok::Punct(p) => Some(*p),
+        }
+    }
+}
+
+/// Tokenize the code halves of `lines` into one flat stream, so rules
+/// can match sequences that rustfmt may have wrapped across lines.
+pub fn tokenize(lines: &[Line]) -> Vec<SpannedTok> {
+    let mut out = Vec::new();
+    for (li, line) in lines.iter().enumerate() {
+        let chars: Vec<char> = line.code.chars().collect();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            if c.is_whitespace() {
+                i += 1;
+            } else if is_word_char(c) {
+                let start = i;
+                while i < chars.len() && is_word_char(chars[i]) {
+                    i += 1;
+                }
+                out.push(SpannedTok { line: li, tok: Tok::Word(chars[start..i].iter().collect()) });
+            } else {
+                out.push(SpannedTok { line: li, tok: Tok::Punct(c) });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Does `haystack` contain `needle` as a whole word (word-char bounded)?
+pub fn contains_word(haystack: &str, needle: &str) -> bool {
+    let h: Vec<char> = haystack.chars().collect();
+    let nd: Vec<char> = needle.chars().collect();
+    if nd.is_empty() || h.len() < nd.len() {
+        return false;
+    }
+    for start in 0..=h.len() - nd.len() {
+        if h[start..start + nd.len()] != nd[..] {
+            continue;
+        }
+        let left_ok = start == 0 || !is_word_char(h[start - 1]);
+        let right_ok = start + nd.len() == h.len() || !is_word_char(h[start + nd.len()]);
+        if left_ok && right_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Structural facts about a file, from one brace-depth pass.
+pub struct Outline {
+    /// Line is inside (or is) a `#[cfg(test)]` / `#[test]` / `#[cfg(loom)]`
+    /// region — lint rules skip these.
+    pub suppressed: Vec<bool>,
+    /// Index into `fn_names` of the innermost function a line sits in.
+    pub fn_idx: Vec<Option<usize>>,
+    /// Names of every `fn` in the file, in source order.
+    pub fn_names: Vec<String>,
+}
+
+/// Compute suppressed (test/loom) regions and the function extent map.
+///
+/// Heuristics, documented in ARCHITECTURE.md: an attribute line whose
+/// attr text contains the word `test` or `loom` (and not `not`) marks
+/// the next braced item as suppressed; a `;` before the `{` cancels it
+/// (attribute on a `use` or `mod foo;` item).  Block extents come from
+/// brace counting over the blanked code text, so braces in strings,
+/// chars, and comments never miscount.
+pub fn outline(lines: &[Line]) -> Outline {
+    let mut suppressed = vec![false; lines.len()];
+    let mut fn_idx: Vec<Option<usize>> = vec![None; lines.len()];
+    let mut fn_names: Vec<String> = Vec::new();
+    let mut depth = 0usize;
+    let mut pending_test = false;
+    let mut pending_fn: Option<String> = None;
+    let mut suppress_stack: Vec<usize> = Vec::new();
+    let mut fn_stack: Vec<(usize, usize)> = Vec::new(); // (fn_names idx, depth)
+    for (li, line) in lines.iter().enumerate() {
+        if attr_marks_test(&line.code) {
+            pending_test = true;
+        }
+        if let Some(name) = fn_decl_name(&line.code) {
+            pending_fn = Some(name);
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending_test {
+                        suppress_stack.push(depth);
+                        pending_test = false;
+                    }
+                    if let Some(name) = pending_fn.take() {
+                        fn_names.push(name);
+                        fn_stack.push((fn_names.len() - 1, depth));
+                    }
+                }
+                '}' => {
+                    if suppress_stack.last() == Some(&depth) {
+                        suppress_stack.pop();
+                    }
+                    if fn_stack.last().map(|&(_, d)| d) == Some(depth) {
+                        fn_stack.pop();
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                ';' => {
+                    // `#[cfg(test)] use …;` — the attribute applied to a
+                    // braceless item; nothing to suppress.
+                    pending_test = false;
+                }
+                _ => {}
+            }
+        }
+        suppressed[li] = !suppress_stack.is_empty() || pending_test;
+        fn_idx[li] = fn_stack.last().map(|&(idx, _)| idx);
+    }
+    Outline { suppressed, fn_idx, fn_names }
+}
+
+/// Does this line carry an attribute that marks a test/loom-only item?
+fn attr_marks_test(code: &str) -> bool {
+    let Some(pos) = code.find("#[").or_else(|| code.find("#![")) else {
+        return false;
+    };
+    let attr = match code[pos..].find(']') {
+        Some(end) => &code[pos..pos + end],
+        None => &code[pos..],
+    };
+    (contains_word(attr, "test") || contains_word(attr, "loom")) && !contains_word(attr, "not")
+}
+
+/// If this line declares a function, return its name.
+fn fn_decl_name(code: &str) -> Option<String> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut i = 0usize;
+    while i + 1 < chars.len() {
+        let bounded = (i == 0 || !is_word_char(chars[i - 1]))
+            && chars[i] == 'f'
+            && chars[i + 1] == 'n'
+            && chars.get(i + 2).map(|&c| !is_word_char(c)).unwrap_or(true);
+        if bounded {
+            let mut j = i + 2;
+            while j < chars.len() && chars[j].is_whitespace() {
+                j += 1;
+            }
+            let start = j;
+            while j < chars.len() && is_word_char(chars[j]) {
+                j += 1;
+            }
+            if j > start {
+                return Some(chars[start..j].iter().collect());
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Is the finding on line `li` excused by `marker` (e.g. `panic-ok:`)?
+/// The marker may sit in this line's trailing comment or in a run of
+/// comment-only lines immediately above.
+pub fn has_marker(lines: &[Line], li: usize, marker: &str) -> bool {
+    if lines[li].comment.contains(marker) {
+        return true;
+    }
+    let mut j = li;
+    while j > 0 {
+        j -= 1;
+        let above = &lines[j];
+        if !above.code.trim().is_empty() || above.comment.is_empty() {
+            return false;
+        }
+        if above.comment.contains(marker) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let lines = split_lines("let a = \"x { } //\"; // trailing { note\nlet b = 2;");
+        assert_eq!(lines.len(), 2);
+        assert!(!lines[0].code.contains('{'), "string contents blanked: {}", lines[0].code);
+        assert!(lines[0].comment.contains("trailing"));
+        assert_eq!(lines[1].code, "let b = 2;");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lines = split_lines("a /* x /* y */ z */ b\nc");
+        assert_eq!(lines[0].code.split_whitespace().collect::<Vec<_>>(), ["a", "b"]);
+        assert_eq!(lines[1].code, "c");
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let lines = split_lines("let s = r#\"quote \" inside\"#; let c = '{'; let l: &'a str;");
+        let code = &lines[0].code;
+        assert!(!code.contains("inside"));
+        assert!(!code.contains('{'), "char literal blanked: {code}");
+        assert!(code.contains("'a"), "lifetime survives: {code}");
+    }
+
+    #[test]
+    fn escaped_quote_char_literal() {
+        let lines = split_lines("let q = '\\''; let after = 1;");
+        assert!(lines[0].code.contains("after"), "{}", lines[0].code);
+    }
+
+    #[test]
+    fn outline_marks_test_mod_and_fn_extents() {
+        let src = "fn live() {\n    body();\n}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\n";
+        let lines = split_lines(src);
+        let o = outline(&lines);
+        assert!(!o.suppressed[0] && !o.suppressed[1]);
+        assert!(o.suppressed[3], "attribute line is suppressed");
+        assert!(o.suppressed[4] && o.suppressed[5]);
+        assert_eq!(o.fn_names[o.fn_idx[1].unwrap()], "live");
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_suppressed() {
+        let lines = split_lines("#[cfg(not(test))]\nfn live() {\n    body();\n}\n");
+        let o = outline(&lines);
+        assert!(!o.suppressed[2]);
+    }
+
+    #[test]
+    fn attr_on_use_item_does_not_suppress_next_block() {
+        let lines = split_lines("#[cfg(test)]\nuse foo::bar;\nfn live() {\n    body();\n}\n");
+        let o = outline(&lines);
+        assert!(!o.suppressed[3], "the `;` cancels the pending attribute");
+    }
+
+    #[test]
+    fn marker_on_same_or_preceding_comment_line() {
+        let lines = split_lines("// panic-ok: reason\nfoo.unwrap();\nbar.unwrap(); // panic-ok: r\nbaz.unwrap();\n");
+        assert!(has_marker(&lines, 1, "panic-ok:"));
+        assert!(has_marker(&lines, 2, "panic-ok:"));
+        assert!(!has_marker(&lines, 3, "panic-ok:"));
+    }
+}

@@ -1,0 +1,480 @@
+//! The lint rules behind `odin check`.
+//!
+//! Every rule is a pure function over one lexed file ([`FileView`]) —
+//! no cross-file state except what the caller aggregates.  Rules skip
+//! test/loom-suppressed regions and honor the justification-marker
+//! grammar (`// panic-ok:`, `// relaxed:`, `// ordering:`,
+//! `// lock-ok:` — see ARCHITECTURE.md "Correctness tooling").
+
+use super::lexer::{self, Line, Outline, SpannedTok};
+use super::{Finding, Rule};
+
+/// Methods that panic on the error/none arm.
+const PANIC_METHODS: [&str; 4] = ["unwrap", "unwrap_err", "expect", "expect_err"];
+/// Macros that always panic when reached.
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+/// Atomic RMW/load/store method names (the `Atomic*` API surface).
+const ATOMIC_OPS: [&str; 13] = [
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "compare_exchange",
+    "compare_exchange_weak",
+    "fetch_update",
+];
+const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// One lexed file plus its structural outline, shared by all rules.
+pub struct FileView<'a> {
+    /// Path relative to the scan root, forward slashes.
+    pub rel: &'a str,
+    pub lines: &'a [Line],
+    pub toks: &'a [SpannedTok],
+    pub outline: &'a Outline,
+}
+
+impl FileView<'_> {
+    fn suppressed(&self, tok: &SpannedTok) -> bool {
+        self.outline.suppressed[tok.line]
+    }
+
+    fn marker(&self, line: usize, marker: &str) -> bool {
+        lexer::has_marker(self.lines, line, marker)
+    }
+
+    fn finding(&self, rule: Rule, line: usize, message: String) -> Finding {
+        Finding { rule, file: self.rel.to_string(), line: line + 1, message }
+    }
+
+    /// Is this file part of the L4/L5 serving path (panic-lint scope)?
+    pub fn in_serving_path(&self) -> bool {
+        self.rel.starts_with("frontend/")
+            || self.rel.contains("/frontend/")
+            || self.rel.starts_with("coordinator/")
+            || self.rel.contains("/coordinator/")
+            || self.rel.ends_with("harness/loadgen.rs")
+    }
+}
+
+/// R1 `panic-path`: no `unwrap()`/`expect()`/`panic!`/slice-indexing in
+/// the serving path, unless the line carries `// panic-ok: <reason>`.
+pub fn panic_path(v: &FileView<'_>, out: &mut Vec<Finding>) {
+    if !v.in_serving_path() {
+        return;
+    }
+    let toks = v.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if v.suppressed(t) {
+            continue;
+        }
+        let hit: Option<String> = match &t.tok {
+            lexer::Tok::Word(w) => {
+                let method = PANIC_METHODS.contains(&w.as_str())
+                    && i > 0
+                    && toks[i - 1].punct() == Some('.')
+                    && toks.get(i + 1).and_then(SpannedTok::punct) == Some('(');
+                let mac = PANIC_MACROS.contains(&w.as_str())
+                    && toks.get(i + 1).and_then(SpannedTok::punct) == Some('!')
+                    && matches!(
+                        toks.get(i + 2).and_then(SpannedTok::punct),
+                        Some('(' | '[' | '{')
+                    );
+                if method {
+                    Some(format!(".{w}() can panic"))
+                } else if mac {
+                    Some(format!("{w}! in the serving path"))
+                } else {
+                    None
+                }
+            }
+            lexer::Tok::Punct('[') if i > 0 => {
+                let prev = &toks[i - 1];
+                let after_value = match &prev.tok {
+                    // `name[` — but not a lifetime (`&'a [u8]`) and not
+                    // a keyword that only precedes a slice *type* or
+                    // array pattern (`&mut [u8]`, `dyn [..]`, `in [..]`).
+                    lexer::Tok::Word(w) => {
+                        !matches!(w.as_str(), "mut" | "dyn" | "in" | "as" | "return")
+                            && (i < 2 || toks[i - 2].punct() != Some('\''))
+                    }
+                    lexer::Tok::Punct(p) => *p == ')' || *p == ']',
+                };
+                if after_value {
+                    Some("slice/index expression can panic".to_string())
+                } else {
+                    None
+                }
+            }
+            lexer::Tok::Punct(_) => None,
+        };
+        if let Some(msg) = hit {
+            if !v.marker(t.line, "panic-ok:") {
+                out.push(v.finding(Rule::PanicPath, t.line, msg));
+            }
+        }
+    }
+}
+
+/// R2 `relaxed-rationale`: every `Ordering::Relaxed` use carries a
+/// `// relaxed: <reason>` comment on the same or preceding line.
+pub fn relaxed_rationale(v: &FileView<'_>, out: &mut Vec<Finding>) {
+    let mut last_line = usize::MAX;
+    for t in v.toks {
+        if v.suppressed(t) || t.word() != Some("Relaxed") || t.line == last_line {
+            continue;
+        }
+        last_line = t.line; // one finding per line, however many uses
+        if !v.marker(t.line, "relaxed:") {
+            out.push(v.finding(
+                Rule::RelaxedRationale,
+                t.line,
+                "Ordering::Relaxed without a `// relaxed:` rationale".to_string(),
+            ));
+        }
+    }
+}
+
+/// R3 `atomic-consistency`: a field must not mix `Relaxed` with
+/// acquire/release orderings across its accesses (within one file)
+/// unless some access line carries `// ordering: <reason>`.
+pub fn atomic_consistency(v: &FileView<'_>, out: &mut Vec<Finding>) {
+    // field name -> (first line, all orderings seen, any `// ordering:`)
+    let mut fields: Vec<(String, usize, Vec<&'static str>, bool)> = Vec::new();
+    let toks = v.toks;
+    for i in 2..toks.len() {
+        if v.suppressed(&toks[i]) {
+            continue;
+        }
+        // pattern: Word(field) '.' Word(op) '('
+        let is_call = toks[i].punct() == Some('(')
+            && toks[i - 1]
+                .word()
+                .map(|w| ATOMIC_OPS.contains(&w))
+                .unwrap_or(false)
+            && i >= 3
+            && toks[i - 2].punct() == Some('.');
+        if !is_call {
+            continue;
+        }
+        let Some(field) = toks[i - 3].word() else { continue };
+        if field.chars().all(|c| c.is_ascii_digit()) {
+            continue; // tuple-index access; no stable name to key on
+        }
+        // Scan the argument list (balanced parens, may span lines) for
+        // ordering tokens; none ⇒ not an atomic call (e.g. map.load()).
+        let mut orderings: Vec<&'static str> = Vec::new();
+        let mut bal = 1usize;
+        let mut j = i + 1;
+        while j < toks.len() && bal > 0 {
+            match toks[j].punct() {
+                Some('(') => bal += 1,
+                Some(')') => bal -= 1,
+                _ => {
+                    if let Some(w) = toks[j].word() {
+                        if let Some(&o) = ORDERINGS.iter().find(|&&o| o == w) {
+                            if !orderings.contains(&o) {
+                                orderings.push(o);
+                            }
+                        }
+                    }
+                }
+            }
+            j += 1;
+        }
+        if orderings.is_empty() {
+            continue;
+        }
+        let marked = v.marker(toks[i].line, "ordering:");
+        match fields.iter_mut().find(|(f, ..)| f == field) {
+            Some((_, _, seen, m)) => {
+                for o in orderings {
+                    if !seen.contains(&o) {
+                        seen.push(o);
+                    }
+                }
+                *m |= marked;
+            }
+            None => fields.push((field.to_string(), toks[i].line, orderings, marked)),
+        }
+    }
+    for (field, line, seen, marked) in fields {
+        let has_relaxed = seen.contains(&"Relaxed");
+        let mixed = has_relaxed && seen.len() > 1;
+        if mixed && !marked {
+            out.push(v.finding(
+                Rule::AtomicConsistency,
+                line,
+                format!("atomic field `{field}` mixes orderings {seen:?}"),
+            ));
+        }
+    }
+}
+
+/// R4 `wire-coverage` (frontend/wire.rs only): every `KIND_*` /
+/// `STATUS_*` constant appears in an encode fn, a decode fn, and a
+/// round-trip test.
+pub fn wire_coverage(v: &FileView<'_>, out: &mut Vec<Finding>) {
+    if !v.rel.ends_with("frontend/wire.rs") {
+        return;
+    }
+    let toks = v.toks;
+    // Collect `const KIND_… :` / `const STATUS_… :` declarations.
+    let mut consts: Vec<(&str, usize)> = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].word() == Some("const") {
+            if let Some(name) = toks.get(i + 1).and_then(SpannedTok::word) {
+                if (name.starts_with("KIND_") || name.starts_with("STATUS_"))
+                    && toks.get(i + 2).and_then(SpannedTok::punct) == Some(':')
+                {
+                    consts.push((name, toks[i].line));
+                }
+            }
+        }
+    }
+    let fn_name_of = |t: &SpannedTok| -> Option<&str> {
+        v.outline.fn_idx[t.line].map(|idx| v.outline.fn_names[idx].as_str())
+    };
+    for (name, decl_line) in consts {
+        let mut in_encode = false;
+        let mut in_decode = false;
+        let mut in_test = false;
+        for t in toks {
+            if t.word() != Some(name) || t.line == decl_line {
+                continue;
+            }
+            if v.suppressed(t) {
+                in_test = true;
+            } else if let Some(f) = fn_name_of(t) {
+                if f.contains("encode") {
+                    in_encode = true;
+                }
+                if f.contains("decode") || f.contains("parse") {
+                    in_decode = true;
+                }
+            }
+        }
+        for (ok, what) in [
+            (in_encode, "encode arm"),
+            (in_decode, "decode arm"),
+            (in_test, "round-trip test"),
+        ] {
+            if !ok {
+                out.push(v.finding(
+                    Rule::WireCoverage,
+                    decl_line,
+                    format!("wire constant `{name}` has no {what}"),
+                ));
+            }
+        }
+    }
+}
+
+/// R5 `lock-order` (coordinator/metrics.rs only): no second `.lock(`
+/// while a `MetricsHub` inner guard is provably held, unless the line
+/// carries `// lock-ok: <reason>`.
+pub fn lock_order(v: &FileView<'_>, out: &mut Vec<Finding>) {
+    if !v.rel.ends_with("coordinator/metrics.rs") {
+        return;
+    }
+    for (li, line) in v.lines.iter().enumerate() {
+        if v.outline.suppressed[li] {
+            continue;
+        }
+        let flat: String = line.code.chars().filter(|c| !c.is_whitespace()).collect();
+        // Either the raw mutex or the hub's poison-recovering `locked()`
+        // helper acquires the MetricsHub guard.
+        let (pos, pat) = if let Some(p) = flat.find("inner.lock(") {
+            (p, "inner.lock(")
+        } else if let Some(p) = flat.find(".locked()") {
+            (p, ".locked()")
+        } else {
+            continue;
+        };
+        let guard = binding_name(&line.code);
+        match (guard, v.outline.fn_idx[li]) {
+            (Some(guard), Some(fn_idx)) => {
+                // `let g = …inner.lock()…;` — the guard lives until
+                // `drop(g)` or the end of the enclosing function.
+                let mut j = li + 1;
+                while j < v.lines.len() && v.outline.fn_idx[j] == Some(fn_idx) {
+                    let cj = &v.lines[j].code;
+                    if drops_binding(cj, &guard) {
+                        break;
+                    }
+                    let flat_j: String = cj.chars().filter(|c| !c.is_whitespace()).collect();
+                    if (flat_j.contains(".lock(") || flat_j.contains(".locked()"))
+                        && !v.outline.suppressed[j]
+                        && !lexer::has_marker(v.lines, j, "lock-ok:")
+                    {
+                        out.push(v.finding(
+                            Rule::LockOrder,
+                            j,
+                            format!(
+                                "lock acquired while MetricsHub guard `{guard}` (line {}) is held",
+                                li + 1
+                            ),
+                        ));
+                    }
+                    j += 1;
+                }
+            }
+            _ => {
+                // Temporary guard: lives to the end of the statement;
+                // flag a second `.lock(` on the same line.
+                let rest = &flat[pos + pat.len()..];
+                if (rest.contains(".lock(") || rest.contains(".locked()"))
+                    && !lexer::has_marker(v.lines, li, "lock-ok:")
+                {
+                    out.push(v.finding(
+                        Rule::LockOrder,
+                        li,
+                        "second lock in a statement holding the MetricsHub mutex".to_string(),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// The name bound by a `let` / `let mut` on this line, if any.
+fn binding_name(code: &str) -> Option<String> {
+    let chars: Vec<char> = code.chars().collect();
+    let idx = find_word(&chars, "let")?;
+    let mut i = idx + 3;
+    let skip_ws = |i: &mut usize| {
+        while *i < chars.len() && chars[*i].is_whitespace() {
+            *i += 1;
+        }
+    };
+    skip_ws(&mut i);
+    let start = i;
+    while i < chars.len() && lexer::is_word_char(chars[i]) {
+        i += 1;
+    }
+    let first: String = chars[start..i].iter().collect();
+    if first == "mut" {
+        skip_ws(&mut i);
+        let start = i;
+        while i < chars.len() && lexer::is_word_char(chars[i]) {
+            i += 1;
+        }
+        let name: String = chars[start..i].iter().collect();
+        return if name.is_empty() { None } else { Some(name) };
+    }
+    if first.is_empty() {
+        None
+    } else {
+        Some(first)
+    }
+}
+
+/// Does this line `drop(…)` the named binding?
+fn drops_binding(code: &str, name: &str) -> bool {
+    let flat: String = code.chars().filter(|c| !c.is_whitespace()).collect();
+    flat.contains(&format!("drop({name})"))
+}
+
+/// First position of `word` (word-char bounded) in `chars`.
+fn find_word(chars: &[char], word: &str) -> Option<usize> {
+    let w: Vec<char> = word.chars().collect();
+    if chars.len() < w.len() {
+        return None;
+    }
+    (0..=chars.len() - w.len()).find(|&s| {
+        chars[s..s + w.len()] == w[..]
+            && (s == 0 || !lexer::is_word_char(chars[s - 1]))
+            && (s + w.len() == chars.len() || !lexer::is_word_char(chars[s + w.len()]))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::{outline, split_lines, tokenize};
+
+    fn run(rel: &str, src: &str, rule: fn(&FileView<'_>, &mut Vec<Finding>)) -> Vec<Finding> {
+        let lines = split_lines(src);
+        let toks = tokenize(&lines);
+        let o = outline(&lines);
+        let v = FileView { rel, lines: &lines, toks: &toks, outline: &o };
+        let mut out = Vec::new();
+        rule(&v, &mut out);
+        out
+    }
+
+    #[test]
+    fn panic_rule_scope_and_marker() {
+        let src = "fn f(v: &[u8]) {\n    v.iter().next().unwrap();\n    let x = v[0]; // panic-ok: len checked above\n    let y = v[1];\n}\n";
+        let hits = run("frontend/server.rs", src, panic_path);
+        assert_eq!(hits.len(), 2, "{hits:?}");
+        assert_eq!(hits[0].line, 2);
+        assert_eq!(hits[1].line, 4);
+        assert!(run("pcram/array.rs", src, panic_path).is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn panic_rule_skips_types_macros_and_tests() {
+        let src = "fn f() {\n    let a: [u8; 4] = [0; 4];\n    let v = vec![1];\n    let s: &[u8] = &a;\n    let _ = s.first().unwrap_or(&0);\n}\n#[cfg(test)]\nmod tests {\n    fn g(v: &[u8]) { v.last().unwrap(); }\n}\n";
+        let hits = run("frontend/server.rs", src, panic_path);
+        assert!(hits.is_empty(), "{hits:?}");
+    }
+
+    #[test]
+    fn relaxed_rule_requires_rationale() {
+        let src = "fn f(c: &AtomicU64) {\n    c.fetch_add(1, Ordering::Relaxed);\n    // relaxed: independent counter\n    c.fetch_add(1, Ordering::Relaxed);\n}\n";
+        let hits = run("util/x.rs", src, relaxed_rationale);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn atomic_mix_is_flagged_and_marker_clears_it() {
+        let src = "fn f(c: &AtomicU64) {\n    c.store(1, Ordering::Release);\n    c.load(Ordering::Relaxed);\n}\n";
+        let hits = run("util/x.rs", src, atomic_consistency);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        let src_marked = src.replace(
+            "c.load(Ordering::Relaxed);",
+            "c.load(Ordering::Relaxed); // ordering: stats-only read",
+        );
+        assert!(run("util/x.rs", &src_marked, atomic_consistency).is_empty());
+        // Pure acquire/release pairing is fine without a marker.
+        let src_pair = src.replace("Ordering::Relaxed", "Ordering::Acquire");
+        assert!(run("util/x.rs", &src_pair, atomic_consistency).is_empty());
+    }
+
+    #[test]
+    fn wire_rule_needs_all_three_sites() {
+        let src = "pub const KIND_PING: u8 = 9;\nfn encode_ping(b: &mut Vec<u8>) { b.push(KIND_PING); }\nfn decode_ping(k: u8) { let _ = k == KIND_PING; }\n";
+        let hits = run("frontend/wire.rs", src, wire_coverage);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].message.contains("round-trip test"), "{}", hits[0].message);
+        let with_test =
+            format!("{src}#[cfg(test)]\nmod tests {{\n    fn t() {{ assert_eq!(KIND_PING, 9); }}\n}}\n");
+        assert!(run("frontend/wire.rs", &with_test, wire_coverage).is_empty());
+    }
+
+    #[test]
+    fn lock_order_flags_nested_lock_until_drop() {
+        let src = "fn f(&self) {\n    let mut g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);\n    self.other.lock();\n    drop(g);\n    self.other.lock();\n}\n";
+        let hits = run("coordinator/metrics.rs", src, lock_order);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 3);
+    }
+
+    #[test]
+    fn lock_order_tracks_the_locked_helper_too() {
+        // Re-entering `locked()` while its guard is held is the same
+        // self-deadlock the raw pattern would be.
+        let src = "fn f(&self) {\n    let g = self.locked();\n    let h = self.locked();\n    drop(g);\n}\n";
+        let hits = run("coordinator/metrics.rs", src, lock_order);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 3);
+    }
+}

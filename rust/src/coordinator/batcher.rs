@@ -21,7 +21,7 @@
 
 use std::fmt;
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -215,10 +215,17 @@ impl Server {
             move |_shard| {
                 let factory = cell
                     .lock()
-                    .unwrap()
-                    .take()
-                    .expect("single-shard pool invokes the factory exactly once");
-                factory()
+                    // The cell is written once here; a poisoned guard
+                    // still holds the Option intact.
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .take();
+                match factory {
+                    Some(factory) => factory(),
+                    // Unreachable with shards=1, but answer with a
+                    // typed construction error instead of panicking
+                    // the worker if that invariant ever breaks.
+                    None => anyhow::bail!("engine factory already consumed"),
+                }
             },
             1,
             policy,

@@ -91,6 +91,8 @@ impl<E: Executor> Engine<E> {
         let mut sizes = exec.batch_sizes().to_vec();
         sizes.sort_unstable();
         sizes.dedup();
+        // panic-ok: `sizes[0]` is short-circuit guarded by the emptiness
+        // check in the same condition.
         ensure!(!sizes.is_empty() && sizes[0] > 0, "backend advertises no batch sizes");
         let topo = topology::by_name(arch).with_context(|| format!("topology {arch}"))?;
         let cfg = ExecConfig::paper();
@@ -117,6 +119,8 @@ impl<E: Executor> Engine<E> {
 
     /// Largest supported batch size.
     pub fn max_batch(&self) -> usize {
+        // panic-ok: `from_executor` rejects an empty size ladder, so
+        // `sizes` is non-empty for the engine's whole life.
         *self.sizes.last().unwrap()
     }
 
@@ -150,9 +154,13 @@ impl<E: Executor> Engine<E> {
         let mut exec_ns = 0u64;
         let mut padded_total = 0usize;
         for chunk in images.chunks(max_b) {
+            // panic-ok: `chunks(max_b)` bounds `chunk.len() <= max_b`,
+            // and `max_b` is itself a ladder entry, so a fit exists.
             let padded = self.pick_batch(chunk.len()).expect("chunk bounded by max batch");
             let mut data = vec![0u8; padded * il];
             for (i, img) in chunk.iter().enumerate() {
+                // panic-ok: `i < chunk.len() <= padded`, and `data` was
+                // sized to `padded * il` two lines up.
                 data[i * il..(i + 1) * il].copy_from_slice(img);
             }
             let t0 = Instant::now();
@@ -162,13 +170,21 @@ impl<E: Executor> Engine<E> {
                 out.len());
             for i in 0..chunk.len() {
                 let mut logits = [0f32; 10];
+                // panic-ok: `i < chunk.len() <= padded` and the ensure
+                // above pinned `out.len() == padded * 10`.
                 logits.copy_from_slice(&out[i * 10..(i + 1) * 10]);
                 let argmax = logits
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    // total_cmp: a NaN logit from the backend must rank,
+                    // not panic the shard worker (partial_cmp().unwrap()
+                    // did exactly that before).
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(j, _)| j as u8)
-                    .unwrap();
+                    // A 10-element array iterator is never empty, but
+                    // fall back to class 0 rather than encode that as
+                    // a panic on the serving path.
+                    .unwrap_or(0);
                 preds.push(Prediction { logits, argmax });
             }
             padded_total += padded;

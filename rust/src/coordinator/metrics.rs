@@ -16,7 +16,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
@@ -88,32 +88,38 @@ pub struct ClientCounters {
 impl ClientCounters {
     /// Record one request entering this client's fairness queue.
     pub fn record_enqueued(&self) {
+        // relaxed: independent monotone counter, sampled for reports.
         self.enqueued.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one request leaving the queue for admission + the pool.
     pub fn record_dispatched(&self) {
+        // relaxed: independent monotone counter, sampled for reports.
         self.dispatched.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one starvation event: this client had runnable work but
     /// was passed over beyond the scheduler's starvation threshold.
     pub fn record_starved(&self) {
+        // relaxed: independent monotone counter, sampled for reports.
         self.starved.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Requests dispatched so far (sampled; used by tests and demos).
     pub fn dispatched(&self) -> u64 {
+        // relaxed: point-in-time sample; no payload rides this counter.
         self.dispatched.load(Ordering::Relaxed)
     }
 
     /// Requests enqueued so far (sampled; used by tests and demos).
     pub fn enqueued(&self) -> u64 {
+        // relaxed: point-in-time sample; no payload rides this counter.
         self.enqueued.load(Ordering::Relaxed)
     }
 
     /// Starvation events so far (sampled; used by tests and demos).
     pub fn starved(&self) -> u64 {
+        // relaxed: point-in-time sample; no payload rides this counter.
         self.starved.load(Ordering::Relaxed)
     }
 }
@@ -158,13 +164,18 @@ impl Inner {
         if self.shards.len() <= shard {
             self.shards.resize_with(shard + 1, ShardSlot::default);
         }
+        // panic-ok: the resize above guarantees `shard < shards.len()`.
         &mut self.shards[shard]
     }
 
     fn model(&mut self, model: &str) -> &mut ModelSlot {
         // Look up by &str first so the steady state (model already
-        // known) allocates nothing.
+        // known) allocates nothing.  (Two lookups instead of an
+        // `if let Some = get_mut` early return because the borrow
+        // checker extends that loan over the `entry` fallback.)
         if self.models.contains_key(model) {
+            // panic-ok: `contains_key` on the same key just succeeded,
+            // and `&mut self` excludes any interleaving removal.
             return self.models.get_mut(model).unwrap();
         }
         self.models.entry(model.to_string()).or_default()
@@ -409,6 +420,16 @@ impl MetricsHub {
         Self::default()
     }
 
+    /// Lock the aggregate state, recovering a poisoned guard: `Inner`
+    /// is plain data (counters, summaries, tables) that stays valid
+    /// even if a recording thread panicked mid-update, and the metrics
+    /// hub must never take the serving stack down with it.  The
+    /// lock-order lint tracks this helper exactly like a raw
+    /// `inner.lock()` (see `analysis::rules::lock_order`).
+    fn locked(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Attach a span recorder to this hub.  Must be called **before**
     /// the hub is cloned into the pool/front-end — clones made earlier
     /// keep the previous (usually disabled) tracer.
@@ -424,7 +445,7 @@ impl MetricsHub {
 
     /// Record one stage latency sample (microseconds).
     pub fn record_stage(&self, stage: Stage, us: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         g.stages.entry(stage).or_default().push(us);
     }
 
@@ -435,7 +456,7 @@ impl MetricsHub {
         if samples.is_empty() {
             return;
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         for &(stage, us) in samples {
             g.stages.entry(stage).or_default().push(us);
         }
@@ -444,7 +465,7 @@ impl MetricsHub {
     /// Pre-size the per-shard table so a report lists every shard of a
     /// pool even before it has served traffic.
     pub fn ensure_shards(&self, n: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if n > 0 {
             g.slot(n - 1);
         }
@@ -456,14 +477,14 @@ impl MetricsHub {
     /// several pools (a multi-model registry) share one hub, shard `i`'s
     /// reported depth is the sum over every pool's shard `i`.
     pub fn attach_depth_gauge(&self, shard: usize, gauge: Arc<AtomicUsize>) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         g.slot(shard).depth_gauges.push(gauge);
     }
 
     /// Pre-register `model` (as `"arch/mode"`) at `epoch` so a report
     /// lists every served model even before it has seen traffic.
     pub fn ensure_model(&self, model: &str, epoch: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let slot = g.model(model);
         slot.epoch = slot.epoch.max(epoch);
     }
@@ -482,7 +503,7 @@ impl MetricsHub {
         exec: &BatchExec,
         responses: &[Response],
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if g.started.is_none() {
             // The measurement window opens when the first batch *started*
             // executing, not when it finished recording — otherwise a
@@ -517,7 +538,7 @@ impl MetricsHub {
 
     /// Record `k` requests for `model` that failed in `shard`'s backend.
     pub fn record_failures(&self, shard: usize, model: &str, k: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         g.errors += k as u64;
         g.slot(shard).errors += k as u64;
         g.model(model).errors += k as u64;
@@ -525,7 +546,7 @@ impl MetricsHub {
 
     /// Record one installed hot swap of `model`'s weights to `epoch`.
     pub fn record_swap(&self, model: &str, epoch: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let slot = g.model(model);
         slot.swaps += 1;
         slot.epoch = slot.epoch.max(epoch);
@@ -534,49 +555,57 @@ impl MetricsHub {
     /// Record one shard-side engine rebuild that failed after a swap
     /// (the shard keeps serving its previous epoch).
     pub fn record_swap_failure(&self, model: &str) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         g.model(model).swap_failures += 1;
     }
 
     /// Record one request admitted into the pool by the front-end gate.
     pub fn record_admitted(&self) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.admitted.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one admission that had to wait for capacity (`block`).
     pub fn record_block_wait(&self) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.block_waits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one request shed with `Overloaded` (`shed`).
     pub fn record_shed(&self) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one response served straight from the response cache.
     pub fn record_cache_hit(&self) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.cache_hits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one cache lookup that missed.
     pub fn record_cache_miss(&self) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.cache_misses.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one cache entry evicted to stay within capacity.
     pub fn record_cache_eviction(&self) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.cache_evictions.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record `n` cache entries purged eagerly after a hot swap outdated
     /// their epoch.
     pub fn record_cache_stale_purge(&self, n: u64) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.cache_stale_purged.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Record one connection refused by the connection cap (answered
     /// with a typed `TooManyConnections` before closing).
     pub fn record_conn_rejected(&self) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.conn_rejected.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -591,7 +620,7 @@ impl MetricsHub {
     /// generated `conn-N` names cannot grow server memory or report
     /// cost without bound.
     pub fn register_client(&self, name: &str) -> Arc<ClientCounters> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if let Some((_, c)) = g.clients.iter().find(|(n, _)| n == name) {
             return Arc::clone(c);
         }
@@ -610,11 +639,13 @@ impl MetricsHub {
 
     /// Record one accepted TCP connection.
     pub fn record_net_connection(&self) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.net_connections.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one response frame written back to a network client.
     pub fn record_net_response(&self) {
+        // relaxed: independent monotone counter, sampled at report time.
         self.frontend.net_responses.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -630,7 +661,7 @@ impl MetricsHub {
     /// stage latencies over its own window.  Everything else in the
     /// report keeps accumulating; only `stages` resets.
     pub fn report_with_stage_reset(&self, reset_stages: bool) -> MetricsReport {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         let requests = g.requests;
         let mean_batch = g.batches_seen.mean();
@@ -667,23 +698,23 @@ impl MetricsHub {
         }
         let f = &self.frontend;
         let frontend = FrontendReport {
-            admitted: f.admitted.load(Ordering::Relaxed),
-            block_waits: f.block_waits.load(Ordering::Relaxed),
-            shed: f.shed.load(Ordering::Relaxed),
-            cache_hits: f.cache_hits.load(Ordering::Relaxed),
-            cache_misses: f.cache_misses.load(Ordering::Relaxed),
-            cache_evictions: f.cache_evictions.load(Ordering::Relaxed),
-            cache_stale_purged: f.cache_stale_purged.load(Ordering::Relaxed),
-            net_connections: f.net_connections.load(Ordering::Relaxed),
-            net_responses: f.net_responses.load(Ordering::Relaxed),
-            conn_rejected: f.conn_rejected.load(Ordering::Relaxed),
+            admitted: sample(&f.admitted),
+            block_waits: sample(&f.block_waits),
+            shed: sample(&f.shed),
+            cache_hits: sample(&f.cache_hits),
+            cache_misses: sample(&f.cache_misses),
+            cache_evictions: sample(&f.cache_evictions),
+            cache_stale_purged: sample(&f.cache_stale_purged),
+            net_connections: sample(&f.net_connections),
+            net_responses: sample(&f.net_responses),
+            conn_rejected: sample(&f.conn_rejected),
         };
         let mut by_client: BTreeMap<&str, (u64, u64, u64)> = BTreeMap::new();
         for (name, c) in &g.clients {
             let slot = by_client.entry(name).or_insert((0, 0, 0));
-            slot.0 += c.enqueued.load(Ordering::Relaxed);
-            slot.1 += c.dispatched.load(Ordering::Relaxed);
-            slot.2 += c.starved.load(Ordering::Relaxed);
+            slot.0 += sample(&c.enqueued);
+            slot.1 += sample(&c.dispatched);
+            slot.2 += sample(&c.starved);
         }
         let clients: Vec<ClientReport> = by_client
             .into_iter()
@@ -723,6 +754,7 @@ impl MetricsHub {
                 queue_depth: s
                     .depth_gauges
                     .iter()
+                    // relaxed: advisory gauge sample (see pool::dispatch).
                     .map(|d| d.load(Ordering::Relaxed))
                     .sum(),
                 utilization: if elapsed > 0.0 {
@@ -768,6 +800,14 @@ impl MetricsHub {
 /// resource is divided (1.0 = perfectly even, `1/n` = one flow got
 /// everything).  Fewer than two flows — or all-zero allocations — report
 /// 1.0: there is nobody to be unfair to.
+/// Point-in-time sample of one lock-free report counter.
+fn sample(c: &AtomicU64) -> u64 {
+    // relaxed: reports sample each independent monotone counter at
+    // snapshot time; the hub mutex, not these counters, orders every
+    // aggregate that needs consistency.
+    c.load(Ordering::Relaxed)
+}
+
 fn jain_index(xs: impl Iterator<Item = f64>) -> f64 {
     let (mut n, mut sum, mut sum_sq) = (0usize, 0.0f64, 0.0f64);
     for x in xs {

@@ -50,7 +50,7 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -115,7 +115,10 @@ impl<E: Executor> SwapHandle<E> {
     where
         F: Fn(usize) -> Result<Engine<E>> + Send + Sync + 'static,
     {
-        let mut g = self.state.pending.lock().unwrap();
+        // The pending slot is a plain (epoch, factory) pair, valid even
+        // if a worker panicked while holding the lock — recover rather
+        // than wedge every future swap behind the poison.
+        let mut g = self.state.pending.lock().unwrap_or_else(PoisonError::into_inner);
         g.epoch += 1;
         g.factory = Some(Arc::new(factory));
         let epoch = g.epoch;
@@ -223,6 +226,7 @@ impl EnginePool {
         let mut workers = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         let mut readies = Vec::with_capacity(n);
+        let mut spawn_err: Option<String> = None;
         for shard in 0..n {
             let (btx, brx) = mpsc::channel::<Vec<Request>>();
             let (rtx, rrx) = mpsc::channel::<std::result::Result<usize, String>>();
@@ -249,15 +253,24 @@ impl EnginePool {
                     // engine's), not two, for its whole serving life.
                     drop(fac);
                     Self::worker(shard, engine, brx, hub, gauge, swap, initial_epoch);
-                })
-                .expect("spawning shard thread");
+                });
+            // OS thread exhaustion at spawn time is an ordinary startup
+            // failure: fold it into the same teardown path as an engine
+            // construction error instead of panicking the caller.
+            let handle = match handle {
+                Ok(h) => h,
+                Err(e) => {
+                    spawn_err = Some(format!("spawning shard thread: {e}"));
+                    break;
+                }
+            };
             workers.push(handle);
             handles.push(Shard { tx: btx, depth });
             readies.push(rrx);
         }
 
         let mut engine_max = usize::MAX;
-        let mut first_err: Option<String> = None;
+        let mut first_err: Option<String> = spawn_err;
         for rrx in readies {
             match rrx.recv() {
                 Ok(Ok(max_batch)) => engine_max = engine_max.min(max_batch),
@@ -287,8 +300,19 @@ impl EnginePool {
         let (tx, rx) = mpsc::channel::<Request>();
         let dispatcher = std::thread::Builder::new()
             .name("odin-dispatch".into())
-            .spawn(move || Self::dispatch(rx, handles, policy, engine_max))
-            .expect("spawning dispatcher thread");
+            .spawn(move || Self::dispatch(rx, handles, policy, engine_max));
+        let dispatcher = match dispatcher {
+            Ok(h) => h,
+            Err(e) => {
+                // The failed spawn dropped its closure, which owned
+                // `handles` — the batch channels are already gone, so
+                // the workers are unwinding; join them and report.
+                for w in workers {
+                    let _ = w.join();
+                }
+                anyhow::bail!("spawning dispatcher thread: {e}");
+            }
+        };
         let pool = EnginePool { dispatcher: Some(dispatcher), workers, tx: Some(tx.clone()) };
         Ok((pool, Client::new(tx), SwapHandle { state: swap_state }))
     }
@@ -346,8 +370,14 @@ impl EnginePool {
                     req.routed = Some(routed);
                 }
                 let target = Self::pick_shard(&shards, &mut rr);
-                shards[target].depth.fetch_add(chunk.len(), Ordering::Relaxed);
-                if shards[target].tx.send(chunk).is_err() {
+                // panic-ok: `pick_shard` reduces its result `% shards.len()`
+                // and the pool always spawns at least one shard.
+                let shard = &shards[target];
+                // relaxed: depth is an advisory load gauge read by
+                // `pick_shard` and the metrics report; a stale value
+                // only costs routing quality, never correctness.
+                shard.depth.fetch_add(chunk.len(), Ordering::Relaxed);
+                if shard.tx.send(chunk).is_err() {
                     // A worker can only disappear during teardown; the
                     // dropped chunk's response channels disconnect, which
                     // clients observe as a server shutdown.
@@ -360,9 +390,14 @@ impl EnginePool {
     /// Least-loaded shard by queue depth, ties broken round-robin.
     fn pick_shard(shards: &[Shard], rr: &mut usize) -> usize {
         let mut best = *rr % shards.len();
+        // panic-ok: every index below is reduced `% shards.len()`.
+        // relaxed: depth is an advisory load estimate; routing on a
+        // stale reading is harmless (ties and races just round-robin).
         let mut best_depth = shards[best].depth.load(Ordering::Relaxed);
         for i in 1..shards.len() {
             let idx = (*rr + i) % shards.len();
+            // panic-ok: `idx` is reduced `% shards.len()` just above.
+            // relaxed: same advisory load estimate as `best_depth`.
             let d = shards[idx].depth.load(Ordering::Relaxed);
             if d < best_depth {
                 best = idx;
@@ -390,7 +425,10 @@ impl EnginePool {
         while let Ok(batch) = rx.recv() {
             if swap.current.load(Ordering::Acquire) != epoch {
                 let (next_epoch, factory) = {
-                    let g = swap.pending.lock().unwrap();
+                    // Recover a poisoned pending slot (see `SwapHandle::
+                    // swap`): the pair is valid data regardless of who
+                    // panicked, and a shard must keep serving.
+                    let g = swap.pending.lock().unwrap_or_else(PoisonError::into_inner);
                     (g.epoch, g.factory.clone())
                 };
                 if next_epoch != epoch {
@@ -411,6 +449,8 @@ impl EnginePool {
             }
             let k = batch.len();
             Self::execute(shard, &engine, epoch, &model, &metrics, batch);
+            // relaxed: advisory load gauge (see `dispatch`); the
+            // dispatcher tolerates stale depths by design.
             depth.fetch_sub(k, Ordering::Relaxed);
         }
     }

@@ -34,7 +34,7 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -281,7 +281,9 @@ impl ModelRegistry {
             "swap rejected: weights are for arch {:?}, model is {id}",
             weights.arch
         );
-        let _serialized = entry.swap_lock.lock().unwrap();
+        // The swap lock guards no data (it only serializes swaps), so a
+        // poisoned guard — a concurrent swap panicked — is safe to take.
+        let _serialized = entry.swap_lock.lock().unwrap_or_else(PoisonError::into_inner);
         let epoch = entry.swap.epoch() + 1;
         let weights = weights.with_epoch(epoch);
         // Probe-build once so a broken weight set is rejected here with

@@ -55,6 +55,8 @@ impl QuantLayer {
             let mut out = Vec::with_capacity(vals.len() * LANES);
             for i in 0..self.m {
                 for j in 0..self.n {
+                    // panic-ok: `rails_mn` returns exactly m*n rail
+                    // values, and `i < m`, `j < n` bound the index.
                     out.extend_from_slice(&encode_rotated_weight(vals[i * self.n + j], j).lanes());
                 }
             }
@@ -111,7 +113,9 @@ impl ModelWeights {
             ensure!(q.dims.len() == 2, "{qname} dims {:?}", q.dims);
             let b = tf.get(bname)?;
             Ok(QuantLayer {
+                // panic-ok: the ensure above pins `dims.len() == 2`.
                 n: q.dims[0],
+                // panic-ok: same `dims.len() == 2` guard.
                 m: q.dims[1],
                 q: q.as_i16()?.to_vec(),
                 bias: b.as_f32()?.to_vec(),
@@ -128,6 +132,8 @@ impl ModelWeights {
             conv_w: tf.get("conv_w")?.as_f32()?.to_vec(),
             fc1_w: tf.get("fc1_w")?.as_f32()?.to_vec(),
             fc2_w: tf.get("fc2_w")?.as_f32()?.to_vec(),
+            // panic-ok: `scales_t.len() == 6` is ensured above, so the
+            // `Vec<f32> -> [f32; 6]` conversion cannot fail.
             scales: scales_t.try_into().unwrap(),
         })
     }
@@ -168,6 +174,7 @@ impl ModelWeights {
     pub fn from_sim(sim: &SimModel) -> Result<Self> {
         let dense: Vec<&DenseLayer> = sim.dense.iter().flatten().collect();
         ensure!(dense.len() == 3, "{}: serving store expects conv+fc1+fc2", sim.arch);
+        // panic-ok: the ensure above pins `dense.len() == 3`.
         let (conv_d, fc1_d, fc2_d) = (dense[0], dense[1], dense[2]);
         let layer = |d: &DenseLayer| QuantLayer {
             n: d.n,
@@ -227,11 +234,16 @@ impl ModelWeights {
             }
         };
         let dense = vec![
+            // panic-ok: `scales` is `[f32; 6]`; every index below is a
+            // constant < 6.
             Some(mk(&self.conv, &self.conv_w, self.scales[1], Some(self.scales[2]))),
             None,
+            // panic-ok: constant indexes into `[f32; 6]`.
             Some(mk(&self.fc1, &self.fc1_w, self.scales[3], Some(self.scales[4]))),
+            // panic-ok: constant index into `[f32; 6]`.
             Some(mk(&self.fc2, &self.fc2_w, self.scales[5], None)),
         ];
+        // panic-ok: constant index into `[f32; 6]`.
         Ok(SimModel { arch: self.arch.clone(), topo, dense, s_in: self.scales[0] })
     }
 

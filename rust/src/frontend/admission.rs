@@ -35,7 +35,15 @@
 //! Every decision is counted in the shared
 //! [`MetricsHub`](crate::coordinator::MetricsHub).
 
-use std::sync::{Arc, Condvar, Mutex};
+// Under `--cfg loom` the gate runs on loom's model-checked sync
+// primitives so the permit-lifecycle models below explore every
+// interleaving; normal builds use std (see ARCHITECTURE.md
+// "Correctness tooling").
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex};
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, PoisonError};
 
 use crate::coordinator::MetricsHub;
 
@@ -101,7 +109,10 @@ pub struct Permit {
 
 impl Drop for Permit {
     fn drop(&mut self) {
-        let mut n = self.state.in_flight.lock().unwrap();
+        // Recover from poisoning: a panicking peer must not make every
+        // later drop panic too — the slot count below stays coherent
+        // (saturating, re-checked by every admit).
+        let mut n = self.state.in_flight.lock().unwrap_or_else(PoisonError::into_inner);
         *n = n.saturating_sub(1);
         drop(n);
         self.state.freed.notify_one();
@@ -127,7 +138,8 @@ impl AdmissionGate {
     /// structured `Overloaded` response instead of queueing.
     pub fn admit(&self) -> Result<Permit, u32> {
         let s = &self.state;
-        let mut n = s.in_flight.lock().unwrap();
+        // Poison recovery as in `Permit::drop`: the count stays sound.
+        let mut n = s.in_flight.lock().unwrap_or_else(PoisonError::into_inner);
         if *n >= s.cfg.queue_cap {
             match s.cfg.policy {
                 AdmissionPolicy::Shed => {
@@ -137,7 +149,7 @@ impl AdmissionGate {
                 AdmissionPolicy::Block => {
                     s.metrics.record_block_wait();
                     while *n >= s.cfg.queue_cap {
-                        n = s.freed.wait(n).unwrap();
+                        n = s.freed.wait(n).unwrap_or_else(PoisonError::into_inner);
                     }
                 }
             }
@@ -149,7 +161,7 @@ impl AdmissionGate {
 
     /// Requests currently in flight (admitted, response not yet written).
     pub fn in_flight(&self) -> usize {
-        *self.state.in_flight.lock().unwrap()
+        *self.state.in_flight.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// The gate's configured capacity (after the >= 1 clamp).
@@ -158,7 +170,67 @@ impl AdmissionGate {
     }
 }
 
-#[cfg(test)]
+
+// Loom models for the admission-permit lifecycle.  Run with
+// `RUSTFLAGS="--cfg loom" cargo test --lib loom_` (the `loom` CI job
+// injects the dev-dependency; it is deliberately not committed — see
+// ARCHITECTURE.md "Correctness tooling").
+#[cfg(all(loom, test))]
+mod loom_model {
+    use super::*;
+    use loom::thread;
+
+    /// Two threads race admit/drop through a cap-1 `Block` gate: the
+    /// gate must never exceed capacity, no permit drop may leak its
+    /// slot, and no wakeup may be lost on the condvar path (a lost
+    /// wakeup shows up as a loom deadlock).
+    #[test]
+    fn loom_block_gate_never_leaks_or_overfills() {
+        loom::model(|| {
+            let gate = AdmissionGate::new(
+                AdmissionConfig { policy: AdmissionPolicy::Block, queue_cap: 1, retry_after_ms: 1 },
+                MetricsHub::new(),
+            );
+            let g2 = gate.clone();
+            let t = thread::spawn(move || {
+                let p = g2.admit();
+                assert!(p.is_ok(), "a Block gate always admits eventually");
+                drop(p);
+            });
+            let p = gate.admit();
+            assert!(p.is_ok());
+            assert!(gate.in_flight() <= 1, "cap-1 gate overfilled");
+            drop(p);
+            t.join().unwrap();
+            assert_eq!(gate.in_flight(), 0, "permit drops must drain the gate");
+        });
+    }
+
+    /// `Shed` policy: a full gate answers with the retry hint instead
+    /// of queueing, and the count recovers to zero afterwards.
+    #[test]
+    fn loom_shed_gate_rejects_at_cap_and_recovers() {
+        loom::model(|| {
+            let gate = AdmissionGate::new(
+                AdmissionConfig { policy: AdmissionPolicy::Shed, queue_cap: 1, retry_after_ms: 9 },
+                MetricsHub::new(),
+            );
+            let g2 = gate.clone();
+            let t = thread::spawn(move || match g2.admit() {
+                Ok(p) => drop(p),
+                Err(hint) => assert_eq!(hint, 9),
+            });
+            match gate.admit() {
+                Ok(p) => drop(p),
+                Err(hint) => assert_eq!(hint, 9),
+            }
+            t.join().unwrap();
+            assert_eq!(gate.in_flight(), 0);
+        });
+    }
+}
+
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

@@ -26,7 +26,7 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::coordinator::MetricsHub;
 
@@ -145,7 +145,12 @@ impl ResponseCache {
     /// Look up a row; a hit refreshes its recency.  Records hit/miss.
     pub fn get(&self, key: &CacheKey) -> Option<CachedScores> {
         let hit = {
-            let mut s = self.shards[self.shard_index(key)].lock().unwrap();
+            // panic-ok: `shard_index` reduces `% shards.len()`.
+            // A poisoned shard still holds a structurally valid map;
+            // recover it — a cache must never take a connection down.
+            let mut s = self.shards[self.shard_index(key)]
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
             s.tick += 1;
             let tick = s.tick;
             s.map.get_mut(key).map(|e| {
@@ -173,8 +178,11 @@ impl ResponseCache {
         let mut evicted = 0u64;
         {
             let idx = self.shard_index(&key);
+            // panic-ok: `shard_index` reduces `% shards.len()` and
+            // `caps.len() == shards.len()` by construction in `new`.
             let cap = self.caps[idx];
-            let mut s = self.shards[idx].lock().unwrap();
+            // panic-ok: same in-bounds `idx`; poison recovery as in `get`.
+            let mut s = self.shards[idx].lock().unwrap_or_else(PoisonError::into_inner);
             s.tick += 1;
             let tick = s.tick;
             s.map.insert(key, Entry { scores, last_used: tick });
@@ -209,7 +217,8 @@ impl ResponseCache {
     pub fn purge_stale(&self, arch: &str, mode: &str, epoch: u64) -> usize {
         let mut purged = 0usize;
         for shard in &self.shards {
-            let mut s = shard.lock().unwrap();
+            // Poison recovery as in `get`: the map stays valid.
+            let mut s = shard.lock().unwrap_or_else(PoisonError::into_inner);
             let before = s.map.len();
             s.map.retain(|k, _| {
                 !(k.arch() == arch && k.mode() == mode && k.epoch() < epoch)
@@ -221,7 +230,11 @@ impl ResponseCache {
 
     /// Entries currently cached (across all shards).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.shards
+            .iter()
+            // Poison recovery as in `get`: the map stays valid.
+            .map(|s| s.lock().unwrap_or_else(PoisonError::into_inner).map.len())
+            .sum()
     }
 
     /// True when nothing is cached.

@@ -23,7 +23,7 @@ use std::io;
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
 use super::wire::{
@@ -115,7 +115,9 @@ impl Inner {
     /// The synthesized outcome for a request the server will never
     /// answer: the stored connection fate, or the disconnect sentinel.
     fn synthesized(&self, id: u64) -> WireResponse {
-        let status = match *self.fate.lock().unwrap() {
+        // A poisoned fate guard still holds a valid Option; recover it
+        // rather than double-panicking a synthesizing thread.
+        let status = match *self.fate.lock().unwrap_or_else(PoisonError::into_inner) {
             Some(retry_after_ms) => WireStatus::TooManyConnections { retry_after_ms },
             None => WireStatus::Error {
                 kind: WireErrorKind::Shutdown,
@@ -194,7 +196,8 @@ impl NetClient {
             // fairness slot.  A failed write surfaces on the first
             // request instead.
             let hello = Frame::Hello(WireHello { id: 0, name: name.to_string() });
-            let mut w = inner.writer.lock().unwrap();
+            // The guarded stream handle stays usable after a poison.
+            let mut w = inner.writer.lock().unwrap_or_else(PoisonError::into_inner);
             let _ = wire::write_frame(&mut *w, &hello);
         }
         let reader = {
@@ -210,7 +213,13 @@ impl NetClient {
         loop {
             match wire::read_frame(&mut stream) {
                 Ok(Some(Frame::Response(resp))) => {
-                    let waiter = inner.pending.lock().unwrap().remove(&resp.id);
+                    // The pending map stays structurally valid after a
+                    // poison; recovering keeps the resolve guarantee.
+                    let waiter = inner
+                        .pending
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .remove(&resp.id);
                     if let Some(tx) = waiter {
                         let _ = tx.send(resp);
                     } else if let WireStatus::TooManyConnections { retry_after_ms } = resp.status
@@ -219,7 +228,8 @@ impl NetClient {
                         // pending request): remember it so every pending
                         // and later request resolves with the typed
                         // error instead of a bare disconnect.
-                        *inner.fate.lock().unwrap() = Some(retry_after_ms);
+                        *inner.fate.lock().unwrap_or_else(PoisonError::into_inner) =
+                            Some(retry_after_ms);
                     }
                 }
                 // A server never sends requests, swaps, hellos, or stats
@@ -235,8 +245,14 @@ impl NetClient {
         // lands before the drain (resolved here) or sees the flag and
         // resolves itself — exactly one synthesized response each way.
         inner.closed.store(true, Ordering::SeqCst);
-        let drained: Vec<(u64, Sender<WireResponse>)> =
-            inner.pending.lock().unwrap().drain().collect();
+        let drained: Vec<(u64, Sender<WireResponse>)> = inner
+            .pending
+            .lock()
+            // Recover a poisoned map — the drain below is exactly the
+            // "every pending id resolves" guarantee and must run.
+            .unwrap_or_else(PoisonError::into_inner)
+            .drain()
+            .collect();
         for (id, tx) in drained {
             let _ = tx.send(inner.synthesized(id));
         }
@@ -261,6 +277,7 @@ impl NetClient {
     /// request id.  Exactly one response per submission is eventually
     /// sent into `tx`.
     pub fn submit_with(&self, row: Vec<u8>, tx: Sender<WireResponse>) -> u64 {
+        // relaxed: the counter only mints unique ids; nothing orders on it.
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let overhead = 64 + self.inner.arch.len() + self.inner.mode.len();
         if row.len() + overhead > wire::MAX_FRAME {
@@ -303,9 +320,12 @@ impl NetClient {
     ///   `TooManyConnections` — so the eventual synthesized outcome
     ///   carries the right fate instead of racing to a bare disconnect.
     fn send_frame(&self, id: u64, tx: Sender<WireResponse>, frame: &Frame) {
-        self.inner.pending.lock().unwrap().insert(id, tx);
+        // Poison recovery on both guards: the pending map and the
+        // stream handle stay valid, and the resolve guarantee depends
+        // on this registration going through.
+        self.inner.pending.lock().unwrap_or_else(PoisonError::into_inner).insert(id, tx);
         let write_ok = {
-            let mut w = self.inner.writer.lock().unwrap();
+            let mut w = self.inner.writer.lock().unwrap_or_else(PoisonError::into_inner);
             wire::write_frame(&mut *w, frame).is_ok()
         };
         if !write_ok {
@@ -318,7 +338,8 @@ impl NetClient {
             let _ = self.inner.stream.shutdown(Shutdown::Both);
         }
         if self.inner.closed.load(Ordering::SeqCst) {
-            let taken = self.inner.pending.lock().unwrap().remove(&id);
+            let taken =
+                self.inner.pending.lock().unwrap_or_else(PoisonError::into_inner).remove(&id);
             if let Some(tx) = taken {
                 let _ = tx.send(self.inner.synthesized(id));
             }
@@ -407,6 +428,7 @@ impl NetClient {
                     .to_string(),
             });
         }
+        // relaxed: unique-id mint (see `submit_with`).
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let frame = Frame::Swap(WireSwap {
             id,
@@ -436,6 +458,7 @@ impl NetClient {
     /// *after* the snapshot, so consecutive scrapes measure disjoint
     /// windows.  Blocks for the answer.  Requires wire v4 on the server.
     pub fn stats(&self, reset: bool) -> Result<String, NetError> {
+        // relaxed: unique-id mint (see `submit_with`).
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let frame = Frame::Stats(WireStats { id, reset });
         let (tx, rx) = mpsc::channel();

@@ -45,7 +45,7 @@
 //! client, writer handle).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::ClientCounters;
@@ -150,6 +150,15 @@ impl<T> Clone for FairScheduler<T> {
 }
 
 impl<T> FairScheduler<T> {
+    /// Lock the scheduler state, recovering the guard if a peer thread
+    /// panicked mid-update (lock poisoning).  Every mutation below
+    /// re-checks its invariants under the lock, so continuing with the
+    /// recovered guard is sound — and a serving-path scheduler must not
+    /// amplify one peer's panic into a panic on every reader thread.
+    fn state(&self) -> MutexGuard<'_, State<T>> {
+        self.shared.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Build a scheduler (quantum and queue bound are clamped to >= 1).
     pub fn new(mut cfg: FairnessConfig) -> Self {
         cfg.quantum = cfg.quantum.max(1);
@@ -175,7 +184,7 @@ impl<T> FairScheduler<T> {
     /// [`MetricsHub`](crate::coordinator::MetricsHub) via
     /// `register_client`).
     pub fn register(&self, counters: Arc<ClientCounters>) -> ClientId {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = self.state();
         let id = g.next_id;
         g.next_id += 1;
         g.clients.insert(
@@ -190,7 +199,7 @@ impl<T> FairScheduler<T> {
     /// capacity — and any reader blocked enqueueing for it wakes with
     /// [`Closed`].
     pub fn unregister(&self, id: ClientId) {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = self.state();
         g.clients.remove(&id.0);
         g.order.retain(|&c| c != id.0);
         drop(g);
@@ -202,7 +211,7 @@ impl<T> FairScheduler<T> {
     /// per-connection backpressure — and returns [`Closed`] if the
     /// scheduler stops or the client unregisters while waiting.
     pub fn enqueue(&self, id: ClientId, cost: u64, job: T) -> Result<(), Closed> {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = self.state();
         loop {
             if g.stopped {
                 return Err(Closed);
@@ -214,14 +223,18 @@ impl<T> FairScheduler<T> {
             if has_space {
                 break;
             }
-            g = self.shared.space.wait(g).unwrap();
+            g = self.shared.space.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
         let seq = g.seq;
         g.seq += 1;
         // Split the guard so the queue borrow and the order list borrow
         // are field-precise (one deref borrow would conflict).
         let st = &mut *g;
-        let q = st.clients.get_mut(&id.0).expect("checked above under the same lock");
+        let Some(q) = st.clients.get_mut(&id.0) else {
+            // Presence was checked above under this same lock hold, so
+            // this arm is unreachable; report closure rather than panic.
+            return Err(Closed);
+        };
         let was_empty = q.jobs.is_empty();
         q.jobs.push_back((seq, cost.max(1), job));
         q.counters.record_enqueued();
@@ -239,7 +252,7 @@ impl<T> FairScheduler<T> {
     /// up to `timeout` for dispatchable work.
     pub fn next(&self, blocked: &[ClientId], timeout: Duration) -> Next<T> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = self.state();
         loop {
             if g.stopped {
                 return Next::Stopped;
@@ -257,14 +270,19 @@ impl<T> FairScheduler<T> {
             if now >= deadline {
                 return Next::TimedOut;
             }
-            g = self.shared.work.wait_timeout(g, deadline - now).unwrap().0;
+            g = self
+                .shared
+                .work
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner)
+                .0;
         }
     }
 
     /// Stop the scheduler: every queue is dropped, every blocked
     /// `enqueue` and `next` wakes, and both report closure.
     pub fn stop(&self) {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = self.state();
         g.stopped = true;
         g.clients.clear();
         g.order.clear();
@@ -275,7 +293,7 @@ impl<T> FairScheduler<T> {
 
     /// Jobs currently queued for `id` (0 after unregister; test hook).
     pub fn queued(&self, id: ClientId) -> usize {
-        let g = self.shared.state.lock().unwrap();
+        let g = self.state();
         g.clients.get(&id.0).map(|q| q.jobs.len()).unwrap_or(0)
     }
 
@@ -291,33 +309,51 @@ impl<T> FairScheduler<T> {
         blocked: &[ClientId],
     ) -> Option<(ClientId, T)> {
         for _ in 0..g.order.len() {
-            let cid = *g.order.front().expect("order non-empty inside the scan");
+            let Some(&cid) = g.order.front() else { break };
             if blocked.contains(&ClientId(cid)) {
                 g.order.rotate_left(1);
                 continue;
             }
-            let q = g.clients.get_mut(&cid).expect("order only holds live clients");
-            let cost = q.jobs.front().expect("order only holds non-empty queues").1;
-            if q.deficit < cost {
+            // The round only holds live clients with non-empty queues
+            // (every mutation maintains this under the lock), so the
+            // two `else` arms below are unreachable; if the invariant
+            // ever broke, the stale entry heals by leaving the round
+            // instead of panicking the scheduler thread.
+            let Some(q) = g.clients.get_mut(&cid) else {
+                g.order.pop_front();
+                continue;
+            };
+            let Some(head_cost) = q.jobs.front().map(|j| j.1) else {
+                g.order.pop_front();
+                continue;
+            };
+            if q.deficit < head_cost {
                 q.deficit += cfg.quantum;
             }
-            if q.deficit < cost {
+            if q.deficit < head_cost {
                 // Still saving up for an expensive job: next client.
                 g.order.rotate_left(1);
                 continue;
             }
-            let (_seq, cost, job) = q.jobs.pop_front().expect("non-empty");
+            let Some((_seq, cost, job)) = q.jobs.pop_front() else {
+                g.order.pop_front();
+                continue;
+            };
             q.deficit -= cost;
             q.passes = 0;
             q.counters.record_dispatched();
-            if q.jobs.is_empty() {
-                q.deficit = 0;
-                g.order.pop_front();
-            } else if q.deficit < q.jobs.front().expect("non-empty").1 {
-                // Allowance spent for this round: yield the front.  (It
-                // keeps the remainder but earns its next quantum only
-                // when the round comes back around.)
-                g.order.rotate_left(1);
+            match q.jobs.front().map(|j| j.1) {
+                None => {
+                    q.deficit = 0;
+                    g.order.pop_front();
+                }
+                Some(next_cost) if q.deficit < next_cost => {
+                    // Allowance spent for this round: yield the front.
+                    // (It keeps the remainder but earns its next quantum
+                    // only when the round comes back around.)
+                    g.order.rotate_left(1);
+                }
+                Some(_) => {}
             }
             Self::charge_passes(cfg, g, cid, blocked);
             return Some((ClientId(cid), job));
@@ -333,14 +369,21 @@ impl<T> FairScheduler<T> {
         g: &mut State<T>,
         blocked: &[ClientId],
     ) -> Option<(ClientId, T)> {
+        // Runnable clients are live with non-empty queues by invariant;
+        // `filter_map`/`?` make a broken entry skip or bail gracefully
+        // instead of panicking the scheduler thread.
         let oldest = g
             .order
             .iter()
             .filter(|&&c| !blocked.contains(&ClientId(c)))
-            .min_by_key(|&&c| g.clients[&c].jobs.front().expect("runnable ⇒ non-empty").0)
-            .copied()?;
-        let q = g.clients.get_mut(&oldest).expect("order only holds live clients");
-        let (_seq, _cost, job) = q.jobs.pop_front().expect("non-empty");
+            .filter_map(|&c| {
+                let head_seq = g.clients.get(&c)?.jobs.front()?.0;
+                Some((head_seq, c))
+            })
+            .min()?
+            .1;
+        let q = g.clients.get_mut(&oldest)?;
+        let (_seq, _cost, job) = q.jobs.pop_front()?;
         q.passes = 0;
         q.counters.record_dispatched();
         if q.jobs.is_empty() {
@@ -371,7 +414,9 @@ impl<T> FairScheduler<T> {
             if cid == winner || blocked.contains(&ClientId(cid)) {
                 continue;
             }
-            let q = clients.get_mut(&cid).expect("order only holds live clients");
+            // Invariant as in `pop_drr`: round entries are live; skip a
+            // broken one rather than panic mid-dispatch.
+            let Some(q) = clients.get_mut(&cid) else { continue };
             q.passes += 1;
             if q.passes >= threshold {
                 q.counters.record_starved();

@@ -88,7 +88,7 @@ use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Mutex, PoisonError, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -498,7 +498,10 @@ impl Frontend {
             shared.metrics.record_net_connection();
             let read_half = Arc::new(stream);
             {
-                let mut conns = shared.conns.lock().unwrap();
+                // The registry holds only `Weak` handles, so a guard
+                // poisoned by a panicking peer is still structurally
+                // valid — recover it rather than refuse new clients.
+                let mut conns = shared.conns.lock().unwrap_or_else(PoisonError::into_inner);
                 conns.retain(|w| w.strong_count() > 0);
                 conns.push(Arc::downgrade(&read_half));
             }
@@ -593,6 +596,9 @@ impl Frontend {
         };
         // Fairness identity, registered lazily at the first pool-bound
         // request (or named by a preceding Hello frame).
+        // relaxed: connection numbers only need uniqueness (the RMW is
+        // atomic regardless of ordering); nothing is published through
+        // this counter.
         let conn_no = shared.conn_seq.fetch_add(1, Ordering::Relaxed);
         let mut fair: Option<ClientId> = None;
         let mut hello_name: Option<String> = None;
@@ -931,7 +937,11 @@ impl Frontend {
         }
         let _ = TcpStream::connect(wake);
         let conn_handles = self.accept.take().map(|h| h.join().unwrap_or_default());
-        for conn in self.shared.conns.lock().unwrap().drain(..) {
+        // Recover a poisoned registry: shutdown must still sever every
+        // surviving connection even if some reader thread panicked.
+        for conn in
+            self.shared.conns.lock().unwrap_or_else(PoisonError::into_inner).drain(..)
+        {
             if let Some(stream) = conn.upgrade() {
                 let _ = stream.shutdown(Shutdown::Both);
             }

@@ -67,6 +67,17 @@ const KIND_SWAP: u8 = 3;
 const KIND_HELLO: u8 = 4;
 const KIND_STATS: u8 = 5;
 
+/// Response status discriminants (the byte after the response id).
+/// Named so the encode arm, decode arm, and round-trip test for each
+/// variant share one definition — the `wire-coverage` lint keeps all
+/// three sites in sync.
+const STATUS_OK: u8 = 0;
+const STATUS_ERROR: u8 = 1;
+const STATUS_OVERLOADED: u8 = 2;
+const STATUS_SWAPPED: u8 = 3;
+const STATUS_TOO_MANY_CONNS: u8 = 4;
+const STATUS_STATS: u8 = 5;
+
 /// Typed error kinds a response can carry — the wire mirror of
 /// [`crate::coordinator::ServeError`] plus protocol-level rejections.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -280,28 +291,35 @@ impl<'a> Cursor<'a> {
                 self.b.len() - self.i
             )));
         }
+        // panic-ok: the length check above guarantees `i + n <= b.len()`.
         let s = &self.b[self.i..self.i + n];
         self.i += n;
         Ok(s)
     }
 
     fn u8(&mut self) -> io::Result<u8> {
+        // panic-ok: `take(1)` returns exactly one byte or errors.
         Ok(self.take(1)?[0])
     }
 
     fn u16(&mut self) -> io::Result<u16> {
+        // panic-ok: `take(2)` returns exactly 2 bytes, so the array
+        // conversion is infallible.
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
     fn u32(&mut self) -> io::Result<u32> {
+        // panic-ok: `take(4)` returns exactly 4 bytes (see `u16`).
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     fn u64(&mut self) -> io::Result<u64> {
+        // panic-ok: `take(8)` returns exactly 8 bytes (see `u16`).
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn f32(&mut self) -> io::Result<f32> {
+        // panic-ok: `take(4)` returns exactly 4 bytes (see `u16`).
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
@@ -339,7 +357,7 @@ impl Frame {
                 put_u64(&mut body, r.id);
                 match &r.status {
                     WireStatus::Ok { shard, argmax, cached, epoch, logits } => {
-                        body.push(0);
+                        body.push(STATUS_OK);
                         put_u32(&mut body, *shard);
                         body.push(*argmax);
                         body.push(u8::from(*cached));
@@ -349,25 +367,25 @@ impl Frame {
                         }
                     }
                     WireStatus::Error { kind, message } => {
-                        body.push(1);
+                        body.push(STATUS_ERROR);
                         body.push(kind.code());
                         put_u32(&mut body, message.len() as u32);
                         body.extend_from_slice(message.as_bytes());
                     }
                     WireStatus::Overloaded { retry_after_ms } => {
-                        body.push(2);
+                        body.push(STATUS_OVERLOADED);
                         put_u32(&mut body, *retry_after_ms);
                     }
                     WireStatus::Swapped { epoch } => {
-                        body.push(3);
+                        body.push(STATUS_SWAPPED);
                         put_u64(&mut body, *epoch);
                     }
                     WireStatus::TooManyConnections { retry_after_ms } => {
-                        body.push(4);
+                        body.push(STATUS_TOO_MANY_CONNS);
                         put_u32(&mut body, *retry_after_ms);
                     }
                     WireStatus::Stats { json } => {
-                        body.push(5);
+                        body.push(STATUS_STATS);
                         put_u32(&mut body, json.len() as u32);
                         body.extend_from_slice(json.as_bytes());
                     }
@@ -424,7 +442,7 @@ impl Frame {
             KIND_RESPONSE => {
                 let id = c.u64()?;
                 let status = match c.u8()? {
-                    0 => {
+                    STATUS_OK => {
                         let shard = c.u32()?;
                         let argmax = c.u8()?;
                         let cached = c.u8()? != 0;
@@ -435,7 +453,7 @@ impl Frame {
                         }
                         WireStatus::Ok { shard, argmax, cached, epoch, logits }
                     }
-                    1 => {
+                    STATUS_ERROR => {
                         let code = c.u8()?;
                         let kind = WireErrorKind::from_code(code)
                             .ok_or_else(|| bad(format!("unknown error kind {code}")))?;
@@ -443,10 +461,12 @@ impl Frame {
                         let message = c.string(msg_len)?;
                         WireStatus::Error { kind, message }
                     }
-                    2 => WireStatus::Overloaded { retry_after_ms: c.u32()? },
-                    3 => WireStatus::Swapped { epoch: c.u64()? },
-                    4 => WireStatus::TooManyConnections { retry_after_ms: c.u32()? },
-                    5 => {
+                    STATUS_OVERLOADED => WireStatus::Overloaded { retry_after_ms: c.u32()? },
+                    STATUS_SWAPPED => WireStatus::Swapped { epoch: c.u64()? },
+                    STATUS_TOO_MANY_CONNS => {
+                        WireStatus::TooManyConnections { retry_after_ms: c.u32()? }
+                    }
+                    STATUS_STATS => {
                         let json_len = c.u32()? as usize;
                         WireStatus::Stats { json: c.string(json_len)? }
                     }
@@ -515,6 +535,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Frame>> {
 fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<bool> {
     let mut n = 0;
     while n < buf.len() {
+        // panic-ok: `n < buf.len()` (loop guard) keeps the range valid.
         match r.read(&mut buf[n..]) {
             Ok(0) => {
                 if n == 0 {
@@ -775,6 +796,81 @@ mod tests {
         let mut out = Vec::new();
         assert!(write_frame(&mut out, &frame).is_err());
         assert!(out.is_empty(), "nothing may reach the wire for an unframeable payload");
+    }
+
+    #[test]
+    fn kind_and_status_bytes_are_pinned_to_their_constants() {
+        // The on-wire discriminants are protocol surface: pin each
+        // frame's kind byte (body offset 1, i.e. encoded offset 5) and
+        // each response's status byte (encoded offset 14) to its named
+        // constant, then round-trip the frame.  A renumbered constant
+        // or a divergent encode/decode arm fails here.
+        let kinds: [(Frame, u8); 5] = [
+            (
+                Frame::Request(WireRequest {
+                    id: 1,
+                    arch: "cnn1".to_string(),
+                    mode: "fast".to_string(),
+                    row: vec![7; 4],
+                }),
+                KIND_REQUEST,
+            ),
+            (
+                Frame::Response(WireResponse {
+                    id: 2,
+                    status: WireStatus::Swapped { epoch: 1 },
+                }),
+                KIND_RESPONSE,
+            ),
+            (
+                Frame::Swap(WireSwap {
+                    id: 3,
+                    arch: "cnn2".to_string(),
+                    mode: "sc".to_string(),
+                    seed: 9,
+                }),
+                KIND_SWAP,
+            ),
+            (Frame::Hello(WireHello { id: 4, name: "carol".to_string() }), KIND_HELLO),
+            (Frame::Stats(WireStats { id: 5, reset: false }), KIND_STATS),
+        ];
+        for (frame, kind) in kinds {
+            assert_eq!(frame.encode()[5], kind, "kind byte for {frame:?}");
+            round_trip(frame);
+        }
+        let statuses: [(WireStatus, u8); 6] = [
+            (
+                WireStatus::Ok {
+                    shard: 0,
+                    argmax: 1,
+                    cached: false,
+                    epoch: 0,
+                    logits: [0.5; 10],
+                },
+                STATUS_OK,
+            ),
+            (
+                WireStatus::Error {
+                    kind: WireErrorKind::Backend,
+                    message: "x".to_string(),
+                },
+                STATUS_ERROR,
+            ),
+            (WireStatus::Overloaded { retry_after_ms: 1 }, STATUS_OVERLOADED),
+            (WireStatus::Swapped { epoch: 2 }, STATUS_SWAPPED),
+            (
+                WireStatus::TooManyConnections { retry_after_ms: 3 },
+                STATUS_TOO_MANY_CONNS,
+            ),
+            (WireStatus::Stats { json: "{}".to_string() }, STATUS_STATS),
+        ];
+        for (status, code) in statuses {
+            let frame = Frame::Response(WireResponse { id: 9, status });
+            let bytes = frame.encode();
+            assert_eq!(bytes[5], KIND_RESPONSE);
+            assert_eq!(bytes[14], code, "status byte for {frame:?}");
+            round_trip(frame);
+        }
     }
 
     #[test]

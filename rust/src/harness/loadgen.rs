@@ -334,6 +334,8 @@ fn parse_scenario(line: usize, j: &Json) -> Result<Scenario> {
                     }
                     for w in out.windows(2) {
                         ensure!(
+                            // panic-ok: `windows(2)` yields exactly
+                            // two-element slices.
                             w[0].after < w[1].after,
                             "line {line}: swap events must be ascending by \"after\""
                         );
@@ -573,6 +575,8 @@ impl Worker {
                     std::thread::sleep(due - elapsed);
                 }
             }
+            // panic-ok: index is reduced modulo `used`, which scenario
+            // validation pins to `1..=samples.len()`.
             let row = self.samples.samples[i % self.cfg.used].image.clone();
             let (id, reaped) = pipe.submit_frame(row);
             pending.insert(id, (i, Instant::now()));
@@ -617,6 +621,8 @@ impl Worker {
                         argmax: resp.argmax,
                     },
                 ));
+                // relaxed: monotone progress counter, sampled by the
+                // watchdog; no data rides this increment.
                 self.completed.fetch_add(1, Ordering::Relaxed);
                 false
             }
@@ -630,6 +636,7 @@ impl Worker {
                 let tried = self.retries.get(&i).copied().unwrap_or(0);
                 if !transient || tried >= self.cfg.retry_limit {
                     self.out.outcomes.push((i, WorkOutcome::Failed(e.to_string())));
+                    // relaxed: monotone progress counter (see above).
                     self.completed.fetch_add(1, Ordering::Relaxed);
                     return matches!(
                         e,
@@ -661,6 +668,7 @@ impl Worker {
     fn fail_rest(&mut self, why: &str) {
         while let Some(i) = self.todo.pop_front() {
             self.out.outcomes.push((i, WorkOutcome::Failed(why.to_string())));
+            // relaxed: monotone progress counter (see `handle`).
             self.completed.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -811,6 +819,7 @@ fn run_scenario(
     seed_state.insert(sc.model.clone(), sc.golden_seed);
     // Whatever epoch is serving right now carries the golden seed —
     // either it always did, or the resync swap above installed it.
+    // panic-ok: the sample store is validated non-empty at load time.
     let probe = probe_epoch(&ctl, &samples.samples[0].image)
         .with_context(|| format!("scenario {:?}", sc.name))?;
     epoch_map.entry(probe).or_insert(sc.golden_seed);
@@ -872,6 +881,8 @@ fn run_scenario(
     let mut swaps_done = 0usize;
     let mut swap_err = String::new();
     for ev in &sc.swaps {
+        // relaxed: polling a monotone progress counter; exact swap
+        // timing is best-effort by design and re-checked every 1ms.
         while completed.load(Ordering::Relaxed) < ev.after {
             std::thread::sleep(Duration::from_millis(1));
         }
@@ -900,6 +911,8 @@ fn run_scenario(
                 retries += out.retries;
                 chaos_disconnects += out.chaos_disconnects;
                 for (i, o) in out.outcomes {
+                    // panic-ok: workers are assigned indexes strided
+                    // from `0..sc.requests`, the length of `slots`.
                     slots[i] = Some(o);
                 }
             }
@@ -930,6 +943,8 @@ fn run_scenario(
                         fnv = fnv.wrapping_mul(0x100000001b3);
                     }
                 }
+                // panic-ok: index reduced modulo `used`, validated to
+                // be `1..=samples.len()` by the scenario parser.
                 let sample = &samples.samples[i % used];
                 match sc.score {
                     Score::Accuracy { .. } => {
@@ -958,6 +973,8 @@ fn run_scenario(
                             &sc.model.mode,
                             seed,
                         )?;
+                        // panic-ok: `golden_for` returns one prediction
+                        // per used sample; index is reduced modulo.
                         let want = &preds[i % used];
                         let bitsame = want.argmax == *argmax
                             && want

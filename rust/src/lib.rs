@@ -65,3 +65,4 @@ pub mod coordinator;
 pub mod frontend;
 pub mod harness;
 pub mod dataset;
+pub mod analysis;

@@ -44,6 +44,11 @@
 //!                                CI perf gate: compare bench --json dumps
 //!                                against the committed baseline floors
 //!                                and/or gate a loadgen verdict JSON
+//! odin check [--root DIR] [--json PATH]
+//!                                static repo-invariant analyzer (panic-
+//!                                free serving path, atomic-ordering
+//!                                rationales, wire coverage, lock order);
+//!                                non-zero exit on any finding
 //! odin ablation                  binary vs mux accumulation cost/error
 //! odin selftest                  hermetic cross-checks (+ golden/PJRT
 //!                                when artifacts / the pjrt feature exist)
@@ -207,6 +212,9 @@ fn main() -> Result<()> {
         "benchgate" => {
             cmd_benchgate(&args)?;
         }
+        "check" => {
+            cmd_check(&args)?;
+        }
         "loadgen" => {
             cmd_loadgen(&args)?;
         }
@@ -271,9 +279,37 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// `odin check [--root DIR] [--json PATH]` — run the repo-invariant
+/// static analyzer (see [`odin::analysis`]) over the serving sources.
+/// Prints every finding as `file:line: [rule] message`, optionally
+/// writes the machine-readable JSON report, and exits non-zero when
+/// any invariant is violated — what the CI gate runs.
+fn cmd_check(args: &[String]) -> Result<()> {
+    let root = flag(args, "--root", "src");
+    let report = odin::analysis::check_tree(std::path::Path::new(&root))
+        .with_context(|| format!("scanning {root}"))?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if let Some(path) = opt_flag(args, "--json") {
+        std::fs::write(&path, report.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+    }
+    if report.ok() {
+        println!("check OK: {} files scanned, 0 findings", report.files_scanned);
+        Ok(())
+    } else {
+        bail!(
+            "check failed: {} finding(s) across {} files",
+            report.findings.len(),
+            report.files_scanned
+        );
+    }
+}
+
 const HELP: &str = "odin — PCRAM PIM accelerator reproduction
 commands: table1 table2 table3 fig6 headline eval serve swap stats
-          tracecheck loadgen benchgate ablation selftest
+          tracecheck loadgen benchgate check ablation selftest
 common flags: --artifacts DIR --backend sim|pjrt
 eval:  --arch cnn1|cnn2 --mode fast|sc|mux|float --limit N
 serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
@@ -325,6 +361,12 @@ benchgate: --baseline PATH --pr PATH (repeatable) [--tolerance 0.75] —
        one (floors only move up; title a PR [relax-floors] to bypass)
        --verdict PATH — also (or instead) gate a loadgen verdict JSON:
        fail unless every scenario in it passed
+check: [--root DIR] [--json PATH] — static repo-invariant analyzer over
+       the serving sources (default root: src): panic-free serving path,
+       Relaxed-ordering rationales, atomic-ordering consistency, wire
+       constant coverage, lock-order discipline; prints file:line
+       findings, writes a JSON report with --json, non-zero exit on any
+       finding
 (`sim` is hermetic: synthetic weights/data unless artifacts exist;
  `pjrt` needs a build with --features pjrt and `make artifacts`)";
 
@@ -704,6 +746,8 @@ fn run_hog_demo(
             for reaped in pipe.drain() {
                 ok += usize::from(reaped.is_ok());
             }
+            // relaxed: a one-way completion flag polled every 5ms; no
+            // data is published through it.
             while !done.load(std::sync::atomic::Ordering::Relaxed) {
                 std::thread::sleep(Duration::from_millis(5));
             }
@@ -755,6 +799,7 @@ fn run_hog_demo(
         total += ok;
         rejects += r;
     }
+    // relaxed: one-way completion flag (see the hog's polling loop).
     polites_done.store(true, std::sync::atomic::Ordering::Relaxed);
     let hog_ok = hog.join().unwrap()?;
     println!("  hog: {hog_ok}/{per_client} ok");

@@ -1,0 +1,95 @@
+//! The analyzer is itself under test: fixture trees with seeded
+//! violations must trip every rule at the exact `file:line`, the
+//! mirrored clean tree must pass, and — the invariant the whole PR
+//! enforces — the real `src` tree must come back clean, so a fresh
+//! violation fails `cargo test` locally before CI's `odin check` gate
+//! even runs.
+
+use std::path::{Path, PathBuf};
+
+use odin::analysis::{check_tree, Rule};
+
+fn fixture(tree: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/analysis").join(tree)
+}
+
+#[test]
+fn bad_fixture_trips_every_rule_at_the_seeded_site() {
+    let report = check_tree(&fixture("bad")).expect("scanning the bad fixture tree");
+    assert!(!report.ok());
+    let got: Vec<(&str, usize, &str)> = report
+        .findings
+        .iter()
+        .map(|f| (f.file.as_str(), f.line, f.rule.name()))
+        .collect();
+    // One entry per seeded violation — see the fixture files' doc
+    // comments for what each line plants.
+    let want: [(&str, usize, Rule); 8] = [
+        ("coordinator/metrics.rs", 5, Rule::LockOrder),
+        ("frontend/panics.rs", 5, Rule::PanicPath),
+        ("frontend/panics.rs", 6, Rule::PanicPath),
+        ("frontend/panics.rs", 8, Rule::PanicPath),
+        ("frontend/wire.rs", 3, Rule::WireCoverage),
+        ("frontend/wire.rs", 3, Rule::WireCoverage),
+        ("util/atomics.rs", 5, Rule::AtomicConsistency),
+        ("util/atomics.rs", 9, Rule::RelaxedRationale),
+    ];
+    for (file, line, rule) in want {
+        assert!(
+            got.contains(&(file, line, rule.name())),
+            "missing {file}:{line} [{rule}] in {got:?}"
+        );
+    }
+    assert_eq!(got.len(), want.len(), "unexpected extra findings: {got:?}");
+    // The two wire gaps are distinct messages on one declaration line.
+    let wire_msgs: Vec<&str> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == Rule::WireCoverage)
+        .map(|f| f.message.as_str())
+        .collect();
+    assert!(wire_msgs.iter().any(|m| m.contains("no decode arm")), "{wire_msgs:?}");
+    assert!(wire_msgs.iter().any(|m| m.contains("no round-trip test")), "{wire_msgs:?}");
+}
+
+#[test]
+fn clean_fixture_passes() {
+    let report = check_tree(&fixture("clean")).expect("scanning the clean fixture tree");
+    assert!(
+        report.ok(),
+        "clean fixtures flagged: {:?}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>()
+    );
+    assert_eq!(report.files_scanned, 4);
+}
+
+#[test]
+fn bad_report_json_is_machine_readable() {
+    let report = check_tree(&fixture("bad")).expect("scanning the bad fixture tree");
+    let json = report.to_json();
+    assert_eq!(json.get("ok"), Some(&odin::util::json::Json::Bool(false)));
+    assert_eq!(
+        json.path(&["counts", "panic-path"]).and_then(odin::util::json::Json::as_f64),
+        Some(3.0)
+    );
+    // The emitted text round-trips through the in-tree parser.
+    let text = json.to_string();
+    assert_eq!(odin::util::json::parse(&text).expect("report JSON parses"), json);
+}
+
+#[test]
+fn the_real_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = check_tree(&src).expect("scanning src");
+    assert!(
+        report.ok(),
+        "`odin check` violations in the real tree:\n{}",
+        report
+            .findings
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files_scanned > 50, "src scan looks truncated: {}", report.files_scanned);
+}

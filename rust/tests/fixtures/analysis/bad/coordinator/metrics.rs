@@ -1,0 +1,8 @@
+//! Analyzer fixture: a second lock taken while the MetricsHub inner
+//! guard is held — the `lock-order` rule must flag the nested acquire.
+fn nested(&self) {
+    let guard = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+    let extra = self.other.lock();
+    drop(guard);
+    drop(extra);
+}

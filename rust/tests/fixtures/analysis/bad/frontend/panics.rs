@@ -1,0 +1,11 @@
+//! Analyzer fixture: seeded `panic-path` violations.  This file is
+//! *scanned* by `tests/analysis_fixtures.rs`, never compiled — cargo
+//! only builds top-level `tests/*.rs` files.
+fn broken(v: &[u8]) -> u8 {
+    let first = v.iter().next().unwrap();
+    let second = v[1];
+    if *first == 0 {
+        panic!("fixture: zero first byte");
+    }
+    second
+}

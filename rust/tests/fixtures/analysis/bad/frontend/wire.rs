@@ -1,0 +1,7 @@
+//! Analyzer fixture: a wire constant with an encode arm but no decode
+//! arm and no round-trip test — `wire-coverage` must flag both gaps.
+const KIND_PING: u8 = 9;
+
+fn encode_ping(out: &mut Vec<u8>) {
+    out.push(KIND_PING);
+}

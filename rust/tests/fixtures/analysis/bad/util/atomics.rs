@@ -1,0 +1,10 @@
+//! Analyzer fixture: an unannotated `Ordering::Relaxed` on a field
+//! that elsewhere uses `Release` — both `relaxed-rationale` and
+//! `atomic-consistency` must fire.
+fn publish(flag: &AtomicU64) {
+    flag.store(1, Ordering::Release);
+}
+
+fn read(flag: &AtomicU64) -> u64 {
+    flag.load(Ordering::Relaxed)
+}

@@ -1,0 +1,8 @@
+//! Analyzer fixture: the `bad/coordinator/metrics.rs` shape with the
+//! MetricsHub guard dropped before any other lock is touched.
+fn sequential(&self) {
+    let guard = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+    drop(guard);
+    let extra = self.other.lock();
+    drop(extra);
+}

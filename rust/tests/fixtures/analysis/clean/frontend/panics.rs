@@ -1,0 +1,9 @@
+//! Analyzer fixture: the `bad/frontend/panics.rs` logic written the
+//! way the serving path must be — graceful handling, or a marker where
+//! the operation is provably infallible.
+fn graceful(v: &[u8]) -> u8 {
+    let first = v.first().copied().unwrap_or(0);
+    // panic-ok: fixture — the caller guarantees `v.len() >= 2`.
+    let second = v[1];
+    second.max(first)
+}

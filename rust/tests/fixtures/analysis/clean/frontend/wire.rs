@@ -1,0 +1,19 @@
+//! Analyzer fixture: the wire constant with all three required sites —
+//! encode arm, decode arm, round-trip test.
+const KIND_PING: u8 = 9;
+
+fn encode_ping(out: &mut Vec<u8>) {
+    out.push(KIND_PING);
+}
+
+fn decode_ping(kind: u8) -> bool {
+    kind == KIND_PING
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ping_round_trips() {
+        assert_eq!(super::KIND_PING, 9);
+    }
+}

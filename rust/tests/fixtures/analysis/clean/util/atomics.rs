@@ -1,0 +1,12 @@
+//! Analyzer fixture: the `bad/util/atomics.rs` shape with both
+//! required markers — a `// relaxed:` rationale and an `// ordering:`
+//! note documenting the deliberate mix.
+fn publish(flag: &AtomicU64) {
+    flag.store(1, Ordering::Release);
+}
+
+fn read(flag: &AtomicU64) -> u64 {
+    // relaxed: fixture — stats-only sample, no payload rides it.
+    // ordering: fixture — the Release/Relaxed mix is deliberate.
+    flag.load(Ordering::Relaxed)
+}
