@@ -38,9 +38,7 @@ use odin::coordinator::{
     SYNTHETIC_SEED,
 };
 use odin::dataset::TestSet;
-use odin::frontend::{
-    AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError,
-};
+use odin::frontend::{AdmissionConfig, AdmissionPolicy, NetClient, NetError, ServeConfig};
 use odin::util::json::Json;
 use odin::util::trace::Tracer;
 
@@ -98,14 +96,10 @@ fn run_closed_tcp(
     tracer: Tracer,
 ) -> Result<(f64, f64)> {
     let (pool, client, metrics) = spawn_pool(weights, tracer)?;
-    let frontend = Frontend::spawn(
-        "127.0.0.1:0",
-        client.clone(),
-        "cnn1",
-        "fast",
-        FrontendConfig { cache_capacity: cache, ..FrontendConfig::default() },
-        metrics.clone(),
-    )?;
+    let frontend = ServeConfig::new("127.0.0.1:0")
+        .cache(cache)
+        .metrics(metrics.clone())
+        .serve_pool(client.clone(), "cnn1", "fast")?;
     let addr = frontend.local_addr();
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -145,12 +139,9 @@ fn run_registry_tcp(images: &[Vec<u8>]) -> Result<f64> {
         BatchPolicy::default(),
         metrics.clone(),
     )?);
-    let frontend = Frontend::spawn_registry(
-        "127.0.0.1:0",
-        Arc::clone(&registry),
-        FrontendConfig::default(),
-        metrics,
-    )?;
+    let frontend = ServeConfig::new("127.0.0.1:0")
+        .metrics(metrics)
+        .serve_registry(Arc::clone(&registry))?;
     let addr = frontend.local_addr();
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -188,21 +179,14 @@ fn run_registry_tcp(images: &[Vec<u8>]) -> Result<f64> {
 /// request resolves with a typed outcome.
 fn run_open_shed(weights: &ModelWeights, images: &[Vec<u8>]) -> Result<(usize, usize, f64)> {
     let (pool, client, metrics) = spawn_pool(weights, Tracer::disabled())?;
-    let frontend = Frontend::spawn(
-        "127.0.0.1:0",
-        client.clone(),
-        "cnn1",
-        "fast",
-        FrontendConfig {
-            admission: AdmissionConfig {
-                policy: AdmissionPolicy::Shed,
-                queue_cap: 64,
-                ..AdmissionConfig::default()
-            },
-            ..FrontendConfig::default()
-        },
-        metrics.clone(),
-    )?;
+    let frontend = ServeConfig::new("127.0.0.1:0")
+        .admission(AdmissionConfig {
+            policy: AdmissionPolicy::Shed,
+            queue_cap: 64,
+            ..AdmissionConfig::default()
+        })
+        .metrics(metrics.clone())
+        .serve_pool(client.clone(), "cnn1", "fast")?;
     fn tally(
         outcome: Result<odin::frontend::NetResponse, NetError>,
         served: &mut usize,

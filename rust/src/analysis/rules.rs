@@ -420,6 +420,21 @@ mod tests {
     }
 
     #[test]
+    fn panic_rule_covers_the_proxy_tier() {
+        // Pin the scope: `frontend/proxy.rs` is a serving-path file, so
+        // the panic-path rule must fire there just as it does for the
+        // server — the L6 tier inherits the no-panic discipline.
+        let src = "fn route(v: &[u8]) {\n    let b = v.first().unwrap();\n    let _ = *b;\n}\n";
+        let hits = run("frontend/proxy.rs", src, panic_path);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 2);
+        assert!(
+            run("src/frontend/proxy.rs", src, panic_path).len() == 1,
+            "prefixed spelling is in scope too"
+        );
+    }
+
+    #[test]
     fn panic_rule_skips_types_macros_and_tests() {
         let src = "fn f() {\n    let a: [u8; 4] = [0; 4];\n    let v = vec![1];\n    let s: &[u8] = &a;\n    let _ = s.first().unwrap_or(&0);\n}\n#[cfg(test)]\nmod tests {\n    fn g(v: &[u8]) { v.last().unwrap(); }\n}\n";
         let hits = run("frontend/server.rs", src, panic_path);

@@ -15,7 +15,7 @@
 //! reference per shard and samples them at report time.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
@@ -124,6 +124,96 @@ impl ClientCounters {
     }
 }
 
+/// Lock-free per-backend counters owned by the L6 proxy tier (one per
+/// configured backend address, registered once at proxy spawn).  Same
+/// pattern as [`ClientCounters`]: the hub keeps a labelled handle and
+/// samples it at report time, so the proxy's forwarding hot path never
+/// takes the hub mutex.  The health/drain lifecycle counters make the
+/// state machine observable: `ejections` counts healthy→ejected
+/// transitions (connection loss or repeated failed health probes),
+/// `readmissions` counts ejected→healthy recoveries, and `healthy` is
+/// the current routability gauge.
+#[derive(Debug, Default)]
+pub struct BackendCounters {
+    forwarded: AtomicU64,
+    responses: AtomicU64,
+    drained: AtomicU64,
+    ejections: AtomicU64,
+    readmissions: AtomicU64,
+    healthy: AtomicBool,
+}
+
+impl BackendCounters {
+    /// Record one request frame forwarded to this backend.
+    pub fn record_forwarded(&self) {
+        // relaxed: independent monotone counter, sampled for reports.
+        self.forwarded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one response frame relayed from this backend.
+    pub fn record_response(&self) {
+        // relaxed: independent monotone counter, sampled for reports.
+        self.responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` in-flight requests drained with a synthesized typed
+    /// outcome because this backend's connection died under them.
+    pub fn record_drained(&self, n: u64) {
+        // relaxed: independent monotone counter, sampled for reports.
+        self.drained.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one healthy→ejected transition (and flip the gauge).
+    pub fn record_ejection(&self) {
+        // relaxed: independent monotone counter, sampled for reports.
+        self.ejections.fetch_add(1, Ordering::Relaxed);
+        // relaxed: advisory gauge; the proxy's own routing flag (not
+        // this mirror) gates traffic.
+        self.healthy.store(false, Ordering::Relaxed);
+    }
+
+    /// Record one ejected→healthy recovery (and flip the gauge).
+    pub fn record_readmission(&self) {
+        // relaxed: independent monotone counter, sampled for reports.
+        self.readmissions.fetch_add(1, Ordering::Relaxed);
+        // relaxed: advisory gauge; the proxy's own routing flag (not
+        // this mirror) gates traffic.
+        self.healthy.store(true, Ordering::Relaxed);
+    }
+
+    /// Set the routability gauge without counting a transition (initial
+    /// admission at proxy spawn).
+    pub fn set_healthy(&self, healthy: bool) {
+        // relaxed: advisory gauge; the proxy's own routing flag (not
+        // this mirror) gates traffic.
+        self.healthy.store(healthy, Ordering::Relaxed);
+    }
+
+    /// Requests forwarded so far (sampled; used by tests).
+    pub fn forwarded(&self) -> u64 {
+        // relaxed: point-in-time sample; no payload rides this counter.
+        self.forwarded.load(Ordering::Relaxed)
+    }
+
+    /// Ejections so far (sampled; used by tests).
+    pub fn ejections(&self) -> u64 {
+        // relaxed: point-in-time sample; no payload rides this counter.
+        self.ejections.load(Ordering::Relaxed)
+    }
+
+    /// Readmissions so far (sampled; used by tests).
+    pub fn readmissions(&self) -> u64 {
+        // relaxed: point-in-time sample; no payload rides this counter.
+        self.readmissions.load(Ordering::Relaxed)
+    }
+
+    /// Current routability gauge (sampled; used by tests).
+    pub fn healthy(&self) -> bool {
+        // relaxed: point-in-time sample; no payload rides this flag.
+        self.healthy.load(Ordering::Relaxed)
+    }
+}
+
 /// Upper bound on distinct per-client metric slots; registrations past
 /// it aggregate under the `"(other)"` overflow slot so connection churn
 /// cannot grow the hub without bound.
@@ -151,6 +241,10 @@ struct Inner {
     /// every client the run served.  Two connections sharing a name are
     /// summed at report time.
     clients: Vec<(String, Arc<ClientCounters>)>,
+    /// Per-backend proxy counter handles, keyed by backend address (the
+    /// L6 routing tier registers one per configured backend at spawn;
+    /// the set is operator-configured and bounded, so no overflow slot).
+    backends: Vec<(String, Arc<BackendCounters>)>,
     /// Per-stage latency summaries (queue, admission, dispatch, batch,
     /// exec, write, request), recorded for *every* request — sampling
     /// only affects span recording, never these aggregates — and
@@ -323,6 +417,29 @@ pub struct ClientReport {
     pub starved: u64,
 }
 
+/// Point-in-time aggregate over one proxy backend (see
+/// [`MetricsReport::backends`]); only the L6 routing tier populates
+/// these.
+#[derive(Clone, Debug)]
+pub struct BackendReport {
+    /// The backend's configured address.
+    pub backend: String,
+    /// Whether the proxy currently routes to this backend.
+    pub healthy: bool,
+    /// Request frames forwarded to this backend.
+    pub forwarded: u64,
+    /// Response frames relayed back from this backend.
+    pub responses: u64,
+    /// In-flight requests drained with a synthesized typed outcome when
+    /// this backend's connection died under them.
+    pub drained: u64,
+    /// healthy→ejected transitions (connection loss, or strikes from
+    /// repeated failed health probes reaching the threshold).
+    pub ejections: u64,
+    /// ejected→healthy recoveries after a successful reconnect.
+    pub readmissions: u64,
+}
+
 /// Point-in-time aggregate over one served model (`"arch/mode"`),
 /// including its hot-swap history (see [`MetricsReport::models`]).
 #[derive(Clone, Debug)]
@@ -399,6 +516,9 @@ pub struct MetricsReport {
     /// Per-client fairness breakdown, sorted by client name (empty when
     /// no front-end scheduler registered clients).
     pub clients: Vec<ClientReport>,
+    /// Per-backend proxy breakdown, sorted by backend address (empty
+    /// unless this hub belongs to an L6 proxy tier).
+    pub backends: Vec<BackendReport>,
     /// Jain's fairness index over the per-client `dispatched` counts of
     /// clients that enqueued at least one request: `(Σx)² / (n·Σx²)`,
     /// in `(0, 1]` — 1.0 means perfectly even service, `1/n` means one
@@ -637,6 +757,23 @@ impl MetricsHub {
         counters
     }
 
+    /// Register a proxy backend under `addr` and hand back its
+    /// lock-free counter block (the proxy's forwarding and health paths
+    /// bump it; reports sample it).  Keyed by address: registering the
+    /// same backend twice (a proxy restarting against the same hub)
+    /// shares one counter block.  The backend set comes from operator
+    /// configuration, so — unlike [`MetricsHub::register_client`] — no
+    /// overflow slot is needed.
+    pub fn register_backend(&self, addr: &str) -> Arc<BackendCounters> {
+        let mut g = self.locked();
+        if let Some((_, c)) = g.backends.iter().find(|(a, _)| a == addr) {
+            return Arc::clone(c);
+        }
+        let counters = Arc::new(BackendCounters::default());
+        g.backends.push((addr.to_string(), Arc::clone(&counters)));
+        counters
+    }
+
     /// Record one accepted TCP connection.
     pub fn record_net_connection(&self) {
         // relaxed: independent monotone counter, sampled at report time.
@@ -728,6 +865,20 @@ impl MetricsHub {
         let fairness_index = jain_index(
             clients.iter().filter(|c| c.enqueued > 0).map(|c| c.dispatched as f64),
         );
+        let mut backends: Vec<BackendReport> = g
+            .backends
+            .iter()
+            .map(|(addr, b)| BackendReport {
+                backend: addr.clone(),
+                healthy: b.healthy(),
+                forwarded: sample(&b.forwarded),
+                responses: sample(&b.responses),
+                drained: sample(&b.drained),
+                ejections: sample(&b.ejections),
+                readmissions: sample(&b.readmissions),
+            })
+            .collect();
+        backends.sort_by(|a, b| a.backend.cmp(&b.backend));
         let models = g
             .models
             .iter()
@@ -789,6 +940,7 @@ impl MetricsHub {
             models,
             frontend,
             clients,
+            backends,
             fairness_index,
             stages,
         }
@@ -886,6 +1038,18 @@ impl MetricsReport {
                     c.starved,
                 );
             }
+        }
+        for b in &self.backends {
+            println!(
+                "backend {:<18} {}  {:>7} fwd  {:>7} resp  {:>4} drained  {} ejected / {} readmitted",
+                b.backend,
+                if b.healthy { "up  " } else { "DOWN" },
+                b.forwarded,
+                b.responses,
+                b.drained,
+                b.ejections,
+                b.readmissions,
+            );
         }
         for m in &self.models {
             let epochs: Vec<String> =
@@ -998,6 +1162,23 @@ impl MetricsReport {
             })
             .collect();
         o.insert("clients".to_string(), Json::Arr(clients));
+
+        let backends = self
+            .backends
+            .iter()
+            .map(|b| {
+                let mut bo = BTreeMap::new();
+                bo.insert("backend".to_string(), Json::Str(b.backend.clone()));
+                bo.insert("healthy".to_string(), Json::Bool(b.healthy));
+                bo.insert("forwarded".to_string(), int(b.forwarded));
+                bo.insert("responses".to_string(), int(b.responses));
+                bo.insert("drained".to_string(), int(b.drained));
+                bo.insert("ejections".to_string(), int(b.ejections));
+                bo.insert("readmissions".to_string(), int(b.readmissions));
+                Json::Obj(bo)
+            })
+            .collect();
+        o.insert("backends".to_string(), Json::Arr(backends));
 
         let shards = self
             .shards
@@ -1286,6 +1467,55 @@ mod tests {
         let shards = j.path(&["shards"]).unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
         assert_eq!(shards[1].get("requests").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn backend_counters_and_json_round_trip() {
+        use crate::util::json::Json;
+        let m = MetricsHub::new();
+        // Idle hubs (every non-proxy hub) report an empty array, not a
+        // missing key — wire scrapers can always probe for "backends".
+        let idle = crate::util::json::parse(&m.report().to_json()).unwrap();
+        assert_eq!(idle.path(&["backends"]).unwrap().as_arr().map(|a| a.len()), Some(0));
+
+        let b = m.register_backend("127.0.0.1:7411");
+        assert!(
+            Arc::ptr_eq(&b, &m.register_backend("127.0.0.1:7411")),
+            "re-registration shares one counter block"
+        );
+        b.set_healthy(true);
+        b.record_forwarded();
+        b.record_forwarded();
+        b.record_response();
+        b.record_drained(3);
+        b.record_ejection();
+        assert!(!b.healthy(), "ejection flips the gauge down");
+        b.record_readmission();
+        assert!(b.healthy(), "readmission flips the gauge up");
+        m.register_backend("127.0.0.1:7410");
+
+        let r = m.report();
+        assert_eq!(r.backends.len(), 2);
+        assert_eq!(r.backends[0].backend, "127.0.0.1:7410", "sorted by address");
+        let hot = &r.backends[1];
+        assert_eq!(hot.forwarded, 2);
+        assert_eq!(hot.responses, 1);
+        assert_eq!(hot.drained, 3);
+        assert_eq!(hot.ejections, 1);
+        assert_eq!(hot.readmissions, 1);
+        assert!(hot.healthy);
+
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        let backends = j.path(&["backends"]).unwrap().as_arr().unwrap();
+        assert_eq!(backends.len(), 2);
+        let jb = backends
+            .iter()
+            .find(|b| b.get("backend").unwrap().as_str() == Some("127.0.0.1:7411"))
+            .unwrap();
+        assert_eq!(jb.get("forwarded").unwrap().as_usize(), Some(2));
+        assert_eq!(jb.get("ejections").unwrap().as_usize(), Some(1));
+        assert_eq!(jb.get("readmissions").unwrap().as_usize(), Some(1));
+        assert!(matches!(jb.get("healthy"), Some(Json::Bool(true))));
     }
 
     #[test]

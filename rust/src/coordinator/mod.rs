@@ -37,8 +37,8 @@ pub mod weights;
 pub use batcher::{BatchPolicy, Client, Response, ServeError, Server};
 pub use engine::{BatchExec, Engine, Prediction, SimEngine, SYNTHETIC_SEED};
 pub use metrics::{
-    ClientCounters, ClientReport, FrontendReport, MetricsHub, MetricsReport, ModelReport,
-    ShardReport, StageReport,
+    BackendCounters, BackendReport, ClientCounters, ClientReport, FrontendReport, MetricsHub,
+    MetricsReport, ModelReport, ShardReport, StageReport,
 };
 pub use pool::{EnginePool, SwapHandle};
 pub use registry::{ModelId, ModelRegistry, ModelSpec};

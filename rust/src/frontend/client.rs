@@ -20,15 +20,15 @@
 use std::collections::HashMap;
 use std::fmt;
 use std::io;
-use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
+use super::framing::{self, FramedConn};
 use super::wire::{
-    self, Frame, WireErrorKind, WireHello, WireRequest, WireResponse, WireStats, WireStatus,
-    WireSwap,
+    self, Frame, WireErrorKind, WireRequest, WireResponse, WireStats, WireStatus, WireSwap,
 };
 
 /// Client-local sentinel message: a synthesized response carrying this
@@ -98,8 +98,7 @@ impl fmt::Display for NetError {
 impl std::error::Error for NetError {}
 
 struct Inner {
-    stream: TcpStream,
-    writer: Mutex<TcpStream>,
+    conn: FramedConn,
     pending: Mutex<HashMap<u64, Sender<WireResponse>>>,
     closed: AtomicBool,
     /// The server's typed connection-level rejection, when one arrived
@@ -156,12 +155,7 @@ impl NetClient {
         mode: &str,
         name: &str,
     ) -> io::Result<NetClient> {
-        if name.len() > u16::MAX as usize {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidInput,
-                "client names are limited to 65535 bytes by the wire format",
-            ));
-        }
+        framing::validate_wire_name("client", name)?;
         Self::connect_inner(addr, arch, mode, Some(name))
     }
 
@@ -171,19 +165,12 @@ impl NetClient {
         mode: &str,
         name: Option<&str>,
     ) -> io::Result<NetClient> {
-        if arch.len() > u16::MAX as usize || mode.len() > u16::MAX as usize {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidInput,
-                "arch/mode names are limited to 65535 bytes by the wire format",
-            ));
-        }
-        let stream = TcpStream::connect(addr)?;
-        let _ = stream.set_nodelay(true);
-        let writer = stream.try_clone()?;
-        let read_half = stream.try_clone()?;
+        framing::validate_wire_name("arch/mode", arch)?;
+        framing::validate_wire_name("arch/mode", mode)?;
+        let conn = FramedConn::connect(addr)?;
+        let read_half = conn.read_half()?;
         let inner = Arc::new(Inner {
-            stream,
-            writer: Mutex::new(writer),
+            conn,
             pending: Mutex::new(HashMap::new()),
             closed: AtomicBool::new(false),
             fate: Mutex::new(None),
@@ -195,10 +182,7 @@ impl NetClient {
             // Fire and forget: the server names this connection's
             // fairness slot.  A failed write surfaces on the first
             // request instead.
-            let hello = Frame::Hello(WireHello { id: 0, name: name.to_string() });
-            // The guarded stream handle stays usable after a poison.
-            let mut w = inner.writer.lock().unwrap_or_else(PoisonError::into_inner);
-            let _ = wire::write_frame(&mut *w, &hello);
+            inner.conn.send_hello(name);
         }
         let reader = {
             let inner = Arc::clone(&inner);
@@ -306,7 +290,7 @@ impl NetClient {
 
     /// Register `id` as pending and write `frame`.  The caller's
     /// channel always resolves (shared by [`NetClient::submit_with`]
-    /// and [`NetClient::swap`]):
+    /// and the admin round trips — `swap`, `stats`):
     ///
     /// * reader already closed — the drain may have passed, so resolve
     ///   here with the synthesized outcome (the connection fate is
@@ -320,23 +304,14 @@ impl NetClient {
     ///   `TooManyConnections` — so the eventual synthesized outcome
     ///   carries the right fate instead of racing to a bare disconnect.
     fn send_frame(&self, id: u64, tx: Sender<WireResponse>, frame: &Frame) {
-        // Poison recovery on both guards: the pending map and the
-        // stream handle stay valid, and the resolve guarantee depends
-        // on this registration going through.
+        // Poison recovery on the pending guard: the map stays valid, and
+        // the resolve guarantee depends on this registration going
+        // through.  `FramedConn::send` kills the socket on a failed
+        // write, so the reader exits promptly and its drain resolves
+        // this entry (and every other pending one) with the
+        // connection's fate.  Nothing may hang.
         self.inner.pending.lock().unwrap_or_else(PoisonError::into_inner).insert(id, tx);
-        let write_ok = {
-            let mut w = self.inner.writer.lock().unwrap_or_else(PoisonError::into_inner);
-            wire::write_frame(&mut *w, frame).is_ok()
-        };
-        if !write_ok {
-            // A failed (possibly *partial*) write leaves the stream
-            // unusable — the server may be blocked mid-frame and would
-            // never answer or EOF.  Kill the socket so the reader exits
-            // promptly; its drain then resolves this entry (and every
-            // other pending one) with the connection's fate.  Nothing
-            // may hang.
-            let _ = self.inner.stream.shutdown(Shutdown::Both);
-        }
+        let _ = self.inner.conn.send(frame);
         if self.inner.closed.load(Ordering::SeqCst) {
             let taken =
                 self.inner.pending.lock().unwrap_or_else(PoisonError::into_inner).remove(&id);
@@ -400,7 +375,7 @@ impl NetClient {
     /// Takes `&self` so it composes with an active [`Pipeline`] borrow;
     /// idempotent (a second call is a no-op on a dead socket).
     pub fn abort(&self) {
-        let _ = self.inner.stream.shutdown(Shutdown::Both);
+        self.inner.conn.shutdown();
     }
 
     /// Open a bounded-window pipelined view of this connection: up to
@@ -421,34 +396,25 @@ impl NetClient {
     /// [`NetClient::connect`]: an oversized name must never corrupt the
     /// stream and kill the connection's other in-flight requests).
     pub fn swap(&self, arch: &str, mode: &str, seed: u64) -> Result<u64, NetError> {
-        if arch.len() > u16::MAX as usize || mode.len() > u16::MAX as usize {
+        if framing::validate_wire_name("arch/mode", arch).is_err()
+            || framing::validate_wire_name("arch/mode", mode).is_err()
+        {
             return Err(NetError::Remote {
                 kind: WireErrorKind::BadRequest,
                 message: "arch/mode names are limited to 65535 bytes by the wire format"
                     .to_string(),
             });
         }
-        // relaxed: unique-id mint (see `submit_with`).
-        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        let frame = Frame::Swap(WireSwap {
-            id,
-            arch: arch.to_string(),
-            mode: mode.to_string(),
-            seed,
-        });
-        let (tx, rx) = mpsc::channel();
-        self.send_frame(id, tx, &frame);
-        match rx.recv() {
-            Ok(WireResponse { status: WireStatus::Swapped { epoch }, .. }) => Ok(epoch),
-            Ok(resp) => match Self::resolve(resp) {
-                Err(e) => Err(e),
-                Ok(_) => Err(NetError::Remote {
-                    kind: WireErrorKind::BadRequest,
-                    message: "unexpected inference response to a swap request".to_string(),
-                }),
+        let arch = arch.to_string();
+        let mode = mode.to_string();
+        self.roundtrip(
+            "swap",
+            move |id| Frame::Swap(WireSwap { id, arch, mode, seed }),
+            |resp| match resp {
+                WireResponse { status: WireStatus::Swapped { epoch }, .. } => Ok(epoch),
+                other => Err(other),
             },
-            Err(_) => Err(NetError::Disconnected),
-        }
+        )
     }
 
     /// Scrape the server's live `MetricsReport` as a JSON string
@@ -458,20 +424,50 @@ impl NetClient {
     /// *after* the snapshot, so consecutive scrapes measure disjoint
     /// windows.  Blocks for the answer.  Requires wire v4 on the server.
     pub fn stats(&self, reset: bool) -> Result<String, NetError> {
+        self.roundtrip(
+            "stats",
+            |id| Frame::Stats(WireStats { id, reset }),
+            |resp| match resp {
+                WireResponse { status: WireStatus::Stats { json }, .. } => Ok(json),
+                other => Err(other),
+            },
+        )
+    }
+
+    /// One admin-frame round trip: mint an id, register it pending, send
+    /// the frame, block for the single response, and resolve it.  This
+    /// is the *one* outcome-resolution path for every non-inference
+    /// request ([`NetClient::swap`], [`NetClient::stats`]): a response
+    /// `extract` does not recognize falls through [`NetClient::resolve`]
+    /// — so `Overloaded`, `TooManyConnections`, remote errors, and the
+    /// synthesized disconnect sentinel all map to the same typed
+    /// [`NetError`]s the inference path produces, with no per-caller
+    /// copies to drift apart (regression-tested in
+    /// `tests/client_chaos.rs`).
+    fn roundtrip<T>(
+        &self,
+        what: &str,
+        make: impl FnOnce(u64) -> Frame,
+        extract: impl FnOnce(WireResponse) -> Result<T, WireResponse>,
+    ) -> Result<T, NetError> {
         // relaxed: unique-id mint (see `submit_with`).
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        let frame = Frame::Stats(WireStats { id, reset });
         let (tx, rx) = mpsc::channel();
-        self.send_frame(id, tx, &frame);
+        self.send_frame(id, tx, &make(id));
         match rx.recv() {
-            Ok(WireResponse { status: WireStatus::Stats { json }, .. }) => Ok(json),
-            Ok(resp) => match Self::resolve(resp) {
-                Err(e) => Err(e),
-                Ok(_) => Err(NetError::Remote {
-                    kind: WireErrorKind::BadRequest,
-                    message: "unexpected inference response to a stats request".to_string(),
-                }),
+            Ok(resp) => match extract(resp) {
+                Ok(v) => Ok(v),
+                Err(other) => match Self::resolve(other) {
+                    Err(e) => Err(e),
+                    Ok(_) => Err(NetError::Remote {
+                        kind: WireErrorKind::BadRequest,
+                        message: format!("unexpected inference response to a {what} request"),
+                    }),
+                },
             },
+            // Unreachable for frames sent through `send_frame` (every
+            // pending id is answered or synthesized), kept as the same
+            // defensive mapping `wait` uses.
             Err(_) => Err(NetError::Disconnected),
         }
     }
@@ -479,7 +475,7 @@ impl NetClient {
 
 impl Drop for NetClient {
     fn drop(&mut self) {
-        let _ = self.inner.stream.shutdown(Shutdown::Both);
+        self.inner.conn.shutdown();
         if let Some(h) = self.reader.take() {
             let _ = h.join();
         }

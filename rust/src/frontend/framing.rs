@@ -1,0 +1,172 @@
+//! Shared connection-level framing discipline for the three wire roles.
+//!
+//! The server ([`server`](super::server)), the client
+//! ([`NetClient`](super::client::NetClient)), and the proxy
+//! ([`proxy`](super::proxy)) all speak the same length-prefixed protocol
+//! ([`wire`](super::wire)) over a `TcpStream`, and they all need the
+//! same connection discipline around it:
+//!
+//! * **One serialized writer.**  Frames from many threads must never
+//!   interleave mid-frame; [`FramedConn::send`] takes the write lock,
+//!   and a failed (possibly *partial*) write kills the socket — the
+//!   stream is unusable after a half-written frame, and a prompt close
+//!   is what lets the reading side resolve everything typed instead of
+//!   hanging.
+//! * **The `Hello` handshake.**  A connection may introduce itself by
+//!   name before its first request ([`FramedConn::send_hello`]); the
+//!   write is fire-and-forget because the name only labels fairness
+//!   counters — a dead socket surfaces on the first real request.
+//! * **Name-length validation.**  The wire format carries names in
+//!   `u16`-length fields; [`validate_wire_name`] rejects oversized ones
+//!   *before* they can corrupt a stream mid-frame.
+//! * **The typed refusal.**  A connection over a role's cap is answered
+//!   with one `TooManyConnections{retry_after}` frame and closed
+//!   *gently* ([`refuse_with_retry`]): FIN the write half, drain the
+//!   read half briefly so the peer's concurrent writes cannot RST the
+//!   rejection out of its receive buffer.
+//!
+//! Before this module each role carried its own copy of these rules;
+//! now there is one audited codec path and three thin users.
+
+use std::io::{self, Read};
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::{Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use super::wire::{self, Frame, WireHello, WireResponse, WireStatus};
+
+/// How long one frame write may block before the connection is declared
+/// dead.  A peer that stops *reading* wedges the writing thread
+/// mid-`write_frame`; the timeout bounds how long it can hold whatever
+/// resources sit behind that write (admission permits on the server,
+/// a routing slot on the proxy).
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Total deadline for draining a refused connection's read half: an
+/// over-cap peer trickling bytes must not pin the refusal thread — it
+/// cannot be allowed to hold the very resource the cap protects.
+const REFUSE_DRAIN_DEADLINE: Duration = Duration::from_secs(2);
+
+/// Reject a name too long for the wire format's `u16` length fields.
+/// Run before encoding: an oversized name must never corrupt the stream
+/// and kill the connection's other in-flight requests.
+pub fn validate_wire_name(what: &str, name: &str) -> io::Result<()> {
+    if name.len() > u16::MAX as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("{what} names are limited to 65535 bytes by the wire format"),
+        ));
+    }
+    Ok(())
+}
+
+/// One framed TCP connection with a serialized write path (see module
+/// docs).  Reading stays with the owning role — each role's reader loop
+/// wants different routing — via the cloned handle from
+/// [`FramedConn::read_half`].
+pub struct FramedConn {
+    stream: TcpStream,
+    writer: Mutex<TcpStream>,
+}
+
+impl FramedConn {
+    /// Connect to `addr` and wrap the stream (`TCP_NODELAY` set — every
+    /// frame is a complete message that should leave now).
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<FramedConn> {
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// [`FramedConn::connect`] with a bound on how long the connect may
+    /// block (what the proxy's health loop uses so one dead backend
+    /// cannot stall the probing of the others).
+    pub fn connect_timeout(addr: &SocketAddr, timeout: Duration) -> io::Result<FramedConn> {
+        Self::from_stream(TcpStream::connect_timeout(addr, timeout)?)
+    }
+
+    /// Wrap an already-connected stream.
+    pub fn from_stream(stream: TcpStream) -> io::Result<FramedConn> {
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone()?;
+        Ok(FramedConn { stream, writer: Mutex::new(writer) })
+    }
+
+    /// A cloned handle for the owning role's reader loop.
+    pub fn read_half(&self) -> io::Result<TcpStream> {
+        self.stream.try_clone()
+    }
+
+    /// Bound every write on this connection by `timeout` (the socket's
+    /// send timeout is shared by all cloned handles).
+    pub fn set_write_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.stream.set_write_timeout(timeout)
+    }
+
+    /// Serialize one frame under the write lock.  On failure the socket
+    /// is shut down in both directions: a failed (possibly partial)
+    /// write leaves the stream unusable — the peer may be blocked
+    /// mid-frame and would never answer or EOF — and the prompt close
+    /// makes the owning reader exit and resolve its pending work typed.
+    pub fn send(&self, frame: &Frame) -> io::Result<()> {
+        let res = {
+            // The guarded stream handle stays usable after a poison.
+            let mut w = self.writer.lock().unwrap_or_else(PoisonError::into_inner);
+            wire::write_frame(&mut *w, frame)
+        };
+        if res.is_err() {
+            let _ = self.stream.shutdown(Shutdown::Both);
+        }
+        res
+    }
+
+    /// Fire-and-forget `Hello`: introduce this connection to the peer
+    /// under `name` (labels the server's fairness counters).  A failed
+    /// write is not reported — the dead socket surfaces on the first
+    /// real request instead.
+    pub fn send_hello(&self, name: &str) {
+        let _ = self.send(&Frame::Hello(WireHello { id: 0, name: name.to_string() }));
+    }
+
+    /// Tear the connection down in both directions (idempotent).
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
+/// Answer an over-cap connection with one typed
+/// `TooManyConnections{retry_after}` frame (id 0), then close it
+/// *gently*: write the frame, FIN the write half, and drain the read
+/// half until the peer half-closes or the total deadline passes.  A
+/// hard close would race the peer — its next write hitting a
+/// fully-closed socket elicits an RST, and an RST discards its unread
+/// receive buffer, so the typed rejection the peer was owed would
+/// vanish into a bare disconnect.  Blocks up to ~2 s; callers that must
+/// not stall (accept loops) run it on a short-lived thread.
+pub fn refuse_with_retry(stream: TcpStream, retry_after_ms: u32) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let resp = WireResponse { id: 0, status: WireStatus::TooManyConnections { retry_after_ms } };
+    let mut w = &stream;
+    if wire::write_frame(&mut w, &Frame::Response(resp)).is_ok() {
+        let _ = stream.shutdown(Shutdown::Write);
+        // Drain with a *total* deadline, not just a per-read timeout: a
+        // peer trickling one byte per second must not pin this thread
+        // past the deadline.
+        let deadline = Instant::now() + REFUSE_DRAIN_DEADLINE;
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+        let mut sink = [0u8; 512];
+        let mut r = &stream;
+        while Instant::now() < deadline {
+            match Read::read(&mut r, &mut sink) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    continue
+                }
+                Err(_) => break,
+            }
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}

@@ -15,14 +15,29 @@
 //!   (`Swap` → `Swapped{epoch}` / `UnknownModel`); version 4 adds the
 //!   observability surface (`Stats` → `Stats{json}`), so a live server
 //!   is scraped over the wire instead of killed for its report.
+//! * [`framing`] — the one shared copy of the transport plumbing every
+//!   wire speaker needs: length-prefixed frame I/O over a cloned-socket
+//!   write half ([`framing::FramedConn`]), the write-timeout policy,
+//!   wire-name validation, and the typed `TooManyConnections` refusal
+//!   drain.  Server, client, and proxy all sit on this module, so the
+//!   byte-level behaviors stay audited in exactly one place.
 //! * [`server`] — `TcpListener` accept loop; per-connection reader and
 //!   writer threads pipeline many in-flight requests per connection.
-//!   [`Frontend::spawn`] serves one `(arch, mode)` pool;
-//!   [`Frontend::spawn_registry`] routes per request across every model
-//!   of a [`ModelRegistry`](crate::coordinator::ModelRegistry) and
-//!   honors hot-swap frames.  Connections over
-//!   `FrontendConfig::max_connections` are refused with a typed
-//!   `TooManyConnections{retry_after}` frame, never a silent drop.
+//!   [`ServeConfig`] is the one front-door builder: named knobs for
+//!   cache, admission, fairness, connection caps, metrics, and tracing,
+//!   with [`ServeConfig::serve_pool`] serving one `(arch, mode)` pool
+//!   and [`ServeConfig::serve_registry`] routing per request across
+//!   every model of a
+//!   [`ModelRegistry`](crate::coordinator::ModelRegistry), honoring
+//!   hot-swap frames.  Connections over the connection cap are refused
+//!   with a typed `TooManyConnections{retry_after}` frame, never a
+//!   silent drop.
+//! * [`proxy`] — the L6 routing tier: `odin proxy` listens on the same
+//!   wire protocol and fans requests out across N backend `odin serve`
+//!   processes — hash or least-loaded routing over the healthy set,
+//!   probe/eject/re-admit health tracking with typed drains, and
+//!   fleet-wide `Swap` broadcast (an epoch is acknowledged only once
+//!   every backend installed it).
 //! * [`fairness`] — per-client fair queuing between the readers and the
 //!   pool: every connection owns a bounded queue (a hog backpressures
 //!   only itself) drained by one deficit-round-robin scheduler thread
@@ -57,6 +72,8 @@ pub mod admission;
 pub mod cache;
 pub mod client;
 pub mod fairness;
+pub mod framing;
+pub mod proxy;
 pub mod server;
 pub mod wire;
 
@@ -64,7 +81,9 @@ pub use admission::{AdmissionConfig, AdmissionGate, AdmissionPolicy, Permit};
 pub use cache::{CacheKey, CachedScores, ResponseCache};
 pub use client::{NetClient, NetError, NetResponse, Pipeline};
 pub use fairness::{FairScheduler, FairnessConfig, FairnessPolicy};
-pub use server::{Frontend, FrontendConfig};
+pub use framing::FramedConn;
+pub use proxy::{Proxy, ProxyConfig, RoutePolicy};
+pub use server::{Frontend, FrontendConfig, ServeConfig};
 pub use wire::{
     Frame, WireErrorKind, WireHello, WireRequest, WireResponse, WireStats, WireStatus, WireSwap,
     WIRE_VERSION,

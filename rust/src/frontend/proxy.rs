@@ -1,0 +1,977 @@
+//! L6 routing tier: `odin proxy` — one listener fanning the versioned
+//! wire protocol out across N backend `odin serve` processes.
+//!
+//! ```text
+//!   clients ──▶ proxy accept loop (conn cap ⇒ typed TooManyConnections)
+//!                 │ per client connection: reader + writer thread
+//!                 ▼
+//!          route per request ── Hash (arch, mode, row) ──┐
+//!          (healthy backends    LeastLoaded (in-flight) ─┤
+//!           only)                                        ▼
+//!                               one FramedConn per backend
+//!                               (proxy-minted ids; responses remapped
+//!                                back to each client's own ids)
+//!                 health loop: probe / reconnect / eject / re-admit
+//! ```
+//!
+//! The proxy is a *protocol citizen*, not a new protocol: it listens on
+//! the same wire v4 surface `odin serve` exposes, so every existing
+//! client ([`NetClient`](super::client::NetClient), `odin loadgen`,
+//! `odin stats --addr`) can point at a proxy instead of a server and
+//! observe identical semantics — bit-identical logits included, because
+//! the backends are deterministic per weights epoch and the proxy never
+//! touches payloads.
+//!
+//! **Routing.**  [`RoutePolicy::Hash`] routes by an FNV-1a hash of
+//! `(arch, mode, row)` over the currently healthy backends: replicas of
+//! a hot model share its load while identical rows keep landing on the
+//! same backend, so per-backend response caches stay hot.
+//! [`RoutePolicy::LeastLoaded`] picks the healthy backend with the
+//! fewest proxied requests in flight.  With no healthy backend the
+//! request is answered with a typed `Overloaded{retry_after}` — the
+//! retryable outcome clients already handle.
+//!
+//! **Health, drain, eject, re-admit.**  Each backend link is probed
+//! every [`ProxyConfig::health_interval`] with a `Stats` frame;
+//! [`ProxyConfig::eject_after`] consecutive failures eject the backend
+//! (a lost connection ejects immediately).  Ejection tears the link
+//! down and *drains* it: every in-flight request forwarded there is
+//! answered with `Overloaded{retry_after}` — typed, so pipelined
+//! clients retry and the router sends the retry to a surviving replica;
+//! nothing hangs and nothing is silently dropped (the same guarantee
+//! [`NetClient`](super::client::NetClient) gives, one tier up).  The
+//! health loop keeps reconnecting; a backend that answers a probe again
+//! is re-admitted.  Both transitions are counted per backend
+//! ([`BackendCounters`]) and scrapeable via `Stats`.
+//!
+//! **Swap broadcast.**  A `Swap` frame is forwarded to *every* backend
+//! — ejected ones fail it — and `Swapped{epoch}` is acknowledged only
+//! after all of them installed the same epoch.  Partial installs and
+//! epoch divergence are answered as typed errors naming the stragglers,
+//! so a client that sees `Swapped` knows the weights generation
+//! advanced fleet-wide.  Broadcasts are serialized by one lock, so
+//! concurrent swaps cannot interleave their per-backend installs.
+//! Re-admission does **not** replay swaps a backend missed while
+//! ejected: its next broadcast surfaces as an epoch divergence error
+//! until the operator restarts or re-syncs it.
+//!
+//! **Stats.**  `Stats` frames are answered from the proxy's *own*
+//! [`MetricsHub`] — per-backend forward/drain/eject/readmit counters
+//! (`"backends"` in the JSON) plus a `request` stage summary of
+//! forward→response turnarounds — not proxied, so scraping the proxy
+//! and scraping a backend answer different questions (tier vs engine).
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex, PoisonError, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::metrics::BackendCounters;
+use crate::coordinator::MetricsHub;
+use crate::util::trace::Stage;
+
+use super::framing::{FramedConn, WRITE_TIMEOUT};
+use super::wire::{
+    self, Frame, WireErrorKind, WireRequest, WireResponse, WireStats, WireStatus, WireSwap,
+};
+
+/// Bound on one backend connect attempt, so a black-holed backend
+/// cannot stall the health loop's probing of the others.
+const BACKEND_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// How long a health probe waits for its `Stats` answer.
+const PING_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// How long a broadcast waits per backend for its `Swapped` answer
+/// (weight reloads are slow; matches the client-side write bound).
+const SWAP_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Granularity of the health loop's stop-flag checks while sleeping.
+const HEALTH_NAP: Duration = Duration::from_millis(50);
+
+/// How requests are spread across healthy backends.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// FNV-1a hash of `(arch, mode, row)` modulo the healthy backends:
+    /// deterministic, spreads load, and keeps identical rows on the
+    /// same backend so its response cache stays hot.
+    #[default]
+    Hash,
+    /// The healthy backend with the fewest proxied requests in flight.
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    /// Parse the CLI spelling (`hash` | `least-loaded`).
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        match s {
+            "hash" => Ok(RoutePolicy::Hash),
+            "least-loaded" | "least_loaded" => Ok(RoutePolicy::LeastLoaded),
+            other => bail!("unknown routing policy {other:?} (expected hash|least-loaded)"),
+        }
+    }
+
+    /// The canonical CLI spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoutePolicy::Hash => "hash",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Proxy configuration: routing policy, health cadence, and client
+/// connection governance.
+#[derive(Clone, Copy, Debug)]
+pub struct ProxyConfig {
+    /// How requests are spread across healthy backends.
+    pub policy: RoutePolicy,
+    /// Cadence of per-backend health probes (and reconnect attempts for
+    /// ejected backends).
+    pub health_interval: Duration,
+    /// Consecutive failed probes before a live-but-unresponsive backend
+    /// is ejected (a lost connection ejects immediately).
+    pub eject_after: u32,
+    /// Backoff hint carried by synthesized `Overloaded` outcomes (no
+    /// healthy backend, or a backend died under an in-flight request).
+    pub retry_after_ms: u32,
+    /// Max concurrently open client connections; one past the cap gets
+    /// the same typed `TooManyConnections` refusal the server sends.
+    pub max_connections: usize,
+    /// Backoff hint carried by `TooManyConnections` refusals (ms).
+    pub conn_retry_after_ms: u32,
+}
+
+impl Default for ProxyConfig {
+    fn default() -> Self {
+        ProxyConfig {
+            policy: RoutePolicy::Hash,
+            health_interval: Duration::from_millis(200),
+            eject_after: 3,
+            retry_after_ms: 25,
+            max_connections: 1024,
+            conn_retry_after_ms: 50,
+        }
+    }
+}
+
+/// Where a relayed response goes: back to a client connection (under
+/// the client's own request id) or to an in-proxy waiter (health probe,
+/// swap broadcast).
+enum Dest {
+    /// A client's request: remap to its original id and hand it to the
+    /// connection's writer.
+    Client {
+        id: u64,
+        tx: Sender<WireResponse>,
+    },
+    /// An internal round trip; the waiter matches on status only.
+    Internal {
+        tx: Sender<WireResponse>,
+    },
+}
+
+/// One forwarded frame awaiting its backend response.
+struct Relay {
+    dest: Dest,
+    /// When the frame was forwarded; closes the proxy's `request` stage
+    /// sample (forward→response turnaround) for client relays.
+    forwarded: Instant,
+}
+
+impl Relay {
+    /// Deliver `status` to wherever this relay was headed.  Send errors
+    /// are ignored: a gone waiter (disconnected client) needs nothing.
+    fn resolve(self, status: WireStatus) {
+        match self.dest {
+            Dest::Client { id, tx } => {
+                let _ = tx.send(WireResponse { id, status });
+            }
+            Dest::Internal { tx } => {
+                let _ = tx.send(WireResponse { id: 0, status });
+            }
+        }
+    }
+
+    fn is_client(&self) -> bool {
+        matches!(self.dest, Dest::Client { .. })
+    }
+}
+
+/// One live connection to a backend.  Proxy-minted ids key the pending
+/// map; the backend reader remaps them back per [`Relay`].
+struct Link {
+    conn: FramedConn,
+    pending: Mutex<HashMap<u64, Relay>>,
+    next_id: AtomicU64,
+    /// Set by the backend reader *before* it drains the pending map, so
+    /// a concurrent forward either lands before the drain (resolved
+    /// there) or sees the flag and resolves itself — exactly one
+    /// synthesized response either way (the `NetClient` discipline).
+    closed: AtomicBool,
+}
+
+/// One configured backend: its address, current link (if connected),
+/// health state, and counters.
+struct Backend {
+    addr: String,
+    sockaddr: SocketAddr,
+    link: Mutex<Option<Arc<Link>>>,
+    /// Routability flag — the router only picks backends with this set.
+    healthy: AtomicBool,
+    /// Consecutive failed health probes (reset by any success).
+    strikes: AtomicU32,
+    /// Proxied client requests currently in flight (least-loaded
+    /// routing's gauge; internal probes don't count as load).
+    in_flight: AtomicU64,
+    counters: Arc<BackendCounters>,
+}
+
+struct Shared {
+    stop: AtomicBool,
+    backends: Vec<Arc<Backend>>,
+    policy: RoutePolicy,
+    retry_after_ms: u32,
+    max_connections: usize,
+    conn_retry_after_ms: u32,
+    metrics: MetricsHub,
+    /// Read-half handles of live client connections, kept weakly so a
+    /// finished connection closes immediately; `shutdown` upgrades
+    /// whatever is still alive to unblock the readers.
+    conns: Mutex<Vec<Weak<TcpStream>>>,
+    /// Serializes swap broadcasts: two concurrent swaps must not
+    /// interleave their per-backend installs, or the fleet could
+    /// acknowledge epochs it never uniformly held.
+    swap_lock: Mutex<()>,
+}
+
+/// A running proxy tier (see module docs).  The proxy owns only its
+/// connections and threads — backends are separate processes it speaks
+/// wire protocol to.
+pub struct Proxy {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<Vec<JoinHandle<()>>>>,
+    health: Option<JoinHandle<()>>,
+}
+
+impl Proxy {
+    /// Bind `listen` and route across `backends` (`host:port` each).
+    /// Backends reachable right now are routable immediately; the rest
+    /// stay ejected until the health loop connects them.  Per-backend
+    /// counters are registered on `metrics` (scrapeable via `Stats`).
+    pub fn spawn(
+        listen: &str,
+        backends: &[String],
+        cfg: ProxyConfig,
+        metrics: MetricsHub,
+    ) -> Result<Proxy> {
+        ensure!(!backends.is_empty(), "odin proxy needs at least one backend address");
+        let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let mut slots = Vec::with_capacity(backends.len());
+        for spec in backends {
+            let sockaddr = spec
+                .to_socket_addrs()
+                .with_context(|| format!("resolving backend {spec}"))?
+                .next()
+                .with_context(|| format!("backend {spec} resolves to no address"))?;
+            slots.push(Arc::new(Backend {
+                addr: spec.clone(),
+                sockaddr,
+                link: Mutex::new(None),
+                healthy: AtomicBool::new(false),
+                strikes: AtomicU32::new(0),
+                in_flight: AtomicU64::new(0),
+                counters: metrics.register_backend(spec),
+            }));
+        }
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            backends: slots,
+            policy: cfg.policy,
+            retry_after_ms: cfg.retry_after_ms,
+            max_connections: cfg.max_connections.max(1),
+            conn_retry_after_ms: cfg.conn_retry_after_ms,
+            metrics,
+            conns: Mutex::new(Vec::new()),
+            swap_lock: Mutex::new(()),
+        });
+        // Initial admission: connect what answers now, without counting
+        // a "readmission" — these backends were never ejected.
+        for b in &shared.backends {
+            if Self::connect_backend(&shared, b).is_some() {
+                b.healthy.store(true, Ordering::SeqCst);
+                b.counters.set_healthy(true);
+            }
+        }
+        let health = {
+            let shared = Arc::clone(&shared);
+            let interval = cfg.health_interval.max(Duration::from_millis(10));
+            let eject_after = cfg.eject_after.max(1);
+            std::thread::Builder::new()
+                .name("odin-proxy-health".into())
+                .spawn(move || Self::health_loop(shared, interval, eject_after))
+                .context("spawning proxy health thread")?
+        };
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("odin-proxy-accept".into())
+                .spawn(move || Self::accept_loop(listener, shared))
+                .context("spawning proxy accept thread")?
+        };
+        Ok(Proxy { addr, shared, accept: Some(accept), health: Some(health) })
+    }
+
+    /// The address the proxy actually bound (resolves `:0` ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Configured backends (healthy or not).
+    pub fn backends(&self) -> usize {
+        self.shared.backends.len()
+    }
+
+    /// Backends currently routable.
+    pub fn healthy_backends(&self) -> usize {
+        self.shared.backends.iter().filter(|b| b.healthy.load(Ordering::SeqCst)).count()
+    }
+
+    // ---- client side -----------------------------------------------
+
+    fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Vec<JoinHandle<()>> {
+        let mut handles = Vec::new();
+        loop {
+            let stream = match listener.accept() {
+                Ok((stream, _peer)) => stream,
+                Err(_) => {
+                    if shared.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Persistent accept errors (fd exhaustion) must not
+                    // busy-spin a core.
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            };
+            // The shutdown wake-up connect lands here with `stop` set.
+            if shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            handles.retain(|h: &JoinHandle<()>| !h.is_finished());
+            if handles.len() >= shared.max_connections {
+                // Same typed refusal the server gives, same shared path.
+                shared.metrics.record_conn_rejected();
+                let retry_after_ms = shared.conn_retry_after_ms;
+                let spawned = std::thread::Builder::new()
+                    .name("odin-proxy-reject".into())
+                    .spawn(move || super::framing::refuse_with_retry(stream, retry_after_ms));
+                drop(spawned);
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            shared.metrics.record_net_connection();
+            let read_half = Arc::new(stream);
+            {
+                // Weak handles only, so a poisoned guard is still
+                // structurally valid — recover rather than refuse.
+                let mut conns = shared.conns.lock().unwrap_or_else(PoisonError::into_inner);
+                conns.retain(|w| w.strong_count() > 0);
+                conns.push(Arc::downgrade(&read_half));
+            }
+            let sh = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name("odin-proxy-conn".into())
+                .spawn(move || Self::client_connection(read_half, sh));
+            if let Ok(h) = spawned {
+                handles.push(h);
+            }
+        }
+        handles
+    }
+
+    /// One client connection: this thread reads and routes frames; a
+    /// paired writer thread answers them.  The writer channel is
+    /// unbounded so a backend reader relaying a response can never
+    /// block behind a slow client; `WRITE_TIMEOUT` bounds how long a
+    /// non-reading client can grow that queue before its connection is
+    /// torn down.
+    fn client_connection(read_half: Arc<TcpStream>, shared: Arc<Shared>) {
+        let write_half = match read_half.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let _ = write_half.set_write_timeout(Some(WRITE_TIMEOUT));
+        let (wtx, wrx) = mpsc::channel::<WireResponse>();
+        let writer = {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("odin-proxy-writer".into())
+                .spawn(move || Self::client_writer(write_half, wrx, sh))
+        };
+        let writer = match writer {
+            Ok(h) => h,
+            Err(_) => return,
+        };
+        let mut reader = &*read_half;
+        loop {
+            match wire::read_frame(&mut reader) {
+                Ok(Some(Frame::Request(req))) => {
+                    if Self::handle_request(&shared, req, &wtx).is_err() {
+                        break;
+                    }
+                }
+                Ok(Some(Frame::Swap(swap))) => {
+                    if Self::handle_swap(&shared, swap, &wtx).is_err() {
+                        break;
+                    }
+                }
+                Ok(Some(Frame::Stats(stats))) => {
+                    // Answered from the proxy's own hub: the tier view
+                    // (per-backend counters, forward→response stage),
+                    // not any single backend's engine view.
+                    let json = shared.metrics.report_with_stage_reset(stats.reset).to_json();
+                    let resp = WireResponse { id: stats.id, status: WireStatus::Stats { json } };
+                    if wtx.send(resp).is_err() {
+                        break;
+                    }
+                }
+                // The proxy has no fair scheduler; connection names are
+                // a server concern.  Tolerate and move on.
+                Ok(Some(Frame::Hello(_))) => {}
+                Ok(Some(Frame::Response(resp))) => {
+                    let answer = WireResponse {
+                        id: resp.id,
+                        status: WireStatus::Error {
+                            kind: WireErrorKind::BadRequest,
+                            message: "unexpected response frame from client".to_string(),
+                        },
+                    };
+                    if wtx.send(answer).is_err() {
+                        break;
+                    }
+                }
+                Ok(None) | Err(_) => break,
+            }
+        }
+        drop(wtx);
+        // In-flight relays still hold writer-channel clones; each
+        // resolves within a bounded time (backend answer, or the drain
+        // when a backend dies), so this join is bounded too.
+        let _ = writer.join();
+        let _ = read_half.shutdown(Shutdown::Both);
+    }
+
+    fn client_writer(mut stream: TcpStream, wrx: Receiver<WireResponse>, shared: Arc<Shared>) {
+        while let Ok(resp) = wrx.recv() {
+            if wire::write_frame(&mut stream, &Frame::Response(resp)).is_err() {
+                // Dead client socket: exiting drops the queued
+                // responses; the backends already did their work.
+                break;
+            }
+            shared.metrics.record_net_response();
+        }
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+
+    /// Route one client request to a healthy backend.  `Err` means the
+    /// client's writer is gone (connection closed).
+    fn handle_request(
+        shared: &Shared,
+        req: WireRequest,
+        wtx: &Sender<WireResponse>,
+    ) -> std::result::Result<(), ()> {
+        let id = req.id;
+        let forwarded = match Self::pick(shared, &req) {
+            Some(backend) => Self::forward(shared, &backend, req, wtx),
+            None => false,
+        };
+        if forwarded {
+            return Ok(());
+        }
+        // No healthy backend (or the picked link vanished between the
+        // health check and the forward): the typed retryable outcome.
+        let resp = WireResponse {
+            id,
+            status: WireStatus::Overloaded { retry_after_ms: shared.retry_after_ms },
+        };
+        wtx.send(resp).map_err(|_| ())
+    }
+
+    /// Pick a backend for `req` among the currently healthy ones.
+    fn pick(shared: &Shared, req: &WireRequest) -> Option<Arc<Backend>> {
+        let healthy: Vec<&Arc<Backend>> =
+            shared.backends.iter().filter(|b| b.healthy.load(Ordering::SeqCst)).collect();
+        if healthy.is_empty() {
+            return None;
+        }
+        let chosen = match shared.policy {
+            RoutePolicy::Hash => {
+                let h = route_hash(&req.arch, &req.mode, &req.row);
+                healthy.get((h % healthy.len() as u64) as usize).copied()
+            }
+            RoutePolicy::LeastLoaded => healthy
+                .iter()
+                // relaxed: advisory load gauge; a slightly stale read
+                // only shifts which replica absorbs the next request.
+                .min_by_key(|b| b.in_flight.load(Ordering::Relaxed))
+                .copied(),
+        };
+        chosen.cloned()
+    }
+
+    /// Forward `req` on `backend`'s link under a proxy-minted id.
+    /// Returns `false` when the backend has no live link (the caller
+    /// synthesizes `Overloaded`); `true` means the relay is registered
+    /// and **will** resolve — by the backend's response, by the
+    /// reader's drain, or right here when the link closed under us.
+    fn forward(
+        shared: &Shared,
+        backend: &Arc<Backend>,
+        req: WireRequest,
+        wtx: &Sender<WireResponse>,
+    ) -> bool {
+        let link = {
+            let g = backend.link.lock().unwrap_or_else(PoisonError::into_inner);
+            g.clone()
+        };
+        let link = match link {
+            Some(l) if !l.closed.load(Ordering::SeqCst) => l,
+            _ => return false,
+        };
+        // relaxed: the counter only mints unique ids; nothing orders on it.
+        let pid = link.next_id.fetch_add(1, Ordering::Relaxed);
+        let relay =
+            Relay { dest: Dest::Client { id: req.id, tx: wtx.clone() }, forwarded: Instant::now() };
+        link.pending.lock().unwrap_or_else(PoisonError::into_inner).insert(pid, relay);
+        // relaxed: advisory load gauge for least-loaded routing.
+        backend.in_flight.fetch_add(1, Ordering::Relaxed);
+        let mut wire_req = req;
+        wire_req.id = pid;
+        if link.conn.send(&Frame::Request(wire_req)).is_ok() {
+            backend.counters.record_forwarded();
+        }
+        // `send` killed the socket on failure, so the reader exits and
+        // drains.  If it already closed, the drain may have passed this
+        // entry — resolve it ourselves; removal under the pending lock
+        // means the drain and this path can never both answer one id.
+        if link.closed.load(Ordering::SeqCst) {
+            let taken =
+                link.pending.lock().unwrap_or_else(PoisonError::into_inner).remove(&pid);
+            if let Some(relay) = taken {
+                // relaxed: advisory load gauge for least-loaded routing.
+                backend.in_flight.fetch_sub(1, Ordering::Relaxed);
+                relay.resolve(WireStatus::Overloaded { retry_after_ms: shared.retry_after_ms });
+            }
+        }
+        true
+    }
+
+    /// Broadcast one swap to every backend and acknowledge only a
+    /// fleet-wide install (see module docs).  `Err` means the client's
+    /// writer is gone.
+    fn handle_swap(
+        shared: &Shared,
+        swap: WireSwap,
+        wtx: &Sender<WireResponse>,
+    ) -> std::result::Result<(), ()> {
+        // Plain data behind the guard; recover a poison and keep
+        // serializing broadcasts.
+        let _fleet = shared.swap_lock.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut installed: Vec<(String, u64)> = Vec::new();
+        let mut failures: Vec<(String, WireStatus)> = Vec::new();
+        for b in &shared.backends {
+            match Self::swap_on(b, &swap) {
+                Ok(epoch) => installed.push((b.addr.clone(), epoch)),
+                Err(status) => failures.push((b.addr.clone(), status)),
+            }
+        }
+        let status = if installed.is_empty() {
+            match failures.into_iter().next() {
+                // Every backend refused the same way (unknown model, bad
+                // request): relay the first backend's own typed answer,
+                // preserving single-server semantics.
+                Some((_, status)) => status,
+                None => WireStatus::Error {
+                    kind: WireErrorKind::Backend,
+                    message: "proxy has no backends".to_string(),
+                },
+            }
+        } else if !failures.is_empty() {
+            let who: Vec<String> =
+                failures.iter().map(|(a, s)| format!("{a}: {}", status_brief(s))).collect();
+            WireStatus::Error {
+                kind: WireErrorKind::Backend,
+                message: format!(
+                    "swap reached only part of the fleet (an epoch is acknowledged only when \
+                     every backend installs it): {}",
+                    who.join("; ")
+                ),
+            }
+        } else {
+            let first = installed.first().map(|(_, e)| *e).unwrap_or(0);
+            if installed.iter().all(|(_, e)| *e == first) {
+                WireStatus::Swapped { epoch: first }
+            } else {
+                let list: Vec<String> =
+                    installed.iter().map(|(a, e)| format!("{a}@{e}")).collect();
+                WireStatus::Error {
+                    kind: WireErrorKind::Backend,
+                    message: format!("fleet weights epochs diverged after swap: {}", list.join(", ")),
+                }
+            }
+        };
+        wtx.send(WireResponse { id: swap.id, status }).map_err(|_| ())
+    }
+
+    /// One backend's install of a broadcast swap: an internal round
+    /// trip that must come back `Swapped`.
+    fn swap_on(backend: &Arc<Backend>, swap: &WireSwap) -> std::result::Result<u64, WireStatus> {
+        let unreachable = |what: &str| WireStatus::Error {
+            kind: WireErrorKind::Backend,
+            message: format!("backend {} {what}", backend.addr),
+        };
+        let link = {
+            let g = backend.link.lock().unwrap_or_else(PoisonError::into_inner);
+            g.clone()
+        };
+        let link = match link {
+            Some(l) if !l.closed.load(Ordering::SeqCst) => l,
+            _ => return Err(unreachable("is ejected")),
+        };
+        let (tx, rx) = mpsc::channel();
+        // relaxed: the counter only mints unique ids; nothing orders on it.
+        let pid = link.next_id.fetch_add(1, Ordering::Relaxed);
+        let relay = Relay { dest: Dest::Internal { tx }, forwarded: Instant::now() };
+        link.pending.lock().unwrap_or_else(PoisonError::into_inner).insert(pid, relay);
+        let frame = Frame::Swap(WireSwap {
+            id: pid,
+            arch: swap.arch.clone(),
+            mode: swap.mode.clone(),
+            seed: swap.seed,
+        });
+        if link.conn.send(&frame).is_err() {
+            let _ = link.pending.lock().unwrap_or_else(PoisonError::into_inner).remove(&pid);
+            return Err(unreachable("dropped the connection mid-swap"));
+        }
+        match rx.recv_timeout(SWAP_TIMEOUT) {
+            Ok(WireResponse { status: WireStatus::Swapped { epoch }, .. }) => Ok(epoch),
+            Ok(WireResponse { status, .. }) => Err(status),
+            Err(_) => {
+                let _ =
+                    link.pending.lock().unwrap_or_else(PoisonError::into_inner).remove(&pid);
+                Err(unreachable("timed out installing the swap"))
+            }
+        }
+    }
+
+    // ---- backend side ----------------------------------------------
+
+    /// Open a link to `backend`, introduce the proxy by name, and start
+    /// its reader.  The reader thread is detached: it exits as soon as
+    /// its socket dies, and teardown closes every socket.
+    fn connect_backend(shared: &Arc<Shared>, backend: &Arc<Backend>) -> Option<Arc<Link>> {
+        let conn = FramedConn::connect_timeout(&backend.sockaddr, BACKEND_CONNECT_TIMEOUT).ok()?;
+        let _ = conn.set_write_timeout(Some(WRITE_TIMEOUT));
+        let stream = conn.read_half().ok()?;
+        conn.send_hello("odin-proxy");
+        let link = Arc::new(Link {
+            conn,
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            closed: AtomicBool::new(false),
+        });
+        let spawned = {
+            let link = Arc::clone(&link);
+            let backend = Arc::clone(backend);
+            let shared = Arc::clone(shared);
+            std::thread::Builder::new()
+                .name("odin-proxy-backend".into())
+                .spawn(move || Self::backend_reader(stream, link, backend, shared))
+        };
+        if spawned.is_err() {
+            link.conn.shutdown();
+            return None;
+        }
+        *backend.link.lock().unwrap_or_else(PoisonError::into_inner) = Some(Arc::clone(&link));
+        Some(link)
+    }
+
+    /// Relay every response frame a backend sends back to its waiter;
+    /// on EOF/error, drain the pending map typed and eject the backend.
+    fn backend_reader(
+        mut stream: TcpStream,
+        link: Arc<Link>,
+        backend: Arc<Backend>,
+        shared: Arc<Shared>,
+    ) {
+        loop {
+            match wire::read_frame(&mut stream) {
+                Ok(Some(Frame::Response(resp))) => {
+                    let relay = link
+                        .pending
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .remove(&resp.id);
+                    if let Some(relay) = relay {
+                        if relay.is_client() {
+                            // relaxed: advisory load gauge.
+                            backend.in_flight.fetch_sub(1, Ordering::Relaxed);
+                            backend.counters.record_response();
+                            // A served response is proof of life.
+                            // relaxed: health-loop bookkeeping; the
+                            // probe cycle re-reads it every interval.
+                            backend.strikes.store(0, Ordering::Relaxed);
+                            let us = relay.forwarded.elapsed().as_secs_f64() * 1e6;
+                            shared.metrics.record_stage(Stage::Request, us);
+                        }
+                        relay.resolve(resp.status);
+                    }
+                }
+                // Backends never send requests, swaps, hellos, or stats
+                // queries; tolerate and move on.
+                Ok(Some(_)) => {}
+                Ok(None) | Err(_) => break,
+            }
+        }
+        // Closed *before* draining (see `Link::closed`).
+        link.closed.store(true, Ordering::SeqCst);
+        let drained: Vec<(u64, Relay)> = link
+            .pending
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .drain()
+            .collect();
+        let mut dropped = 0u64;
+        for (_pid, relay) in drained {
+            if relay.is_client() {
+                // relaxed: advisory load gauge.
+                backend.in_flight.fetch_sub(1, Ordering::Relaxed);
+                dropped += 1;
+            }
+            // The retryable typed outcome: pipelined clients re-submit
+            // and the router sends the retry to a surviving replica.
+            relay.resolve(WireStatus::Overloaded { retry_after_ms: shared.retry_after_ms });
+        }
+        if dropped > 0 {
+            backend.counters.record_drained(dropped);
+        }
+        // A lost connection is an immediate ejection (no strike budget:
+        // there is no link to route on).  `swap` keeps the transition
+        // counted exactly once against concurrent eject paths.
+        if backend.healthy.swap(false, Ordering::SeqCst) {
+            backend.counters.record_ejection();
+        }
+        // Clear the slot (unless a reconnect already replaced it) so
+        // the health loop knows to dial again.
+        let mut g = backend.link.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(current) = g.as_ref() {
+            if Arc::ptr_eq(current, &link) {
+                *g = None;
+            }
+        }
+    }
+
+    // ---- health ----------------------------------------------------
+
+    fn health_loop(shared: Arc<Shared>, interval: Duration, eject_after: u32) {
+        while !shared.stop.load(Ordering::SeqCst) {
+            for b in &shared.backends {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                Self::health_check(&shared, b, eject_after);
+            }
+            // Nap in small steps so shutdown never waits a full interval.
+            let deadline = Instant::now() + interval;
+            while Instant::now() < deadline {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(HEALTH_NAP.min(interval));
+            }
+        }
+    }
+
+    /// One probe of one backend: ping a live link (strike / eject on
+    /// failure), or try to reconnect an ejected one (re-admit on a
+    /// successful probe).
+    fn health_check(shared: &Arc<Shared>, backend: &Arc<Backend>, eject_after: u32) {
+        let link = {
+            let g = backend.link.lock().unwrap_or_else(PoisonError::into_inner);
+            g.clone()
+        };
+        match link {
+            Some(link) if !link.closed.load(Ordering::SeqCst) => {
+                if Self::ping(&link) {
+                    // relaxed: health-loop bookkeeping.
+                    backend.strikes.store(0, Ordering::Relaxed);
+                    if !backend.healthy.swap(true, Ordering::SeqCst) {
+                        backend.counters.record_readmission();
+                    }
+                } else {
+                    // relaxed: health-loop bookkeeping (this thread is
+                    // the only adder; responses reset it).
+                    let strikes = backend.strikes.fetch_add(1, Ordering::Relaxed) + 1;
+                    if strikes >= eject_after {
+                        if backend.healthy.swap(false, Ordering::SeqCst) {
+                            backend.counters.record_ejection();
+                        }
+                        // Tearing the socket makes the reader drain the
+                        // pending map typed — eject *is* drain.
+                        link.conn.shutdown();
+                    }
+                }
+            }
+            _ => {
+                if let Some(link) = Self::connect_backend(shared, backend) {
+                    if Self::ping(&link) {
+                        // relaxed: health-loop bookkeeping.
+                        backend.strikes.store(0, Ordering::Relaxed);
+                        if !backend.healthy.swap(true, Ordering::SeqCst) {
+                            backend.counters.record_readmission();
+                        }
+                    }
+                    // A connect that can't answer a probe stays ejected;
+                    // the link lives on for the next cycle's probe.
+                }
+            }
+        }
+    }
+
+    /// One `Stats` round trip as a liveness probe.  Strict: only a
+    /// `Stats` answer counts — a drain-synthesized `Overloaded` must
+    /// not read as proof of life.
+    fn ping(link: &Arc<Link>) -> bool {
+        let (tx, rx) = mpsc::channel();
+        // relaxed: the counter only mints unique ids; nothing orders on it.
+        let pid = link.next_id.fetch_add(1, Ordering::Relaxed);
+        let relay = Relay { dest: Dest::Internal { tx }, forwarded: Instant::now() };
+        link.pending.lock().unwrap_or_else(PoisonError::into_inner).insert(pid, relay);
+        let sent = link.conn.send(&Frame::Stats(WireStats { id: pid, reset: false })).is_ok();
+        let ok = sent
+            && matches!(
+                rx.recv_timeout(PING_TIMEOUT),
+                Ok(WireResponse { status: WireStatus::Stats { .. }, .. })
+            );
+        if !ok {
+            let _ = link.pending.lock().unwrap_or_else(PoisonError::into_inner).remove(&pid);
+        }
+        ok
+    }
+
+    // ---- teardown --------------------------------------------------
+
+    /// Stop accepting, sever every client connection and backend link,
+    /// and join the proxy's threads.  Backends are separate processes
+    /// and keep running.
+    pub fn shutdown(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection (a
+        // wildcard bind address is not connectable; use loopback).
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(wake);
+        let conn_handles = self.accept.take().map(|h| h.join().unwrap_or_default());
+        // Sever surviving client connections (poison-recovering: the
+        // registry holds only Weak handles).
+        for conn in
+            self.shared.conns.lock().unwrap_or_else(PoisonError::into_inner).drain(..)
+        {
+            if let Some(stream) = conn.upgrade() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        if let Some(handles) = conn_handles {
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        // Sever backend links; their (detached) readers drain whatever
+        // is still pending and exit.
+        for b in &self.shared.backends {
+            let link = {
+                let g = b.link.lock().unwrap_or_else(PoisonError::into_inner);
+                g.clone()
+            };
+            if let Some(link) = link {
+                link.conn.shutdown();
+            }
+        }
+        if let Some(h) = self.health.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Proxy {
+    fn drop(&mut self) {
+        if self.accept.is_some() || self.health.is_some() {
+            self.stop_impl();
+        }
+    }
+}
+
+/// FNV-1a over `(arch, 0xff, mode, 0xff, row)`: deterministic routing
+/// with row affinity (the separators keep `("ab","c")` and `("a","bc")`
+/// from colliding by construction).
+fn route_hash(arch: &str, mode: &str, row: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let chunks: [&[u8]; 5] = [arch.as_bytes(), &[0xff], mode.as_bytes(), &[0xff], row];
+    for chunk in chunks {
+        for &b in chunk {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Short human rendering of a backend's failure status for the
+/// partial-fleet swap error message.
+fn status_brief(status: &WireStatus) -> String {
+    match status {
+        WireStatus::Error { kind, message } => format!("{kind:?}: {message}"),
+        WireStatus::Overloaded { .. } => "connection lost mid-swap".to_string(),
+        other => format!("unexpected answer {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_hash_is_deterministic_and_separator_safe() {
+        let a = route_hash("cnn1", "fast", &[1, 2, 3]);
+        assert_eq!(a, route_hash("cnn1", "fast", &[1, 2, 3]));
+        assert_ne!(a, route_hash("cnn1", "fast", &[1, 2, 4]));
+        assert_ne!(route_hash("ab", "c", &[]), route_hash("a", "bc", &[]));
+    }
+
+    #[test]
+    fn route_policy_parses_cli_spellings() {
+        assert_eq!(RoutePolicy::parse("hash").unwrap(), RoutePolicy::Hash);
+        assert_eq!(RoutePolicy::parse("least-loaded").unwrap(), RoutePolicy::LeastLoaded);
+        assert_eq!(RoutePolicy::parse("least_loaded").unwrap(), RoutePolicy::LeastLoaded);
+        assert!(RoutePolicy::parse("round-robin").is_err());
+        assert_eq!(RoutePolicy::default().as_str(), "hash");
+        assert_eq!(RoutePolicy::LeastLoaded.as_str(), "least-loaded");
+    }
+}

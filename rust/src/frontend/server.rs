@@ -62,8 +62,9 @@
 //! first request; the name labels its fairness counters in the metrics
 //! (else it reports as `conn-N`).
 //!
-//! **Routing.**  A front-end built with [`Frontend::spawn`] serves one
-//! `(arch, mode)` pair; one built with [`Frontend::spawn_registry`]
+//! **Routing.**  A front-end built with [`ServeConfig::serve_pool`]
+//! serves one `(arch, mode)` pair; one built with
+//! [`ServeConfig::serve_registry`]
 //! routes each request by its `(arch, mode)` to the matching pool of a
 //! [`ModelRegistry`] — several models behind one listener, each with
 //! hot-swappable, epoch-versioned weights (swap frames are answered
@@ -96,11 +97,12 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::{Client, MetricsHub, Response, ServeError};
-use crate::util::trace::{Stage, TraceCtx};
+use crate::util::trace::{Stage, TraceCtx, Tracer};
 
 use super::admission::{AdmissionConfig, AdmissionGate, Permit};
 use super::cache::{CacheKey, CachedScores, ResponseCache};
 use super::fairness::{ClientId, FairScheduler, FairnessConfig, Next};
+use super::framing::{self, WRITE_TIMEOUT};
 use super::wire::{
     self, Frame, WireErrorKind, WireRequest, WireResponse, WireStats, WireStatus, WireSwap,
 };
@@ -114,14 +116,14 @@ use super::wire::{
 /// it: it parks at most one outcome and skips the connection.)
 const WRITER_QUEUE: usize = 1024;
 
-/// How long one response write may block before the connection is
-/// declared dead.  A peer that stops *reading* wedges its writer thread
-/// mid-`write_frame` while admission permits sit in the queued `Pending`
-/// messages behind it; the timeout tears that connection down (dropping
-/// the queue releases every permit), so a single non-reading client can
-/// hold gate slots for at most this long — and it never blocks the fair
-/// scheduler, which skips writer-full connections.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+// How long one response write may block before the connection is
+// declared dead: `framing::WRITE_TIMEOUT` (shared by every wire role).
+// A peer that stops *reading* wedges its writer thread mid-`write_frame`
+// while admission permits sit in the queued `Pending` messages behind
+// it; the timeout tears that connection down (dropping the queue
+// releases every permit), so a single non-reading client can hold gate
+// slots for at most this long — and it never blocks the fair scheduler,
+// which skips writer-full connections.
 
 /// How long the scheduler waits per `next` call before re-checking
 /// parked outcomes (writer-full connections) and the stop flag.
@@ -157,6 +159,136 @@ impl Default for FrontendConfig {
             conn_retry_after_ms: 50,
             fairness: FairnessConfig::default(),
         }
+    }
+}
+
+/// Builder for a TCP front-end: the listen address plus every serving
+/// knob as a named field, terminated by what the front-end serves.
+/// This is the one construction surface — the positional
+/// `Frontend::spawn` / `Frontend::spawn_registry` entry points are
+/// deprecated wrappers over it.
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use odin::coordinator::{BatchPolicy, MetricsHub, ModelRegistry, ModelSpec};
+/// use odin::frontend::{AdmissionConfig, ServeConfig};
+///
+/// let hub = MetricsHub::new();
+/// let registry = Arc::new(ModelRegistry::spawn(
+///     vec![ModelSpec::synthetic("cnn1", "fast", 1)],
+///     BatchPolicy::default(),
+///     hub.clone(),
+/// )?);
+/// let fe = ServeConfig::new("127.0.0.1:0")
+///     .cache(1024)
+///     .admission(AdmissionConfig::default())
+///     .metrics(hub)
+///     .serve_registry(registry)?;
+/// println!("listening on {}", fe.local_addr());
+/// # anyhow::Ok(())
+/// ```
+///
+/// Every knob has the [`FrontendConfig`] default; unset metrics mean a
+/// fresh (unshared) [`MetricsHub`].  A [`ServeConfig::tracer`] attaches
+/// to that hub's *front-end handle* — engine-pool stages trace only if
+/// the pool's own hub clone carried the tracer before the pool was
+/// built, so whole-pipeline tracing should attach the tracer to the hub
+/// first and pass the hub via [`ServeConfig::metrics`].
+#[derive(Clone, Default)]
+pub struct ServeConfig {
+    listen: String,
+    cfg: FrontendConfig,
+    metrics: Option<MetricsHub>,
+    tracer: Option<Tracer>,
+}
+
+impl ServeConfig {
+    /// Start from `listen` (e.g. `"127.0.0.1:0"` for an ephemeral
+    /// loopback port) with every knob at its default.
+    pub fn new(listen: impl Into<String>) -> ServeConfig {
+        ServeConfig { listen: listen.into(), ..ServeConfig::default() }
+    }
+
+    /// Response-cache capacity in entries (`0` disables caching).
+    pub fn cache(mut self, entries: usize) -> ServeConfig {
+        self.cfg.cache_capacity = entries;
+        self
+    }
+
+    /// Admission-gate configuration (policy, capacity, retry hint).
+    pub fn admission(mut self, admission: AdmissionConfig) -> ServeConfig {
+        self.cfg.admission = admission;
+        self
+    }
+
+    /// Per-client fair-queuing configuration (policy, DRR quantum,
+    /// per-client queue bound).
+    pub fn fairness(mut self, fairness: FairnessConfig) -> ServeConfig {
+        self.cfg.fairness = fairness;
+        self
+    }
+
+    /// Max concurrently open connections (see
+    /// [`FrontendConfig::max_connections`]).
+    pub fn max_connections(mut self, max: usize) -> ServeConfig {
+        self.cfg.max_connections = max;
+        self
+    }
+
+    /// Backoff hint carried by `TooManyConnections` rejections (ms).
+    pub fn conn_retry_after_ms(mut self, ms: u32) -> ServeConfig {
+        self.cfg.conn_retry_after_ms = ms;
+        self
+    }
+
+    /// Record serving metrics into `hub` (callers keep a clone to read
+    /// reports from); defaults to a fresh hub nobody else sees.
+    pub fn metrics(mut self, hub: MetricsHub) -> ServeConfig {
+        self.metrics = Some(hub);
+        self
+    }
+
+    /// Attach a span recorder to the front-end's hub handle (see the
+    /// type docs for the whole-pipeline caveat).
+    pub fn tracer(mut self, tracer: Tracer) -> ServeConfig {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// The assembled [`FrontendConfig`] (what the terminals pass on);
+    /// exposed so callers can inspect or persist the effective knobs.
+    pub fn frontend_config(&self) -> FrontendConfig {
+        self.cfg
+    }
+
+    /// Bind and serve one `(arch, mode)` pair over `pool_client`'s
+    /// engine pool.  A single-model front-end assumes a **fixed weight
+    /// generation**: it caches under epoch 0 and has no swap surface —
+    /// pools with mutable weights belong behind
+    /// [`ServeConfig::serve_registry`], whose epoch-keyed cache makes
+    /// stale reads impossible.
+    pub fn serve_pool(self, pool_client: Client, arch: &str, mode: &str) -> Result<Frontend> {
+        let router =
+            Router::Single { client: pool_client, arch: Arc::from(arch), mode: Arc::from(mode) };
+        let (listen, cfg, hub) = self.finish();
+        Frontend::spawn_router(&listen, router, cfg, hub)
+    }
+
+    /// Bind and serve every model of `registry`, routing each request
+    /// by its `(arch, mode)`; swap frames are honored and the cache is
+    /// epoch-keyed.
+    pub fn serve_registry(self, registry: Arc<ModelRegistry>) -> Result<Frontend> {
+        let (listen, cfg, hub) = self.finish();
+        Frontend::spawn_router(&listen, Router::Registry(registry), cfg, hub)
+    }
+
+    fn finish(self) -> (String, FrontendConfig, MetricsHub) {
+        let hub = self.metrics.unwrap_or_default();
+        let hub = match self.tracer {
+            Some(tracer) => hub.with_tracer(tracer),
+            None => hub,
+        };
+        (self.listen, self.cfg, hub)
     }
 }
 
@@ -275,17 +407,18 @@ enum WriterMsg {
 }
 
 impl Frontend {
-    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral loopback
-    /// port) and serve `pool_client`'s engine pool, which must be built
-    /// from engines for exactly `arch`/`mode`.
+    /// Deprecated positional constructor; see [`ServeConfig`].
     ///
-    /// A single-model front-end assumes a **fixed weight generation**:
-    /// it caches under epoch 0 and has no swap surface.  Do not point it
-    /// (with a cache enabled) at a pool whose weights you hot-swap
-    /// through [`EnginePool::spawn_versioned`](crate::coordinator::EnginePool::spawn_versioned)
+    /// Binds `listen` and serves `pool_client`'s engine pool, which must
+    /// be built from engines for exactly `arch`/`mode`.  A single-model
+    /// front-end assumes a **fixed weight generation**: it caches under
+    /// epoch 0 and has no swap surface.  Do not point it (with a cache
+    /// enabled) at a pool whose weights you hot-swap through
+    /// [`EnginePool::spawn_versioned`](crate::coordinator::EnginePool::spawn_versioned)
     /// — post-swap lookups would still find pre-swap entries.  Pools
-    /// with mutable weights belong behind [`Frontend::spawn_registry`],
+    /// with mutable weights belong behind [`ServeConfig::serve_registry`],
     /// whose epoch-keyed cache makes stale reads impossible.
+    #[deprecated(since = "0.2.0", note = "use ServeConfig::new(listen)...serve_pool(...)")]
     pub fn spawn(
         listen: &str,
         pool_client: Client,
@@ -299,12 +432,15 @@ impl Frontend {
         Self::spawn_router(listen, router, cfg, metrics)
     }
 
-    /// Bind `listen` and serve every model of `registry`, routing each
+    /// Deprecated positional constructor; see [`ServeConfig`].
+    ///
+    /// Binds `listen` and serves every model of `registry`, routing each
     /// request by its `(arch, mode)`.  Swap frames are honored: the
     /// registry reloads the model's weights, the response cache's epoch
     /// keying retires all stale entries by construction, and the
     /// front-end eagerly purges them so the capacity is immediately
     /// available to the new epoch.
+    #[deprecated(since = "0.2.0", note = "use ServeConfig::new(listen)...serve_registry(...)")]
     pub fn spawn_registry(
         listen: &str,
         registry: Arc<ModelRegistry>,
@@ -517,16 +653,10 @@ impl Frontend {
     }
 
     /// Answer an over-cap connection with one typed
-    /// `TooManyConnections{retry_after}` frame (id 0), then close it
-    /// *gently*: write the frame, FIN the write half, and briefly drain
-    /// the read half on a short-lived thread before dropping.  A hard
-    /// close here would race the peer: its next write (a `Hello` or a
-    /// pipelined request) hitting a fully-closed socket elicits an RST,
-    /// and an RST discards its unread receive buffer — the typed
-    /// rejection the peer was owed would vanish into a bare
-    /// `Disconnected`.  Draining until the peer half-closes (or a 2 s
-    /// timeout) keeps the frame deliverable; doing it off-thread keeps
-    /// a reject flood from wedging the accept loop.
+    /// `TooManyConnections{retry_after}` frame (id 0) and close it
+    /// gently — [`framing::refuse_with_retry`], the refusal path shared
+    /// with the proxy tier — on a short-lived thread, so a reject flood
+    /// cannot wedge the accept loop on the drain deadline.
     fn reject_connection(shared: &Shared, stream: TcpStream) {
         shared.metrics.record_conn_rejected();
         // An over-cap connection never reaches a reader, so no trace id
@@ -538,40 +668,7 @@ impl Frontend {
         let retry_after_ms = shared.conn_retry_after_ms;
         let spawned = std::thread::Builder::new()
             .name("odin-conn-reject".into())
-            .spawn(move || {
-                let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
-                let resp = WireResponse {
-                    id: 0,
-                    status: WireStatus::TooManyConnections { retry_after_ms },
-                };
-                let mut w = &stream;
-                if wire::write_frame(&mut w, &Frame::Response(resp)).is_ok() {
-                    let _ = stream.shutdown(Shutdown::Write);
-                    // Drain with a *total* deadline, not just a
-                    // per-read timeout: a peer trickling one byte per
-                    // second must not pin this thread past 2 s (over-
-                    // cap peers cannot be allowed to hold the very
-                    // thread resource the cap protects).
-                    let deadline = std::time::Instant::now() + Duration::from_secs(2);
-                    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
-                    let mut sink = [0u8; 512];
-                    let mut r = &stream;
-                    while std::time::Instant::now() < deadline {
-                        match std::io::Read::read(&mut r, &mut sink) {
-                            Ok(0) => break,
-                            Ok(_) => continue,
-                            Err(e)
-                                if e.kind() == std::io::ErrorKind::WouldBlock
-                                    || e.kind() == std::io::ErrorKind::TimedOut =>
-                            {
-                                continue
-                            }
-                            Err(_) => break,
-                        }
-                    }
-                }
-                let _ = stream.shutdown(Shutdown::Both);
-            });
+            .spawn(move || framing::refuse_with_retry(stream, retry_after_ms));
         drop(spawned);
     }
 

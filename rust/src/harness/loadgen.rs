@@ -47,7 +47,7 @@ use crate::coordinator::{
     SYNTHETIC_SEED,
 };
 use crate::dataset::TestSet;
-use crate::frontend::{Frontend, FrontendConfig, NetClient, NetError};
+use crate::frontend::{Frontend, NetClient, NetError, Proxy, ProxyConfig, ServeConfig};
 use crate::util::json::{self, Json};
 use crate::util::stats::Histogram;
 use crate::util::trace::{Stage, Tracer};
@@ -134,6 +134,19 @@ pub enum Target {
     Hermetic {
         /// Shard count for every spawned model pool.
         shards: usize,
+    },
+    /// Spawn `backends` independent in-process serving stacks (each its
+    /// own registry + frontend on a loopback port) behind one
+    /// [`Proxy`] tier, and drive the proxy.  Every scenario then
+    /// exercises routing, health tracking, and swap broadcast — and
+    /// must still score bit-identical to a direct single-backend run,
+    /// because replicas share the weight seeds and the proxy never
+    /// touches payloads.
+    Proxy {
+        /// Shard count for every spawned model pool, per backend.
+        shards: usize,
+        /// How many backend serving processes to spawn (>= 1).
+        backends: usize,
     },
 }
 
@@ -1218,6 +1231,9 @@ impl SuiteVerdict {
 /// latency numbers are attributable).  With [`Target::Hermetic`] a
 /// multi-model frontend is spawned on a loopback port, one pool per
 /// distinct `(arch, mode)` in the suite, and torn down afterwards.
+/// With [`Target::Proxy`] N such stacks are spawned behind a
+/// [`Proxy`] routing tier and the suite drives the proxy — same
+/// scoring, same bit-identity expectations.
 pub fn run_suite(
     scenarios: &[Scenario],
     target: &Target,
@@ -1242,8 +1258,30 @@ pub fn run_suite(
     // seed_state tracks which weight seed each model currently serves,
     // so scenario N+1 can resync after scenario N's swap storm.
     let mut seed_state: HashMap<ModelId, u64> = HashMap::new();
-    let mut hermetic: Option<(Frontend, Arc<ModelRegistry>)> = None;
+    let mut hermetic: Vec<(Frontend, Arc<ModelRegistry>)> = Vec::new();
+    let mut proxy: Option<Proxy> = None;
     let mut trace: Option<(Tracer, String)> = None;
+
+    // One spec per distinct (arch, mode) in the suite, seeded with that
+    // model's golden seed — shared by both hermetic targets (every
+    // proxy backend spawns the same specs, so replicas start from
+    // bit-identical weights at epoch 0).
+    let specs_for = |shards: usize, seed_state: &mut HashMap<ModelId, u64>| {
+        let mut specs: Vec<ModelSpec> = Vec::new();
+        let mut seen: HashSet<ModelId> = HashSet::new();
+        for sc in scenarios {
+            if seen.insert(sc.model.clone()) {
+                specs.push(
+                    ModelSpec::synthetic(&sc.model.arch, &sc.model.mode, sc.golden_seed)
+                        .with_artifacts(&cfg.artifacts)
+                        .with_shards(shards),
+                );
+                seed_state.insert(sc.model.clone(), sc.golden_seed);
+            }
+        }
+        specs
+    };
+
     let addr = match target {
         Target::Addr(a) => {
             ensure!(
@@ -1254,18 +1292,7 @@ pub fn run_suite(
             a.clone()
         }
         Target::Hermetic { shards } => {
-            let mut specs: Vec<ModelSpec> = Vec::new();
-            let mut seen: HashSet<ModelId> = HashSet::new();
-            for sc in scenarios {
-                if seen.insert(sc.model.clone()) {
-                    specs.push(
-                        ModelSpec::synthetic(&sc.model.arch, &sc.model.mode, sc.golden_seed)
-                            .with_artifacts(&cfg.artifacts)
-                            .with_shards(*shards),
-                    );
-                    seed_state.insert(sc.model.clone(), sc.golden_seed);
-                }
-            }
+            let specs = specs_for(*shards, &mut seed_state);
             // One hub shared by the registry pools and the front-end —
             // the same wiring as `odin serve` — so a stats scrape sees
             // every pipeline stage and an enabled tracer sees the whole
@@ -1280,15 +1307,50 @@ pub fn run_suite(
                 ModelRegistry::spawn(specs, BatchPolicy::default(), hub.clone())
                     .context("spawning hermetic registry")?,
             );
-            let fe = Frontend::spawn_registry(
-                "127.0.0.1:0",
-                Arc::clone(&registry),
-                FrontendConfig::default(),
-                hub,
-            )
-            .context("spawning hermetic frontend")?;
+            let fe = ServeConfig::new("127.0.0.1:0")
+                .metrics(hub)
+                .serve_registry(Arc::clone(&registry))
+                .context("spawning hermetic frontend")?;
             let addr = fe.local_addr().to_string();
-            hermetic = Some((fe, registry));
+            hermetic.push((fe, registry));
+            addr
+        }
+        Target::Proxy { shards, backends } => {
+            ensure!(
+                cfg.trace_out.is_none(),
+                "--trace-out needs the single-process hermetic target: the proxy tier \
+                 spreads requests over several span rings (scrape each backend with \
+                 `odin stats --addr` instead)"
+            );
+            ensure!(*backends >= 1, "--proxy-backends needs at least 1 backend");
+            let specs = specs_for(*shards, &mut seed_state);
+            let mut backend_addrs: Vec<String> = Vec::with_capacity(*backends);
+            for _ in 0..*backends {
+                // Each backend is a fully independent serving stack —
+                // own hub, own registry, own frontend — exactly what a
+                // separate `odin serve` process would be, minus the
+                // fork, so the suite stays hermetic.
+                let hub = MetricsHub::new();
+                let registry = Arc::new(
+                    ModelRegistry::spawn(specs.clone(), BatchPolicy::default(), hub.clone())
+                        .context("spawning proxy backend registry")?,
+                );
+                let fe = ServeConfig::new("127.0.0.1:0")
+                    .metrics(hub)
+                    .serve_registry(Arc::clone(&registry))
+                    .context("spawning proxy backend frontend")?;
+                backend_addrs.push(fe.local_addr().to_string());
+                hermetic.push((fe, registry));
+            }
+            let px = Proxy::spawn(
+                "127.0.0.1:0",
+                &backend_addrs,
+                ProxyConfig::default(),
+                MetricsHub::new(),
+            )
+            .context("spawning hermetic proxy tier")?;
+            let addr = px.local_addr().to_string();
+            proxy = Some(px);
             addr
         }
     };
@@ -1310,7 +1372,11 @@ pub fn run_suite(
         }
     }
 
-    if let Some((fe, registry)) = hermetic {
+    // Proxy first (severs the client side), then each backend stack.
+    if let Some(px) = proxy {
+        px.shutdown();
+    }
+    for (fe, registry) in hermetic {
         fe.shutdown();
         if let Ok(reg) = Arc::try_unwrap(registry) {
             reg.shutdown();

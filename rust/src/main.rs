@@ -73,8 +73,8 @@ use odin::coordinator::{
 };
 use odin::dataset::TestSet;
 use odin::frontend::{
-    AdmissionConfig, AdmissionPolicy, FairnessConfig, FairnessPolicy, Frontend, FrontendConfig,
-    NetClient, NetError,
+    AdmissionConfig, AdmissionPolicy, FairnessConfig, FairnessPolicy, FrontendConfig, NetClient,
+    NetError, Proxy, ProxyConfig, RoutePolicy, ServeConfig,
 };
 use odin::harness::{fig6, headline, table1, table2, table3};
 use odin::mapper::{map_topology, ExecConfig};
@@ -209,6 +209,9 @@ fn main() -> Result<()> {
                 cmd_serve_registry(&artifacts, &backend, &opts)?;
             }
         }
+        "proxy" => {
+            cmd_proxy(&args)?;
+        }
         "benchgate" => {
             cmd_benchgate(&args)?;
         }
@@ -279,6 +282,48 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// `odin proxy --listen ADDR --backend ADDR...` — the L6 routing tier:
+/// one wire-protocol listener fanning requests out across N `odin
+/// serve --hold` processes with health tracking, typed drain on
+/// backend loss, and fleet-wide swap broadcast.  Holds until killed,
+/// like `serve --hold`; scrape it with `odin stats --addr` (the JSON
+/// carries per-backend forward/eject/readmit counters).
+fn cmd_proxy(args: &[String]) -> Result<()> {
+    let listen = opt_flag(args, "--listen")
+        .ok_or_else(|| anyhow::anyhow!("proxy needs --listen ADDR"))?;
+    let backends = multi_flag(args, "--backend");
+    ensure!(
+        !backends.is_empty(),
+        "proxy needs at least one --backend HOST:PORT (repeat the flag per backend)"
+    );
+    let policy = RoutePolicy::parse(&flag(args, "--policy", "hash"))?;
+    let health_ms: u64 = flag(args, "--health-ms", "200").parse::<u64>()?.max(1);
+    let cfg = ProxyConfig {
+        policy,
+        health_interval: Duration::from_millis(health_ms),
+        eject_after: flag(args, "--eject-after", "3").parse()?,
+        max_connections: flag(args, "--max-conns", "1024").parse()?,
+        ..ProxyConfig::default()
+    };
+    let px = Proxy::spawn(&listen, &backends, cfg, MetricsHub::new())?;
+    println!(
+        "L6 proxy tier listening on {} — {}/{} backend(s) healthy, policy {}, health every {}ms",
+        px.local_addr(),
+        px.healthy_backends(),
+        px.backends(),
+        policy.as_str(),
+        health_ms,
+    );
+    println!(
+        "serving until killed (drive it with `odin loadgen --addr {0}`, scrape it with \
+         `odin stats --addr {0}`)",
+        px.local_addr()
+    );
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
 /// `odin check [--root DIR] [--json PATH]` — run the repo-invariant
 /// static analyzer (see [`odin::analysis`]) over the serving sources.
 /// Prints every finding as `file:line: [rule] message`, optionally
@@ -308,7 +353,7 @@ fn cmd_check(args: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "odin — PCRAM PIM accelerator reproduction
-commands: table1 table2 table3 fig6 headline eval serve swap stats
+commands: table1 table2 table3 fig6 headline eval serve proxy swap stats
           tracecheck loadgen benchgate check ablation selftest
 common flags: --artifacts DIR --backend sim|pjrt
 eval:  --arch cnn1|cnn2 --mode fast|sc|mux|float --limit N
@@ -339,6 +384,16 @@ serve: --shards N|auto --batch B --linger-us U --requests N --concurrency K
        --hold (with --listen: keep the front-end up with no built-in
                       load until killed — the target for an external
                       `odin loadgen --addr`; scrape it with `odin stats`)
+proxy: --listen ADDR --backend HOST:PORT (repeatable — one per `odin
+       serve --hold` process) [--policy hash|least-loaded] (routing:
+       FNV hash of (arch,mode,row) over the healthy backends, or fewest
+       in-flight) [--health-ms N] (probe cadence, default 200)
+       [--eject-after N] (consecutive failed probes before eject,
+       default 3) [--max-conns N] — one wire listener routing across
+       the fleet: dead backends are drained typed and re-admitted when
+       they answer probes again; a Swap is acknowledged only after
+       every backend installs the same epoch; `odin stats --addr` on
+       the proxy shows per-backend forward/eject/readmit counters
 swap:  --addr HOST:PORT --model ARCH:MODE [--seed N] — hot-swap a running
        multi-model front-end's weights; prints the new epoch
 stats: --addr HOST:PORT [--reset] — print a live front-end's metrics
@@ -349,7 +404,10 @@ tracecheck: PATH — validate a --trace-out export (trace-event JSON with
 loadgen: --scenario PATH (repeatable JSONL scenario files; see
        rust/scenarios/*.jsonl) [--addr HOST:PORT] (target a live serve;
        default: spawn a hermetic in-process front-end, --shards N per
-       pool) [--verdict-json PATH] (machine-readable verdict for
+       pool) [--proxy-backends N] (hermetic only: spawn N backend
+       stacks behind an in-process proxy tier and drive the proxy —
+       results must stay bit-identical to a direct run)
+       [--verdict-json PATH] (machine-readable verdict for
        benchgate) [--samples N] (distinct dataset rows cycled)
        [--trace-out PATH [--trace-sample N]] (hermetic only: export a
        Perfetto trace of the whole suite) — exits non-zero when any
@@ -537,6 +595,19 @@ impl ServeOpts {
             ..FrontendConfig::default()
         }
     }
+
+    /// The [`ServeConfig`] builder these options describe, ready for a
+    /// `serve_pool` / `serve_registry` terminal.
+    fn serve_config(&self, listen: &str, metrics: MetricsHub) -> ServeConfig {
+        let fc = self.frontend_config();
+        ServeConfig::new(listen)
+            .cache(fc.cache_capacity)
+            .admission(fc.admission)
+            .fairness(fc.fairness)
+            .max_connections(fc.max_connections)
+            .conn_retry_after_ms(fc.conn_retry_after_ms)
+            .metrics(metrics)
+    }
 }
 
 /// Serving demo: spawn the sharded engine pool, hammer it from client
@@ -634,14 +705,8 @@ fn cmd_serve(artifacts: &str, backend: &str, opts: &ServeOpts) -> Result<()> {
             handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
         }
         Some(listen) => {
-            let frontend = Frontend::spawn(
-                listen,
-                client.clone(),
-                arch,
-                "fast",
-                opts.frontend_config(),
-                metrics.clone(),
-            )?;
+            let frontend =
+                opts.serve_config(listen, metrics.clone()).serve_pool(client.clone(), arch, "fast")?;
             let addr = frontend.local_addr();
             println!(
                 "L4 front-end listening on {addr} (cache {}, admission {:?}, queue cap {}, \
@@ -948,9 +1013,14 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
             loadgen::parse_scenarios(&text).with_context(|| format!("parsing {p}"))?;
         scenarios.append(&mut scs);
     }
-    let target = match opt_flag(args, "--addr") {
-        Some(a) => Target::Addr(a),
-        None => Target::Hermetic { shards: flag(args, "--shards", "2").parse()? },
+    let proxy_backends: usize = flag(args, "--proxy-backends", "0").parse()?;
+    let target = match (opt_flag(args, "--addr"), proxy_backends) {
+        (Some(a), 0) => Target::Addr(a),
+        (Some(_), _) => bail!("--proxy-backends spawns a hermetic proxy tier; drop --addr"),
+        (None, 0) => Target::Hermetic { shards: flag(args, "--shards", "2").parse()? },
+        (None, n) => {
+            Target::Proxy { shards: flag(args, "--shards", "2").parse()?, backends: n }
+        }
     };
     let cfg = LoadgenConfig {
         artifacts: flag(args, "--artifacts", "artifacts"),
@@ -1047,12 +1117,9 @@ fn cmd_serve_registry(artifacts: &str, backend: &str, opts: &ServeOpts) -> Resul
 
     let frontend = match &opts.listen {
         Some(listen) => {
-            let f = Frontend::spawn_registry(
-                listen,
-                Arc::clone(&registry),
-                opts.frontend_config(),
-                metrics.clone(),
-            )?;
+            let f = opts
+                .serve_config(listen, metrics.clone())
+                .serve_registry(Arc::clone(&registry))?;
             println!(
                 "L4 front-end listening on {} (cache {}, admission {:?}, queue cap {}, \
                  fairness {:?}, max conns {})",

@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use odin::coordinator::{BatchPolicy, Engine, EnginePool, MetricsHub, ModelWeights};
 use odin::dataset::TestSet;
-use odin::frontend::{Frontend, FrontendConfig, NetClient, NetError};
+use odin::frontend::{NetClient, NetError, ServeConfig};
 use odin::util::testkit::forall_ok;
 
 /// Run `f` on a helper thread and panic if it has not finished within
@@ -142,14 +142,12 @@ fn too_many_connections_is_typed_and_reconnectable() {
             metrics.clone(),
         )
         .unwrap();
-        let cfg = FrontendConfig {
-            max_connections: 2,
-            conn_retry_after_ms: 35,
-            ..FrontendConfig::default()
-        };
-        let frontend =
-            Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics)
-                .unwrap();
+        let frontend = ServeConfig::new("127.0.0.1:0")
+            .max_connections(2)
+            .conn_retry_after_ms(35)
+            .metrics(metrics)
+            .serve_pool(client.clone(), "cnn1", "float")
+            .unwrap();
         let addr = frontend.local_addr();
         let img = TestSet::synthetic(1, 7).samples[0].image.clone();
 
@@ -197,5 +195,134 @@ fn too_many_connections_is_typed_and_reconnectable() {
         frontend.shutdown();
         drop(client);
         pool.shutdown();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Control-frame resolve guarantees (swap / stats) — regression tests for
+// the once-divergent per-path error synthesis, now unified in the
+// client's single roundtrip helper.
+// ---------------------------------------------------------------------------
+
+use odin::frontend::wire::{read_frame, write_frame, Frame, WireResponse, WireStatus};
+use odin::frontend::WireErrorKind;
+
+/// `swap` and `stats` — not just inference submissions — resolve typed
+/// when the server dies before answering anything.
+#[test]
+fn swap_and_stats_resolve_typed_when_server_closes() {
+    with_deadline(30, || {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            drop(conn); // close without answering a single frame
+        });
+        let net = NetClient::connect(addr, "cnn1", "fast").unwrap();
+        server.join().unwrap();
+        assert_eq!(
+            net.swap("cnn1", "fast", 7).err(),
+            Some(NetError::Disconnected),
+            "a dead connection synthesizes Disconnected for swap"
+        );
+        assert_eq!(
+            net.stats(false).err(),
+            Some(NetError::Disconnected),
+            "a dead connection synthesizes Disconnected for stats"
+        );
+        assert_eq!(
+            net.infer(vec![0u8; 784]).err(),
+            Some(NetError::Disconnected),
+            "and for inference, same as ever"
+        );
+    });
+}
+
+/// A typed id-0 connection fate (the server's `TooManyConnections`
+/// refusal shape) is carried by *every* request path: swap and stats
+/// report the same fate inference does, hint included.
+#[test]
+fn swap_and_stats_carry_the_connection_fate() {
+    with_deadline(30, || {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let refusal = WireResponse {
+                id: 0,
+                status: WireStatus::TooManyConnections { retry_after_ms: 41 },
+            };
+            write_frame(&mut conn, &Frame::Response(refusal)).unwrap();
+            // drop(conn): the refusal is this connection's last word
+        });
+        let net = NetClient::connect(addr, "cnn1", "fast").unwrap();
+        server.join().unwrap();
+        assert!(
+            matches!(
+                net.swap("cnn1", "fast", 7),
+                Err(NetError::TooManyConnections { retry_after_ms: 41 })
+            ),
+            "swap reports the connection fate"
+        );
+        assert!(
+            matches!(net.stats(true), Err(NetError::TooManyConnections { retry_after_ms: 41 })),
+            "stats reports the connection fate"
+        );
+        assert!(
+            matches!(
+                net.infer(vec![0u8; 784]),
+                Err(NetError::TooManyConnections { retry_after_ms: 41 })
+            ),
+            "inference reports the connection fate"
+        );
+    });
+}
+
+/// A confused server that answers control frames with an *inference*
+/// response must not poison the typed surface: the client maps the
+/// kind mismatch to a `BadRequest` error naming the request kind.
+#[test]
+fn mismatched_response_kind_maps_to_a_typed_error() {
+    let wrong_kind = || WireStatus::Ok {
+        shard: 0,
+        argmax: 1,
+        cached: false,
+        epoch: 0,
+        logits: [0.0; 10],
+    };
+    with_deadline(30, move || {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let mut rd = conn.try_clone().unwrap();
+            loop {
+                let id = match read_frame(&mut rd) {
+                    Ok(Some(Frame::Swap(s))) => s.id,
+                    Ok(Some(Frame::Stats(s))) => s.id,
+                    Ok(Some(_)) => continue, // the hello, etc.
+                    Ok(None) | Err(_) => break,
+                };
+                let wrong = WireResponse { id, status: wrong_kind() };
+                if write_frame(&mut conn, &Frame::Response(wrong)).is_err() {
+                    break;
+                }
+            }
+        });
+        let net = NetClient::connect(addr, "cnn1", "fast").unwrap();
+        match net.swap("cnn1", "fast", 3) {
+            Err(NetError::Remote { kind: WireErrorKind::BadRequest, message }) => {
+                assert!(message.contains("swap"), "error names the request kind: {message}");
+            }
+            other => panic!("expected a typed BadRequest for the swap mismatch, got {other:?}"),
+        }
+        match net.stats(false) {
+            Err(NetError::Remote { kind: WireErrorKind::BadRequest, message }) => {
+                assert!(message.contains("stats"), "error names the request kind: {message}");
+            }
+            other => panic!("expected a typed BadRequest for the stats mismatch, got {other:?}"),
+        }
+        drop(net); // closes the socket; the server loop sees EOF
+        server.join().unwrap();
     });
 }

@@ -12,7 +12,7 @@ use odin::coordinator::{BatchPolicy, Client, Engine, EnginePool, MetricsHub, Mod
 use odin::dataset::TestSet;
 use odin::frontend::{
     AdmissionConfig, AdmissionPolicy, FairnessConfig, FairnessPolicy, Frontend, FrontendConfig,
-    NetClient, NetError,
+    NetClient, NetError, ServeConfig,
 };
 
 /// Pool + front-end over an ephemeral loopback port, serving
@@ -31,9 +31,15 @@ fn spawn_stack(
         metrics.clone(),
     )
     .unwrap();
-    let frontend =
-        Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics.clone())
-            .unwrap();
+    let frontend = ServeConfig::new("127.0.0.1:0")
+        .cache(cfg.cache_capacity)
+        .admission(cfg.admission)
+        .fairness(cfg.fairness)
+        .max_connections(cfg.max_connections)
+        .conn_retry_after_ms(cfg.conn_retry_after_ms)
+        .metrics(metrics.clone())
+        .serve_pool(client.clone(), "cnn1", "float")
+        .unwrap();
     (pool, client, frontend, metrics)
 }
 

@@ -12,7 +12,7 @@ use odin::coordinator::{
 };
 use odin::dataset::TestSet;
 use odin::frontend::{
-    AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError,
+    AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError, ServeConfig,
     WireErrorKind,
 };
 
@@ -36,9 +36,15 @@ fn spawn_stack(
         metrics.clone(),
     )
     .unwrap();
-    let frontend =
-        Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics.clone())
-            .unwrap();
+    let frontend = ServeConfig::new("127.0.0.1:0")
+        .cache(cfg.cache_capacity)
+        .admission(cfg.admission)
+        .fairness(cfg.fairness)
+        .max_connections(cfg.max_connections)
+        .conn_retry_after_ms(cfg.conn_retry_after_ms)
+        .metrics(metrics.clone())
+        .serve_pool(client.clone(), "cnn1", "float")
+        .unwrap();
     (pool, client, frontend, metrics)
 }
 
@@ -319,9 +325,15 @@ fn spawn_registry_stack(
     let metrics = MetricsHub::new();
     let policy = BatchPolicy { max_batch: 32, linger: Duration::from_micros(200) };
     let registry = Arc::new(ModelRegistry::spawn(specs, policy, metrics.clone()).unwrap());
-    let frontend =
-        Frontend::spawn_registry("127.0.0.1:0", Arc::clone(&registry), cfg, metrics.clone())
-            .unwrap();
+    let frontend = ServeConfig::new("127.0.0.1:0")
+        .cache(cfg.cache_capacity)
+        .admission(cfg.admission)
+        .fairness(cfg.fairness)
+        .max_connections(cfg.max_connections)
+        .conn_retry_after_ms(cfg.conn_retry_after_ms)
+        .metrics(metrics.clone())
+        .serve_registry(Arc::clone(&registry))
+        .unwrap();
     (registry, frontend, metrics)
 }
 
@@ -537,9 +549,15 @@ fn saturated_gate_still_serves_cache_hits_and_permits_drain_to_zero() {
         cache_capacity: 64,
         ..FrontendConfig::default()
     };
-    let frontend =
-        Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics.clone())
-            .unwrap();
+    let frontend = ServeConfig::new("127.0.0.1:0")
+        .cache(cfg.cache_capacity)
+        .admission(cfg.admission)
+        .fairness(cfg.fairness)
+        .max_connections(cfg.max_connections)
+        .conn_retry_after_ms(cfg.conn_retry_after_ms)
+        .metrics(metrics.clone())
+        .serve_pool(client.clone(), "cnn1", "float")
+        .unwrap();
     let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
     let test = TestSet::synthetic(4, 21);
     let hot = test.samples[0].image.clone();
@@ -604,4 +622,60 @@ fn frontend_shutdown_disconnects_clients_cleanly() {
     drop(net);
     drop(client);
     pool.shutdown();
+}
+
+/// The deprecated positional constructors stay working wrappers over
+/// [`ServeConfig`] for one release cycle: a stack spawned through
+/// `Frontend::spawn` serves exactly like the builder path.
+#[test]
+#[allow(deprecated)]
+fn deprecated_spawn_wrappers_still_serve() {
+    let metrics = MetricsHub::new();
+    let weights = ModelWeights::synthetic("cnn1", 99).unwrap();
+    let (pool, client) = EnginePool::spawn(
+        move |_shard| Engine::sim_from_weights_threads(&weights, "float", 1),
+        1,
+        BatchPolicy { max_batch: 8, linger: Duration::from_micros(200) },
+        metrics.clone(),
+    )
+    .unwrap();
+    let frontend = Frontend::spawn(
+        "127.0.0.1:0",
+        client.clone(),
+        "cnn1",
+        "float",
+        FrontendConfig::default(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let img = TestSet::synthetic(1, 3).samples[0].image.clone();
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let resp = net.infer(img.clone()).unwrap();
+    assert!(usize::from(resp.argmax) < 10);
+    drop(net);
+    teardown(pool, client, frontend);
+
+    // And the registry-backed wrapper, same contract.
+    let metrics = MetricsHub::new();
+    let registry = Arc::new(
+        ModelRegistry::spawn(
+            vec![ModelSpec::synthetic("cnn1", "float", 99)
+                .with_shards(1)
+                .with_artifacts(NO_ARTIFACTS)],
+            BatchPolicy { max_batch: 8, linger: Duration::from_micros(200) },
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+    let frontend =
+        Frontend::spawn_registry("127.0.0.1:0", Arc::clone(&registry), FrontendConfig::default(), metrics)
+            .unwrap();
+    let net = NetClient::connect(frontend.local_addr(), "cnn1", "float").unwrap();
+    let resp = net.infer(img).unwrap();
+    assert!(usize::from(resp.argmax) < 10);
+    drop(net);
+    frontend.shutdown();
+    if let Ok(r) = Arc::try_unwrap(registry) {
+        r.shutdown();
+    }
 }

@@ -12,7 +12,7 @@ use std::time::Duration;
 use odin::coordinator::{
     BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelWeights, SYNTHETIC_SEED,
 };
-use odin::frontend::{Frontend, FrontendConfig};
+use odin::frontend::ServeConfig;
 use odin::harness::loadgen::{self, LoadgenConfig, Target};
 use odin::util::benchgate;
 use odin::util::json::{self, Json};
@@ -101,15 +101,10 @@ fn exact_scoring_fails_against_wrong_weights() {
         metrics.clone(),
     )
     .unwrap();
-    let frontend = Frontend::spawn(
-        "127.0.0.1:0",
-        client.clone(),
-        "cnn1",
-        "float",
-        FrontendConfig::default(),
-        metrics,
-    )
-    .unwrap();
+    let frontend = ServeConfig::new("127.0.0.1:0")
+        .metrics(metrics)
+        .serve_pool(client.clone(), "cnn1", "float")
+        .unwrap();
     let addr = frontend.local_addr().to_string();
 
     let scs = loadgen::parse_scenarios(

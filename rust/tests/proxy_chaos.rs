@@ -1,0 +1,306 @@
+//! Chaos and correctness tests for the L6 proxy tier: a backend killed
+//! mid-window leaves zero unresolved requests (every in-flight
+//! submission reaps a typed outcome), the dead backend is ejected and
+//! then re-admitted once it answers health probes again, a `Swap`
+//! through the proxy advances every backend to the same epoch, a fleet
+//! with no healthy backends answers typed `Overloaded` instead of
+//! hanging, and a proxied loadgen run scores bit-identical to a direct
+//! single-backend run.
+
+use std::net::TcpListener;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use odin::coordinator::{BatchPolicy, MetricsHub, ModelRegistry, ModelSpec};
+use odin::dataset::TestSet;
+use odin::frontend::{
+    Frontend, NetClient, NetError, Proxy, ProxyConfig, ServeConfig, WireErrorKind,
+};
+use odin::harness::loadgen::{self, LoadgenConfig, Target};
+use odin::util::json::{self, Json};
+
+/// Run `f` on a helper thread and panic if it has not finished within
+/// `secs` — a hung request is exactly the bug these tests exist to
+/// catch, and it must fail the suite instead of wedging it.
+fn with_deadline<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs)).expect("test deadline exceeded: a request hung")
+}
+
+/// One independent backend serving stack (registry + frontend), the
+/// hermetic stand-in for an `odin serve --hold` process.
+fn try_spawn_backend(listen: &str) -> anyhow::Result<(Frontend, Arc<ModelRegistry>, String)> {
+    let hub = MetricsHub::new();
+    let registry = Arc::new(ModelRegistry::spawn(
+        vec![ModelSpec::synthetic("cnn1", "float", 99).with_shards(1)],
+        BatchPolicy { max_batch: 16, linger: Duration::from_micros(200) },
+        hub.clone(),
+    )?);
+    let fe = ServeConfig::new(listen).metrics(hub).serve_registry(Arc::clone(&registry))?;
+    let addr = fe.local_addr().to_string();
+    Ok((fe, registry, addr))
+}
+
+fn spawn_backend(listen: &str) -> (Frontend, Arc<ModelRegistry>, String) {
+    try_spawn_backend(listen).expect("spawning backend stack")
+}
+
+/// Respawn a killed backend on its *original* port (the address the
+/// proxy keeps probing).  The old socket may take a beat to release.
+fn respawn_backend(addr: &str) -> (Frontend, Arc<ModelRegistry>, String) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        match try_spawn_backend(addr) {
+            Ok(v) => return v,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "could not rebind {addr}: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn kill_backend(fe: Frontend, registry: Arc<ModelRegistry>) {
+    fe.shutdown();
+    if let Ok(r) = Arc::try_unwrap(registry) {
+        r.shutdown();
+    }
+}
+
+/// Scrape the proxy's own stats JSON over the wire (the tier view).
+fn scrape(addr: std::net::SocketAddr) -> Json {
+    let c = NetClient::connect(addr, "cnn1", "float").expect("connecting the stats scraper");
+    let text = c.stats(false).expect("scraping proxy stats");
+    json::parse(&text).expect("proxy stats JSON parses")
+}
+
+/// The per-backend counter row for `backend_addr`, if present.
+fn backend_row(stats: &Json, backend_addr: &str) -> Option<Json> {
+    stats.path(&["backends"]).and_then(Json::as_arr)?.iter().find_map(|row| {
+        (row.path(&["backend"]).and_then(Json::as_str) == Some(backend_addr))
+            .then(|| row.clone())
+    })
+}
+
+/// Poll `f` every 25ms until it yields, failing after `secs`.
+fn poll<T>(secs: u64, what: &str, mut f: impl FnMut() -> Option<T>) -> T {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if let Some(v) = f() {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// The tentpole chaos property: kill one of two backends in the middle
+/// of a pipelined window.  Every submission still reaps exactly one
+/// typed outcome (`Ok`, retryable `Overloaded`, or the backend's own
+/// shutdown error — never a hang, never a silent drop), the proxy
+/// ejects the dead backend (visible in its stats), re-admits it after
+/// it comes back on the same port, and traffic flows again.
+#[test]
+fn backend_kill_mid_window_drains_typed_ejects_then_readmits() {
+    with_deadline(180, || {
+        let (fe0, reg0, addr0) = spawn_backend("127.0.0.1:0");
+        let (fe1, reg1, addr1) = spawn_backend("127.0.0.1:0");
+        let cfg = ProxyConfig {
+            health_interval: Duration::from_millis(50),
+            eject_after: 2,
+            ..ProxyConfig::default()
+        };
+        let px = Proxy::spawn(
+            "127.0.0.1:0",
+            &[addr0.clone(), addr1.clone()],
+            cfg,
+            MetricsHub::new(),
+        )
+        .unwrap();
+        let paddr = px.local_addr();
+        assert_eq!(px.healthy_backends(), 2, "both backends admitted at spawn");
+
+        let test = TestSet::synthetic(8, 7);
+        let row = |i: usize| test.samples[i % test.len()].image.clone();
+        let net = NetClient::connect(paddr, "cnn1", "float").unwrap();
+        let mut pipe = net.pipeline(8);
+        let mut outcomes = Vec::new();
+        const N: usize = 48;
+        for i in 0..N / 2 {
+            if let Some(o) = pipe.submit(row(i)) {
+                outcomes.push(o);
+            }
+        }
+        // Kill backend 0 with requests in flight.
+        kill_backend(fe0, reg0);
+        for i in N / 2..N {
+            if let Some(o) = pipe.submit(row(i)) {
+                outcomes.push(o);
+            }
+        }
+        outcomes.extend(pipe.drain());
+        assert_eq!(outcomes.len(), N, "zero unresolved requests through the kill");
+        let mut ok = 0usize;
+        for o in &outcomes {
+            match o {
+                Ok(_) => ok += 1,
+                // The typed retryable drain, or the dying backend's own
+                // typed shutdown answer relayed verbatim.
+                Err(NetError::Overloaded { .. })
+                | Err(NetError::Remote { kind: WireErrorKind::Shutdown, .. }) => {}
+                Err(e) => panic!("untyped outcome under a backend kill: {e:?}"),
+            }
+        }
+        assert!(ok > 0, "the surviving backend keeps serving");
+
+        // The ejection lands in the proxy's scrapeable counters.
+        poll(30, "the ejection to appear in proxy stats", || {
+            let b0 = backend_row(&scrape(paddr), &addr0)?;
+            let ejected = b0.path(&["ejections"]).and_then(Json::as_f64)? >= 1.0;
+            let down = matches!(b0.path(&["healthy"]), Some(&Json::Bool(false)));
+            (ejected && down).then_some(())
+        });
+
+        // Bring backend 0 back on its original port: the health loop
+        // re-admits it and says so in the counters.
+        let (fe0b, reg0b, _) = respawn_backend(&addr0);
+        poll(30, "the readmission to appear in proxy stats", || {
+            let b0 = backend_row(&scrape(paddr), &addr0)?;
+            let readmitted = b0.path(&["readmissions"]).and_then(Json::as_f64)? >= 1.0;
+            let up = matches!(b0.path(&["healthy"]), Some(&Json::Bool(true)));
+            (readmitted && up).then_some(())
+        });
+
+        // Traffic still flows (to the whole fleet).
+        let fresh = NetClient::connect(paddr, "cnn1", "float").unwrap();
+        poll(30, "post-readmission traffic to serve", || fresh.infer(row(0)).ok().map(|_| ()));
+
+        drop(net);
+        drop(fresh);
+        px.shutdown();
+        kill_backend(fe0b, reg0b);
+        kill_backend(fe1, reg1);
+    });
+}
+
+/// The swap-broadcast ordering guarantee: a `Swapped{epoch}` ack from
+/// the proxy means *every* backend already installed that epoch — both
+/// observe it on direct connections, with bit-identical logits.
+#[test]
+fn swap_through_proxy_advances_every_backend_to_the_same_epoch() {
+    with_deadline(120, || {
+        let (fe0, reg0, addr0) = spawn_backend("127.0.0.1:0");
+        let (fe1, reg1, addr1) = spawn_backend("127.0.0.1:0");
+        let px = Proxy::spawn(
+            "127.0.0.1:0",
+            &[addr0.clone(), addr1.clone()],
+            ProxyConfig::default(),
+            MetricsHub::new(),
+        )
+        .unwrap();
+        let img = TestSet::synthetic(1, 7).samples[0].image.clone();
+
+        let ctl = NetClient::connect(px.local_addr(), "cnn1", "float").unwrap();
+        let before = ctl.infer(img.clone()).unwrap();
+        let epoch = ctl.swap("cnn1", "float", 1234).unwrap();
+        assert!(epoch > before.epoch, "the ack names an advanced epoch");
+
+        // Every backend observes the broadcast epoch, directly.
+        let mut logits = Vec::new();
+        for a in [&addr0, &addr1] {
+            let direct = NetClient::connect(a.as_str(), "cnn1", "float").unwrap();
+            let r = direct.infer(img.clone()).unwrap();
+            assert_eq!(r.epoch, epoch, "backend {a} serves the acknowledged epoch");
+            logits.push(r.logits);
+        }
+        assert_eq!(
+            logits[0].map(f32::to_bits),
+            logits[1].map(f32::to_bits),
+            "replicas stay bit-identical after the broadcast"
+        );
+
+        // Responses through the proxy now carry the new epoch too.
+        let after = ctl.infer(img).unwrap();
+        assert_eq!(after.epoch, epoch);
+
+        // Swapping an unknown model relays the backends' own typed
+        // refusal (single-server semantics preserved).
+        match ctl.swap("nope", "float", 1) {
+            Err(NetError::Remote { kind: WireErrorKind::UnknownModel, .. }) => {}
+            other => panic!("expected the backends' UnknownModel, got {other:?}"),
+        }
+
+        drop(ctl);
+        px.shutdown();
+        kill_backend(fe0, reg0);
+        kill_backend(fe1, reg1);
+    });
+}
+
+/// A fleet with no live backend answers typed `Overloaded` (the
+/// retryable outcome) — and control frames answer typed too.  Nothing
+/// hangs.
+#[test]
+fn no_healthy_backends_synthesizes_typed_overloaded() {
+    with_deadline(60, || {
+        // A port with provably nothing listening on it.
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let px = Proxy::spawn(
+            "127.0.0.1:0",
+            std::slice::from_ref(&dead),
+            ProxyConfig { health_interval: Duration::from_millis(50), ..ProxyConfig::default() },
+            MetricsHub::new(),
+        )
+        .unwrap();
+        assert_eq!(px.healthy_backends(), 0);
+        let net = NetClient::connect(px.local_addr(), "cnn1", "float").unwrap();
+        match net.infer(vec![0u8; 784]) {
+            Err(NetError::Overloaded { .. }) => {}
+            other => panic!("expected typed Overloaded with no healthy backends, got {other:?}"),
+        }
+        match net.swap("cnn1", "float", 9) {
+            Err(NetError::Remote { kind: WireErrorKind::Backend, message }) => {
+                assert!(message.contains(&dead), "the error names the backend: {message}");
+            }
+            other => panic!("expected a typed backend error for the swap, got {other:?}"),
+        }
+        // The stats surface still answers (from the proxy's own hub).
+        let stats = scrape(px.local_addr());
+        let row = backend_row(&stats, &dead).expect("the dead backend is still reported");
+        assert!(matches!(row.path(&["healthy"]), Some(&Json::Bool(false))));
+        drop(net);
+        px.shutdown();
+    });
+}
+
+/// The acceptance bar for the whole tier: a hermetic proxied loadgen
+/// run (2 backends) scores **bit-identical** to a direct
+/// single-backend hermetic run — same pass, same ok/failed counts,
+/// same response checksum — because replicas share weight seeds and
+/// the proxy never touches payloads.
+#[test]
+fn proxy_loadgen_bit_identical_to_direct_hermetic_run() {
+    with_deadline(300, || {
+        let scs = loadgen::parse_scenarios(
+            r#"{"name":"proxy-identity","model":"cnn1:float","requests":48,"clients":3,"window":4}"#,
+        )
+        .unwrap();
+        let cfg = LoadgenConfig { samples: 12, ..LoadgenConfig::default() };
+        let direct = loadgen::run_suite(&scs, &Target::Hermetic { shards: 1 }, &cfg).unwrap();
+        let proxied =
+            loadgen::run_suite(&scs, &Target::Proxy { shards: 1, backends: 2 }, &cfg).unwrap();
+        assert!(direct.pass, "direct run passes: {}", direct.to_json());
+        assert!(proxied.pass, "proxied run passes: {}", proxied.to_json());
+        assert_eq!(
+            direct.deterministic_json(),
+            proxied.deterministic_json(),
+            "proxying must be invisible to scoring"
+        );
+    });
+}

@@ -8,7 +8,7 @@ use std::time::Duration;
 use odin::coordinator::{BatchPolicy, Client, Engine, EnginePool, MetricsHub, ModelWeights};
 use odin::dataset::TestSet;
 use odin::frontend::{
-    AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError,
+    AdmissionConfig, AdmissionPolicy, Frontend, FrontendConfig, NetClient, NetError, ServeConfig,
 };
 use odin::util::trace::{check_trace, Stage, Tracer};
 
@@ -28,8 +28,15 @@ fn spawn_stack(
         metrics.clone(),
     )
     .unwrap();
-    let frontend =
-        Frontend::spawn("127.0.0.1:0", client.clone(), "cnn1", "float", cfg, metrics).unwrap();
+    let frontend = ServeConfig::new("127.0.0.1:0")
+        .cache(cfg.cache_capacity)
+        .admission(cfg.admission)
+        .fairness(cfg.fairness)
+        .max_connections(cfg.max_connections)
+        .conn_retry_after_ms(cfg.conn_retry_after_ms)
+        .metrics(metrics)
+        .serve_pool(client.clone(), "cnn1", "float")
+        .unwrap();
     (pool, client, frontend)
 }
 
